@@ -1,0 +1,61 @@
+//! Deployment scenario: "I have X MB of accelerator memory — give me the
+//! best model that fits."  Mirrors the paper's Figure 1 use case: picks the
+//! frontier configuration under the budget, deploy-quantizes it with
+//! asym-clip AWQ, and reports quality + simulated serving speed.
+//!
+//!     cargo run --release --offline --example deploy_budget -- 3000
+//!
+//! (the argument is the memory budget in MB at 7B-equivalent scale)
+
+use amq::costmodel::{self, DeployKind, L40S};
+use amq::coordinator::SearchParams;
+use amq::exp::common::{self, Pipeline};
+use amq::exp::Ctx;
+
+fn main() -> amq::Result<()> {
+    let budget_mb: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000.0);
+
+    let ctx = Ctx::load(
+        &amq::artifacts_dir(),
+        std::path::Path::new("results/deploy"),
+        SearchParams::default(),
+    )?;
+    let pipe = Pipeline::build(&ctx)?;
+    let archive = common::main_archive(&ctx, &pipe, false)?;
+    let m = &ctx.assets.manifest;
+
+    // translate the 7B-equivalent MB budget into average bits
+    // (memory ∝ bits; fp16 = 16 bits ≙ full model)
+    let fp16_mb = costmodel::model_memory_mb(m, &DeployKind::Fp16);
+    let target_bits = (budget_mb / fp16_mb * 16.0).clamp(2.25, 4.25);
+    println!(
+        "budget {budget_mb} MB @7B-equivalent  (fp16 needs {fp16_mb:.0} MB) -> target {target_bits:.2} bits"
+    );
+
+    let cfg = common::pick(&archive, &pipe.space, target_bits)?;
+    let actual = pipe.space.avg_bits(&cfg);
+    let kind = DeployKind::LayerQuant(&cfg);
+    println!(
+        "selected config: {actual:.3} avg bits, {:.0} MB @7B-equivalent",
+        costmodel::model_memory_mb(m, &kind)
+    );
+
+    let q = common::amq_quality(&ctx, &cfg)?;
+    println!(
+        "quality: wiki PPL {:.3}  c4 PPL {:.3}  zero-shot {:.1}%",
+        q.wiki_ppl,
+        q.c4_ppl,
+        q.zero_shot.macro_avg(&amq::data::ZERO_SHOT)
+    );
+    println!(
+        "serving (L40S roofline sim): {:.0} tok/s  (fp16: {:.0} tok/s -> {:.2}x speedup)",
+        costmodel::tokens_per_sec(&L40S, m, &kind),
+        costmodel::tokens_per_sec(&L40S, m, &DeployKind::Fp16),
+        costmodel::tokens_per_sec(&L40S, m, &kind)
+            / costmodel::tokens_per_sec(&L40S, m, &DeployKind::Fp16)
+    );
+    Ok(())
+}

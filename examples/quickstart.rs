@@ -1,0 +1,69 @@
+//! Quickstart: load the artifacts, run a small AMQ search, and print the
+//! memory/quality Pareto frontier plus the best configuration under a
+//! 3.0-bit budget.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use amq::coordinator::{run_search, SearchParams};
+use amq::exp::common::{self, Pipeline};
+use amq::exp::Ctx;
+
+fn main() -> amq::Result<()> {
+    let artifacts = amq::artifacts_dir();
+    let ctx = Ctx::load(
+        &artifacts,
+        std::path::Path::new("results/quickstart"),
+        SearchParams::smoke(),
+    )?;
+    println!(
+        "loaded subject model: {} blocks, {} searchable linear layers",
+        ctx.assets.manifest.model.n_layers,
+        ctx.assets.manifest.layers.len()
+    );
+
+    // 1. proxy + sensitivity + pruning (the AMQ pipeline front half)
+    let pipe = Pipeline::build(&ctx)?;
+    println!(
+        "pruning: {} outlier layer(s) pinned to 4-bit; space 10^{:.1} -> 10^{:.1}",
+        pipe.prune_report.outliers.len(),
+        pipe.full_space.log10_size(),
+        pipe.space.log10_size()
+    );
+
+    // 2. iterative search-and-update (small smoke budget)
+    let mut evaluator = pipe.evaluator(&ctx);
+    let res = run_search(&pipe.space, &mut evaluator, &ctx.preset)?;
+    println!(
+        "search: {} true evaluations, {} predictor queries, {:.1}s",
+        res.true_evals,
+        res.predictor_queries,
+        res.total_time.as_secs_f64()
+    );
+
+    // 3. frontier + budget selection
+    let front = res.archive.pareto_front();
+    println!("\nPareto frontier ({} points):", front.len());
+    let mut rows: Vec<_> = front.iter().map(|&i| &res.archive.samples[i]).collect();
+    rows.sort_by(|a, b| a.avg_bits.partial_cmp(&b.avg_bits).unwrap());
+    for s in rows.iter().step_by((rows.len() / 12).max(1)) {
+        println!("  {:.3} bits   jsd {:.5}", s.avg_bits, s.jsd);
+    }
+
+    let budget = 3.0;
+    let cfg = common::pick(&res.archive, &pipe.space, budget)?;
+    println!("\nbest config under {budget} bits (actual {:.3}):", pipe.space.avg_bits(&cfg));
+    for (l, b) in ctx.assets.manifest.layers.iter().zip(&cfg) {
+        print!("{}={b} ", l.name);
+    }
+    println!();
+
+    // 4. deploy-time evaluation with asym-clip AWQ
+    let q = common::amq_quality(&ctx, &cfg)?;
+    println!(
+        "\ndeployed (asym-clip AWQ): wiki PPL {:.3}, c4 PPL {:.3}, zero-shot avg {:.1}%",
+        q.wiki_ppl,
+        q.c4_ppl,
+        q.zero_shot.macro_avg(&amq::data::ZERO_SHOT)
+    );
+    Ok(())
+}

@@ -1,0 +1,236 @@
+"""AOT build orchestrator: data -> train -> hessians -> HLO text -> manifest.
+
+Runs exactly once (``make artifacts``).  Produces everything the rust
+coordinator needs to be self-contained:
+
+  calib.bin / test_wiki.bin / test_c4.bin   token splits (i32 [N, T])
+  tasks.json                                task instances
+  weights.bin                               trained fp parameters
+  hessians.bin                              calibration X^T X + mean|x|
+  golden.bin                                fp logits of 2 calib seqs (checks)
+  model_fp.hlo.txt                          (tokens, fp params) -> logits
+  model_quant.hlo.txt                       (tokens, fp side, qparams) -> logits
+  scores_quant.hlo.txt                      fused scorer -> (jsd, ce)
+  train_log.json                            loss curve
+  manifest.json                             shapes + argument orders
+
+Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published ``xla``
+crate binds) rejects; the text parser reassigns ids (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import data as D
+from . import hessian as H
+from . import io_utils as IO
+from . import model as M
+from . import train as T
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the aot_recipe / xla-example pattern)
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which xla_extension 0.5.1's text parser
+    # silently zero-fills (we lost the RoPE tables + causal mask that way).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def flat_arg_names(*trees) -> list[str]:
+    """Flatten pytrees of *names* exactly as jax flattens the value trees."""
+    names: list[str] = []
+    for tree in trees:
+        leaves, _ = jax.tree_util.tree_flatten(tree)
+        names.extend(leaves)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+def fp_param_specs(cfg) -> dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(v, jnp.float32)
+            for k, v in M.param_shapes(cfg).items()}
+
+
+def fp_side_specs(cfg) -> dict[str, jax.ShapeDtypeStruct]:
+    shapes = M.param_shapes(cfg)
+    return {k: jax.ShapeDtypeStruct(shapes[k], jnp.float32)
+            for k in M.fp_side_names(cfg)}
+
+
+def quant_specs(cfg) -> dict[str, dict[str, jax.ShapeDtypeStruct]]:
+    out = {}
+    for name, parts in M.quant_param_shapes(cfg).items():
+        out[name] = {
+            "codes": jax.ShapeDtypeStruct(parts["codes"], jnp.int8),
+            "scale": jax.ShapeDtypeStruct(parts["scale"], jnp.float32),
+            "zero": jax.ShapeDtypeStruct(parts["zero"], jnp.float32),
+        }
+    return out
+
+
+def name_tree_like_quant(cfg):
+    return {name: {p: f"{name}.{p}" for p in ("codes", "scale", "zero")}
+            for name in C.layer_names(cfg)}
+
+
+def name_tree_like_fp(cfg, names):
+    return {k: k for k in names}
+
+
+# ---------------------------------------------------------------------------
+# Build steps
+# ---------------------------------------------------------------------------
+
+def build(outdir: str, steps: int | None, tasks_per_family: int,
+          reuse_weights: bool = False) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    cfg = C.MODEL
+    t0 = time.time()
+
+    print("[aot] generating dataset ...", flush=True)
+    ds = D.build_dataset(n_tasks_per_family=tasks_per_family)
+    IO.write_tokens(os.path.join(outdir, "calib.bin"), ds.calib)
+    IO.write_tokens(os.path.join(outdir, "test_wiki.bin"), ds.test_wiki)
+    IO.write_tokens(os.path.join(outdir, "test_c4.bin"), ds.test_c4)
+    IO.write_tasks_json(os.path.join(outdir, "tasks.json"), ds.tasks)
+
+    weights_path = os.path.join(outdir, "weights.bin")
+    if reuse_weights and os.path.exists(weights_path):
+        # perf-iteration path: keep the trained model, regenerate HLO only
+        print("[aot] reusing existing trained weights ...", flush=True)
+        params = {k: jnp.asarray(v)
+                  for k, v in IO.read_bundle(weights_path).items()}
+    else:
+        print("[aot] training subject model ...", flush=True)
+        params, log = T.train(ds, cfg, steps=steps)
+        IO.write_bundle(weights_path,
+                        {k: np.asarray(v) for k, v in params.items()})
+        with open(os.path.join(outdir, "train_log.json"), "w") as f:
+            json.dump({"loss": log, "steps": steps or C.train_steps(),
+                       "batch": C.train_batch()}, f)
+
+    print("[aot] capturing calibration hessians ...", flush=True)
+    hes = H.capture_hessians(params, ds.calib, cfg)
+    IO.write_bundle(os.path.join(outdir, "hessians.bin"), hes)
+
+    print("[aot] golden reference outputs ...", flush=True)
+    gtoks = jnp.asarray(ds.calib[: C.EVAL_BATCH], jnp.int32)
+    glogits = np.asarray(jax.jit(M.forward_fp)(params, gtoks))
+    IO.write_bundle(os.path.join(outdir, "golden.bin"), {
+        "tokens": np.asarray(gtoks, np.int32),
+        "fp_logits": glogits[:2].astype(np.float32),
+    })
+
+    print("[aot] lowering HLO executables ...", flush=True)
+    B, Tq, V = C.EVAL_BATCH, C.EVAL_SEQ, cfg.vocab_size
+    tok_spec = jax.ShapeDtypeStruct((B, Tq), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((B, Tq), jnp.float32)
+    logits_spec = jax.ShapeDtypeStruct((B, Tq, V), jnp.float32)
+
+    # 1. fp logits
+    def fp_fn(tokens, params):
+        return (M.forward_fp(params, tokens, cfg),)
+
+    low = jax.jit(fp_fn).lower(tok_spec, fp_param_specs(cfg))
+    with open(os.path.join(outdir, "model_fp.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(low))
+    fp_args = flat_arg_names("tokens",
+                             name_tree_like_fp(cfg, sorted(M.param_shapes(cfg))))
+
+    # 2. quant logits
+    def quant_fn(tokens, fp_side, qparams):
+        return (M.forward_quant(fp_side, qparams, tokens, cfg),)
+
+    low = jax.jit(quant_fn).lower(tok_spec, fp_side_specs(cfg), quant_specs(cfg))
+    with open(os.path.join(outdir, "model_quant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(low))
+    quant_args = flat_arg_names(
+        "tokens", name_tree_like_fp(cfg, M.fp_side_names(cfg)),
+        name_tree_like_quant(cfg))
+
+    # 3. fused scorer
+    def scores_fn(tokens, mask, fp_logits, fp_side, qparams):
+        jsd, ce = M.scores_quant(fp_side, qparams, tokens, mask, fp_logits, cfg)
+        return (jsd, ce)
+
+    low = jax.jit(scores_fn).lower(tok_spec, mask_spec, logits_spec,
+                                   fp_side_specs(cfg), quant_specs(cfg))
+    with open(os.path.join(outdir, "scores_quant.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(low))
+    scores_args = flat_arg_names(
+        "tokens", "mask", "fp_logits",
+        name_tree_like_fp(cfg, M.fp_side_names(cfg)),
+        name_tree_like_quant(cfg))
+
+    manifest = {
+        "model": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "rope_theta": cfg.rope_theta, "rms_eps": cfg.rms_eps,
+        },
+        "group_size": C.GROUP_SIZE,
+        "bit_choices": list(C.BIT_CHOICES),
+        "eval_batch": B,
+        "layers": [
+            {"name": n,
+             "out_features": C.linear_shape(cfg, n.split(".")[1])[0],
+             "in_features": C.linear_shape(cfg, n.split(".")[1])[1]}
+            for n in C.layer_names(cfg)
+        ],
+        "fp_side_names": M.fp_side_names(cfg),
+        "executables": {
+            "model_fp": {"file": "model_fp.hlo.txt", "args": fp_args,
+                         "outputs": ["logits"]},
+            "model_quant": {"file": "model_quant.hlo.txt", "args": quant_args,
+                            "outputs": ["logits"]},
+            "scores_quant": {"file": "scores_quant.hlo.txt",
+                             "args": scores_args, "outputs": ["jsd", "ce"]},
+        },
+        "files": {
+            "weights": "weights.bin", "hessians": "hessians.bin",
+            "calib": "calib.bin", "test_wiki": "test_wiki.bin",
+            "test_c4": "test_c4.bin", "tasks": "tasks.json",
+            "golden": "golden.bin",
+        },
+        "special_tokens": {"pad": C.TOK_PAD, "eos": C.TOK_EOS},
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {outdir}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--tasks-per-family", type=int, default=100)
+    ap.add_argument("--reuse-weights", action="store_true",
+                    help="skip training if weights.bin exists (HLO-only rebuild)")
+    args = ap.parse_args()
+    build(args.outdir, args.steps, args.tasks_per_family, args.reuse_weights)
+
+
+if __name__ == "__main__":
+    main()

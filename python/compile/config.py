@@ -1,0 +1,129 @@
+"""Shared build-time configuration for the AMQ reproduction.
+
+Everything here is consumed twice:
+  * by the python compile path (training, AOT lowering, data generation), and
+  * by the rust coordinator, via ``artifacts/manifest.json`` which is written
+    by :mod:`compile.aot` from these values.
+
+The model is a real (trained) tiny-Llama used as the *subject* of the AMQ
+search.  See DESIGN.md §3 for why a ~3.4M-parameter transformer preserves the
+paper's algorithmic behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary layout (512 tokens).
+#
+# The synthetic corpus mixes Markov "text" with structured pattern segments;
+# the zero-shot / few-shot task families reuse the same generators so the
+# trained model is genuinely above chance on them (DESIGN.md §3).
+# ---------------------------------------------------------------------------
+VOCAB_SIZE = 512
+
+TEXT_LO, TEXT_HI = 0, 256          # Markov text tokens           [0, 256)
+VAL_LO, VAL_HI = 256, 320          # 64 value tokens              [256, 320)
+KEY_LO, KEY_HI = 320, 352          # 32 key tokens                [320, 352)
+OPEN_LO, OPEN_HI = 352, 368        # 16 opening brackets          [352, 368)
+CLOSE_LO, CLOSE_HI = 368, 384      # 16 matching closing brackets [368, 384)
+
+# Special markers.
+TOK_COPY = 384     # start of a copy segment
+TOK_SEP = 385      # separator between prompt and continuation
+TOK_KV = 386       # start of a key-value store segment
+TOK_QUERY = 387    # query marker
+TOK_PLUS = 388     # modular addition operator
+TOK_EQ = 389       # equals sign
+TOK_MAJ = 390      # majority-count query marker
+TOK_ANS = 391      # answer marker
+TOK_HOP = 392      # two-hop chained-recall marker
+TOK_A = 393        # counter token A (majority task)
+TOK_B = 394        # counter token B (majority task)
+TOK_EOS = 395      # segment terminator
+TOK_PAD = 396      # padding (masked out everywhere)
+
+MOD_BASE = 64      # modular arithmetic is over Z_64, mapped onto VAL tokens
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 128
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+MODEL = ModelConfig()
+
+# Per-block linear layers, in canonical order.  This order defines LayerId
+# numbering everywhere (python, manifest, rust).
+LINEAR_KINDS = ("q", "k", "v", "o", "gate", "up", "down")
+
+
+def linear_shape(cfg: ModelConfig, kind: str) -> tuple[int, int]:
+    """(out_features, in_features) of a per-block linear layer."""
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "q": (d, d),
+        "k": (d, d),
+        "v": (d, d),
+        "o": (d, d),
+        "gate": (f, d),
+        "up": (f, d),
+        "down": (d, f),
+    }[kind]
+
+
+def layer_names(cfg: ModelConfig) -> list[str]:
+    """Canonical flat ordering of the searchable linear layers."""
+    return [f"blk{b}.{k}" for b in range(cfg.n_layers) for k in LINEAR_KINDS]
+
+
+# ---------------------------------------------------------------------------
+# Quantization geometry
+# ---------------------------------------------------------------------------
+GROUP_SIZE = 128   # grouped weight-only quantization, along in_features
+BIT_CHOICES = (2, 3, 4)
+
+
+def n_groups(in_features: int) -> int:
+    assert in_features % GROUP_SIZE == 0, in_features
+    return in_features // GROUP_SIZE
+
+
+# ---------------------------------------------------------------------------
+# Evaluation batching (fixed shapes for the AOT executables)
+# ---------------------------------------------------------------------------
+EVAL_BATCH = 16    # sequences per PJRT call (single-core CPU testbed)
+EVAL_SEQ = MODEL.seq_len
+
+# Dataset sizes (sequences of EVAL_SEQ tokens).
+N_CALIB = 128      # calibration set ("WikiText-2 train" analog)
+N_TEST_WIKI = 128  # in-distribution test split ("WikiText-2 test" analog)
+N_TEST_C4 = 128    # shifted-distribution test split ("C4 validation" analog)
+
+DATA_SEED = 20250710
+
+
+def train_steps() -> int:
+    """Training steps; override with AMQ_TRAIN_STEPS for fast dev builds."""
+    return int(os.environ.get("AMQ_TRAIN_STEPS", "2000"))
+
+
+def train_batch() -> int:
+    return int(os.environ.get("AMQ_TRAIN_BATCH", "16"))

@@ -1,0 +1,381 @@
+"""Synthetic corpus + task-suite generator (the paper's data substrate).
+
+The paper calibrates on WikiText-2, reports PPL on WikiText-2/C4 and accuracy
+on six zero-shot benchmarks plus 5-shot MMLU/GSM8K.  None of those are usable
+here (repro gate), so we build the closest synthetic equivalent exercising the
+same code paths (DESIGN.md §3):
+
+  * a seeded stochastic-grammar corpus: order-1 sparse Markov "text"
+    interleaved with *pattern segments* (copy, key-value recall, induction,
+    bracket agreement, majority counting, modular arithmetic, two-hop chains);
+  * a "wiki" split drawn from grammar A and a "c4" split drawn from a shifted
+    mixture of grammars A and B — giving an in-distribution vs
+    shifted-distribution PPL axis like WikiText-2 vs C4;
+  * eight task families (six "zero-shot" + two harder "few-shot") whose
+    held-out instances are scored by length-normalized choice logprob, the
+    LM-Eval-Harness protocol.
+
+Everything is deterministic under ``config.DATA_SEED``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import config as C
+
+# ---------------------------------------------------------------------------
+# Markov grammar
+# ---------------------------------------------------------------------------
+N_SUCC = 8  # sparse branching factor: each text token has 8 likely successors
+
+
+@dataclasses.dataclass
+class Grammar:
+    """Sparse order-1 Markov chain over the text-token range."""
+
+    succ: np.ndarray    # [256, N_SUCC] successor token ids (in TEXT range)
+    probs: np.ndarray   # [256, N_SUCC] successor probabilities (rows sum to 1)
+
+    @staticmethod
+    def build(rng: np.random.Generator) -> "Grammar":
+        n = C.TEXT_HI - C.TEXT_LO
+        succ = np.empty((n, N_SUCC), dtype=np.int64)
+        probs = np.empty((n, N_SUCC), dtype=np.float64)
+        for t in range(n):
+            succ[t] = rng.choice(n, size=N_SUCC, replace=False) + C.TEXT_LO
+            w = rng.dirichlet(np.full(N_SUCC, 0.5))
+            probs[t] = w
+        return Grammar(succ, probs)
+
+    def walk(self, rng: np.random.Generator, start: int, length: int) -> list[int]:
+        out = [start]
+        cur = start - C.TEXT_LO
+        for _ in range(length - 1):
+            j = rng.choice(N_SUCC, p=self.probs[cur])
+            nxt = int(self.succ[cur, j])
+            out.append(nxt)
+            cur = nxt - C.TEXT_LO
+        return out
+
+    def sample_start(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(C.TEXT_LO, C.TEXT_HI))
+
+
+class MixGrammar:
+    """C4-analog: each step follows grammar A w.p. ``mix`` else grammar B."""
+
+    def __init__(self, a: Grammar, b: Grammar, mix: float = 0.7):
+        self.a, self.b, self.mix = a, b, mix
+
+    def walk(self, rng: np.random.Generator, start: int, length: int) -> list[int]:
+        out = [start]
+        cur = start
+        for _ in range(length - 1):
+            g = self.a if rng.random() < self.mix else self.b
+            row = cur - C.TEXT_LO
+            j = rng.choice(N_SUCC, p=g.probs[row])
+            cur = int(g.succ[row, j])
+            out.append(cur)
+        return out
+
+    def sample_start(self, rng: np.random.Generator) -> int:
+        return int(rng.integers(C.TEXT_LO, C.TEXT_HI))
+
+
+# ---------------------------------------------------------------------------
+# Pattern segments.  Each returns a flat token list ending in TOK_EOS.
+# ---------------------------------------------------------------------------
+
+def seg_copy(rng: np.random.Generator, g: Grammar) -> list[int]:
+    k = int(rng.integers(3, 9))
+    body = g.walk(rng, g.sample_start(rng), k)
+    return [C.TOK_COPY, *body, C.TOK_SEP, *body, C.TOK_EOS]
+
+
+def seg_kv(rng: np.random.Generator, n_pairs: int | None = None) -> list[int]:
+    m = n_pairs or int(rng.integers(2, 5))
+    keys = rng.choice(C.KEY_HI - C.KEY_LO, size=m, replace=False) + C.KEY_LO
+    vals = rng.integers(C.VAL_LO, C.VAL_HI, size=m)
+    seq = [C.TOK_KV]
+    for k, v in zip(keys, vals):
+        seq += [int(k), int(v)]
+    qi = int(rng.integers(m))
+    seq += [C.TOK_QUERY, int(keys[qi]), C.TOK_ANS, int(vals[qi]), C.TOK_EOS]
+    return seq
+
+
+def seg_induction(rng: np.random.Generator, g: Grammar) -> list[int]:
+    # "... a b <filler> a b" — the repeated bigram is the induction pattern.
+    a = g.sample_start(rng)
+    bi = g.walk(rng, a, 2)
+    filler = g.walk(rng, g.sample_start(rng), int(rng.integers(4, 10)))
+    return [*bi, *filler, *bi, C.TOK_EOS]
+
+
+def seg_bracket(rng: np.random.Generator, g: Grammar) -> list[int]:
+    i = int(rng.integers(16))
+    filler = g.walk(rng, g.sample_start(rng), int(rng.integers(3, 9)))
+    return [C.OPEN_LO + i, *filler, C.CLOSE_LO + i, C.TOK_EOS]
+
+
+def seg_majority(rng: np.random.Generator) -> list[int]:
+    n = int(rng.integers(7, 14))
+    na = int(rng.integers(0, n + 1))
+    # Force a margin of >= 2 so the answer is unambiguous.
+    while abs(2 * na - n) < 2:
+        na = int(rng.integers(0, n + 1))
+    seq = [C.TOK_A] * na + [C.TOK_B] * (n - na)
+    rng.shuffle(seq)
+    ans = C.TOK_A if na > n - na else C.TOK_B
+    return [C.TOK_MAJ, *seq, C.TOK_ANS, ans, C.TOK_EOS]
+
+
+def seg_modadd(rng: np.random.Generator) -> list[int]:
+    a = int(rng.integers(C.MOD_BASE))
+    b = int(rng.integers(C.MOD_BASE))
+    c = (a + b) % C.MOD_BASE
+    return [C.VAL_LO + a, C.TOK_PLUS, C.VAL_LO + b, C.TOK_EQ, C.VAL_LO + c, C.TOK_EOS]
+
+
+def seg_twohop(rng: np.random.Generator) -> list[int]:
+    # k -> m, m -> v; query k answers v (chained recall).
+    k = int(rng.integers(C.KEY_LO, C.KEY_HI))
+    m, v = (int(x) for x in rng.integers(C.VAL_LO, C.VAL_HI, size=2))
+    return [C.TOK_HOP, k, m, m, v, C.TOK_QUERY, k, C.TOK_ANS, v, C.TOK_EOS]
+
+
+SEGMENT_FNS = {
+    "copy": lambda rng, g: seg_copy(rng, g),
+    "kv": lambda rng, g: seg_kv(rng),
+    "induction": lambda rng, g: seg_induction(rng, g),
+    "bracket": lambda rng, g: seg_bracket(rng, g),
+    "majority": lambda rng, g: seg_majority(rng),
+    "modadd": lambda rng, g: seg_modadd(rng),
+    "twohop": lambda rng, g: seg_twohop(rng),
+}
+
+
+# ---------------------------------------------------------------------------
+# Sequence assembly
+# ---------------------------------------------------------------------------
+
+# Sampling weights for pattern segments in the training mix: associative
+# families (kv recall, bracket agreement, modular addition, two-hop chains)
+# need more exposure than the positional ones to be learned at this scale.
+SEGMENT_WEIGHTS = {
+    "copy": 1.0,
+    "kv": 3.0,
+    "induction": 1.0,
+    "bracket": 2.0,
+    "majority": 1.0,
+    "modadd": 3.0,
+    "twohop": 2.0,
+}
+
+
+def make_sequence(rng: np.random.Generator, grammar, seq_len: int) -> np.ndarray:
+    """One training/eval sequence: Markov runs interleaved with segments."""
+    toks: list[int] = []
+    fams = list(SEGMENT_FNS)
+    w = np.asarray([SEGMENT_WEIGHTS[f] for f in fams])
+    w = w / w.sum()
+    while len(toks) < seq_len:
+        if rng.random() < 0.35:
+            run = int(rng.integers(8, 25))
+            toks += grammar.walk(rng, grammar.sample_start(rng), run)
+        else:
+            fam = fams[int(rng.choice(len(fams), p=w))]
+            base = grammar if isinstance(grammar, Grammar) else grammar.a
+            toks += SEGMENT_FNS[fam](rng, base)
+    return np.asarray(toks[:seq_len], dtype=np.int32)
+
+
+def make_split(rng: np.random.Generator, grammar, n_seqs: int, seq_len: int) -> np.ndarray:
+    return np.stack([make_sequence(rng, grammar, seq_len) for _ in range(n_seqs)])
+
+
+# ---------------------------------------------------------------------------
+# Task instances (held-out; scored by choice logprob)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TaskInstance:
+    family: str
+    context: list[int]
+    choices: list[list[int]]   # token lists; score = mean logprob per choice
+    answer: int                # index of the correct choice
+
+
+def _distract_vals(rng, correct: int, k: int) -> list[int]:
+    opts = [v for v in range(C.VAL_LO, C.VAL_HI) if v != correct]
+    return [int(x) for x in rng.choice(opts, size=k, replace=False)]
+
+
+def task_copy(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    k = int(rng.integers(4, 8))
+    body = g.walk(rng, g.sample_start(rng), k)
+    ctx = [C.TOK_COPY, *body, C.TOK_SEP]
+    wrongs = []
+    while len(wrongs) < 3:
+        perm = list(body)
+        rng.shuffle(perm)
+        if perm != body and perm not in wrongs:
+            wrongs.append(perm)
+    choices = [list(body)] + wrongs
+    order = rng.permutation(4)
+    return TaskInstance("copy", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_recall(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    m = 3
+    keys = rng.choice(C.KEY_HI - C.KEY_LO, size=m, replace=False) + C.KEY_LO
+    vals = rng.choice(C.VAL_HI - C.VAL_LO, size=m, replace=False) + C.VAL_LO
+    ctx = [C.TOK_KV]
+    for k, v in zip(keys, vals):
+        ctx += [int(k), int(v)]
+    qi = int(rng.integers(m))
+    ctx += [C.TOK_QUERY, int(keys[qi]), C.TOK_ANS]
+    correct = int(vals[qi])
+    choices = [[correct]] + [[v] for v in _distract_vals(rng, correct, 3)]
+    order = rng.permutation(4)
+    return TaskInstance("recall", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_induction(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    a = g.sample_start(rng)
+    b = int(g.succ[a - C.TEXT_LO, int(rng.integers(N_SUCC))])
+    filler = g.walk(rng, g.sample_start(rng), int(rng.integers(5, 12)))
+    ctx = [a, b, *filler, a]
+    wrongs = [int(x) for x in rng.choice(
+        [t for t in range(C.TEXT_LO, C.TEXT_HI) if t != b], size=3, replace=False)]
+    choices = [[b]] + [[w] for w in wrongs]
+    order = rng.permutation(4)
+    return TaskInstance("induction", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_agreement(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    i = int(rng.integers(16))
+    filler = g.walk(rng, g.sample_start(rng), int(rng.integers(4, 9)))
+    ctx = [C.OPEN_LO + i, *filler]
+    wrong_ids = [int(x) for x in rng.choice(
+        [j for j in range(16) if j != i], size=3, replace=False)]
+    choices = [[C.CLOSE_LO + i]] + [[C.CLOSE_LO + j] for j in wrong_ids]
+    order = rng.permutation(4)
+    return TaskInstance("agreement", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_majority(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    n = int(rng.integers(7, 14))
+    na = int(rng.integers(0, n + 1))
+    while abs(2 * na - n) < 3:
+        na = int(rng.integers(0, n + 1))
+    seq = [C.TOK_A] * na + [C.TOK_B] * (n - na)
+    rng.shuffle(seq)
+    ans, other = (C.TOK_A, C.TOK_B) if na > n - na else (C.TOK_B, C.TOK_A)
+    ctx = [C.TOK_MAJ, *seq, C.TOK_ANS]
+    choices = [[ans], [other]]
+    order = rng.permutation(2)
+    return TaskInstance("majority", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_completion(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    ctx = g.walk(rng, g.sample_start(rng), int(rng.integers(10, 20)))
+    cont = g.walk(rng, ctx[-1], 5)[1:]  # grammar-consistent continuation
+    wrongs = [[int(x) for x in rng.integers(C.TEXT_LO, C.TEXT_HI, size=4)]
+              for _ in range(3)]
+    choices = [cont] + wrongs
+    order = rng.permutation(4)
+    return TaskInstance("completion", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+# --- harder, few-shot families (MMLU/GSM8K analog) -------------------------
+
+def task_modadd_fewshot(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    ctx: list[int] = []
+    for _ in range(3):  # 3 in-context examples
+        ctx += seg_modadd(rng)
+    a = int(rng.integers(C.MOD_BASE))
+    b = int(rng.integers(C.MOD_BASE))
+    c = C.VAL_LO + (a + b) % C.MOD_BASE
+    ctx += [C.VAL_LO + a, C.TOK_PLUS, C.VAL_LO + b, C.TOK_EQ]
+    choices = [[c]] + [[v] for v in _distract_vals(rng, c, 3)]
+    order = rng.permutation(4)
+    return TaskInstance("modadd", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+def task_chain_fewshot(rng: np.random.Generator, g: Grammar) -> TaskInstance:
+    ctx: list[int] = []
+    for _ in range(2):  # 2 in-context examples
+        ctx += seg_twohop(rng)
+    k = int(rng.integers(C.KEY_LO, C.KEY_HI))
+    m, v = (int(x) for x in rng.choice(C.VAL_HI - C.VAL_LO, size=2, replace=False) + C.VAL_LO)
+    ctx += [C.TOK_HOP, k, m, m, v, C.TOK_QUERY, k, C.TOK_ANS]
+    choices = [[v]] + [[x] for x in _distract_vals(rng, v, 3)]
+    order = rng.permutation(4)
+    return TaskInstance("chain", ctx, [choices[i] for i in order],
+                        int(np.argwhere(order == 0)[0, 0]))
+
+
+ZERO_SHOT_FAMILIES = {
+    "copy": task_copy,            # ARC-Easy analog
+    "recall": task_recall,        # BoolQ analog
+    "induction": task_induction,  # WinoGrande analog
+    "agreement": task_agreement,  # PIQA analog
+    "majority": task_majority,    # HellaSwag analog
+    "completion": task_completion,  # ARC-Challenge analog
+}
+FEW_SHOT_FAMILIES = {
+    "modadd": task_modadd_fewshot,  # GSM8K analog
+    "chain": task_chain_fewshot,    # MMLU analog
+}
+
+
+def make_tasks(rng: np.random.Generator, g: Grammar,
+               n_per_family: int = 100) -> list[TaskInstance]:
+    out: list[TaskInstance] = []
+    for fam, fn in {**ZERO_SHOT_FAMILIES, **FEW_SHOT_FAMILIES}.items():
+        for _ in range(n_per_family):
+            inst = fn(rng, g)
+            assert len(inst.context) + max(len(c) for c in inst.choices) \
+                <= C.MODEL.seq_len, fam
+            out.append(inst)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Top-level dataset build
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Dataset:
+    grammar_a: Grammar
+    grammar_b: Grammar
+    calib: np.ndarray       # [N_CALIB, T] int32 — "wiki train" analog
+    test_wiki: np.ndarray   # [N_TEST_WIKI, T]
+    test_c4: np.ndarray     # [N_TEST_C4, T]
+    tasks: list[TaskInstance]
+
+    def train_batches(self, rng: np.random.Generator, batch: int, steps: int):
+        """Infinite-ish stream of fresh training batches from grammar A."""
+        for _ in range(steps):
+            yield make_split(rng, self.grammar_a, batch, C.MODEL.seq_len)
+
+
+def build_dataset(seed: int = C.DATA_SEED, n_tasks_per_family: int = 100) -> Dataset:
+    rng = np.random.default_rng(seed)
+    ga = Grammar.build(rng)
+    gb = Grammar.build(rng)
+    mix = MixGrammar(ga, gb, mix=0.7)
+    calib = make_split(rng, ga, C.N_CALIB, C.MODEL.seq_len)
+    test_wiki = make_split(rng, ga, C.N_TEST_WIKI, C.MODEL.seq_len)
+    test_c4 = make_split(rng, mix, C.N_TEST_C4, C.MODEL.seq_len)
+    tasks = make_tasks(rng, ga, n_tasks_per_family)
+    return Dataset(ga, gb, calib, test_wiki, test_c4, tasks)

@@ -1,0 +1,64 @@
+"""Calibration-Hessian capture for the activation-dependent quantizers.
+
+GPTQ needs H = X^T X over calibration inputs of each linear layer; our
+AWQ-style clip search scores candidate clip ranges with the Hessian-weighted
+output MSE  tr((W - Wq) H (W - Wq)^T)  so it needs the same statistic, plus
+the per-channel mean |x| for AWQ-style scaling.  Within a block, Q/K/V share
+an input and so do Gate/Up, so only four distinct activations exist per block
+(attn_in, o_in, mlp_in, down_in).
+
+This runs once at build time on the *fp* model over the calibration split and
+is saved to ``artifacts/hessians.bin``; the rust quantizers consume it
+(DESIGN.md §3 — the paper captures the same statistics on GPU at scale).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from . import model as M
+
+# Activation slot feeding each linear kind.
+ACT_SLOT = {"q": "attn_in", "k": "attn_in", "v": "attn_in", "o": "o_in",
+            "gate": "mlp_in", "up": "mlp_in", "down": "down_in"}
+ACT_SLOTS = ("attn_in", "o_in", "mlp_in", "down_in")
+
+
+def capture_hessians(params, calib: np.ndarray,
+                     cfg: C.ModelConfig = C.MODEL,
+                     batch: int = C.EVAL_BATCH) -> dict[str, np.ndarray]:
+    """Returns {"blk{b}.{slot}.hessian": [K,K], "...{slot}.mean_abs": [K]}."""
+
+    @jax.jit
+    def acts_fn(toks):
+        _, acts = M.forward_fp_with_acts(params, toks, cfg)
+        return acts
+
+    sums: dict[str, np.ndarray] = {}
+    counts = 0
+    n = calib.shape[0]
+    assert n % batch == 0, (n, batch)
+    for i in range(0, n, batch):
+        toks = jnp.asarray(calib[i:i + batch], jnp.int32)
+        acts = acts_fn(toks)
+        for b in range(cfg.n_layers):
+            for slot in ACT_SLOTS:
+                key = f"blk{b}.{slot}"
+                x = np.asarray(acts[key], np.float64)       # [M, K]
+                h = x.T @ x
+                a = np.abs(x).sum(axis=0)
+                if f"{key}.hessian" not in sums:
+                    sums[f"{key}.hessian"] = h
+                    sums[f"{key}.mean_abs"] = a
+                else:
+                    sums[f"{key}.hessian"] += h
+                    sums[f"{key}.mean_abs"] += a
+        counts += toks.shape[0] * toks.shape[1]
+
+    out: dict[str, np.ndarray] = {}
+    for key, val in sums.items():
+        out[key] = (val / counts).astype(np.float32)
+    return out

@@ -1,0 +1,69 @@
+"""Binary artifact formats shared with the rust loader (rust/src/data/).
+
+All files are little-endian.  Each "tensor bundle" file is:
+
+    [u32 header_len] [header_len bytes of UTF-8 JSON] [raw tensor data]
+
+The JSON header is ``{"tensors": [{"name", "dtype", "shape", "offset"}, ...]}``
+with *byte* offsets relative to the start of the data section.
+dtypes: "f32", "i32", "u16", "i8".
+
+Token-split files use the same container with a single 2-D "tokens" tensor.
+Task instances are plain JSON (small).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "i32": np.int32, "u16": np.uint16, "i8": np.int8}
+
+
+def write_bundle(path: str, tensors: dict[str, np.ndarray]) -> None:
+    entries = []
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        dt = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+              np.dtype(np.uint16): "u16", np.dtype(np.int8): "i8"}[arr.dtype]
+        entries.append({"name": name, "dtype": dt,
+                        "shape": list(arr.shape), "offset": offset})
+        blobs.append(arr.tobytes())
+        offset += arr.nbytes
+    header = json.dumps({"tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read_bundle(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    out = {}
+    for e in header["tensors"]:
+        dt = np.dtype(_DTYPES[e["dtype"]])
+        n = int(np.prod(e["shape"])) if e["shape"] else 1
+        arr = np.frombuffer(data, dtype=dt, count=n, offset=e["offset"])
+        out[e["name"]] = arr.reshape(e["shape"])
+    return out
+
+
+def write_tokens(path: str, tokens: np.ndarray) -> None:
+    assert tokens.dtype == np.int32 and tokens.ndim == 2
+    write_bundle(path, {"tokens": tokens})
+
+
+def write_tasks_json(path: str, tasks) -> None:
+    payload = [{"family": t.family, "context": [int(x) for x in t.context],
+                "choices": [[int(x) for x in c] for c in t.choices],
+                "answer": int(t.answer)} for t in tasks]
+    with open(path, "w") as f:
+        json.dump(payload, f)

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels (build-time; lowered with interpret=True into the HLO)."""
+
+from .dequant_matmul import dequant_matmul, vmem_bytes  # noqa: F401
+from .jsd import jsd_tokens  # noqa: F401

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: grouped dequantize + matmul (the inference hot spot).
+
+This is the TPU rethink of the paper's per-layer CUDA kernels (TensorRT-LLM /
+AutoGPTQ): the paper's insight is that weight-only quantized inference is
+*weight-streaming bound*, and keeping one bit-width per linear layer keeps the
+stream regular.  On a TPU that maps to a BlockSpec schedule (DESIGN.md §6):
+
+  grid = (M/TM, N/TN); for each (i, j) the kernel sees
+    x tile      [TM, K]   (activations, f32, streamed HBM->VMEM)
+    codes tile  [TN, K]   (int8 quantization codes for TN output rows)
+    scale tile  [TN, G]   zero tile [TN, G]
+  dequantizes the TN x K tile group-wise into VMEM and feeds a [TM,K]x[K,TN]
+  MXU matmul, accumulating in f32.
+
+K is kept whole per block (K <= 512 here), so VMEM per program instance is
+  TM*K*4 + TN*K*(1+4) + TN*G*8 + TM*TN*4  bytes  (see EXPERIMENTS.md §Perf).
+
+``interpret=True`` lowers the kernel to plain HLO so the AOT artifact runs on
+the CPU PJRT client; on a real TPU the same BlockSpecs target VMEM/MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, codes_ref, scale_ref, zero_ref, o_ref, *, group_size: int):
+    x = x_ref[...]                      # [TM, K] f32
+    codes = codes_ref[...]              # [TN, K] int8
+    scale = scale_ref[...]              # [TN, G] f32
+    zero = zero_ref[...]                # [TN, G] f32
+    tn, k = codes.shape
+    g = k // group_size
+    c = codes.astype(jnp.float32).reshape(tn, g, group_size)
+    w = (c - zero[:, :, None]) * scale[:, :, None]   # dequant in VMEM
+    w = w.reshape(tn, k)
+    # MXU matmul: [TM, K] x [K, TN] with f32 accumulation.
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m", "block_n"))
+def dequant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, *, group_size: int = 128,
+                   block_m: int = 128, block_n: int = 128) -> jnp.ndarray:
+    """y[M,N] = x[M,K] @ dequant(codes,scale,zero)[N,K].T
+
+    Shapes: x [M,K] f32, codes [N,K] int8, scale/zero [N,G] f32 with
+    G = K/group_size.  M must divide by block_m and N by block_n (callers pad;
+    the model uses M = batch*seq which is MXU-aligned by construction).
+    """
+    m, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2, (k, k2)
+    assert k % group_size == 0
+    g = k // group_size
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only
+    )(x, codes, scale, zero)
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int, group_size: int) -> int:
+    """Estimated VMEM footprint per program instance (perf model, §Perf)."""
+    g = k // group_size
+    return (block_m * k * 4          # x tile f32
+            + block_n * k            # codes tile int8
+            + block_n * k * 4        # dequantized tile f32
+            + block_n * g * 8        # scale + zero
+            + block_m * block_n * 4  # accumulator
+            )

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: per-token Jensen-Shannon divergence.
+
+AMQ's quality signal (§3.4 of the paper) is the JSD between the logits of the
+assembled quantized model and the FP reference.  On the search hot path this
+runs once per candidate over the whole calibration batch, so it is fused into
+the AOT "scorer" executable rather than shipping logits back to rust.
+
+BlockSpec schedule: grid over token blocks; each program instance reduces a
+[TB, V] pair of logit tiles to [TB] divergences entirely in VMEM
+(V = 512 here -> TB*V*4*2 bytes of logits per instance).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _log_softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def _kernel(p_ref, q_ref, o_ref):
+    logp = _log_softmax(p_ref[...])
+    logq = _log_softmax(q_ref[...])
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    logm = jnp.logaddexp(logp, logq) - jnp.log(2.0)
+    kl_pm = jnp.sum(p * (logp - logm), axis=-1)
+    kl_qm = jnp.sum(q * (logq - logm), axis=-1)
+    o_ref[...] = 0.5 * (kl_pm + kl_qm)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def jsd_tokens(logits_p: jnp.ndarray, logits_q: jnp.ndarray,
+               *, block_t: int = 256) -> jnp.ndarray:
+    """Per-token JSD in nats. logits_*: [T, V] f32 -> [T] f32."""
+    t, v = logits_p.shape
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    return pl.pallas_call(
+        _kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, v), lambda i: (i, 0)),
+            pl.BlockSpec((bt, v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(logits_p, logits_q)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness references).
+
+Conventions (shared with the rust side, see rust/src/quant/pack.rs):
+
+  * A linear layer weight ``W`` has shape ``[out, in]`` (y = x @ W.T).
+  * Grouped quantization runs along ``in`` with group size ``gs``:
+    ``W[o, g*gs + j] ≈ (codes[o, g*gs + j] - zero[o, g]) * scale[o, g]``.
+  * ``codes`` are small non-negative integers stored as int8 regardless of
+    the logical bit-width; the bit-width only constrains the code range and
+    the memory accounting (DESIGN.md §3; physical packing lives in rust).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _log_softmax(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = x - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+def dequant(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+            group_size: int) -> jnp.ndarray:
+    """Reconstruct f32 weights from grouped codes. codes:[N,K], s/z:[N,G]."""
+    n, k = codes.shape
+    g = k // group_size
+    c = codes.astype(jnp.float32).reshape(n, g, group_size)
+    w = (c - zero[:, :, None]) * scale[:, :, None]
+    return w.reshape(n, k)
+
+
+def dequant_matmul(x: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """y = x @ dequant(W).T  with x:[M,K], codes:[N,K] -> y:[M,N]."""
+    w = dequant(codes, scale, zero, group_size)
+    return x @ w.T
+
+
+def jsd_tokens(logits_p: jnp.ndarray, logits_q: jnp.ndarray) -> jnp.ndarray:
+    """Per-token Jensen-Shannon divergence between two logit tensors.
+
+    logits_*: [..., V] -> jsd: [...] in nats; always within [0, ln 2].
+    """
+    logp = _log_softmax(logits_p)
+    logq = _log_softmax(logits_q)
+    p = jnp.exp(logp)
+    q = jnp.exp(logq)
+    logm = jnp.logaddexp(logp, logq) - jnp.log(2.0)
+    kl_pm = jnp.sum(p * (logp - logm), axis=-1)
+    kl_qm = jnp.sum(q * (logq - logm), axis=-1)
+    return 0.5 * (kl_pm + kl_qm)
+
+
+def cross_entropy_tokens(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-token CE in nats. logits:[...,V], targets:[...] int."""
+    logp = _log_softmax(logits)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]

@@ -1,0 +1,234 @@
+"""L2: the subject model — a tiny-Llama in JAX (fp32 + quantized paths).
+
+Architecture: token embedding -> n_layers x (RMSNorm -> causal MHA with RoPE
+-> residual; RMSNorm -> SwiGLU MLP -> residual) -> RMSNorm -> LM head.
+
+Two forward paths share all non-linear structure:
+
+  * ``forward_fp``    — plain f32 weights; used for training, the FP reference
+    logits, and calibration-Hessian capture.
+  * ``forward_quant`` — every per-block linear (Q,K,V,O,Gate,Up,Down) runs
+    through the L1 Pallas grouped dequant-matmul kernel on int8 codes +
+    per-group scale/zero.  This is the graph the rust coordinator executes
+    via PJRT for every assembled candidate configuration.
+
+``scores_quant`` fuses the paper's quality signal into the graph: it returns
+(mean JSD vs. the FP logits, mean next-token CE) so the search hot path moves
+only token ids + packed parameters across the PJRT boundary, never logits.
+
+Parameter pytrees are plain dicts; JAX flattens dicts in sorted-key order,
+which is the argument order recorded in artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from .config import ModelConfig
+from .kernels import dequant_matmul, jsd_tokens
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Flat name -> shape for every fp parameter (sorted-key arg order)."""
+    shapes: dict[str, tuple[int, ...]] = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "lm_head": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+    }
+    for b in range(cfg.n_layers):
+        shapes[f"blk{b}.attn_norm"] = (cfg.d_model,)
+        shapes[f"blk{b}.mlp_norm"] = (cfg.d_model,)
+        for kind in C.LINEAR_KINDS:
+            shapes[f"blk{b}.{kind}"] = C.linear_shape(cfg, kind)
+    return shapes
+
+
+def init_params(rng: np.random.Generator, cfg: ModelConfig) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            std = 1.0 / np.sqrt(fan_in)
+            params[name] = jnp.asarray(
+                rng.normal(0.0, std, size=shape), jnp.float32)
+    return params
+
+
+def quant_param_shapes(cfg: ModelConfig) -> dict[str, dict[str, tuple[int, ...]]]:
+    """name -> {codes, scale, zero} shapes for every searchable linear."""
+    out = {}
+    for name in C.layer_names(cfg):
+        kind = name.split(".")[1]
+        n, k = C.linear_shape(cfg, kind)
+        g = C.n_groups(k)
+        out[name] = {"codes": (n, k), "scale": (n, g), "zero": (n, g)}
+    return out
+
+
+def fp_side_names(cfg: ModelConfig) -> list[str]:
+    """FP parameters that stay f32 in the quantized graph (not searched)."""
+    names = ["embed", "lm_head", "final_norm"]
+    for b in range(cfg.n_layers):
+        names += [f"blk{b}.attn_norm", f"blk{b}.mlp_norm"]
+    return sorted(names)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(cfg: ModelConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables, computed in *numpy* so they lower to HLO constants.
+
+    Computed in-graph they would go through each XLA version's pow/cos
+    approximations; tiny inv-freq differences produce angle errors that grow
+    linearly with position and would make the rust-side (xla_extension 0.5.1)
+    logits drift from the build-time (jaxlib) golden reference.
+    """
+    hd = cfg.head_dim
+    pos = np.arange(cfg.seq_len, dtype=np.float64)
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2, dtype=np.float64) / hd))
+    ang = pos[:, None] * inv[None, :]          # [T, hd/2]
+    return (jnp.asarray(np.cos(ang), jnp.float32),
+            jnp.asarray(np.sin(ang), jnp.float32))
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, H, hd]; rotate interleaved (even, odd) pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    """q,k,v: [B, T, H, hd] -> [B, T, H*hd]; causal."""
+    b, t, h, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v)
+    return out.reshape(b, t, h * hd)
+
+
+# ---------------------------------------------------------------------------
+# Linear dispatch: fp vs quantized
+# ---------------------------------------------------------------------------
+
+def _forward(fp_params, tokens, cfg: ModelConfig, lin, capture: bool = False):
+    """Shared forward; ``lin(name, x2d)`` dispatches each searchable linear."""
+    b, t = tokens.shape
+    d = cfg.d_model
+    cos, sin = rope_tables(cfg)
+    x = fp_params["embed"][tokens]                      # [B,T,D]
+    acts: dict[str, jnp.ndarray] = {}
+
+    for blk in range(cfg.n_layers):
+        p = f"blk{blk}"
+        h = rmsnorm(x, fp_params[f"{p}.attn_norm"], cfg.rms_eps)
+        h2 = h.reshape(b * t, d)
+        if capture:
+            acts[f"{p}.attn_in"] = h2
+        qh = lin(f"{p}.q", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        kh = lin(f"{p}.k", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        vh = lin(f"{p}.v", h2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        qh = apply_rope(qh, cos, sin)
+        kh = apply_rope(kh, cos, sin)
+        attn = _attention(qh, kh, vh, cfg).reshape(b * t, d)
+        if capture:
+            acts[f"{p}.o_in"] = attn
+        x = x + lin(f"{p}.o", attn).reshape(b, t, d)
+
+        h = rmsnorm(x, fp_params[f"{p}.mlp_norm"], cfg.rms_eps)
+        h2 = h.reshape(b * t, d)
+        if capture:
+            acts[f"{p}.mlp_in"] = h2
+        gate = lin(f"{p}.gate", h2)
+        up = lin(f"{p}.up", h2)
+        act = jax.nn.silu(gate) * up
+        if capture:
+            acts[f"{p}.down_in"] = act
+        x = x + lin(f"{p}.down", act).reshape(b, t, d)
+
+    x = rmsnorm(x, fp_params["final_norm"], cfg.rms_eps)
+    logits = x.reshape(b * t, d) @ fp_params["lm_head"].T
+    logits = logits.reshape(b, t, cfg.vocab_size)
+    return (logits, acts) if capture else logits
+
+
+def forward_fp(params, tokens, cfg: ModelConfig = C.MODEL):
+    return _forward(params, tokens, cfg, lambda n, x: x @ params[n].T)
+
+
+def forward_fp_with_acts(params, tokens, cfg: ModelConfig = C.MODEL):
+    return _forward(params, tokens, cfg, lambda n, x: x @ params[n].T,
+                    capture=True)
+
+
+def forward_quant(fp_params, qparams, tokens, cfg: ModelConfig = C.MODEL):
+    # Kernel block shape (EXPERIMENTS.md §Perf).  On a real TPU you would
+    # keep MXU-aligned 128x128 tiles and let the grid parallelize across
+    # cores; on this CPU-interpret target the lowered grid becomes a serial
+    # XLA while-loop, so taking the whole M in one block (M = batch*seq =
+    # 2048) removes 15/16 of the loop trips and cut the quantized forward
+    # from ~3.0x to ~1.25x the fp32 forward's wall-clock.
+    import os
+    block_m = int(os.environ.get("AMQ_BLOCK_M", "2048"))
+    block_n = int(os.environ.get("AMQ_BLOCK_N", "128"))
+
+    def lin(name, x2d):
+        q = qparams[name]
+        return dequant_matmul(x2d, q["codes"], q["scale"], q["zero"],
+                              group_size=C.GROUP_SIZE,
+                              block_m=block_m, block_n=block_n)
+    return _forward(fp_params, tokens, cfg, lin)
+
+
+# ---------------------------------------------------------------------------
+# Scoring heads
+# ---------------------------------------------------------------------------
+
+def scores_quant(fp_params, qparams, tokens, mask, fp_logits,
+                 cfg: ModelConfig = C.MODEL):
+    """Fused search-path scorer -> (mean JSD, mean next-token CE) scalars.
+
+    mask: f32 [B,T], 1.0 = position counts.  JSD is averaged over valid
+    positions, CE over valid *target* positions (shift by one).
+    """
+    logits = forward_quant(fp_params, qparams, tokens, cfg)
+    b, t, v = logits.shape
+    jsd = jsd_tokens(fp_logits.reshape(b * t, v), logits.reshape(b * t, v))
+    jsd = jsd.reshape(b, t)
+    jsd_mean = jnp.sum(jsd * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    ce_tok = ref.cross_entropy_tokens(logits[:, :-1], tokens[:, 1:])
+    tgt_mask = mask[:, 1:]
+    ce_mean = jnp.sum(ce_tok * tgt_mask) / jnp.maximum(jnp.sum(tgt_mask), 1.0)
+    return jsd_mean, ce_mean
+
+
+def ce_fp(params, tokens, cfg: ModelConfig = C.MODEL):
+    """Mean next-token CE of the fp model (training loss)."""
+    logits = forward_fp(params, tokens, cfg)
+    ce = ref.cross_entropy_tokens(logits[:, :-1], tokens[:, 1:])
+    return jnp.mean(ce)

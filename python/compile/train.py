@@ -1,0 +1,84 @@
+"""Build-time training of the subject model (AdamW, cosine schedule).
+
+The paper searches over *pretrained* LLMs; our substitute model must be
+genuinely trained so its linear layers develop the heterogeneous quantization
+sensitivity the search exploits (DESIGN.md §3).  Runs once inside
+``make artifacts``; never on the rust request path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as C
+from . import data as D
+from . import model as M
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.01):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, m_, v_):
+        update = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return p - lr * (update + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}
+
+
+def cosine_lr(step: jnp.ndarray, total: int, peak: float = 3e-3,
+              warmup: int = 40) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def train(dataset: D.Dataset, cfg: C.ModelConfig = C.MODEL,
+          steps: int | None = None, batch: int | None = None,
+          seed: int = 7, log_every: int = 25):
+    """Train the fp model; returns (params, loss_log list of (step, loss))."""
+    steps = steps or C.train_steps()
+    batch = batch or C.train_batch()
+    rng = np.random.default_rng(seed)
+    params = M.init_params(rng, cfg)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, step_idx):
+        loss, grads = jax.value_and_grad(M.ce_fp)(params, toks)
+        lr = cosine_lr(step_idx, steps)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    log: list[tuple[int, float]] = []
+    t0 = time.time()
+    data_rng = np.random.default_rng(seed + 1)
+    for i, toks in enumerate(dataset.train_batches(data_rng, batch, steps)):
+        toks = jnp.asarray(toks, jnp.int32)
+        params, opt, loss = step_fn(params, opt, toks, jnp.int32(i))
+        if i % log_every == 0 or i == steps - 1:
+            l = float(loss)
+            log.append((i, l))
+            print(f"[train] step {i:5d}  loss {l:.4f}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    return params, log

@@ -1,0 +1,99 @@
+"""AOT pipeline smoke tests (tiny build into tmp, no full training)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import config as C
+from compile import data as D
+from compile import hessian as H
+from compile import io_utils as IO
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, steps=3, tasks_per_family=3)
+    return out
+
+
+def test_manifest_consistency(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    n_lin = m["model"]["n_layers"] * 7
+    assert len(m["layers"]) == n_lin
+    # fp exec: tokens + all fp params
+    assert len(m["executables"]["model_fp"]["args"]) == \
+        1 + len(M.param_shapes(C.MODEL))
+    # quant exec: tokens + fp-side + 3 per linear
+    assert len(m["executables"]["model_quant"]["args"]) == \
+        1 + len(m["fp_side_names"]) + 3 * n_lin
+    assert len(m["executables"]["scores_quant"]["args"]) == \
+        3 + len(m["fp_side_names"]) + 3 * n_lin
+    # manifest arg names must be unique and ordered-deterministic
+    for exe in m["executables"].values():
+        assert len(exe["args"]) == len(set(exe["args"]))
+
+
+def test_hlo_entry_param_counts(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    for exe in m["executables"].values():
+        text = open(os.path.join(built, exe["file"])).read()
+        entry = text[text.index("ENTRY"):]
+        assert entry.count("parameter(") == len(exe["args"]), exe["file"]
+
+
+def test_weights_roundtrip(built):
+    w = IO.read_bundle(os.path.join(built, "weights.bin"))
+    shapes = M.param_shapes(C.MODEL)
+    assert set(w) == set(shapes)
+    for k, v in w.items():
+        assert tuple(v.shape) == tuple(shapes[k])
+        assert np.isfinite(v).all()
+
+
+def test_hessians_posdefish(built):
+    h = IO.read_bundle(os.path.join(built, "hessians.bin"))
+    for k, v in h.items():
+        if k.endswith("hessian"):
+            assert v.shape[0] == v.shape[1]
+            # symmetric PSD (up to fp noise)
+            np.testing.assert_allclose(v, v.T, rtol=1e-3, atol=1e-4)
+            eig = np.linalg.eigvalsh(v.astype(np.float64))
+            assert eig.min() > -1e-4, k
+
+
+def test_golden_matches_recomputed(built):
+    import jax.numpy as jnp
+    g = IO.read_bundle(os.path.join(built, "golden.bin"))
+    w = IO.read_bundle(os.path.join(built, "weights.bin"))
+    params = {k: jnp.asarray(v) for k, v in w.items()}
+    logits = M.forward_fp(params, jnp.asarray(g["tokens"][:2], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), g["fp_logits"],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_bundle_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4)).astype(np.float32),
+        "b": rng.integers(0, 100, size=(7,)).astype(np.int32),
+        "c": rng.integers(-8, 8, size=(2, 5)).astype(np.int8),
+    }
+    path = str(tmp_path / "t.bin")
+    IO.write_bundle(path, tensors)
+    back = IO.read_bundle(path)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_training_reduces_loss():
+    ds = D.build_dataset(seed=9, n_tasks_per_family=2)
+    _, log = T.train(ds, C.MODEL, steps=60, batch=8, log_every=10)
+    first, last = log[0][1], log[-1][1]
+    assert np.isfinite(last)
+    assert last < first - 0.5, (first, last)

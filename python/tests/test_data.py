@@ -1,0 +1,93 @@
+"""Corpus/task generator invariants: determinism, vocab ranges, solvability."""
+
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def small_ds():
+    return D.build_dataset(seed=123, n_tasks_per_family=5)
+
+
+def test_deterministic():
+    a = D.build_dataset(seed=42, n_tasks_per_family=3)
+    b = D.build_dataset(seed=42, n_tasks_per_family=3)
+    np.testing.assert_array_equal(a.calib, b.calib)
+    np.testing.assert_array_equal(a.test_c4, b.test_c4)
+    assert [t.context for t in a.tasks] == [t.context for t in b.tasks]
+
+
+def test_seed_changes_data():
+    a = D.build_dataset(seed=1, n_tasks_per_family=2)
+    b = D.build_dataset(seed=2, n_tasks_per_family=2)
+    assert not np.array_equal(a.calib, b.calib)
+
+
+def test_token_ranges(small_ds):
+    for split in (small_ds.calib, small_ds.test_wiki, small_ds.test_c4):
+        assert split.dtype == np.int32
+        assert split.min() >= 0 and split.max() < C.VOCAB_SIZE
+
+
+def test_split_shapes(small_ds):
+    assert small_ds.calib.shape == (C.N_CALIB, C.MODEL.seq_len)
+    assert small_ds.test_wiki.shape == (C.N_TEST_WIKI, C.MODEL.seq_len)
+    assert small_ds.test_c4.shape == (C.N_TEST_C4, C.MODEL.seq_len)
+
+
+def test_task_instances_valid(small_ds):
+    fams = set()
+    for t in small_ds.tasks:
+        fams.add(t.family)
+        assert 0 <= t.answer < len(t.choices)
+        assert len(t.choices) >= 2
+        total = len(t.context) + max(len(c) for c in t.choices)
+        assert total <= C.MODEL.seq_len
+        for tok in t.context + [x for c in t.choices for x in c]:
+            assert 0 <= tok < C.VOCAB_SIZE
+    assert fams == set(D.ZERO_SHOT_FAMILIES) | set(D.FEW_SHOT_FAMILIES)
+
+
+def test_task_choices_distinct(small_ds):
+    for t in small_ds.tasks:
+        as_tuples = [tuple(c) for c in t.choices]
+        assert len(set(as_tuples)) == len(as_tuples), t.family
+
+
+def test_segments_end_with_eos():
+    rng = np.random.default_rng(0)
+    g = D.Grammar.build(rng)
+    for fam, fn in D.SEGMENT_FNS.items():
+        seg = fn(rng, g)
+        assert seg[-1] == C.TOK_EOS, fam
+        assert all(0 <= t < C.VOCAB_SIZE for t in seg), fam
+
+
+def test_grammar_walk_follows_transitions():
+    rng = np.random.default_rng(0)
+    g = D.Grammar.build(rng)
+    walk = g.walk(rng, C.TEXT_LO + 5, 50)
+    for prev, nxt in zip(walk, walk[1:]):
+        assert nxt in set(g.succ[prev - C.TEXT_LO].tolist())
+
+
+def test_modadd_correct():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        seg = D.seg_modadd(rng)
+        a, b, c = seg[0] - C.VAL_LO, seg[2] - C.VAL_LO, seg[4] - C.VAL_LO
+        assert (a + b) % C.MOD_BASE == c
+
+
+def test_majority_answer_correct():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        seg = D.seg_majority(rng)
+        body = seg[1:-3]
+        na = sum(1 for t in body if t == C.TOK_A)
+        nb = sum(1 for t in body if t == C.TOK_B)
+        ans = seg[-2]
+        assert ans == (C.TOK_A if na > nb else C.TOK_B)

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dequant_matmul, jsd_tokens, vmem_bytes
+from compile.kernels import ref
+
+
+def _mk_quant(rng, n, k, gs, bits):
+    codes = rng.integers(0, 2 ** bits, size=(n, k)).astype(np.int8)
+    g = k // gs
+    scale = rng.uniform(0.01, 0.2, size=(n, g)).astype(np.float32)
+    zero = rng.uniform(0.0, 2 ** bits - 1, size=(n, g)).astype(np.float32)
+    return codes, scale, zero
+
+
+# ---------------------------------------------------------------------------
+# dequant_matmul
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    m_blocks=st.integers(1, 3),
+    n_blocks=st.integers(1, 2),
+    k_groups=st.integers(1, 4),
+    gs=st.sampled_from([32, 64, 128]),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_dequant_matmul_matches_ref(m_blocks, n_blocks, k_groups, gs, bits, seed):
+    rng = np.random.default_rng(seed)
+    bm, bn = 32, 32
+    m, n, k = m_blocks * bm, n_blocks * bn, k_groups * gs
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    codes, scale, zero = _mk_quant(rng, n, k, gs, bits)
+    got = dequant_matmul(jnp.asarray(x), jnp.asarray(codes),
+                         jnp.asarray(scale), jnp.asarray(zero),
+                         group_size=gs, block_m=bm, block_n=bn)
+    want = ref.dequant_matmul(jnp.asarray(x), jnp.asarray(codes),
+                              jnp.asarray(scale), jnp.asarray(zero), gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_matmul_model_shapes():
+    """The exact shapes the model uses (M=B*T, per-layer N,K)."""
+    rng = np.random.default_rng(0)
+    for n, k in [(128, 128), (256, 128), (128, 256)]:
+        m = 16 * 128
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        codes, scale, zero = _mk_quant(rng, n, k, 128, 4)
+        got = dequant_matmul(jnp.asarray(x), jnp.asarray(codes),
+                             jnp.asarray(scale), jnp.asarray(zero),
+                             group_size=128)
+        want = ref.dequant_matmul(jnp.asarray(x), jnp.asarray(codes),
+                                  jnp.asarray(scale), jnp.asarray(zero), 128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_exact_roundtrip():
+    """If W is exactly representable, dequant-matmul is exact (up to fp)."""
+    rng = np.random.default_rng(1)
+    n, k, gs = 64, 128, 64
+    codes, scale, zero = _mk_quant(rng, n, k, gs, 3)
+    w = np.asarray(ref.dequant(jnp.asarray(codes), jnp.asarray(scale),
+                               jnp.asarray(zero), gs))
+    x = rng.standard_normal((32, k)).astype(np.float32)
+    got = dequant_matmul(jnp.asarray(x), jnp.asarray(codes),
+                         jnp.asarray(scale), jnp.asarray(zero),
+                         group_size=gs, block_m=32, block_n=32)
+    np.testing.assert_allclose(np.asarray(got), x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    # Default blocks on the largest layer shape must fit a 16 MiB VMEM.
+    assert vmem_bytes(128, 128, 256, 128) < 16 * 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+# jsd
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    t_blocks=st.integers(1, 3),
+    v=st.sampled_from([64, 512]),
+    scale=st.floats(0.1, 8.0),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_jsd_matches_ref(t_blocks, v, scale, seed):
+    rng = np.random.default_rng(seed)
+    t = t_blocks * 64
+    p = (rng.standard_normal((t, v)) * scale).astype(np.float32)
+    q = (rng.standard_normal((t, v)) * scale).astype(np.float32)
+    got = jsd_tokens(jnp.asarray(p), jnp.asarray(q), block_t=64)
+    want = ref.jsd_tokens(jnp.asarray(p), jnp.asarray(q))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_jsd_properties():
+    rng = np.random.default_rng(3)
+    p = rng.standard_normal((128, 512)).astype(np.float32)
+    q = rng.standard_normal((128, 512)).astype(np.float32)
+    j_pq = np.asarray(jsd_tokens(jnp.asarray(p), jnp.asarray(q)))
+    j_qp = np.asarray(jsd_tokens(jnp.asarray(q), jnp.asarray(p)))
+    # symmetric, bounded by ln 2, zero on identical inputs
+    np.testing.assert_allclose(j_pq, j_qp, rtol=1e-5, atol=1e-6)
+    assert (j_pq >= -1e-6).all() and (j_pq <= np.log(2.0) + 1e-5).all()
+    j_pp = np.asarray(jsd_tokens(jnp.asarray(p), jnp.asarray(p)))
+    np.testing.assert_allclose(j_pp, 0.0, atol=1e-6)
+
+
+def test_jsd_shift_invariance():
+    """JSD depends on softmax(logits): constant per-row shifts are no-ops."""
+    rng = np.random.default_rng(4)
+    p = rng.standard_normal((64, 128)).astype(np.float32)
+    q = rng.standard_normal((64, 128)).astype(np.float32)
+    shift = rng.standard_normal((64, 1)).astype(np.float32) * 5
+    a = np.asarray(jsd_tokens(jnp.asarray(p), jnp.asarray(q), block_t=64))
+    b = np.asarray(jsd_tokens(jnp.asarray(p + shift), jnp.asarray(q), block_t=64))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_cross_entropy_ref_matches_manual():
+    rng = np.random.default_rng(5)
+    logits = rng.standard_normal((4, 7, 16)).astype(np.float32)
+    targets = rng.integers(0, 16, size=(4, 7))
+    ce = np.asarray(ref.cross_entropy_tokens(jnp.asarray(logits),
+                                             jnp.asarray(targets)))
+    lse = np.log(np.exp(logits).sum(-1))
+    manual = lse - np.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    np.testing.assert_allclose(ce, manual, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,118 @@
+"""L2 model invariants: shapes, quant-vs-fp consistency, scoring heads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import config as C
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(np.random.default_rng(0), C.MODEL)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.integers(0, C.VOCAB_SIZE, size=(2, C.MODEL.seq_len)),
+                       jnp.int32)
+
+
+def _exact_qparams(params):
+    """Quant params whose dequantization reproduces a *representable* W.
+
+    codes are random 4-bit ints; W := dequant(codes) replaces the fp weight,
+    so forward_quant(fp', q) must equal forward_fp(fp' with W) exactly.
+    """
+    rng = np.random.default_rng(2)
+    qparams, fp2 = {}, dict(params)
+    for name in C.layer_names(C.MODEL):
+        kind = name.split(".")[1]
+        n, k = C.linear_shape(C.MODEL, kind)
+        g = C.n_groups(k)
+        codes = rng.integers(0, 16, size=(n, k)).astype(np.int8)
+        scale = rng.uniform(0.01, 0.05, size=(n, g)).astype(np.float32)
+        zero = rng.uniform(0, 15, size=(n, g)).astype(np.float32)
+        w = (codes.reshape(n, g, -1) - zero[:, :, None]) * scale[:, :, None]
+        fp2[name] = jnp.asarray(w.reshape(n, k), jnp.float32)
+        qparams[name] = {"codes": jnp.asarray(codes),
+                         "scale": jnp.asarray(scale),
+                         "zero": jnp.asarray(zero)}
+    return fp2, qparams
+
+
+def test_fp_forward_shape_finite(params, tokens):
+    logits = M.forward_fp(params, tokens)
+    assert logits.shape == (2, C.MODEL.seq_len, C.VOCAB_SIZE)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_quant_forward_matches_fp_on_representable_weights(params, tokens):
+    fp2, qparams = _exact_qparams(params)
+    want = M.forward_fp(fp2, tokens)
+    got = M.forward_quant(fp2, qparams, tokens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_capture_slots(params, tokens):
+    logits, acts = M.forward_fp_with_acts(params, tokens)
+    bt = 2 * C.MODEL.seq_len
+    for b in range(C.MODEL.n_layers):
+        assert acts[f"blk{b}.attn_in"].shape == (bt, C.MODEL.d_model)
+        assert acts[f"blk{b}.o_in"].shape == (bt, C.MODEL.d_model)
+        assert acts[f"blk{b}.mlp_in"].shape == (bt, C.MODEL.d_model)
+        assert acts[f"blk{b}.down_in"].shape == (bt, C.MODEL.d_ff)
+
+
+def test_scores_quant_zero_jsd_on_identity(params, tokens):
+    """Scorer JSD must be ~0 when quant logits coincide with fp logits."""
+    fp2, qparams = _exact_qparams(params)
+    fp_logits = M.forward_fp(fp2, tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    jsd, ce = M.scores_quant(fp2, qparams, tokens, mask, fp_logits)
+    assert float(jsd) < 1e-4
+    assert 0.0 < float(ce) < 20.0
+
+
+def test_scores_quant_positive_jsd_on_perturbation(params, tokens):
+    fp2, qparams = _exact_qparams(params)
+    fp_logits = M.forward_fp(fp2, tokens)
+    # corrupt one layer's codes
+    bad = dict(qparams)
+    name = C.layer_names(C.MODEL)[0]
+    bad[name] = dict(bad[name])
+    bad[name]["codes"] = jnp.zeros_like(bad[name]["codes"])
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    jsd, _ = M.scores_quant(fp2, bad, tokens, mask, fp_logits)
+    assert float(jsd) > 1e-4
+
+
+def test_mask_excludes_positions(params, tokens):
+    fp2, qparams = _exact_qparams(params)
+    fp_logits = M.forward_fp(fp2, tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32).at[:, 64:].set(0.0)
+    jsd, ce = M.scores_quant(fp2, qparams, tokens, mask, fp_logits)
+    assert np.isfinite(float(jsd)) and np.isfinite(float(ce))
+
+
+def test_rope_rotation_preserves_norm():
+    cfg = C.MODEL
+    cos, sin = M.rope_tables(cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(
+        (1, cfg.seq_len, cfg.n_heads, cfg.head_dim)), jnp.float32)
+    r = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               rtol=1e-4)
+
+
+def test_param_shapes_cover_all_linears():
+    shapes = M.param_shapes(C.MODEL)
+    for name in C.layer_names(C.MODEL):
+        assert name in shapes
+    assert len(C.layer_names(C.MODEL)) == C.MODEL.n_layers * 7

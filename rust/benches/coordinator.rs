@@ -1,0 +1,103 @@
+//! Coordinator micro-benchmarks: NSGA-II generations, predictor fit/predict,
+//! archive and space operations.  (Hand-rolled harness; see util::bench.)
+
+use amq::coordinator::nsga2::{self, Nsga2Params};
+use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
+use amq::coordinator::space::SearchSpace;
+use amq::coordinator::Archive;
+use amq::util::bench::{bench, header};
+use amq::util::Rng;
+use std::time::Duration;
+
+fn toy_space(n: usize) -> SearchSpace {
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n],
+        params: vec![128 * 128; n],
+        groups: vec![128; n],
+        group_size: 128,
+    }
+}
+
+fn main() {
+    let budget = Duration::from_millis(600);
+    header("coordinator");
+    let space = toy_space(28);
+
+    // dataset for predictors
+    let mut rng = Rng::new(0);
+    let xs: Vec<Vec<f32>> = (0..200)
+        .map(|_| (0..28).map(|_| [0.0f32, 0.5, 1.0][rng.below(3)]).collect())
+        .collect();
+    let ys: Vec<f32> = xs
+        .iter()
+        .map(|x| (-(x.iter().sum::<f32>() / 28.0) * 2.0).exp())
+        .collect();
+
+    bench("rbf fit (200 samples, 28 dims)", budget, || {
+        let mut p = predictor::make(PredictorKind::Rbf, 0);
+        p.fit(&xs, &ys);
+    })
+    .print();
+
+    let mut rbf = predictor::make(PredictorKind::Rbf, 0);
+    rbf.fit(&xs, &ys);
+    let probe = xs[7].clone();
+    bench("rbf predict", budget, || {
+        std::hint::black_box(rbf.predict(&probe));
+    })
+    .print();
+
+    bench("mlp fit (200 samples, 300 epochs)", Duration::from_secs(2), || {
+        let mut p = predictor::make(PredictorKind::Mlp, 0);
+        p.fit(&xs, &ys);
+    })
+    .print();
+
+    let mut seed = 0u64;
+    bench("nsga-ii pop100 x 15 gens (predictor-free)", Duration::from_secs(2), || {
+        seed += 1;
+        let mut r = Rng::new(seed);
+        let pop = nsga2::run(
+            &space,
+            vec![],
+            &Nsga2Params { pop_size: 100, generations: 15, crossover_prob: 0.9, mutation_prob: 0.1 },
+            &mut r,
+            |cfg| [cfg.iter().map(|&b| (4 - b) as f64).sum(), space.avg_bits(cfg)],
+        );
+        std::hint::black_box(pop.len());
+    })
+    .print();
+
+    bench("nsga-ii pop100 x 15 gens + rbf objective", Duration::from_secs(3), || {
+        seed += 1;
+        let mut r = Rng::new(seed);
+        let active: Vec<usize> = (0..28).collect();
+        let pop = nsga2::run(
+            &space,
+            vec![],
+            &Nsga2Params { pop_size: 100, generations: 15, crossover_prob: 0.9, mutation_prob: 0.1 },
+            &mut r,
+            |cfg| [rbf.predict(&space.features(cfg, &active)) as f64, space.avg_bits(cfg)],
+        );
+        std::hint::black_box(pop.len());
+    })
+    .print();
+
+    bench("archive insert+pareto (500 samples)", budget, || {
+        let mut a = Archive::new();
+        let mut r = Rng::new(1);
+        for _ in 0..500 {
+            let cfg = space.random(&mut r);
+            let bits = space.avg_bits(&cfg);
+            a.insert(cfg, r.f32(), bits);
+        }
+        std::hint::black_box(a.pareto_front().len());
+    })
+    .print();
+
+    bench("space avg_bits", budget, || {
+        let cfg = vec![3u8; 28];
+        std::hint::black_box(space.avg_bits(&cfg));
+    })
+    .print();
+}

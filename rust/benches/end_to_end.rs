@@ -1,0 +1,80 @@
+//! End-to-end benchmarks over the real artifacts (skipped when absent):
+//! PJRT scorer latency (the search hot-path unit), fp/quant executable
+//! latency, proxy assembly, candidate evaluation, and upload costs —
+//! one line per paper-relevant cost.
+
+use amq::coordinator::{ConfigEvaluator, ProxyEvaluator, ProxyStore, SearchSpace};
+use amq::model::ModelAssets;
+use amq::quant::Hqq;
+use amq::runtime::Runtime;
+use amq::util::bench::{bench, header};
+use amq::util::Rng;
+use std::time::Duration;
+
+fn main() -> amq::Result<()> {
+    if !amq::artifacts_available() {
+        eprintln!("[skip] artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let dir = amq::artifacts_dir();
+    let assets = ModelAssets::load(&dir)?;
+    let rt = Runtime::load(&dir, &assets.weights)?;
+    let calib = amq::data::load_tokens(&assets.manifest.file("calib")?)?;
+    let b = rt.batch_size();
+    let t = rt.seq_len();
+    let toks = calib.batch(0, b).to_vec();
+    let mask = vec![1.0f32; b * t];
+    let batch = rt.prepare_batch(&toks, &mask)?;
+
+    header("end-to-end (PJRT CPU, batch 16x128)");
+    let store = ProxyStore::build(&assets.manifest, &assets.weights, None, &Hqq::default())?;
+    let proxy = amq::coordinator::DeviceProxy::new(&rt, store)?;
+    let space = SearchSpace::full(&assets.manifest);
+    let mut rng = Rng::new(0);
+
+    bench("proxy assemble (28 layers)", Duration::from_millis(300), || {
+        let cfg = space.random(&mut rng);
+        std::hint::black_box(proxy.assemble(&cfg).len());
+    })
+    .print();
+
+    let cfg3 = vec![3u8; 28];
+    let layers = proxy.assemble(&cfg3);
+    bench("fused scorer call (jsd+ce)", Duration::from_secs(6), || {
+        std::hint::black_box(rt.scores(&batch, &layers).unwrap());
+    })
+    .print();
+
+    bench("fp logits call", Duration::from_secs(4), || {
+        std::hint::black_box(rt.fp_logits(&toks).unwrap().len());
+    })
+    .print();
+
+    bench("quant logits call (pallas dequant-matmul)", Duration::from_secs(6), || {
+        std::hint::black_box(rt.quant_logits(&toks, &layers).unwrap().len());
+    })
+    .print();
+
+    let batches = vec![batch];
+    let mut evaluator = ProxyEvaluator::new(&proxy, &batches);
+    let mut rng2 = Rng::new(7);
+    bench("candidate true-eval (assemble+score, uncached)", Duration::from_secs(6), || {
+        let cfg = space.random(&mut rng2);
+        std::hint::black_box(evaluator.eval_jsd(&cfg).unwrap());
+    })
+    .print();
+
+    let q = Hqq::default();
+    let w = assets.weights.linear(&assets.manifest.layers[6].name)?;
+    bench("hqq quantize largest layer (256x128)", Duration::from_secs(2), || {
+        std::hint::black_box(amq::quant::Quantizer::quantize(&q, &w, 3, 128, None));
+    })
+    .print();
+
+    let ql = amq::quant::Quantizer::quantize(&q, &w, 3, 128, None);
+    bench("upload quant layer buffers", Duration::from_secs(1), || {
+        std::hint::black_box(rt.upload_quant_layer(&ql).unwrap());
+    })
+    .print();
+    Ok(())
+}

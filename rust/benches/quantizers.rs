@@ -1,0 +1,83 @@
+//! Quantizer benchmarks: per-layer cost of each method at the subject
+//! model's layer shapes (these are the "compression time" primitives of
+//! Table 4) plus pack/unpack throughput.
+
+use amq::model::CalibStats;
+use amq::quant::{pack, AwqClip, BitStackLayer, Gptq, Hqq, PbLlm, Quantizer, Rtn};
+use amq::tensor::Mat;
+use amq::util::bench::{bench, header};
+use amq::util::Rng;
+use std::time::Duration;
+
+fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let mut w = Mat::zeros(n, k);
+    for v in &mut w.data {
+        *v = rng.normal() * 0.1;
+    }
+    w
+}
+
+fn stats(k: usize, seed: u64) -> CalibStats {
+    let x = rand_w(2 * k, k, seed);
+    let mut h = Mat::zeros(k, k);
+    let mut ma = vec![0.0f32; k];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        for i in 0..k {
+            ma[i] += row[i].abs();
+            for j in 0..k {
+                h[(i, j)] += row[i] * row[j];
+            }
+        }
+    }
+    CalibStats { hessian: h, mean_abs: ma }
+}
+
+fn main() {
+    let budget = Duration::from_millis(800);
+    header("quantizers (layer 256x128 = the model's largest shape)");
+    let w = rand_w(256, 128, 1);
+    let st = stats(128, 2);
+
+    bench("rtn w3 g128", budget, || {
+        std::hint::black_box(Rtn.quantize(&w, 3, 128, None));
+    })
+    .print();
+    bench("hqq w3 g128 (20 iters)", budget, || {
+        std::hint::black_box(Hqq::default().quantize(&w, 3, 128, None));
+    })
+    .print();
+    bench("gptq w3 g128 (with hessian)", budget, || {
+        std::hint::black_box(Gptq::default().quantize(&w, 3, 128, Some(&st)));
+    })
+    .print();
+    bench("awq-clip w3 g128 (grid search)", Duration::from_secs(2), || {
+        std::hint::black_box(AwqClip::default().quantize(&w, 3, 128, Some(&st)));
+    })
+    .print();
+    bench("pbllm rho=0.29 g128", budget, || {
+        std::hint::black_box(PbLlm::new(0.29, 128).quantize(&w, Some(&st)));
+    })
+    .print();
+    bench("bitstack decompose 10 blocks", Duration::from_secs(2), || {
+        std::hint::black_box(BitStackLayer::decompose("l", &w, 10));
+    })
+    .print();
+
+    header("bit packing (1M codes)");
+    let mut rng = Rng::new(3);
+    let codes: Vec<u8> = (0..1 << 20).map(|_| rng.below(8) as u8).collect();
+    for bits in [2u8, 3, 4] {
+        let codes_b: Vec<u8> = codes.iter().map(|&c| c % (1 << bits)).collect();
+        let packed = pack::pack(&codes_b, bits);
+        bench(&format!("pack {bits}-bit"), budget, || {
+            std::hint::black_box(pack::pack(&codes_b, bits));
+        })
+        .print();
+        bench(&format!("unpack {bits}-bit"), budget, || {
+            std::hint::black_box(pack::unpack(&packed, bits, codes_b.len()));
+        })
+        .print();
+    }
+}

@@ -1,0 +1,131 @@
+//! The archive: all truly-evaluated (configuration, JSD, avg-bits) samples.
+//! Feeds predictor training and the final Pareto extraction (§3.5).
+
+use super::space::Config;
+use std::collections::HashSet;
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub config: Config,
+    pub jsd: f32,
+    pub avg_bits: f64,
+}
+
+#[derive(Default)]
+pub struct Archive {
+    pub samples: Vec<Sample>,
+    seen: HashSet<Config>,
+}
+
+impl Archive {
+    pub fn new() -> Archive {
+        Archive::default()
+    }
+
+    /// Insert if unseen; returns false on duplicates.
+    pub fn insert(&mut self, config: Config, jsd: f32, avg_bits: f64) -> bool {
+        if self.seen.contains(&config) {
+            return false;
+        }
+        self.seen.insert(config.clone());
+        self.samples.push(Sample { config, jsd, avg_bits });
+        true
+    }
+
+    pub fn contains(&self, config: &Config) -> bool {
+        self.seen.contains(config)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Indices of the non-dominated samples (minimize jsd AND avg_bits).
+    pub fn pareto_front(&self) -> Vec<usize> {
+        pareto_front_of(
+            &self
+                .samples
+                .iter()
+                .map(|s| (s.jsd as f64, s.avg_bits))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Best sample with avg_bits <= budget (+tolerance), by jsd.
+    pub fn best_under(&self, budget_bits: f64, tol: f64) -> Option<&Sample> {
+        self.samples
+            .iter()
+            .filter(|s| s.avg_bits <= budget_bits + tol)
+            .min_by(|a, b| a.jsd.partial_cmp(&b.jsd).unwrap())
+    }
+}
+
+/// Non-dominated indices for 2-objective minimization.
+pub fn pareto_front_of(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    // sort by first objective asc, then second asc
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .partial_cmp(&points[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut front = Vec::new();
+    let mut best_second = f64::INFINITY;
+    for &i in &idx {
+        if points[i].1 < best_second {
+            front.push(i);
+            best_second = points[i].1;
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup() {
+        let mut a = Archive::new();
+        assert!(a.insert(vec![2, 3], 0.1, 2.75));
+        assert!(!a.insert(vec![2, 3], 0.2, 2.75));
+        assert_eq!(a.len(), 1);
+        assert!(a.contains(&vec![2, 3]));
+    }
+
+    #[test]
+    fn pareto_front_simple() {
+        let mut a = Archive::new();
+        a.insert(vec![2, 2], 0.5, 2.25); // front (cheapest)
+        a.insert(vec![4, 4], 0.05, 4.25); // front (best quality)
+        a.insert(vec![3, 3], 0.2, 3.25); // front (middle)
+        a.insert(vec![2, 4], 0.6, 3.25); // dominated by [3,3]
+        let front = a.pareto_front();
+        assert_eq!(front.len(), 3);
+        assert!(!front.contains(&3));
+    }
+
+    #[test]
+    fn best_under_budget() {
+        let mut a = Archive::new();
+        a.insert(vec![2, 2], 0.5, 2.25);
+        a.insert(vec![3, 3], 0.2, 3.25);
+        a.insert(vec![4, 4], 0.05, 4.25);
+        let best = a.best_under(3.25, 0.005).unwrap();
+        assert_eq!(best.config, vec![3, 3]);
+        assert!(a.best_under(2.0, 0.005).is_none());
+    }
+
+    #[test]
+    fn pareto_front_of_handles_ties() {
+        let pts = vec![(1.0, 1.0), (1.0, 1.0), (0.5, 2.0), (2.0, 0.5)];
+        let f = pareto_front_of(&pts);
+        // one of the duplicates is on the front, the other dominated-equal
+        assert!(f.contains(&2) && f.contains(&3));
+        assert_eq!(f.iter().filter(|&&i| i <= 1).count(), 1);
+    }
+}

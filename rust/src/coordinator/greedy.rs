@@ -1,0 +1,135 @@
+//! Greedy search (Appendix G baseline): start from all layers at max bits;
+//! repeatedly try demoting each remaining layer one step, truly evaluate
+//! the JSD impact, and permanently demote the layer that hurts least.
+//! Expensive (O(layers) true evals per step) — exactly the cost Table 11
+//! contrasts with AMQ.
+
+use super::proxy::ConfigEvaluator;
+use super::space::{Config, SearchSpace};
+use crate::Result;
+
+pub struct GreedyResult {
+    pub config: Config,
+    pub true_evals: usize,
+    pub steps: usize,
+}
+
+pub fn greedy(
+    space: &SearchSpace,
+    evaluator: &mut dyn ConfigEvaluator,
+    target_bits: f64,
+) -> Result<GreedyResult> {
+    let start_evals = evaluator.count();
+    let mut cfg: Config = space
+        .choices
+        .iter()
+        .map(|c| *c.iter().max().unwrap())
+        .collect();
+    let mut steps = 0usize;
+    while space.avg_bits(&cfg) > target_bits {
+        let mut best: Option<(f32, usize, u8)> = None;
+        for li in 0..space.n_layers() {
+            let cur = cfg[li];
+            let lower = space.choices[li].iter().copied().filter(|&b| b < cur).max();
+            let Some(b) = lower else { continue };
+            let mut cand = cfg.clone();
+            cand[li] = b;
+            let jsd = evaluator.eval_jsd(&cand)?;
+            if best.map(|(j, _, _)| jsd < j).unwrap_or(true) {
+                best = Some((jsd, li, b));
+            }
+        }
+        match best {
+            Some((_, li, b)) => {
+                cfg[li] = b;
+                steps += 1;
+            }
+            None => break, // nothing left to demote
+        }
+    }
+    Ok(GreedyResult {
+        config: cfg,
+        true_evals: evaluator.count() - start_evals,
+        steps,
+    })
+}
+
+/// One greedy demotion step: returns the best single-layer demotion of
+/// `cfg`, or None when nothing can be demoted.  (Used by harnesses that
+/// snapshot the descent at multiple budgets.)
+pub fn greedy_step(
+    space: &SearchSpace,
+    evaluator: &mut dyn ConfigEvaluator,
+    cfg: &Config,
+) -> Result<Option<Config>> {
+    let mut best: Option<(f32, Config)> = None;
+    for li in 0..space.n_layers() {
+        let cur = cfg[li];
+        let lower = space.choices[li].iter().copied().filter(|&b| b < cur).max();
+        let Some(b) = lower else { continue };
+        let mut cand = cfg.clone();
+        cand[li] = b;
+        let jsd = evaluator.eval_jsd(&cand)?;
+        if best.as_ref().map(|(j, _)| jsd < *j).unwrap_or(true) {
+            best = Some((jsd, cand));
+        }
+    }
+    Ok(best.map(|(_, c)| c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::space::toy_space;
+
+    struct SynthEval {
+        weights: Vec<f32>,
+        evals: usize,
+    }
+
+    impl ConfigEvaluator for SynthEval {
+        fn eval_jsd(&mut self, config: &Config) -> Result<f32> {
+            self.evals += 1;
+            Ok(config
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| self.weights[i] * ((4 - b) as f32).powi(2))
+                .sum())
+        }
+
+        fn count(&self) -> usize {
+            self.evals
+        }
+    }
+
+    #[test]
+    fn demotes_cheapest_layers_first() {
+        let space = toy_space(6);
+        let mut ev = SynthEval { weights: vec![1.0, 0.01, 1.0, 0.01, 1.0, 0.01], evals: 0 };
+        let res = greedy(&space, &mut ev, 3.5 + 0.25).unwrap();
+        // cheap layers (odd) should be the demoted ones
+        let cheap: u32 = [1, 3, 5].iter().map(|&i| res.config[i] as u32).sum();
+        let dear: u32 = [0, 2, 4].iter().map(|&i| res.config[i] as u32).sum();
+        assert!(cheap < dear, "{:?}", res.config);
+        assert!(space.avg_bits(&res.config) <= 3.75);
+    }
+
+    #[test]
+    fn eval_count_scales_with_layers_times_steps() {
+        let space = toy_space(8);
+        let mut ev = SynthEval { weights: vec![0.1; 8], evals: 0 };
+        let res = greedy(&space, &mut ev, 2.25).unwrap();
+        // full demotion: 16 steps, each trying <= 8 layers
+        assert_eq!(space.avg_bits(&res.config), 2.25);
+        assert!(res.true_evals > 60, "{}", res.true_evals);
+        assert_eq!(res.steps, 16);
+    }
+
+    #[test]
+    fn stops_at_floor() {
+        let space = toy_space(3);
+        let mut ev = SynthEval { weights: vec![0.1; 3], evals: 0 };
+        let res = greedy(&space, &mut ev, 1.0).unwrap(); // below reachable
+        assert_eq!(res.config, vec![2, 2, 2]);
+    }
+}

@@ -1,0 +1,28 @@
+//! The AMQ coordinator — the paper's contribution (§3, Algorithm 1):
+//!
+//! * [`space`] — layer-wise bit-width search space + average-bits objective;
+//! * [`sensitivity`] — per-layer low-bit sensitivity scan (Fig. 2);
+//! * [`pruning`] — 2x-median outlier exclusion (§3.2, Table 5);
+//! * [`proxy`] — precomputed HQQ pieces + zero-copy candidate assembly
+//!   (§3.3) and the [`proxy::ConfigEvaluator`] true-evaluation interface;
+//! * [`predictor`] — RBF (default) / MLP quality predictors (§3.4);
+//! * [`nsga2`] — the multi-objective genetic engine;
+//! * [`search`] — the iterative search-and-update loop (§3.5);
+//! * [`oneshot`], [`greedy`] — the Appendix G discrete-search baselines;
+//! * [`archive`] — evaluated samples, Pareto front, budget selection.
+
+pub mod archive;
+pub mod greedy;
+pub mod nsga2;
+pub mod oneshot;
+pub mod predictor;
+pub mod pruning;
+pub mod proxy;
+pub mod search;
+pub mod sensitivity;
+pub mod space;
+
+pub use archive::{Archive, Sample};
+pub use proxy::{ConfigEvaluator, DeviceProxy, ProxyEvaluator, ProxyStore};
+pub use search::{run_search, SearchParams, SearchResult};
+pub use space::{Config, SearchSpace};

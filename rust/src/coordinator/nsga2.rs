@@ -1,0 +1,311 @@
+//! NSGA-II (Deb et al., 2002) over bit-width configurations: fast
+//! non-dominated sort, crowding distance, binary tournament, uniform
+//! crossover and per-gene mutation (the paper's §3.5 search engine).
+
+use super::space::{Config, SearchSpace};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Nsga2Params {
+    pub pop_size: usize,
+    pub generations: usize,
+    pub crossover_prob: f32,
+    pub mutation_prob: f32,
+}
+
+impl Default for Nsga2Params {
+    fn default() -> Self {
+        // Table 6 defaults (pop 200, 20 generations, pc 0.9, pm 0.1)
+        Nsga2Params {
+            pop_size: 200,
+            generations: 20,
+            crossover_prob: 0.9,
+            mutation_prob: 0.1,
+        }
+    }
+}
+
+/// One evaluated individual: objectives are (predicted quality, avg bits),
+/// both minimized.
+#[derive(Clone, Debug)]
+pub struct Individual {
+    pub config: Config,
+    pub obj: [f64; 2],
+    pub rank: usize,
+    pub crowding: f64,
+}
+
+/// `a` dominates `b` (2-objective minimization).
+#[inline]
+pub fn dominates(a: &[f64; 2], b: &[f64; 2]) -> bool {
+    a[0] <= b[0] && a[1] <= b[1] && (a[0] < b[0] || a[1] < b[1])
+}
+
+/// Fast non-dominated sort: assigns ranks, returns the fronts.
+pub fn non_dominated_sort(pop: &mut [Individual]) -> Vec<Vec<usize>> {
+    let n = pop.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in i + 1..n {
+            if dominates(&pop[i].obj, &pop[j].obj) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&pop[j].obj, &pop[i].obj) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    let mut rank = 0;
+    while !current.is_empty() {
+        for &i in &current {
+            pop[i].rank = rank;
+        }
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+        rank += 1;
+    }
+    fronts
+}
+
+/// Crowding distance within a front (boundary points get infinity).
+pub fn crowding_distance(pop: &mut [Individual], front: &[usize]) {
+    for &i in front {
+        pop[i].crowding = 0.0;
+    }
+    let m = front.len();
+    if m <= 2 {
+        for &i in front {
+            pop[i].crowding = f64::INFINITY;
+        }
+        return;
+    }
+    for obj in 0..2 {
+        let mut order: Vec<usize> = front.to_vec();
+        order.sort_by(|&a, &b| {
+            pop[a].obj[obj]
+                .partial_cmp(&pop[b].obj[obj])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let lo = pop[order[0]].obj[obj];
+        let hi = pop[order[m - 1]].obj[obj];
+        pop[order[0]].crowding = f64::INFINITY;
+        pop[order[m - 1]].crowding = f64::INFINITY;
+        if hi <= lo {
+            continue;
+        }
+        for w in 1..m - 1 {
+            let delta = (pop[order[w + 1]].obj[obj] - pop[order[w - 1]].obj[obj]) / (hi - lo);
+            pop[order[w]].crowding += delta;
+        }
+    }
+}
+
+fn tournament<'a>(pop: &'a [Individual], rng: &mut Rng) -> &'a Individual {
+    let a = &pop[rng.below(pop.len())];
+    let b = &pop[rng.below(pop.len())];
+    if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Uniform crossover + per-gene mutation, repaired into the space.
+fn make_child(
+    space: &SearchSpace,
+    p1: &Config,
+    p2: &Config,
+    params: &Nsga2Params,
+    rng: &mut Rng,
+) -> Config {
+    let mut child: Config = if rng.bool(params.crossover_prob) {
+        p1.iter()
+            .zip(p2)
+            .map(|(&a, &b)| if rng.bool(0.5) { a } else { b })
+            .collect()
+    } else {
+        p1.clone()
+    };
+    for (i, gene) in child.iter_mut().enumerate() {
+        if rng.bool(params.mutation_prob) && space.choices[i].len() > 1 {
+            let mut b = *rng.choice(&space.choices[i]);
+            while b == *gene {
+                b = *rng.choice(&space.choices[i]);
+            }
+            *gene = b;
+        }
+    }
+    space.repair(&mut child);
+    child
+}
+
+/// Run NSGA-II with an arbitrary objective function (the search plugs in
+/// `(predictor(config), avg_bits(config))`).  Returns the final population
+/// sorted by (rank, -crowding).
+pub fn run<F>(
+    space: &SearchSpace,
+    seed_pop: Vec<Config>,
+    params: &Nsga2Params,
+    rng: &mut Rng,
+    mut objectives: F,
+) -> Vec<Individual>
+where
+    F: FnMut(&Config) -> [f64; 2],
+{
+    let mut pop: Vec<Individual> = Vec::with_capacity(params.pop_size);
+    for cfg in seed_pop.into_iter().take(params.pop_size) {
+        let obj = objectives(&cfg);
+        pop.push(Individual { config: cfg, obj, rank: 0, crowding: 0.0 });
+    }
+    while pop.len() < params.pop_size {
+        let cfg = space.random(rng);
+        let obj = objectives(&cfg);
+        pop.push(Individual { config: cfg, obj, rank: 0, crowding: 0.0 });
+    }
+    rank_population(&mut pop);
+
+    for _gen in 0..params.generations {
+        // offspring
+        let mut children: Vec<Individual> = Vec::with_capacity(params.pop_size);
+        while children.len() < params.pop_size {
+            let p1 = tournament(&pop, rng).config.clone();
+            let p2 = tournament(&pop, rng).config.clone();
+            let child = make_child(space, &p1, &p2, params, rng);
+            let obj = objectives(&child);
+            children.push(Individual { config: child, obj, rank: 0, crowding: 0.0 });
+        }
+        pop.append(&mut children);
+        rank_population(&mut pop);
+        // environmental selection: best pop_size by (rank, crowding)
+        pop.sort_by(|a, b| {
+            a.rank
+                .cmp(&b.rank)
+                .then(b.crowding.partial_cmp(&a.crowding).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        pop.truncate(params.pop_size);
+        rank_population(&mut pop);
+    }
+    pop.sort_by(|a, b| {
+        a.rank
+            .cmp(&b.rank)
+            .then(b.crowding.partial_cmp(&a.crowding).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    pop
+}
+
+fn rank_population(pop: &mut [Individual]) {
+    let fronts = non_dominated_sort(pop);
+    for front in &fronts {
+        crowding_distance(pop, front);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::space::toy_space;
+
+    fn ind(o0: f64, o1: f64) -> Individual {
+        Individual { config: vec![], obj: [o0, o1], rank: 0, crowding: 0.0 }
+    }
+
+    #[test]
+    fn dominates_cases() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 2.0], &[2.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]));
+    }
+
+    #[test]
+    fn sort_ranks_fronts() {
+        let mut pop = vec![ind(1.0, 1.0), ind(2.0, 2.0), ind(0.5, 3.0), ind(3.0, 3.0)];
+        let fronts = non_dominated_sort(&mut pop);
+        assert_eq!(pop[0].rank, 0);
+        assert_eq!(pop[2].rank, 0);
+        assert_eq!(pop[1].rank, 1);
+        assert_eq!(pop[3].rank, 2);
+        assert_eq!(fronts[0].len(), 2);
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let mut pop = vec![ind(0.0, 3.0), ind(1.0, 2.0), ind(2.0, 1.0), ind(3.0, 0.0)];
+        let fronts = non_dominated_sort(&mut pop);
+        crowding_distance(&mut pop, &fronts[0]);
+        assert!(pop[0].crowding.is_infinite());
+        assert!(pop[3].crowding.is_infinite());
+        assert!(pop[1].crowding.is_finite() && pop[1].crowding > 0.0);
+    }
+
+    #[test]
+    fn converges_to_known_front() {
+        // objective: jsd surrogate = sum over layers of (4-bits)^2 (lower
+        // bits hurt), second = avg bits. The Pareto front is the set of
+        // "uniform-ish" configs; at minimum, high-bit configs must dominate
+        // the quality end.
+        let space = toy_space(10);
+        let mut rng = Rng::new(42);
+        let pop = run(&space, vec![], &Nsga2Params {
+            pop_size: 80, generations: 40, crossover_prob: 0.9, mutation_prob: 0.1,
+        }, &mut rng, |cfg| {
+            let q: f64 = cfg.iter().map(|&b| ((4 - b) as f64).powi(2)).sum();
+            [q, space.avg_bits(cfg)]
+        });
+        // the front must reach (or come within one gene of) both corners:
+        // quality optimum ~ all-4, memory optimum ~ all-2
+        let best_q = pop
+            .iter()
+            .min_by(|a, b| a.obj[0].partial_cmp(&b.obj[0]).unwrap())
+            .unwrap();
+        let fours = best_q.config.iter().filter(|&&b| b == 4).count();
+        assert!(fours >= 9, "quality corner not reached: {:?}", best_q.config);
+        let best_m = pop
+            .iter()
+            .min_by(|a, b| a.obj[1].partial_cmp(&b.obj[1]).unwrap())
+            .unwrap();
+        let twos = best_m.config.iter().filter(|&&b| b == 2).count();
+        assert!(twos >= 9, "memory corner not reached: {:?}", best_m.config);
+    }
+
+    #[test]
+    fn respects_pinned_layers() {
+        let mut space = toy_space(6);
+        space.pin(0, 4);
+        space.pin(3, 4);
+        let mut rng = Rng::new(7);
+        let pop = run(&space, vec![], &Nsga2Params {
+            pop_size: 20, generations: 5, crossover_prob: 0.9, mutation_prob: 0.3,
+        }, &mut rng, |cfg| [0.0, space.avg_bits(cfg)]);
+        for ind in &pop {
+            assert_eq!(ind.config[0], 4);
+            assert_eq!(ind.config[3], 4);
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let space = toy_space(5);
+        let p = Nsga2Params { pop_size: 16, generations: 4, crossover_prob: 0.9, mutation_prob: 0.1 };
+        let f = |cfg: &Config| [cfg.iter().map(|&b| b as f64).sum::<f64>(), 0.0];
+        let a = run(&space, vec![], &p, &mut Rng::new(9), f);
+        let b = run(&space, vec![], &p, &mut Rng::new(9), f);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.config, y.config);
+        }
+    }
+}

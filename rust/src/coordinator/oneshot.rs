@@ -1,0 +1,80 @@
+//! One-shot search (Appendix G baseline): rank layers by sensitivity, then
+//! assign the most sensitive layers 4 bits and the least sensitive 2 bits
+//! in a single pass so the average bit-width matches the target.
+
+use super::space::{Config, SearchSpace};
+
+/// Build a configuration hitting `target_bits` (±tol best effort) from a
+/// sensitivity ranking: walk the layers from least to most sensitive,
+/// demoting 4->3->2 until the target is reached.
+pub fn one_shot(space: &SearchSpace, sensitivity: &[f32], target_bits: f64) -> Config {
+    let n = space.n_layers();
+    assert_eq!(sensitivity.len(), n);
+    let mut cfg: Config = space
+        .choices
+        .iter()
+        .map(|c| *c.iter().max().unwrap())
+        .collect();
+    // least sensitive first
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| sensitivity[a].partial_cmp(&sensitivity[b]).unwrap());
+
+    // pass 1: demote max -> mid, pass 2: mid -> min (preserves the one-shot
+    // "most sensitive stay high" structure)
+    for pass in 0..2 {
+        for &li in &order {
+            if space.avg_bits(&cfg) <= target_bits {
+                return cfg;
+            }
+            let choices = &space.choices[li];
+            if choices.len() <= 1 {
+                continue;
+            }
+            let cur = cfg[li];
+            let lower: Option<u8> = choices.iter().copied().filter(|&b| b < cur).max();
+            if let Some(b) = lower {
+                // pass 0 only takes one step down; pass 1 goes to minimum
+                cfg[li] = b;
+                let _ = pass;
+            }
+        }
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::space::toy_space;
+
+    #[test]
+    fn hits_target_bits() {
+        let space = toy_space(16);
+        let sens: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        for target in [2.5f64, 3.0, 3.5, 4.0] {
+            let cfg = one_shot(&space, &sens, target);
+            let avg = space.avg_bits(&cfg);
+            assert!(avg <= target + 0.01, "target {target} got {avg}");
+            assert!(avg >= target - 0.25, "undershoot: target {target} got {avg}");
+        }
+    }
+
+    #[test]
+    fn sensitive_layers_keep_more_bits() {
+        let space = toy_space(8);
+        let sens = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let cfg = one_shot(&space, &sens, 3.25);
+        // least sensitive layer gets <= bits of most sensitive layer
+        assert!(cfg[0] <= cfg[7]);
+        assert!(cfg[1] <= cfg[6]);
+    }
+
+    #[test]
+    fn respects_pinned_layers() {
+        let mut space = toy_space(6);
+        space.pin(2, 4);
+        let sens = vec![0.0; 6];
+        let cfg = one_shot(&space, &sens, 2.5);
+        assert_eq!(cfg[2], 4);
+    }
+}

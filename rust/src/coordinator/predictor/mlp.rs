@@ -1,0 +1,169 @@
+//! One-hidden-layer MLP predictor (tanh, Adam) — the Table 9 ablation
+//! comparator.  Deliberately small: archives have a few hundred samples.
+
+use super::QualityPredictor;
+use crate::util::Rng;
+
+pub struct MlpPredictor {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    seed: u64,
+    // weights: w1 [h, d], b1 [h], w2 [h], b2
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: f32,
+    d: usize,
+    y_mean: f32,
+    y_std: f32,
+}
+
+impl MlpPredictor {
+    pub fn new(seed: u64) -> MlpPredictor {
+        MlpPredictor {
+            hidden: 32,
+            epochs: 300,
+            lr: 1e-2,
+            seed,
+            w1: Vec::new(),
+            b1: Vec::new(),
+            w2: Vec::new(),
+            b2: 0.0,
+            d: 0,
+            y_mean: 0.0,
+            y_std: 1.0,
+        }
+    }
+
+    fn forward(&self, x: &[f32], hid: &mut [f32]) -> f32 {
+        let h = self.hidden;
+        for i in 0..h {
+            let mut s = self.b1[i];
+            let row = &self.w1[i * self.d..(i + 1) * self.d];
+            for (w, v) in row.iter().zip(x) {
+                s += w * v;
+            }
+            hid[i] = s.tanh();
+        }
+        let mut out = self.b2;
+        for i in 0..h {
+            out += self.w2[i] * hid[i];
+        }
+        out
+    }
+}
+
+impl QualityPredictor for MlpPredictor {
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+
+    fn fit(&mut self, x: &[Vec<f32>], y: &[f32]) {
+        assert!(!x.is_empty());
+        let n = x.len();
+        self.d = x[0].len();
+        let h = self.hidden;
+        let mut rng = Rng::new(self.seed);
+        let scale = (2.0 / self.d as f32).sqrt();
+        self.w1 = (0..h * self.d).map(|_| rng.normal() * scale).collect();
+        self.b1 = vec![0.0; h];
+        self.w2 = (0..h).map(|_| rng.normal() * (1.0 / (h as f32).sqrt())).collect();
+        self.b2 = 0.0;
+
+        // normalize targets
+        self.y_mean = y.iter().sum::<f32>() / n as f32;
+        let var = y.iter().map(|v| (v - self.y_mean).powi(2)).sum::<f32>() / n as f32;
+        self.y_std = var.sqrt().max(1e-6);
+        let yn: Vec<f32> = y.iter().map(|v| (v - self.y_mean) / self.y_std).collect();
+
+        // Adam state
+        let np = h * self.d + h + h + 1;
+        let mut m = vec![0.0f32; np];
+        let mut v = vec![0.0f32; np];
+        let (b1a, b2a, eps) = (0.9f32, 0.999f32, 1e-8f32);
+
+        let mut hid = vec![0.0f32; h];
+        let mut grad = vec![0.0f32; np];
+        for epoch in 0..self.epochs {
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            // full-batch gradient
+            for (xi, &yi) in x.iter().zip(&yn) {
+                let pred = self.forward(xi, &mut hid);
+                let err = 2.0 * (pred - yi) / n as f32;
+                // output layer
+                for i in 0..h {
+                    grad[h * self.d + h + i] += err * hid[i]; // w2
+                    let dh = err * self.w2[i] * (1.0 - hid[i] * hid[i]);
+                    for j in 0..self.d {
+                        grad[i * self.d + j] += dh * xi[j]; // w1
+                    }
+                    grad[h * self.d + i] += dh; // b1
+                }
+                grad[np - 1] += err; // b2
+            }
+            // Adam step
+            let t = (epoch + 1) as f32;
+            let lr_t = self.lr * (1.0 - b2a.powf(t)).sqrt() / (1.0 - b1a.powf(t));
+            let mut apply = |idx: usize, p: &mut f32| {
+                m[idx] = b1a * m[idx] + (1.0 - b1a) * grad[idx];
+                v[idx] = b2a * v[idx] + (1.0 - b2a) * grad[idx] * grad[idx];
+                *p -= lr_t * m[idx] / (v[idx].sqrt() + eps);
+            };
+            for i in 0..h * self.d {
+                let mut p = self.w1[i];
+                apply(i, &mut p);
+                self.w1[i] = p;
+            }
+            for i in 0..h {
+                let mut p = self.b1[i];
+                apply(h * self.d + i, &mut p);
+                self.b1[i] = p;
+            }
+            for i in 0..h {
+                let mut p = self.w2[i];
+                apply(h * self.d + h + i, &mut p);
+                self.w2[i] = p;
+            }
+            let mut p = self.b2;
+            apply(np - 1, &mut p);
+            self.b2 = p;
+        }
+    }
+
+    fn predict(&self, x: &[f32]) -> f32 {
+        let mut hid = vec![0.0f32; self.hidden];
+        self.forward(x, &mut hid) * self.y_std + self.y_mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_linear_function() {
+        let xs: Vec<Vec<f32>> = (0..40)
+            .map(|i| vec![(i % 5) as f32 / 4.0, (i / 5 % 4) as f32 / 3.0])
+            .collect();
+        let ys: Vec<f32> = xs.iter().map(|x| 1.0 + 2.0 * x[0] - x[1]).collect();
+        let mut p = MlpPredictor::new(0);
+        p.fit(&xs, &ys);
+        let mut max_err = 0.0f32;
+        for (x, &y) in xs.iter().zip(&ys) {
+            max_err = max_err.max((p.predict(x) - y).abs());
+        }
+        assert!(max_err < 0.25, "max err {max_err}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let xs = vec![vec![0.0f32], vec![0.5], vec![1.0]];
+        let ys = vec![0.0f32, 0.3, 1.0];
+        let mut a = MlpPredictor::new(7);
+        let mut b = MlpPredictor::new(7);
+        a.fit(&xs, &ys);
+        b.fit(&xs, &ys);
+        assert_eq!(a.predict(&[0.25]), b.predict(&[0.25]));
+    }
+}

@@ -1,0 +1,108 @@
+//! Quality predictors (§3.4): estimate a configuration's JSD from its
+//! bit-vector without touching the model.  RBF is the paper's default;
+//! a small MLP is kept for the Table 9 ablation.
+
+mod mlp;
+mod rbf;
+
+pub use mlp::MlpPredictor;
+pub use rbf::RbfPredictor;
+
+/// A trainable (features -> quality) regressor.
+pub trait QualityPredictor {
+    /// Fit on (feature vector, target) pairs.  Targets are JSD values.
+    fn fit(&mut self, x: &[Vec<f32>], y: &[f32]);
+
+    /// Predict the quality of one feature vector.
+    fn predict(&self, x: &[f32]) -> f32;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which predictor the search uses (Table 9 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorKind {
+    Rbf,
+    Mlp,
+}
+
+pub fn make(kind: PredictorKind, seed: u64) -> Box<dyn QualityPredictor> {
+    match kind {
+        PredictorKind::Rbf => Box::new(RbfPredictor::default()),
+        PredictorKind::Mlp => Box::new(MlpPredictor::new(seed)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_function(x: &[f32]) -> f32 {
+    // smooth, monotone-ish surrogate of "JSD vs bits": higher features
+    // (more bits) -> lower value, with curvature + interactions
+    let s: f32 = x.iter().sum();
+    let inter: f32 = x.windows(2).map(|w| w[0] * w[1]).sum();
+    (-(s / x.len() as f32) * 2.0).exp() + 0.05 * inter / x.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn dataset(n: usize, d: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| [0.0f32, 0.5, 1.0][rng.below(3)]).collect())
+            .collect();
+        let ys: Vec<f32> = xs.iter().map(|x| test_function(x)).collect();
+        (xs, ys)
+    }
+
+    fn check_generalizes(mut p: Box<dyn QualityPredictor>) {
+        let (xs, ys) = dataset(160, 12, 1);
+        p.fit(&xs, &ys);
+        let (xt, yt) = dataset(60, 12, 2);
+        // rank correlation on held-out points (what the search needs)
+        let pred: Vec<f32> = xt.iter().map(|x| p.predict(x)).collect();
+        let tau = kendall_tau(&pred, &yt);
+        assert!(tau > 0.6, "{} kendall tau too low: {tau}", p.name());
+    }
+
+    pub(crate) fn kendall_tau(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut conc = 0i32;
+        let mut disc = 0i32;
+        for i in 0..n {
+            for j in i + 1..n {
+                let x = (a[i] - a[j]) as f64;
+                let y = (b[i] - b[j]) as f64;
+                let s = x * y;
+                if s > 0.0 {
+                    conc += 1;
+                } else if s < 0.0 {
+                    disc += 1;
+                }
+            }
+        }
+        (conc - disc) as f32 / ((n * (n - 1) / 2) as f32)
+    }
+
+    #[test]
+    fn rbf_generalizes() {
+        check_generalizes(make(PredictorKind::Rbf, 0));
+    }
+
+    #[test]
+    fn mlp_generalizes() {
+        check_generalizes(make(PredictorKind::Mlp, 0));
+    }
+
+    #[test]
+    fn rbf_interpolates_training_points() {
+        let (xs, ys) = dataset(50, 8, 3);
+        let mut p = RbfPredictor::default();
+        p.fit(&xs, &ys);
+        for (x, &y) in xs.iter().zip(&ys).take(10) {
+            let e = (p.predict(x) - y).abs();
+            assert!(e < 0.05, "interpolation error {e}");
+        }
+    }
+}

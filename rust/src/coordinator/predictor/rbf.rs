@@ -1,0 +1,117 @@
+//! Gaussian RBF interpolator with ridge regularization (Baker et al. 2017
+//! style performance predictor — the paper's default choice, §3.4).
+//!
+//!   f(x) = Σ_i a_i exp(-||x - c_i||² / (2 γ²)) + b
+//!
+//! Centers are the training points; γ is the median pairwise distance
+//! (scale-free heuristic); coefficients come from a Cholesky ridge solve.
+
+use super::QualityPredictor;
+use crate::tensor::{cholesky_solve, Mat};
+
+pub struct RbfPredictor {
+    pub ridge: f32,
+    centers: Vec<Vec<f32>>,
+    coef: Vec<f32>,
+    bias: f32,
+    gamma2: f32, // 2 γ²
+}
+
+impl Default for RbfPredictor {
+    fn default() -> Self {
+        RbfPredictor {
+            ridge: 1e-4,
+            centers: Vec::new(),
+            coef: Vec::new(),
+            bias: 0.0,
+            gamma2: 1.0,
+        }
+    }
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl QualityPredictor for RbfPredictor {
+    fn name(&self) -> &'static str {
+        "rbf"
+    }
+
+    fn fit(&mut self, x: &[Vec<f32>], y: &[f32]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        // bandwidth: median pairwise distance (subsampled for big archives)
+        let mut d2s = Vec::new();
+        let step = (n / 64).max(1);
+        for i in (0..n).step_by(step) {
+            for j in (i + 1..n).step_by(step) {
+                let d = dist2(&x[i], &x[j]);
+                if d > 0.0 {
+                    d2s.push(d);
+                }
+            }
+        }
+        let med = crate::tensor::median(&d2s).max(1e-6);
+        self.gamma2 = med;
+
+        // center targets (bias = mean) for a well-conditioned solve
+        self.bias = y.iter().sum::<f32>() / n as f32;
+        let yc: Vec<f32> = y.iter().map(|v| v - self.bias).collect();
+
+        // kernel matrix + ridge
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = (-dist2(&x[i], &x[j]) / self.gamma2).exp();
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += self.ridge;
+        }
+        self.coef = cholesky_solve(&k, &yc).unwrap_or_else(|| vec![0.0; n]);
+        self.centers = x.to_vec();
+    }
+
+    fn predict(&self, x: &[f32]) -> f32 {
+        let mut s = self.bias;
+        for (c, a) in self.centers.iter().zip(&self.coef) {
+            s += a * (-dist2(c, x) / self.gamma2).exp();
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_single_point() {
+        let mut p = RbfPredictor::default();
+        p.fit(&[vec![0.5, 0.5]], &[3.0]);
+        assert!((p.predict(&[0.5, 0.5]) - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn smooth_between_points() {
+        let mut p = RbfPredictor::default();
+        p.fit(
+            &[vec![0.0], vec![1.0]],
+            &[0.0, 1.0],
+        );
+        let mid = p.predict(&[0.5]);
+        assert!(mid > 0.2 && mid < 0.8, "{mid}");
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        let mut p = RbfPredictor::default();
+        p.fit(
+            &[vec![0.0, 0.0], vec![0.0, 0.0], vec![1.0, 1.0]],
+            &[1.0, 1.0, 2.0],
+        );
+        assert!((p.predict(&[0.0, 0.0]) - 1.0).abs() < 0.2);
+    }
+}

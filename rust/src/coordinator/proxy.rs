@@ -1,0 +1,229 @@
+//! Quantization proxy (§3.3): every searchable layer is quantized once per
+//! bit-width with the activation-independent proxy quantizer (HQQ); any
+//! candidate configuration is then *assembled* by picking the precomputed
+//! (layer, bits) pieces.  The pieces are also uploaded to the PJRT device
+//! once, so assembly costs zero host->device copies on the search hot path.
+
+use super::space::Config;
+use crate::data::Manifest;
+use crate::model::{HessianStore, WeightStore};
+use crate::quant::{QuantizedLinear, Quantizer};
+use crate::runtime::{QuantLayerBufs, Runtime, ScoreBatch};
+use crate::Result;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Host-side precomputed quantizations: (layer index, bits) -> layer.
+pub struct ProxyStore {
+    pub quantizer_name: &'static str,
+    pub bit_choices: Vec<u8>,
+    /// `layers[li][bi]` for bit_choices[bi].
+    pub layers: Vec<Vec<QuantizedLinear>>,
+    pub build_time: Duration,
+}
+
+impl ProxyStore {
+    /// Quantize every layer at every candidate bit-width.
+    pub fn build(
+        manifest: &Manifest,
+        weights: &WeightStore,
+        hessians: Option<&HessianStore>,
+        quantizer: &dyn Quantizer,
+    ) -> Result<ProxyStore> {
+        let t0 = Instant::now();
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for l in &manifest.layers {
+            let w = weights.linear(&l.name)?;
+            let stats = match hessians {
+                Some(h) => Some(h.for_layer(&l.name)?),
+                None => None,
+            };
+            let mut per_bits = Vec::with_capacity(manifest.bit_choices.len());
+            for &bits in &manifest.bit_choices {
+                per_bits.push(quantizer.quantize(&w, bits, manifest.group_size, stats));
+            }
+            layers.push(per_bits);
+        }
+        Ok(ProxyStore {
+            quantizer_name: quantizer.name(),
+            bit_choices: manifest.bit_choices.clone(),
+            layers,
+            build_time: t0.elapsed(),
+        })
+    }
+
+    fn bit_index(&self, bits: u8) -> usize {
+        self.bit_choices
+            .iter()
+            .position(|&b| b == bits)
+            .unwrap_or_else(|| panic!("bit width {bits} not precomputed"))
+    }
+
+    /// Host-side assembly (for tests / CPU paths).
+    pub fn assemble(&self, config: &Config) -> Vec<&QuantizedLinear> {
+        config
+            .iter()
+            .enumerate()
+            .map(|(li, &b)| &self.layers[li][self.bit_index(b)])
+            .collect()
+    }
+}
+
+/// Device-side proxy: all pieces uploaded once; assembly picks buffer refs.
+pub struct DeviceProxy<'rt> {
+    pub store: ProxyStore,
+    bufs: Vec<Vec<QuantLayerBufs>>,
+    rt: &'rt Runtime,
+    pub upload_time: Duration,
+}
+
+impl<'rt> DeviceProxy<'rt> {
+    pub fn new(rt: &'rt Runtime, store: ProxyStore) -> Result<DeviceProxy<'rt>> {
+        let t0 = Instant::now();
+        let mut bufs = Vec::with_capacity(store.layers.len());
+        for per_bits in &store.layers {
+            let mut row = Vec::with_capacity(per_bits.len());
+            for q in per_bits {
+                row.push(rt.upload_quant_layer(q)?);
+            }
+            bufs.push(row);
+        }
+        Ok(DeviceProxy { store, bufs, rt, upload_time: t0.elapsed() })
+    }
+
+    /// Zero-copy assembly of a configuration into buffer references.
+    pub fn assemble(&self, config: &Config) -> Vec<&QuantLayerBufs> {
+        config
+            .iter()
+            .enumerate()
+            .map(|(li, &b)| &self.bufs[li][self.store.bit_index(b)])
+            .collect()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}
+
+/// True-evaluation interface the search loop drives.  Implemented by the
+/// PJRT-backed proxy evaluator and by synthetic evaluators in tests.
+pub trait ConfigEvaluator {
+    /// Mean calibration JSD of an assembled configuration (lower = better).
+    fn eval_jsd(&mut self, config: &Config) -> Result<f32>;
+
+    /// Number of true evaluations performed so far.
+    fn count(&self) -> usize;
+}
+
+/// PJRT-backed evaluator: assembles through the device proxy and runs the
+/// fused scorer over the prepared calibration batches, caching results.
+pub struct ProxyEvaluator<'rt> {
+    pub proxy: &'rt DeviceProxy<'rt>,
+    pub batches: &'rt [ScoreBatch],
+    cache: HashMap<Config, f32>,
+    evals: usize,
+    pub eval_time: Duration,
+}
+
+impl<'rt> ProxyEvaluator<'rt> {
+    pub fn new(proxy: &'rt DeviceProxy<'rt>, batches: &'rt [ScoreBatch]) -> Self {
+        ProxyEvaluator {
+            proxy,
+            batches,
+            cache: HashMap::new(),
+            evals: 0,
+            eval_time: Duration::ZERO,
+        }
+    }
+}
+
+impl ConfigEvaluator for ProxyEvaluator<'_> {
+    fn eval_jsd(&mut self, config: &Config) -> Result<f32> {
+        if let Some(&v) = self.cache.get(config) {
+            return Ok(v);
+        }
+        let t0 = Instant::now();
+        let layers = self.proxy.assemble(config);
+        let mut sum = 0.0f64;
+        for b in self.batches {
+            let (jsd, _ce) = self.proxy.runtime().scores(b, &layers)?;
+            sum += jsd as f64;
+        }
+        let jsd = (sum / self.batches.len().max(1) as f64) as f32;
+        self.evals += 1;
+        self.eval_time += t0.elapsed();
+        self.cache.insert(config.clone(), jsd);
+        Ok(jsd)
+    }
+
+    fn count(&self) -> usize {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Rtn;
+    use crate::tensor::Mat;
+
+    fn toy_store() -> ProxyStore {
+        // 2 layers x 3 bit choices of small random weights
+        let mk = |seed: u64| {
+            let mut state = seed | 1;
+            let mut w = Mat::zeros(8, 128);
+            for v in &mut w.data {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                *v = ((state >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.2;
+            }
+            w
+        };
+        let rtn = Rtn;
+        let layers = (0..2)
+            .map(|i| {
+                let w = mk(i + 1);
+                vec![
+                    rtn.quantize(&w, 2, 128, None),
+                    rtn.quantize(&w, 3, 128, None),
+                    rtn.quantize(&w, 4, 128, None),
+                ]
+            })
+            .collect();
+        ProxyStore {
+            quantizer_name: "rtn",
+            bit_choices: vec![2, 3, 4],
+            layers,
+            build_time: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn assemble_picks_right_bits() {
+        let store = toy_store();
+        let asm = store.assemble(&vec![2, 4]);
+        assert_eq!(asm[0].bits, 2);
+        assert_eq!(asm[1].bits, 4);
+        let asm = store.assemble(&vec![3, 3]);
+        assert_eq!(asm[0].bits, 3);
+        assert_eq!(asm[1].bits, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assemble_rejects_unknown_bits() {
+        let store = toy_store();
+        store.assemble(&vec![5, 3]);
+    }
+
+    #[test]
+    fn assembly_equals_direct_quantization() {
+        // the proxy invariant: assembling precomputed pieces is *identical*
+        // to quantizing the model at that configuration directly
+        let store = toy_store();
+        let asm = store.assemble(&vec![2, 3]);
+        assert_eq!(asm[0].codes, store.layers[0][0].codes);
+        assert_eq!(asm[1].codes, store.layers[1][1].codes);
+    }
+}

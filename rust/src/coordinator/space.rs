@@ -1,0 +1,226 @@
+//! Search space: per-layer candidate bit-widths, configurations, and the
+//! average-bits / memory objective (§3.1 of the paper).
+
+use crate::data::Manifest;
+use crate::quant::GROUP_OVERHEAD_BITS;
+use crate::util::Rng;
+
+/// A configuration: one bit-width per searchable layer (manifest order).
+pub type Config = Vec<u8>;
+
+/// The (possibly pruned) search space.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// Allowed bit-widths per layer; pruned layers have a single choice.
+    pub choices: Vec<Vec<u8>>,
+    /// Parameter count per layer (average-bits weights).
+    pub params: Vec<usize>,
+    /// Groups per layer (metadata overhead accounting).
+    pub groups: Vec<usize>,
+    pub group_size: usize,
+}
+
+impl SearchSpace {
+    /// Full space: every layer may take any of the manifest bit choices.
+    pub fn full(m: &Manifest) -> SearchSpace {
+        SearchSpace {
+            choices: vec![m.bit_choices.clone(); m.layers.len()],
+            params: m.layers.iter().map(|l| l.params()).collect(),
+            groups: m.layers.iter().map(|l| l.n_groups(m.group_size)).collect(),
+            group_size: m.group_size,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.choices.len()
+    }
+
+    /// log10 of the number of configurations (the paper's 10^106 headline).
+    pub fn log10_size(&self) -> f64 {
+        self.choices.iter().map(|c| (c.len() as f64).log10()).sum()
+    }
+
+    /// Pin a layer to a single bit-width (pruning).
+    pub fn pin(&mut self, layer: usize, bits: u8) {
+        self.choices[layer] = vec![bits];
+    }
+
+    /// Layers that still have more than one choice.
+    pub fn active_layers(&self) -> Vec<usize> {
+        (0..self.n_layers())
+            .filter(|&i| self.choices[i].len() > 1)
+            .collect()
+    }
+
+    /// Weighted average bits of a config, including per-group fp16
+    /// scale+zero overhead (group size 128 -> +0.25, range [2.25, 4.25]).
+    pub fn avg_bits(&self, config: &[u8]) -> f64 {
+        debug_assert_eq!(config.len(), self.n_layers());
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..self.n_layers() {
+            let p = self.params[i] as f64;
+            num += p * config[i] as f64 + self.groups[i] as f64 * GROUP_OVERHEAD_BITS;
+            den += p;
+        }
+        num / den
+    }
+
+    /// Searchable-weight memory in MB for a config (codes + group metadata).
+    pub fn memory_mb(&self, config: &[u8]) -> f64 {
+        let bits: f64 = (0..self.n_layers())
+            .map(|i| {
+                self.params[i] as f64 * config[i] as f64
+                    + self.groups[i] as f64 * GROUP_OVERHEAD_BITS
+            })
+            .sum();
+        bits / 8.0 / 1e6
+    }
+
+    /// Uniform random configuration.
+    pub fn random(&self, rng: &mut Rng) -> Config {
+        self.choices.iter().map(|c| *rng.choice(c)).collect()
+    }
+
+    /// Random configuration biased toward a target average bit-width:
+    /// sample uniformly, then repair toward the target by single-layer moves.
+    pub fn random_near(&self, rng: &mut Rng, target_bits: f64, tol: f64) -> Config {
+        let mut cfg = self.random(rng);
+        for _ in 0..10_000 {
+            let avg = self.avg_bits(&cfg);
+            if (avg - target_bits).abs() <= tol {
+                break;
+            }
+            let li = rng.below(self.n_layers());
+            let cur = cfg[li];
+            let want_up = avg < target_bits;
+            let cands: Vec<u8> = self.choices[li]
+                .iter()
+                .copied()
+                .filter(|&b| if want_up { b > cur } else { b < cur })
+                .collect();
+            if let Some(&b) = cands.first() {
+                cfg[li] = if want_up {
+                    *cands.iter().min().unwrap()
+                } else {
+                    *cands.iter().max().unwrap()
+                };
+                let _ = b;
+            }
+        }
+        cfg
+    }
+
+    /// Clamp a config to the space (after crossover/mutation of pinned dims).
+    pub fn repair(&self, config: &mut Config) {
+        for i in 0..self.n_layers() {
+            if !self.choices[i].contains(&config[i]) {
+                // snap to nearest allowed choice
+                let c = *self.choices[i]
+                    .iter()
+                    .min_by_key(|&&b| (b as i32 - config[i] as i32).abs())
+                    .unwrap();
+                config[i] = c;
+            }
+        }
+    }
+
+    /// True when every gene is an allowed choice.
+    pub fn contains(&self, config: &[u8]) -> bool {
+        config.len() == self.n_layers()
+            && config
+                .iter()
+                .zip(&self.choices)
+                .all(|(b, c)| c.contains(b))
+    }
+
+    /// Normalized feature vector for the quality predictor: active layers
+    /// only, bits mapped to [0, 1].
+    pub fn features(&self, config: &[u8], active: &[usize]) -> Vec<f32> {
+        active
+            .iter()
+            .map(|&i| {
+                let lo = *self.choices[i].iter().min().unwrap() as f32;
+                let hi = *self.choices[i].iter().max().unwrap() as f32;
+                if hi > lo {
+                    (config[i] as f32 - lo) / (hi - lo)
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub fn toy_space(n_layers: usize) -> SearchSpace {
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n_layers],
+        params: vec![128 * 128; n_layers],
+        groups: vec![128; n_layers],
+        group_size: 128,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_bits_uniform_configs() {
+        let s = toy_space(8);
+        assert!((s.avg_bits(&vec![2u8; 8]) - 2.25).abs() < 1e-9);
+        assert!((s.avg_bits(&vec![3u8; 8]) - 3.25).abs() < 1e-9);
+        assert!((s.avg_bits(&vec![4u8; 8]) - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log10_size() {
+        let s = toy_space(28);
+        // 3^28 ~= 10^13.36
+        assert!((s.log10_size() - 28.0 * 3f64.log10()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pin_reduces_space() {
+        let mut s = toy_space(4);
+        s.pin(1, 4);
+        assert_eq!(s.active_layers(), vec![0, 2, 3]);
+        assert!(s.log10_size() < toy_space(4).log10_size());
+    }
+
+    #[test]
+    fn random_near_hits_target() {
+        let s = toy_space(28);
+        let mut rng = Rng::new(1);
+        for target in [2.5f64, 3.0, 3.5, 4.0] {
+            let cfg = s.random_near(&mut rng, target, 0.05);
+            assert!((s.avg_bits(&cfg) - target).abs() <= 0.06,
+                    "target {target} got {}", s.avg_bits(&cfg));
+        }
+    }
+
+    #[test]
+    fn repair_snaps_to_choices() {
+        let mut s = toy_space(3);
+        s.pin(0, 4);
+        let mut cfg = vec![2u8, 3, 3];
+        s.repair(&mut cfg);
+        assert_eq!(cfg[0], 4);
+        assert!(s.contains(&cfg));
+    }
+
+    #[test]
+    fn features_normalized() {
+        let s = toy_space(3);
+        let active = vec![0usize, 1, 2];
+        let f = s.features(&[2, 3, 4], &active);
+        assert_eq!(f, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn memory_tracks_bits() {
+        let s = toy_space(4);
+        assert!(s.memory_mb(&vec![2u8; 4]) < s.memory_mb(&vec![4u8; 4]));
+    }
+}

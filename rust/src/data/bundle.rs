@@ -1,0 +1,149 @@
+//! Tensor-bundle container reader (`io_utils.write_bundle` counterpart).
+
+use super::json::Value;
+use crate::Result;
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+struct Entry {
+    name: String,
+    dtype: String,
+    shape: Vec<usize>,
+    offset: usize, // bytes into the data section
+}
+
+fn parse_header(bytes: &[u8]) -> Result<Vec<Entry>> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| eyre::anyhow!("bundle header is not utf-8"))?;
+    let v = Value::parse(text)?;
+    v.get("tensors")?
+        .as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(Entry {
+                name: e.get("name")?.as_str()?.to_string(),
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                offset: e.get("offset")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+/// One tensor from a bundle, decoded to its native element type.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub payload: Payload,
+}
+
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U16(Vec<u16>),
+    I8(Vec<i8>),
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.payload {
+            Payload::F32(v) => Ok(v),
+            other => eyre::bail!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.payload {
+            Payload::I32(v) => Ok(v),
+            other => eyre::bail!("expected i32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.payload {
+            Payload::I8(v) => Ok(v),
+            other => eyre::bail!("expected i8 tensor, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed bundle: name -> tensor.
+pub struct Bundle {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Bundle {
+    pub fn read(path: &Path) -> Result<Bundle> {
+        let mut file = std::fs::File::open(path)
+            .map_err(|e| eyre::anyhow!("open {}: {e}", path.display()))?;
+        let mut len_buf = [0u8; 4];
+        file.read_exact(&mut len_buf)?;
+        let hlen = u32::from_le_bytes(len_buf) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        file.read_exact(&mut hbuf)?;
+        let header = parse_header(&hbuf)?;
+        let mut data = Vec::new();
+        file.read_to_end(&mut data)?;
+
+        let mut tensors = HashMap::new();
+        for e in header {
+            let numel: usize = e.shape.iter().product();
+            let payload = match e.dtype.as_str() {
+                "f32" => Payload::F32(read_slice::<4, f32>(
+                    &data, e.offset, numel, f32::from_le_bytes)?),
+                "i32" => Payload::I32(read_slice::<4, i32>(
+                    &data, e.offset, numel, i32::from_le_bytes)?),
+                "u16" => Payload::U16(read_slice::<2, u16>(
+                    &data, e.offset, numel, u16::from_le_bytes)?),
+                "i8" => {
+                    let end = e.offset + numel;
+                    eyre::ensure!(end <= data.len(), "i8 tensor out of range");
+                    Payload::I8(data[e.offset..end].iter().map(|&b| b as i8).collect())
+                }
+                other => eyre::bail!("unknown dtype {other}"),
+            };
+            tensors.insert(e.name, Tensor { shape: e.shape, payload });
+        }
+        Ok(Bundle { tensors })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| eyre::anyhow!("tensor `{name}` not in bundle"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+}
+
+fn read_slice<const N: usize, T>(
+    data: &[u8],
+    offset: usize,
+    numel: usize,
+    from_le: fn([u8; N]) -> T,
+) -> Result<Vec<T>> {
+    let end = offset + numel * N;
+    eyre::ensure!(end <= data.len(),
+        "tensor out of range: offset {offset} + {numel}*{N} > {}", data.len());
+    Ok(data[offset..end]
+        .chunks_exact(N)
+        .map(|c| from_le(c.try_into().unwrap()))
+        .collect())
+}

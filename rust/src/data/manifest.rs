@@ -1,0 +1,270 @@
+//! `artifacts/manifest.json` — the contract between the python compile path
+//! and the rust coordinator (shapes, argument orders, file names).
+
+use super::json::Value;
+use crate::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub out_features: usize,
+    pub in_features: usize,
+}
+
+impl LayerSpec {
+    pub fn params(&self) -> usize {
+        self.out_features * self.in_features
+    }
+
+    pub fn n_groups(&self, group_size: usize) -> usize {
+        debug_assert_eq!(self.in_features % group_size, 0);
+        self.in_features / group_size
+    }
+
+    /// Per-block linear kind ("q" | ... | "down").
+    pub fn kind(&self) -> &str {
+        self.name.split('.').nth(1).unwrap_or("?")
+    }
+
+    /// Block index.
+    pub fn block(&self) -> usize {
+        self.name
+            .trim_start_matches("blk")
+            .split('.')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExecutableSpec {
+    pub file: String,
+    pub args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: ModelSpec,
+    pub group_size: usize,
+    pub bit_choices: Vec<u8>,
+    pub eval_batch: usize,
+    pub layers: Vec<LayerSpec>,
+    pub fp_side_names: Vec<String>,
+    pub executables: HashMap<String, ExecutableSpec>,
+    pub files: HashMap<String, String>,
+    pub special_tokens: HashMap<String, u32>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            eyre::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let mut m = Self::from_json(&text)?;
+        m.dir = artifacts_dir.to_path_buf();
+        Ok(m)
+    }
+
+    pub fn from_json(text: &str) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let mv = v.get("model")?;
+        let model = ModelSpec {
+            vocab_size: mv.get("vocab_size")?.as_usize()?,
+            d_model: mv.get("d_model")?.as_usize()?,
+            n_layers: mv.get("n_layers")?.as_usize()?,
+            n_heads: mv.get("n_heads")?.as_usize()?,
+            d_ff: mv.get("d_ff")?.as_usize()?,
+            seq_len: mv.get("seq_len")?.as_usize()?,
+            rope_theta: mv.get("rope_theta")?.as_f64()?,
+            rms_eps: mv.get("rms_eps")?.as_f64()?,
+        };
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerSpec {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    out_features: l.get("out_features")?.as_usize()?,
+                    in_features: l.get("in_features")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fp_side_names = v
+            .get("fp_side_names")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?;
+        let mut executables = HashMap::new();
+        for (k, e) in v.get("executables")?.as_obj()? {
+            executables.insert(
+                k.clone(),
+                ExecutableSpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    args: e
+                        .get("args")?
+                        .as_arr()?
+                        .iter()
+                        .map(|a| Ok(a.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|a| Ok(a.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+        let mut files = HashMap::new();
+        for (k, f) in v.get("files")?.as_obj()? {
+            files.insert(k.clone(), f.as_str()?.to_string());
+        }
+        let mut special_tokens = HashMap::new();
+        if let Some(st) = v.opt("special_tokens") {
+            for (k, t) in st.as_obj()? {
+                special_tokens.insert(k.clone(), t.as_usize()? as u32);
+            }
+        }
+        Ok(Manifest {
+            model,
+            group_size: v.get("group_size")?.as_usize()?,
+            bit_choices: v
+                .get("bit_choices")?
+                .as_arr()?
+                .iter()
+                .map(|b| Ok(b.as_usize()? as u8))
+                .collect::<Result<Vec<_>>>()?,
+            eval_batch: v.get("eval_batch")?.as_usize()?,
+            layers,
+            fp_side_names,
+            executables,
+            files,
+            special_tokens,
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn file(&self, key: &str) -> Result<PathBuf> {
+        let name = self
+            .files
+            .get(key)
+            .ok_or_else(|| eyre::anyhow!("no file entry `{key}` in manifest"))?;
+        Ok(self.dir.join(name))
+    }
+
+    pub fn executable(&self, key: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(key)
+            .ok_or_else(|| eyre::anyhow!("no executable `{key}` in manifest"))
+    }
+
+    pub fn hlo_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.executable(key)?.file))
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerSpec> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| eyre::anyhow!("unknown layer `{name}`"))
+    }
+
+    pub fn layer_index(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    pub fn pad_token(&self) -> i32 {
+        self.special_tokens.get("pad").copied().unwrap_or(0) as i32
+    }
+
+    /// Total searchable parameters (the denominator of average-bits).
+    pub fn total_linear_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Parameters that stay fp16 at deploy time (embeddings, norms, head).
+    pub fn fp_side_params(&self) -> usize {
+        let d = self.model.d_model;
+        let v = self.model.vocab_size;
+        // embed + lm_head + final_norm + 2 norms per block
+        2 * v * d + d + 2 * self.model.n_layers * d
+    }
+}
+
+/// A small hand-written manifest for unit tests across the crate.
+#[cfg(test)]
+pub fn toy_manifest() -> Manifest {
+    Manifest::from_json(
+        r#"{
+        "model": {"vocab_size": 512, "d_model": 128, "n_layers": 2,
+                  "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                  "rope_theta": 10000.0, "rms_eps": 1e-5},
+        "group_size": 128,
+        "bit_choices": [2, 3, 4],
+        "eval_batch": 16,
+        "layers": [
+            {"name": "blk0.q", "out_features": 128, "in_features": 128},
+            {"name": "blk0.down", "out_features": 128, "in_features": 256},
+            {"name": "blk1.q", "out_features": 128, "in_features": 128},
+            {"name": "blk1.down", "out_features": 128, "in_features": 256}
+        ],
+        "fp_side_names": ["embed"],
+        "executables": {
+            "model_fp": {"file": "model_fp.hlo.txt",
+                         "args": ["tokens"], "outputs": ["logits"]}
+        },
+        "files": {"weights": "weights.bin"},
+        "special_tokens": {"pad": 396}
+    }"#,
+    )
+    .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_accessors() {
+        let m = toy_manifest();
+        assert_eq!(m.layer("blk0.down").unwrap().n_groups(128), 2);
+        assert_eq!(m.layer("blk0.q").unwrap().kind(), "q");
+        assert_eq!(m.layer("blk1.down").unwrap().block(), 1);
+        assert_eq!(m.layer_index("blk0.down"), Some(1));
+        assert!(m.layer("nope").is_err());
+        assert_eq!(m.total_linear_params(), 2 * (128 * 128 + 128 * 256));
+        assert_eq!(m.pad_token(), 396);
+    }
+
+    #[test]
+    fn file_paths() {
+        let m = toy_manifest();
+        assert!(m.file("weights").unwrap().ends_with("weights.bin"));
+        assert!(m.file("nope").is_err());
+        assert!(m.hlo_path("model_fp").unwrap().ends_with("model_fp.hlo.txt"));
+        assert_eq!(m.executable("model_fp").unwrap().args, vec!["tokens"]);
+    }
+}

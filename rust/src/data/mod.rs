@@ -1,0 +1,90 @@
+//! Artifact loaders — the rust mirror of `python/compile/io_utils.py`.
+//!
+//! Bundle container: `[u32 header_len][JSON header][raw data]`, with byte
+//! offsets into the data section and dtypes `f32 | i32 | u16 | i8`.
+
+pub mod json;
+
+mod bundle;
+mod manifest;
+mod tasks;
+
+pub use bundle::{Bundle, Payload, Tensor};
+pub use manifest::{ExecutableSpec, LayerSpec, Manifest, ModelSpec};
+pub use tasks::{load_tasks, TaskInstance, FEW_SHOT, ZERO_SHOT};
+
+use crate::Result;
+use std::path::Path;
+
+/// A token split: `[n_seqs, seq_len]` i32 row-major.
+#[derive(Clone, Debug)]
+pub struct TokenSplit {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenSplit {
+    pub fn seq(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Borrow a contiguous batch of `n` sequences starting at `start`.
+    pub fn batch(&self, start: usize, n: usize) -> &[i32] {
+        &self.tokens[start * self.seq_len..(start + n) * self.seq_len]
+    }
+}
+
+/// Load a token split from a bundle file containing a single `tokens` tensor.
+pub fn load_tokens(path: &Path) -> Result<TokenSplit> {
+    let bundle = Bundle::read(path)?;
+    let t = bundle.tensor("tokens")?;
+    eyre::ensure!(t.shape.len() == 2, "tokens must be 2-D, got {:?}", t.shape);
+    Ok(TokenSplit {
+        n_seqs: t.shape[0],
+        seq_len: t.shape[1],
+        tokens: t.as_i32()?.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_bundle(path: &Path) {
+        // header: one i32 tensor "tokens" [2,3] followed by one f32 "w" [2]
+        let toks: [i32; 6] = [1, 2, 3, 4, 5, 6];
+        let w: [f32; 2] = [0.5, -1.5];
+        let header = r#"{"tensors": [
+            {"name": "tokens", "dtype": "i32", "shape": [2, 3], "offset": 0},
+            {"name": "w", "dtype": "f32", "shape": [2], "offset": 24}
+        ]}"#;
+        let hbytes = header.as_bytes().to_vec();
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&(hbytes.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(&hbytes).unwrap();
+        for t in toks {
+            f.write_all(&t.to_le_bytes()).unwrap();
+        }
+        for x in w {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let dir = std::env::temp_dir().join("amq_test_bundle");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        write_test_bundle(&path);
+        let b = Bundle::read(&path).unwrap();
+        assert_eq!(b.tensor("tokens").unwrap().as_i32().unwrap(),
+                   &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(b.tensor("w").unwrap().as_f32().unwrap(), &[0.5, -1.5]);
+        let split = load_tokens(&path).unwrap();
+        assert_eq!(split.n_seqs, 2);
+        assert_eq!(split.seq(1), &[4, 5, 6]);
+        assert_eq!(split.batch(0, 2).len(), 6);
+    }
+}

@@ -1,0 +1,88 @@
+//! Task-instance loader (`tasks.json`) — the zero-/few-shot benchmark suite.
+
+use super::json::Value;
+use crate::Result;
+use std::path::Path;
+
+/// One multiple-choice instance, scored by length-normalized choice logprob
+/// (the LM-Eval-Harness protocol the paper uses).
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub family: String,
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+pub fn load_tasks(path: &Path) -> Result<Vec<TaskInstance>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| eyre::anyhow!("read {}: {e}", path.display()))?;
+    let v = Value::parse(&text)?;
+    let toks = |val: &Value| -> Result<Vec<i32>> {
+        val.as_arr()?.iter().map(|t| t.as_i32()).collect()
+    };
+    let tasks = v
+        .as_arr()?
+        .iter()
+        .map(|t| {
+            Ok(TaskInstance {
+                family: t.get("family")?.as_str()?.to_string(),
+                context: toks(t.get("context")?)?,
+                choices: t
+                    .get("choices")?
+                    .as_arr()?
+                    .iter()
+                    .map(&toks)
+                    .collect::<Result<Vec<_>>>()?,
+                answer: t.get("answer")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<TaskInstance>>>()?;
+    for (i, t) in tasks.iter().enumerate() {
+        eyre::ensure!(!t.choices.is_empty(), "task {i}: no choices");
+        eyre::ensure!(t.answer < t.choices.len(), "task {i}: bad answer idx");
+    }
+    Ok(tasks)
+}
+
+/// The six zero-shot families (Table 1 analog columns, in order).
+pub const ZERO_SHOT: [&str; 6] =
+    ["copy", "completion", "agreement", "majority", "induction", "recall"];
+
+/// The two harder few-shot families (Table 2 analog).
+pub const FEW_SHOT: [&str; 2] = ["chain", "modadd"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn load_and_validate() {
+        let dir = std::env::temp_dir().join("amq_test_tasks");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tasks.json");
+        let mut f = std::fs::File::create(&path).unwrap();
+        write!(
+            f,
+            r#"[{{"family":"copy","context":[1,2],"choices":[[3],[4]],"answer":1}}]"#
+        )
+        .unwrap();
+        let tasks = load_tasks(&path).unwrap();
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].answer, 1);
+    }
+
+    #[test]
+    fn reject_bad_answer() {
+        let dir = std::env::temp_dir().join("amq_test_tasks2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tasks.json");
+        std::fs::write(
+            &path,
+            r#"[{"family":"x","context":[1],"choices":[[2]],"answer":3}]"#,
+        )
+        .unwrap();
+        assert!(load_tasks(&path).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Rust mirror of the L1 JSD kernel — used on the baseline path (fp exec
+//! returns raw logits) and as a cross-check of the fused scorer.
+
+/// log-softmax of one row, in place into `out`.
+fn log_softmax(row: &[f32], out: &mut [f32]) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in row {
+        m = m.max(v);
+    }
+    let mut lse = 0.0f32;
+    for &v in row {
+        lse += (v - m).exp();
+    }
+    let lse = lse.ln() + m;
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = v - lse;
+    }
+}
+
+/// Per-token Jensen-Shannon divergence between two logit tensors
+/// `[n_tokens, vocab]` (nats, in [0, ln 2]).
+pub fn jsd_tokens(logits_p: &[f32], logits_q: &[f32], vocab: usize) -> Vec<f32> {
+    assert_eq!(logits_p.len(), logits_q.len());
+    assert_eq!(logits_p.len() % vocab, 0);
+    let n = logits_p.len() / vocab;
+    let mut out = vec![0.0f32; n];
+    let mut lp = vec![0.0f32; vocab];
+    let mut lq = vec![0.0f32; vocab];
+    let ln2 = std::f32::consts::LN_2;
+    for t in 0..n {
+        let rp = &logits_p[t * vocab..(t + 1) * vocab];
+        let rq = &logits_q[t * vocab..(t + 1) * vocab];
+        log_softmax(rp, &mut lp);
+        log_softmax(rq, &mut lq);
+        let mut kl_pm = 0.0f32;
+        let mut kl_qm = 0.0f32;
+        for j in 0..vocab {
+            let a = lp[j];
+            let b = lq[j];
+            // log m = logaddexp(a, b) - ln 2
+            let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+            let logm = hi + (1.0 + (lo - hi).exp()).ln() - ln2;
+            kl_pm += a.exp() * (a - logm);
+            kl_qm += b.exp() * (b - logm);
+        }
+        out[t] = 0.5 * (kl_pm + kl_qm);
+    }
+    out
+}
+
+/// Masked mean JSD (mask per token, 1.0 = counts).
+pub fn jsd_mean(logits_p: &[f32], logits_q: &[f32], vocab: usize, mask: &[f32]) -> f32 {
+    let per = jsd_tokens(logits_p, logits_q, vocab);
+    assert_eq!(per.len(), mask.len());
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for (j, m) in per.iter().zip(mask) {
+        num += j * m;
+        den += m;
+    }
+    num / den.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_logits_zero_jsd() {
+        let p = vec![0.1f32, 2.0, -1.0, 0.5, 3.0, 0.0, 1.0, -2.0];
+        let j = jsd_tokens(&p, &p, 4);
+        for v in j {
+            assert!(v.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bounded_by_ln2() {
+        // extreme opposite distributions approach ln 2
+        let p = vec![100.0f32, 0.0, 0.0, 0.0];
+        let q = vec![0.0f32, 0.0, 0.0, 100.0];
+        let j = jsd_tokens(&p, &q, 4)[0];
+        assert!(j <= std::f32::consts::LN_2 + 1e-5);
+        assert!(j > 0.69);
+    }
+
+    #[test]
+    fn symmetric() {
+        let p = vec![0.3f32, -1.0, 2.0, 0.1];
+        let q = vec![1.0f32, 0.0, -0.5, 0.2];
+        let a = jsd_tokens(&p, &q, 4)[0];
+        let b = jsd_tokens(&q, &p, 4)[0];
+        assert!((a - b).abs() < 1e-6);
+    }
+
+    #[test]
+    fn masked_mean_ignores_masked() {
+        let p = vec![100.0f32, 0.0, 0.0, 100.0]; // 2 tokens, vocab 2
+        let q = vec![100.0f32, 0.0, 100.0, 0.0];
+        let m_all = jsd_mean(&p, &q, 2, &[1.0, 1.0]);
+        let m_first = jsd_mean(&p, &q, 2, &[1.0, 0.0]);
+        assert!(m_first.abs() < 1e-6);
+        assert!(m_all > 0.3);
+    }
+}

@@ -1,0 +1,90 @@
+//! Model-quality evaluation: JSD (the search signal), perplexity (paper
+//! tables), and the zero-/few-shot task suite — all driven through the PJRT
+//! runtime with a uniform [`ModelHandle`].
+
+pub mod jsd;
+pub mod ppl;
+pub mod tasks;
+
+pub use jsd::{jsd_mean, jsd_tokens};
+pub use ppl::{cross_entropy, perplexity};
+pub use tasks::{score_tasks, TaskResults};
+
+use crate::data::{TaskInstance, TokenSplit};
+use crate::runtime::{QuantLayerBufs, Runtime};
+use crate::Result;
+use std::collections::HashMap;
+
+/// Which model variant to evaluate.
+pub enum ModelHandle<'a> {
+    /// The fp subject model (resident weights).
+    Fp,
+    /// fp graph with some weights replaced (BitStack / PB-LLM / fixed-
+    /// precision reconstructions uploaded once by the caller).
+    Override(&'a HashMap<String, xla::PjRtBuffer>),
+    /// Grouped-quantized model through the Pallas dequant-matmul kernel.
+    Quant(&'a [&'a QuantLayerBufs]),
+}
+
+impl Runtime {
+    /// Uniform logits entry point for evaluation.
+    pub fn logits(&self, handle: &ModelHandle, tokens: &[i32]) -> Result<Vec<f32>> {
+        match handle {
+            ModelHandle::Fp => self.fp_logits(tokens),
+            ModelHandle::Override(ov) => self.fp_logits_with(tokens, ov),
+            ModelHandle::Quant(layers) => self.quant_logits(tokens, layers),
+        }
+    }
+}
+
+/// Perplexity of a model over a token split (full mask).
+pub fn perplexity_on(rt: &Runtime, handle: &ModelHandle, split: &TokenSplit) -> Result<f32> {
+    let b = rt.batch_size();
+    let t = rt.seq_len();
+    let v = rt.vocab();
+    eyre::ensure!(split.seq_len == t, "split seq len mismatch");
+    eyre::ensure!(split.n_seqs % b == 0, "split not divisible by batch");
+    let mask = vec![1.0f32; b * t];
+    let mut ce_sum = 0.0f64;
+    let mut n_batches = 0usize;
+    for start in (0..split.n_seqs).step_by(b) {
+        let toks = split.batch(start, b);
+        let logits = rt.logits(handle, toks)?;
+        let ce = cross_entropy(&logits, toks, &mask, b, t, v);
+        ce_sum += ce as f64;
+        n_batches += 1;
+    }
+    Ok(perplexity((ce_sum / n_batches as f64) as f32))
+}
+
+/// Mean JSD of a model vs. prepared fp batches (baseline path: raw logits).
+pub fn jsd_on_batches(
+    rt: &Runtime,
+    handle: &ModelHandle,
+    batches: &[crate::runtime::ScoreBatch],
+) -> Result<f32> {
+    let v = rt.vocab();
+    let mut sum = 0.0f64;
+    for b in batches {
+        let logits = rt.logits(handle, &b.host_tokens)?;
+        sum += jsd_mean(&b.host_fp_logits, &logits, v, &b.host_mask) as f64;
+    }
+    Ok((sum / batches.len().max(1) as f64) as f32)
+}
+
+/// Task accuracy for a model handle.
+pub fn tasks_on(
+    rt: &Runtime,
+    handle: &ModelHandle,
+    tasks: &[TaskInstance],
+    pad: i32,
+) -> Result<TaskResults> {
+    score_tasks(
+        tasks,
+        rt.batch_size(),
+        rt.seq_len(),
+        rt.vocab(),
+        pad,
+        |toks| rt.logits(handle, toks),
+    )
+}

@@ -1,0 +1,92 @@
+//! Perplexity from logits: masked next-token cross-entropy, PPL = exp(CE).
+
+/// Mean next-token CE (nats) over `[B, T, V]` logits and `[B, T]` tokens.
+/// Position (b, t) contributes logprob of token (b, t+1) when
+/// `mask[b, t+1] > 0`.
+pub fn cross_entropy(
+    logits: &[f32],
+    tokens: &[i32],
+    mask: &[f32],
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+) -> f32 {
+    assert_eq!(logits.len(), batch * seq * vocab);
+    assert_eq!(tokens.len(), batch * seq);
+    assert_eq!(mask.len(), batch * seq);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for b in 0..batch {
+        for t in 0..seq - 1 {
+            let m = mask[b * seq + t + 1];
+            if m <= 0.0 {
+                continue;
+            }
+            let row = &logits[(b * seq + t) * vocab..(b * seq + t + 1) * vocab];
+            let target = tokens[b * seq + t + 1] as usize;
+            let mut mx = f32::NEG_INFINITY;
+            for &v in row {
+                mx = mx.max(v);
+            }
+            let mut lse = 0.0f32;
+            for &v in row {
+                lse += (v - mx).exp();
+            }
+            let logprob = row[target] - mx - lse.ln();
+            num += (-logprob as f64) * m as f64;
+            den += m as f64;
+        }
+    }
+    (num / den.max(1.0)) as f32
+}
+
+/// Perplexity = exp(mean CE).
+pub fn perplexity(ce: f32) -> f32 {
+    ce.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_ce_is_log_vocab() {
+        let (b, t, v) = (1, 4, 8);
+        let logits = vec![0.0f32; b * t * v];
+        let tokens = vec![3i32; b * t];
+        let mask = vec![1.0f32; b * t];
+        let ce = cross_entropy(&logits, &tokens, &mask, b, t, v);
+        assert!((ce - (v as f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn perfect_prediction_near_zero_ce() {
+        let (b, t, v) = (1, 3, 4);
+        let tokens = vec![1i32, 2, 3];
+        let mut logits = vec![0.0f32; b * t * v];
+        // position t predicts token[t+1] with huge margin
+        logits[0 * v + 2] = 50.0;
+        logits[1 * v + 3] = 50.0;
+        let mask = vec![1.0f32; b * t];
+        let ce = cross_entropy(&logits, &tokens, &mask, b, t, v);
+        assert!(ce < 1e-3, "{ce}");
+    }
+
+    #[test]
+    fn mask_excludes_targets() {
+        let (b, t, v) = (1, 3, 4);
+        let tokens = vec![0i32, 1, 2];
+        let mut logits = vec![0.0f32; b * t * v];
+        logits[0 * v + 1] = 50.0; // predicts pos1 perfectly
+        // pos2 badly: uniform
+        let mask = vec![1.0, 1.0, 0.0]; // exclude target at pos 2
+        let ce = cross_entropy(&logits, &tokens, &mask, b, t, v);
+        assert!(ce < 1e-3, "{ce}");
+    }
+
+    #[test]
+    fn ppl_is_exp_ce() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-6);
+        assert!((perplexity(1.0) - std::f32::consts::E).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,195 @@
+//! Multiple-choice task scoring — the LM-Eval-Harness protocol: each choice
+//! is appended to the context and scored by its length-normalized logprob;
+//! the model answers with the argmax choice.
+
+use crate::data::TaskInstance;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// One packed row: an (instance, choice) pair ready for a batch.
+struct Row {
+    instance: usize,
+    choice: usize,
+    ctx_len: usize,
+    choice_len: usize,
+    tokens: Vec<i32>,
+}
+
+/// Accuracy per family plus the macro averages the paper's tables report.
+#[derive(Clone, Debug, Default)]
+pub struct TaskResults {
+    pub per_family: BTreeMap<String, (usize, usize)>, // (correct, total)
+}
+
+impl TaskResults {
+    pub fn accuracy(&self, family: &str) -> f32 {
+        self.per_family
+            .get(family)
+            .map(|&(c, n)| 100.0 * c as f32 / n.max(1) as f32)
+            .unwrap_or(f32::NAN)
+    }
+
+    /// Macro average over the given families (Avg column).
+    pub fn macro_avg(&self, families: &[&str]) -> f32 {
+        let accs: Vec<f32> = families
+            .iter()
+            .filter(|f| self.per_family.contains_key(**f))
+            .map(|f| self.accuracy(f))
+            .collect();
+        if accs.is_empty() {
+            f32::NAN
+        } else {
+            accs.iter().sum::<f32>() / accs.len() as f32
+        }
+    }
+}
+
+/// Score all task instances using a batched logits function.
+///
+/// `logits_fn(tokens)` takes a full `[batch*seq]` token buffer and returns
+/// `[batch*seq*vocab]` logits; rows are padded with `pad` (never a real
+/// target in scoring since choice positions are explicit).
+pub fn score_tasks<F>(
+    tasks: &[TaskInstance],
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    pad: i32,
+    mut logits_fn: F,
+) -> Result<TaskResults>
+where
+    F: FnMut(&[i32]) -> Result<Vec<f32>>,
+{
+    // Build rows.
+    let mut rows: Vec<Row> = Vec::new();
+    for (ii, t) in tasks.iter().enumerate() {
+        for (ci, ch) in t.choices.iter().enumerate() {
+            let mut toks = Vec::with_capacity(seq);
+            toks.extend_from_slice(&t.context);
+            toks.extend_from_slice(ch);
+            eyre::ensure!(toks.len() <= seq, "task row exceeds seq len");
+            let ctx_len = t.context.len();
+            let choice_len = ch.len();
+            toks.resize(seq, pad);
+            rows.push(Row { instance: ii, choice: ci, ctx_len, choice_len, tokens: toks });
+        }
+    }
+
+    // Batch, execute, score.
+    let mut scores: Vec<Vec<f32>> = tasks.iter().map(|t| vec![0.0; t.choices.len()]).collect();
+    let mut i = 0;
+    while i < rows.len() {
+        let n = (rows.len() - i).min(batch);
+        let mut buf = Vec::with_capacity(batch * seq);
+        for r in &rows[i..i + n] {
+            buf.extend_from_slice(&r.tokens);
+        }
+        // pad the batch with copies of the last row (discarded)
+        for _ in n..batch {
+            buf.extend_from_slice(&rows[i + n - 1].tokens);
+        }
+        let logits = logits_fn(&buf)?;
+        eyre::ensure!(logits.len() == batch * seq * vocab, "bad logits size");
+        for (bi, r) in rows[i..i + n].iter().enumerate() {
+            let mut lp_sum = 0.0f32;
+            for j in 0..r.choice_len {
+                let pos = r.ctx_len + j; // token to predict
+                let prev = pos - 1;      // logits position that predicts it
+                let row = &logits[(bi * seq + prev) * vocab..(bi * seq + prev + 1) * vocab];
+                let target = r.tokens[pos] as usize;
+                let mut mx = f32::NEG_INFINITY;
+                for &v in row {
+                    mx = mx.max(v);
+                }
+                let mut lse = 0.0f32;
+                for &v in row {
+                    lse += (v - mx).exp();
+                }
+                lp_sum += row[target] - mx - lse.ln();
+            }
+            scores[r.instance][r.choice] = lp_sum / r.choice_len.max(1) as f32;
+        }
+        i += n;
+    }
+
+    // Aggregate.
+    let mut results = TaskResults::default();
+    for (ii, t) in tasks.iter().enumerate() {
+        let pred = scores[ii]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let e = results.per_family.entry(t.family.clone()).or_insert((0, 0));
+        e.1 += 1;
+        if pred == t.answer {
+            e.0 += 1;
+        }
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(family: &str, ctx: Vec<i32>, choices: Vec<Vec<i32>>, ans: usize) -> TaskInstance {
+        TaskInstance { family: family.into(), context: ctx, choices, answer: ans }
+    }
+
+    /// Logits that always put all mass on token `fav` at every position.
+    fn const_logits_fn(fav: usize, batch: usize, seq: usize, vocab: usize)
+        -> impl FnMut(&[i32]) -> Result<Vec<f32>> {
+        move |_tokens: &[i32]| {
+            let mut l = vec![0.0f32; batch * seq * vocab];
+            for t in 0..batch * seq {
+                l[t * vocab + fav] = 25.0;
+            }
+            Ok(l)
+        }
+    }
+
+    #[test]
+    fn picks_choice_matching_model_preference() {
+        let tasks = vec![
+            inst("fam", vec![1, 2, 3], vec![vec![7], vec![5]], 1),
+            inst("fam", vec![1, 2], vec![vec![5], vec![6]], 0),
+        ];
+        // model always predicts token 5 -> picks the choice == [5]
+        let res = score_tasks(&tasks, 4, 16, 10, 0,
+                              const_logits_fn(5, 4, 16, 10)).unwrap();
+        assert_eq!(res.per_family["fam"], (2, 2));
+        assert!((res.accuracy("fam") - 100.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn length_normalization() {
+        // choice A = [5,5] (2 tokens both favored) vs B = [5] — equal mean
+        // logprob; with favored=5 both ~max; tie broken by first max => A.
+        let tasks = vec![inst("f", vec![1], vec![vec![5, 5], vec![5]], 0)];
+        let res = score_tasks(&tasks, 2, 8, 10, 0,
+                              const_logits_fn(5, 2, 8, 10)).unwrap();
+        assert_eq!(res.per_family["f"].1, 1);
+    }
+
+    #[test]
+    fn macro_avg_over_families() {
+        let mut r = TaskResults::default();
+        r.per_family.insert("a".into(), (1, 2)); // 50%
+        r.per_family.insert("b".into(), (2, 2)); // 100%
+        assert!((r.macro_avg(&["a", "b"]) - 75.0).abs() < 1e-5);
+        assert!((r.macro_avg(&["a"]) - 50.0).abs() < 1e-5);
+        assert!(r.macro_avg(&["zzz"]).is_nan());
+    }
+
+    #[test]
+    fn batches_larger_than_batch_size() {
+        let tasks: Vec<TaskInstance> = (0..10)
+            .map(|_| inst("f", vec![1, 2], vec![vec![5], vec![6]], 0))
+            .collect();
+        let res = score_tasks(&tasks, 4, 8, 10, 0,
+                              const_logits_fn(5, 4, 8, 10)).unwrap();
+        assert_eq!(res.per_family["f"], (10, 10));
+    }
+}

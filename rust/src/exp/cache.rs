@@ -1,0 +1,108 @@
+//! JSON cache for search archives: expensive runs (minutes each) are shared
+//! between experiments that consume the same frontier (fig1/7/12, table1-3).
+
+use crate::coordinator::{Archive, Config};
+use crate::data::json::Value;
+use crate::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+pub fn save_archive(path: &Path, archive: &Archive) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("{\"samples\": [");
+    for (i, smp) in archive.samples.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let cfg: Vec<String> = smp.config.iter().map(|b| b.to_string()).collect();
+        let _ = write!(
+            s,
+            "{{\"config\": [{}], \"jsd\": {}, \"bits\": {}}}",
+            cfg.join(","),
+            smp.jsd,
+            smp.avg_bits
+        );
+    }
+    s.push_str("]}");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+pub fn load_archive(path: &Path) -> Result<Archive> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Value::parse(&text)?;
+    let mut archive = Archive::new();
+    for smp in v.get("samples")?.as_arr()? {
+        let config: Config = smp
+            .get("config")?
+            .as_arr()?
+            .iter()
+            .map(|b| Ok(b.as_usize()? as u8))
+            .collect::<Result<Vec<_>>>()?;
+        archive.insert(
+            config,
+            smp.get("jsd")?.as_f64()? as f32,
+            smp.get("bits")?.as_f64()?,
+        );
+    }
+    Ok(archive)
+}
+
+/// Load an archive if cached, otherwise compute and persist it.
+pub fn archive_cached<F>(path: &Path, fresh: bool, compute: F) -> Result<Archive>
+where
+    F: FnOnce() -> Result<Archive>,
+{
+    if !fresh && path.exists() {
+        if let Ok(a) = load_archive(path) {
+            if !a.is_empty() {
+                eprintln!("[cache] loaded {} samples from {}", a.len(), path.display());
+                return Ok(a);
+            }
+        }
+    }
+    let archive = compute()?;
+    save_archive(path, &archive)?;
+    Ok(archive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut a = Archive::new();
+        a.insert(vec![2, 3, 4], 0.125, 3.25);
+        a.insert(vec![4, 4, 4], 0.01, 4.25);
+        let dir = std::env::temp_dir().join("amq_cache_test");
+        let path = dir.join("arch.json");
+        save_archive(&path, &a).unwrap();
+        let b = load_archive(&path).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.samples[0].config, vec![2, 3, 4]);
+        assert!((b.samples[0].jsd - 0.125).abs() < 1e-6);
+        assert!((b.samples[1].avg_bits - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cached_compute_once() {
+        let dir = std::env::temp_dir().join("amq_cache_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("arch.json");
+        let mut calls = 0;
+        for _ in 0..2 {
+            let a = archive_cached(&path, false, || {
+                calls += 1;
+                let mut a = Archive::new();
+                a.insert(vec![2], 0.5, 2.25);
+                Ok(a)
+            })
+            .unwrap();
+            assert_eq!(a.len(), 1);
+        }
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,0 +1,268 @@
+//! Shared experiment pipeline: sensitivity -> pruning -> proxy -> search,
+//! plus deploy-time evaluation helpers used by every table.
+
+use super::{cache, Ctx};
+use crate::coordinator::{
+    pruning, run_search, sensitivity, Archive, Config, DeviceProxy,
+    ProxyEvaluator, ProxyStore, SearchParams, SearchSpace,
+};
+use crate::eval::{self, ModelHandle, TaskResults};
+use crate::quant::{AwqClip, BitStack, Hqq, PbLlm, Quantizer};
+use crate::runtime::QuantLayerBufs;
+use crate::Result;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Memory budgets (average bits) used across Tables 1/2 and Figures 1/7/8.
+pub const BUDGETS: [f64; 4] = [2.5, 3.0, 3.5, 4.0];
+
+/// Budget tolerance when selecting from the frontier (paper: ±0.005).
+pub const TOL: f64 = 0.005;
+
+/// The standard pipeline state shared by most experiments.
+pub struct Pipeline<'rt> {
+    pub space: SearchSpace,
+    pub full_space: SearchSpace,
+    pub sensitivity: sensitivity::Sensitivity,
+    pub prune_report: pruning::PruneReport,
+    pub proxy: DeviceProxy<'rt>,
+    pub proxy_build_secs: f64,
+}
+
+impl<'rt> Pipeline<'rt> {
+    /// Build the HQQ proxy, measure sensitivity, prune at 2x median.
+    pub fn build(ctx: &'rt Ctx) -> Result<Pipeline<'rt>> {
+        let t0 = Instant::now();
+        let store = ProxyStore::build(
+            &ctx.assets.manifest,
+            &ctx.assets.weights,
+            None, // HQQ is activation-independent — the whole point of §3.3
+            &Hqq::default(),
+        )?;
+        let proxy = DeviceProxy::new(&ctx.rt, store)?;
+        let proxy_build_secs = t0.elapsed().as_secs_f64();
+
+        let full_space = SearchSpace::full(&ctx.assets.manifest);
+        let mut evaluator = ProxyEvaluator::new(&proxy, &ctx.search_batches);
+        let sens = sensitivity::measure(&full_space, &mut evaluator)?;
+        let mut space = full_space.clone();
+        let prune_report = pruning::prune(&mut space, &sens, 2.0);
+        Ok(Pipeline {
+            space,
+            full_space,
+            sensitivity: sens,
+            prune_report,
+            proxy,
+            proxy_build_secs,
+        })
+    }
+
+    pub fn evaluator<'a>(&'a self, ctx: &'a Ctx) -> ProxyEvaluator<'a> {
+        ProxyEvaluator::new(&self.proxy, &ctx.search_batches)
+    }
+}
+
+/// The main AMQ search (ctx.preset), cached under `results/cache/`.
+pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> {
+    let tag = format!(
+        "search_main_i{}_n{}_s{}",
+        ctx.preset.iterations, ctx.preset.n_init, ctx.preset.seed
+    );
+    let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
+    cache::archive_cached(&path, fresh, || {
+        let mut evaluator = pipe.evaluator(ctx);
+        let res = run_search(&pipe.space, &mut evaluator, &ctx.preset)?;
+        eprintln!(
+            "[search] {} true evals, {} predictor queries, {:.1}s",
+            res.true_evals,
+            res.predictor_queries,
+            res.total_time.as_secs_f64()
+        );
+        Ok(res.archive)
+    })
+}
+
+/// Pick the frontier config for a budget (panics with context if none).
+pub fn pick(archive: &Archive, space: &SearchSpace, budget: f64) -> Result<Config> {
+    archive
+        .best_under(budget, TOL)
+        .map(|s| s.config.clone())
+        .ok_or_else(|| eyre::anyhow!("no archive sample under {budget} bits"))
+        .map(|c| {
+            debug_assert!(space.contains(&c));
+            c
+        })
+}
+
+/// Deploy-quantize a configuration with a given quantizer and upload.
+pub fn deploy_layers(
+    ctx: &Ctx,
+    config: &Config,
+    quantizer: &dyn Quantizer,
+    use_stats: bool,
+) -> Result<Vec<QuantLayerBufs>> {
+    let m = &ctx.assets.manifest;
+    let mut out = Vec::with_capacity(m.layers.len());
+    for (li, l) in m.layers.iter().enumerate() {
+        let w = ctx.assets.weights.linear(&l.name)?;
+        let stats = if use_stats {
+            Some(ctx.assets.hessians.for_layer(&l.name)?)
+        } else {
+            None
+        };
+        let q = quantizer.quantize(&w, config[li], m.group_size, stats);
+        out.push(ctx.rt.upload_quant_layer(&q)?);
+    }
+    Ok(out)
+}
+
+/// Full quality readout for a quantized model handle.
+pub struct QualityOut {
+    pub wiki_ppl: f32,
+    pub c4_ppl: f32,
+    pub zero_shot: TaskResults,
+}
+
+pub fn quality(ctx: &Ctx, handle: &ModelHandle) -> Result<QualityOut> {
+    let wiki_ppl = eval::perplexity_on(&ctx.rt, handle, &ctx.wiki)?;
+    let c4_ppl = eval::perplexity_on(&ctx.rt, handle, &ctx.c4)?;
+    // zero-shot families only here; the few-shot suite is table2's job
+    let subset: Vec<_> = ctx
+        .tasks
+        .iter()
+        .filter(|t| crate::data::ZERO_SHOT.contains(&t.family.as_str()))
+        .cloned()
+        .collect();
+    let zero_shot = eval::tasks_on(&ctx.rt, handle, &subset, ctx.pad())?;
+    Ok(QualityOut { wiki_ppl, c4_ppl, zero_shot })
+}
+
+/// Few-shot-only readout (Table 2).
+pub fn few_shot(ctx: &Ctx, handle: &ModelHandle) -> Result<TaskResults> {
+    let subset: Vec<_> = ctx
+        .tasks
+        .iter()
+        .filter(|t| crate::data::FEW_SHOT.contains(&t.family.as_str()))
+        .cloned()
+        .collect();
+    eval::tasks_on(&ctx.rt, handle, &subset, ctx.pad())
+}
+
+/// PPL-only readout (ablation tables).
+pub fn ppl_only(ctx: &Ctx, handle: &ModelHandle) -> Result<(f32, f32)> {
+    Ok((
+        eval::perplexity_on(&ctx.rt, handle, &ctx.wiki)?,
+        eval::perplexity_on(&ctx.rt, handle, &ctx.c4)?,
+    ))
+}
+
+/// AMQ deploy evaluation: config -> asym-clip AWQ layers -> quality.
+pub fn amq_quality(ctx: &Ctx, config: &Config) -> Result<QualityOut> {
+    let layers = deploy_layers(ctx, config, &AwqClip::default(), true)?;
+    let refs: Vec<&QuantLayerBufs> = layers.iter().collect();
+    quality(ctx, &ModelHandle::Quant(&refs))
+}
+
+// ---------------------------------------------------------------------------
+// Any-size baselines
+// ---------------------------------------------------------------------------
+
+/// BitStack decomposition over all searchable layers (built once, reused
+/// across budgets).
+pub fn bitstack_build(ctx: &Ctx, max_blocks: usize) -> Result<BitStack> {
+    let mut ws = Vec::new();
+    for l in &ctx.assets.manifest.layers {
+        ws.push((l.name.clone(), ctx.assets.weights.linear(&l.name)?));
+    }
+    Ok(BitStack::decompose(&ws, max_blocks))
+}
+
+/// Byte budget equivalent to an average-bits target over the searchable
+/// weights (+ the same group-metadata overhead AMQ pays).
+pub fn budget_bytes(space: &SearchSpace, avg_bits: f64) -> usize {
+    let params: usize = space.params.iter().sum();
+    (params as f64 * avg_bits / 8.0) as usize
+}
+
+/// Evaluate BitStack at a byte budget: allocate blocks, reconstruct, eval
+/// through the fp graph with weight overrides.
+pub fn bitstack_quality(
+    ctx: &Ctx,
+    bs: &BitStack,
+    budget_bytes: usize,
+) -> Result<(QualityOut, Vec<usize>)> {
+    let loaded = bs.allocate(budget_bytes);
+    let recon = bs.reconstruct_all(&loaded);
+    let overrides = ctx.rt.upload_weight_overrides(&recon)?;
+    Ok((quality(ctx, &ModelHandle::Override(&overrides))?, loaded))
+}
+
+/// PB-LLM at a target average-bits (rho chosen so bits match).
+pub fn pbllm_quality(ctx: &Ctx, avg_bits: f64) -> Result<QualityOut> {
+    let rho = ((avg_bits - 1.0) / 7.0).clamp(0.0, 1.0) as f32;
+    let pb = PbLlm::new(rho, ctx.assets.manifest.group_size);
+    let mut recon = Vec::new();
+    for l in &ctx.assets.manifest.layers {
+        let w = ctx.assets.weights.linear(&l.name)?;
+        let stats = ctx.assets.hessians.for_layer(&l.name)?;
+        recon.push((l.name.clone(), pb.quantize(&w, Some(stats)).dequant().clone()));
+    }
+    let overrides = ctx.rt.upload_weight_overrides(&recon)?;
+    quality(ctx, &ModelHandle::Override(&overrides))
+}
+
+/// Uniform fixed-precision configuration at `bits` for every layer.
+pub fn uniform_config(space: &SearchSpace, bits: u8) -> Config {
+    vec![bits; space.n_layers()]
+}
+
+/// JSD of an arbitrary override model vs the fp reference on the search
+/// calibration batches (used by greedy/one-shot comparisons on baselines).
+pub fn override_jsd(
+    ctx: &Ctx,
+    overrides: &HashMap<String, xla::PjRtBuffer>,
+) -> Result<f32> {
+    eval::jsd_on_batches(&ctx.rt, &ModelHandle::Override(overrides), &ctx.search_batches)
+}
+
+/// Convenience: evaluator-backed JSD for an assembled proxy config on the
+/// full calibration split (final-quality numbers, not the search path).
+pub fn proxy_full_jsd(ctx: &Ctx, pipe: &Pipeline, config: &Config) -> Result<f32> {
+    let batches = ctx.batches_for(&ctx.calib)?;
+    let layers = pipe.proxy.assemble(config);
+    let mut sum = 0.0f64;
+    for b in &batches {
+        let (jsd, _) = ctx.rt.scores(b, &layers)?;
+        sum += jsd as f64;
+    }
+    Ok((sum / batches.len() as f64) as f32)
+}
+
+/// Run a search with explicit params (ablations), cached by tag.
+pub fn search_cached(
+    ctx: &Ctx,
+    pipe: &Pipeline,
+    params: &SearchParams,
+    tag: &str,
+    fresh: bool,
+) -> Result<Archive> {
+    let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
+    cache::archive_cached(&path, fresh, || {
+        let mut evaluator = pipe.evaluator(ctx);
+        let res = run_search(&pipe.space, &mut evaluator, params)?;
+        Ok(res.archive)
+    })
+}
+
+/// Memory column (MB) for an AMQ/uniform config row: searchable weights at
+/// config bits + fp-side parameters at fp16 (paper accounting).
+pub fn row_memory_mb(ctx: &Ctx, space: &SearchSpace, config: &Config) -> f64 {
+    space.memory_mb(config) + ctx.assets.manifest.fp_side_params() as f64 * 2.0 / 1e6
+}
+
+/// FP16 memory (MB).
+pub fn fp16_memory_mb(ctx: &Ctx) -> f64 {
+    (ctx.assets.manifest.total_linear_params() + ctx.assets.manifest.fp_side_params()) as f64
+        * 2.0
+        / 1e6
+}

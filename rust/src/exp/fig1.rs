@@ -1,0 +1,71 @@
+//! Figures 1 & 7 analog: the memory vs zero-shot-accuracy trade-off for
+//! AMQ / BitStack / PB-LLM (+ tokens/s from the cost model for Fig 1's
+//! bottom panel).
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::costmodel::{self, DeployKind, L40S};
+use crate::data::ZERO_SHOT;
+use crate::eval::ModelHandle;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    let mut table = Table::new(
+        "Figure 1/7 — accuracy + speed vs average bits",
+        &["avg_bits", "method", "mem_MB", "avg_acc", "tok_per_s(L40S sim)"],
+    );
+    let m = &ctx.assets.manifest;
+
+    // FP16 anchor
+    let fp_q = common::quality(ctx, &ModelHandle::Fp)?;
+    table.row(vec![
+        "16".into(),
+        "FP16".into(),
+        fmt(common::fp16_memory_mb(ctx) as f32, 1),
+        fmt(fp_q.zero_shot.macro_avg(&ZERO_SHOT), 2),
+        fmt(costmodel::tokens_per_sec(&L40S, m, &DeployKind::Fp16) as f32, 1),
+    ]);
+
+    let bs = common::bitstack_build(ctx, 10)?;
+    for &budget in &common::BUDGETS {
+        // AMQ
+        let cfg = common::pick(&archive, &pipe.space, budget)?;
+        let amq_q = common::amq_quality(ctx, &cfg)?;
+        let speed = costmodel::tokens_per_sec(&L40S, m, &DeployKind::LayerQuant(&cfg));
+        table.row(vec![
+            format!("{budget}"),
+            "AMQ".into(),
+            fmt(common::row_memory_mb(ctx, &pipe.space, &cfg) as f32, 1),
+            fmt(amq_q.zero_shot.macro_avg(&ZERO_SHOT), 2),
+            fmt(speed as f32, 1),
+        ]);
+        // BitStack
+        let bytes = common::budget_bytes(&pipe.space, budget);
+        let (bs_q, loaded) = common::bitstack_quality(ctx, &bs, bytes)?;
+        let bs_speed =
+            costmodel::tokens_per_sec(&L40S, m, &DeployKind::BitStack(&loaded));
+        table.row(vec![
+            format!("{budget}"),
+            "BitStack".into(),
+            fmt((bytes as f64 / 1e6) as f32, 1),
+            fmt(bs_q.zero_shot.macro_avg(&ZERO_SHOT), 2),
+            fmt(bs_speed as f32, 1),
+        ]);
+        // PB-LLM
+        let pb_q = common::pbllm_quality(ctx, budget)?;
+        let pb_speed =
+            costmodel::tokens_per_sec(&L40S, m, &DeployKind::PbLlm((budget - 1.0) / 7.0));
+        table.row(vec![
+            format!("{budget}"),
+            "PB-LLM".into(),
+            fmt((common::budget_bytes(&pipe.space, budget) as f64 / 1e6) as f32, 1),
+            fmt(pb_q.zero_shot.macro_avg(&ZERO_SHOT), 2),
+            fmt(pb_speed as f32, 1),
+        ]);
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("fig1.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Figure 11 analog: robustness over random seeds — frontier C4-proxy JSD
+//! per bit-width as the search iterates, for 6 seeds.
+
+use super::common::Pipeline;
+use super::Ctx;
+use crate::coordinator::run_search;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
+    let seeds = [11u64, 22, 33, 44, 55, 66];
+    let checkpoints = [2usize, 5, 10, ctx.preset.iterations - 1];
+    let mut table = Table::new(
+        "Figure 11 — frontier JSD vs iteration across 6 seeds",
+        &["iteration", "bits", "jsd_min", "jsd_max", "jsd_spread"],
+    );
+
+    // gather histories
+    let mut histories = Vec::new();
+    for &seed in &seeds {
+        let mut params = ctx.preset.clone();
+        params.seed = seed;
+        // lighter budget per seed: fig11 is about variance, not depth
+        params.iterations = ctx.preset.iterations;
+        let mut evaluator = pipe.evaluator(ctx);
+        let res = run_search(&pipe.space, &mut evaluator, &params)?;
+        histories.push(res.history);
+    }
+
+    for &it in &checkpoints {
+        for (bi, &bits) in [2.5f64, 3.0, 3.5, 4.0].iter().enumerate() {
+            let vals: Vec<f32> = histories
+                .iter()
+                .filter_map(|h| h.get(it))
+                .map(|s| s.frontier_probe[bi].1)
+                .filter(|v| v.is_finite())
+                .collect();
+            if vals.len() < seeds.len() {
+                continue; // paper: plot only when all seeds have a sample
+            }
+            let lo = vals.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+            let hi = vals.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            table.row(vec![
+                it.to_string(),
+                format!("{bits}"),
+                fmt(lo, 4),
+                fmt(hi, 4),
+                fmt(hi - lo, 4),
+            ]);
+        }
+    }
+    table.print();
+    println!("(spread should shrink with iteration — the paper's convergence claim)");
+    table.to_csv(&ctx.out_dir.join("fig11.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Figures 12/13/14 analog: bit-allocation visualization — which layers get
+//! which bit-width at each average-bits budget (text heatmap, rows = linear
+//! kinds Q K V O Gate Up Down, columns = blocks).
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::report::Table;
+use crate::Result;
+
+const KINDS: [&str; 7] = ["q", "k", "v", "o", "gate", "up", "down"];
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    let m = &ctx.assets.manifest;
+    let n_blocks = m.model.n_layers;
+
+    let mut csv = Table::new(
+        "Figure 12 — bit allocation per layer",
+        &["avg_bits", "layer", "bits"],
+    );
+    for &budget in &common::BUDGETS {
+        let cfg = common::pick(&archive, &pipe.space, budget)?;
+        println!("\navg bits {budget} (actual {:.3}):", pipe.space.avg_bits(&cfg));
+        println!("        {}", (0..n_blocks).map(|b| format!("blk{b}"))
+                 .collect::<Vec<_>>().join("  "));
+        for kind in KINDS {
+            let mut cells = Vec::new();
+            for b in 0..n_blocks {
+                let name = format!("blk{b}.{kind}");
+                let li = m.layer_index(&name).unwrap();
+                cells.push(format!("  {} ", cfg[li]));
+                csv.row(vec![format!("{budget}"), name, cfg[li].to_string()]);
+            }
+            println!("{kind:>6}  {}", cells.join("  "));
+        }
+        // per-kind average (the paper's "V stays high, Q/K drop first")
+        let mut means = Vec::new();
+        for kind in KINDS {
+            let vals: Vec<f32> = (0..n_blocks)
+                .map(|b| cfg[m.layer_index(&format!("blk{b}.{kind}")).unwrap()] as f32)
+                .collect();
+            means.push(format!(
+                "{kind}={:.2}",
+                vals.iter().sum::<f32>() / vals.len() as f32
+            ));
+        }
+        println!("  kind means: {}", means.join(" "));
+    }
+    csv.to_csv(&ctx.out_dir.join("fig12.csv"))?;
+    Ok(())
+}

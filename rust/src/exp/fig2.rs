@@ -1,0 +1,70 @@
+//! Figure 2 analog: per-linear-layer sensitivity — quantize one layer to
+//! 2-bit (HQQ proxy), all others at 4-bit, report calibration JSD and
+//! WikiText-analog PPL degradation.
+
+use super::common::Pipeline;
+use super::Ctx;
+use crate::eval::{self, ModelHandle};
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
+    let m = &ctx.assets.manifest;
+    let scores = pipe.sensitivity.scores();
+
+    // PPL per single-layer-2bit config on the wiki split (the paper's Fig 2
+    // y-axis); JSD is the signal pruning actually uses.
+    let mut table = Table::new(
+        "Figure 2 — single-layer 2-bit sensitivity (others 4-bit)",
+        &["layer", "kind", "block", "jsd", "wiki_ppl"],
+    );
+    let max_cfg: Vec<u8> = pipe
+        .full_space
+        .choices
+        .iter()
+        .map(|c| *c.iter().max().unwrap())
+        .collect();
+    let mut rows = Vec::new();
+    for (li, l) in m.layers.iter().enumerate() {
+        let mut cfg = max_cfg.clone();
+        cfg[li] = 2;
+        let layers = pipe.proxy.assemble(&cfg);
+        let ppl = eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?;
+        rows.push((l.name.clone(), l.kind().to_string(), l.block(), scores[li], ppl));
+    }
+    let baseline_ppl = {
+        let layers = pipe.proxy.assemble(&max_cfg);
+        eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?
+    };
+    for (name, kind, block, jsd, ppl) in &rows {
+        table.row(vec![
+            name.clone(),
+            kind.clone(),
+            block.to_string(),
+            fmt(*jsd, 5),
+            fmt(*ppl, 3),
+        ]);
+    }
+    table.print();
+    println!(
+        "baseline (all-4bit) wiki PPL = {baseline_ppl:.3}; sensitivity spread = {:.1}x",
+        scores.iter().fold(0.0f32, |m, &s| m.max(s))
+            / scores
+                .iter()
+                .filter(|s| **s > 0.0)
+                .fold(f32::INFINITY, |m, &s| m.min(s))
+                .max(1e-9)
+    );
+    println!(
+        "pruning (2x median): {} outliers {:?} ({:.2}% of layers)",
+        pipe.prune_report.outliers.len(),
+        pipe.prune_report
+            .outliers
+            .iter()
+            .map(|&i| m.layers[i].name.clone())
+            .collect::<Vec<_>>(),
+        pipe.prune_report.excluded_frac * 100.0
+    );
+    table.to_csv(&ctx.out_dir.join("fig2.csv"))?;
+    Ok(())
+}

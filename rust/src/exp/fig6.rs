@@ -1,0 +1,84 @@
+//! Figure 6 analog: does the HQQ proxy preserve the quality *ordering* of
+//! the activation-dependent quantizers (GPTQ, asym-clip AWQ)?  We sample
+//! configurations from the AMQ frontier, evaluate wiki PPL under all three
+//! quantizers, and report pairwise Kendall-τ rank agreement — the empirical
+//! check behind the §3.3 theorem.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::eval::{self, ModelHandle};
+use crate::quant::{AwqClip, Gptq, Quantizer};
+use crate::report::{fmt, Table};
+use crate::Result;
+
+fn kendall_tau(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let mut conc = 0i32;
+    let mut disc = 0i32;
+    for i in 0..n {
+        for j in i + 1..n {
+            let s = ((a[i] - a[j]) as f64) * ((b[i] - b[j]) as f64);
+            if s > 0.0 {
+                conc += 1;
+            } else if s < 0.0 {
+                disc += 1;
+            }
+        }
+    }
+    (conc - disc) as f32 / ((n * (n - 1) / 2).max(1) as f32)
+}
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    // sample up to 16 frontier configs spread over the bits range
+    let front = archive.pareto_front();
+    let mut configs: Vec<_> = front
+        .iter()
+        .map(|&i| archive.samples[i].clone())
+        .collect();
+    configs.sort_by(|a, b| a.avg_bits.partial_cmp(&b.avg_bits).unwrap());
+    let take = 16.min(configs.len());
+    let picked: Vec<_> = (0..take)
+        .map(|k| configs[k * (configs.len() - 1) / take.max(1)].clone())
+        .collect();
+
+    let mut table = Table::new(
+        "Figure 6 — proxy (HQQ) vs deploy quantizer PPL on frontier configs",
+        &["avg_bits", "hqq_ppl", "awq_ppl", "gptq_ppl"],
+    );
+    let mut hqq_v = Vec::new();
+    let mut awq_v = Vec::new();
+    let mut gptq_v = Vec::new();
+    for s in &picked {
+        // proxy (HQQ pieces already uploaded)
+        let layers = pipe.proxy.assemble(&s.config);
+        let hqq_ppl =
+            eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?;
+        // deploy-time quantizers
+        let awq_layers =
+            common::deploy_layers(ctx, &s.config, &AwqClip::default() as &dyn Quantizer, true)?;
+        let refs: Vec<&_> = awq_layers.iter().collect();
+        let awq_ppl = eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&refs), &ctx.wiki)?;
+        let gptq_layers =
+            common::deploy_layers(ctx, &s.config, &Gptq::default() as &dyn Quantizer, true)?;
+        let refs: Vec<&_> = gptq_layers.iter().collect();
+        let gptq_ppl = eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&refs), &ctx.wiki)?;
+        table.row(vec![
+            fmt(s.avg_bits as f32, 3),
+            fmt(hqq_ppl, 3),
+            fmt(awq_ppl, 3),
+            fmt(gptq_ppl, 3),
+        ]);
+        hqq_v.push(hqq_ppl);
+        awq_v.push(awq_ppl);
+        gptq_v.push(gptq_ppl);
+    }
+    table.print();
+    println!(
+        "Kendall-τ(HQQ, AWQ) = {:.3}   Kendall-τ(HQQ, GPTQ) = {:.3}",
+        kendall_tau(&hqq_v, &awq_v),
+        kendall_tau(&hqq_v, &gptq_v)
+    );
+    table.to_csv(&ctx.out_dir.join("fig6.csv"))?;
+    Ok(())
+}

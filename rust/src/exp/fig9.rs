@@ -1,0 +1,72 @@
+//! Figures 9 & 10 analog: the effect of search-space pruning — bit-region
+//! coverage of explored samples (Fig 9) and frontier C4 PPL (Fig 10), with
+//! vs without the 2x-median outlier exclusion.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    // with pruning (pruned space), without pruning (full space)
+    let with = common::search_cached(ctx, pipe, &ctx.preset, "search_pruned", fresh)?;
+    let without = {
+        let tag = "search_unpruned";
+        let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
+        super::cache::archive_cached(&path, fresh, || {
+            let mut evaluator = pipe.evaluator(ctx);
+            let res =
+                crate::coordinator::run_search(&pipe.full_space, &mut evaluator, &ctx.preset)?;
+            Ok(res.archive)
+        })?
+    };
+
+    // Fig 9: histogram of explored avg-bits
+    let mut hist = Table::new(
+        "Figure 9 — explored samples per bit region",
+        &["bits_bin", "with_pruning", "without_pruning"],
+    );
+    let bins = [(2.25, 2.75), (2.75, 3.25), (3.25, 3.75), (3.75, 4.26)];
+    for (lo, hi) in bins {
+        let cw = with
+            .samples
+            .iter()
+            .filter(|s| s.avg_bits >= lo && s.avg_bits < hi)
+            .count();
+        let co = without
+            .samples
+            .iter()
+            .filter(|s| s.avg_bits >= lo && s.avg_bits < hi)
+            .count();
+        hist.row(vec![format!("[{lo},{hi})"), cw.to_string(), co.to_string()]);
+    }
+    hist.print();
+    hist.to_csv(&ctx.out_dir.join("fig9.csv"))?;
+
+    // Fig 10: frontier C4 PPL with vs without pruning
+    let mut ppl = Table::new(
+        "Figure 10 — frontier C4 PPL with vs without pruning",
+        &["avg_bits", "with_pruning", "without_pruning"],
+    );
+    for &budget in &common::BUDGETS {
+        let mut row = vec![format!("{budget}")];
+        for (archive, space) in [(&with, &pipe.space), (&without, &pipe.full_space)] {
+            match archive.best_under(budget, common::TOL) {
+                Some(s) => {
+                    let layers = common::deploy_layers(
+                        ctx, &s.config, &crate::quant::AwqClip::default(), true)?;
+                    let refs: Vec<&_> = layers.iter().collect();
+                    let (_w, c4) =
+                        common::ppl_only(ctx, &crate::eval::ModelHandle::Quant(&refs))?;
+                    let _ = space;
+                    row.push(fmt(c4, 2));
+                }
+                None => row.push("-".into()),
+            }
+        }
+        ppl.row(row);
+    }
+    ppl.print();
+    ppl.to_csv(&ctx.out_dir.join("fig10.csv"))?;
+    Ok(())
+}

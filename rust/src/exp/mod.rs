@@ -1,0 +1,124 @@
+//! Experiment harnesses — one module per paper table/figure (DESIGN.md §5).
+//!
+//! Shared machinery lives here: the loaded [`Ctx`] (assets + runtime +
+//! calibration batches), the pruned-space pipeline every experiment starts
+//! from, and a JSON cache so expensive search runs are shared between
+//! figures/tables that draw from the same frontier.
+
+pub mod cache;
+pub mod common;
+pub mod fig1;
+pub mod fig11;
+pub mod fig12;
+pub mod fig2;
+pub mod fig6;
+pub mod fig9;
+pub mod pruning_ablation;
+pub mod speed;
+pub mod table1;
+pub mod table10;
+pub mod table11;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table78;
+pub mod table9;
+
+use crate::coordinator::SearchParams;
+use crate::data::{load_tasks, load_tokens, TaskInstance, TokenSplit};
+use crate::model::ModelAssets;
+use crate::runtime::{Runtime, ScoreBatch};
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Number of calibration sequences used on the search hot path (1 PJRT
+/// call per candidate).  Final tables evaluate on the full splits.
+pub const SEARCH_CALIB_SEQS: usize = 16;
+
+/// Everything an experiment needs, loaded once.
+pub struct Ctx {
+    pub assets: ModelAssets,
+    pub rt: Runtime,
+    pub calib: TokenSplit,
+    pub wiki: TokenSplit,
+    pub c4: TokenSplit,
+    pub tasks: Vec<TaskInstance>,
+    /// Prepared batches over the first [`SEARCH_CALIB_SEQS`] calib seqs.
+    pub search_batches: Vec<ScoreBatch>,
+    pub out_dir: PathBuf,
+    pub preset: SearchParams,
+}
+
+impl Ctx {
+    pub fn load(artifacts_dir: &Path, out_dir: &Path, preset: SearchParams) -> Result<Ctx> {
+        let assets = ModelAssets::load(artifacts_dir)?;
+        let rt = Runtime::load(artifacts_dir, &assets.weights)?;
+        let calib = load_tokens(&assets.manifest.file("calib")?)?;
+        let wiki = load_tokens(&assets.manifest.file("test_wiki")?)?;
+        let c4 = load_tokens(&assets.manifest.file("test_c4")?)?;
+        let tasks = load_tasks(&assets.manifest.file("tasks")?)?;
+
+        let b = rt.batch_size();
+        let t = rt.seq_len();
+        let mask = vec![1.0f32; b * t];
+        let n = SEARCH_CALIB_SEQS.min(calib.n_seqs);
+        eyre::ensure!(n % b == 0, "search calib must divide batch");
+        let mut search_batches = Vec::new();
+        for start in (0..n).step_by(b) {
+            search_batches.push(rt.prepare_batch(calib.batch(start, b), &mask)?);
+        }
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::create_dir_all(out_dir.join("cache"))?;
+        Ok(Ctx {
+            assets,
+            rt,
+            calib,
+            wiki,
+            c4,
+            tasks,
+            search_batches,
+            out_dir: out_dir.to_path_buf(),
+            preset,
+        })
+    }
+
+    /// Prepared batches over a whole token split (for final JSD evals).
+    pub fn batches_for(&self, split: &TokenSplit) -> Result<Vec<ScoreBatch>> {
+        let b = self.rt.batch_size();
+        let t = self.rt.seq_len();
+        let mask = vec![1.0f32; b * t];
+        let mut out = Vec::new();
+        for start in (0..split.n_seqs).step_by(b) {
+            out.push(self.rt.prepare_batch(split.batch(start, b), &mask)?);
+        }
+        Ok(out)
+    }
+
+    pub fn pad(&self) -> i32 {
+        self.assets.manifest.pad_token()
+    }
+}
+
+/// Registry of all experiments for `repro all` / `repro list`.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("fig1", "memory vs task accuracy + tokens/s trade-off"),
+    ("fig2", "per-layer 2-bit quantization sensitivity"),
+    ("fig5", "layer-wise vs group-mixed vs fp16 inference speed"),
+    ("fig6", "proxy (HQQ) vs GPTQ/AWQ Pareto order agreement"),
+    ("fig7", "accuracy vs avg-bits trade-off curves"),
+    ("fig8", "tokens/s at each avg-bits for all methods"),
+    ("fig9", "search bit-histogram with vs without pruning"),
+    ("fig10", "frontier PPL with vs without pruning"),
+    ("fig11", "frontier PPL vs iteration over 6 seeds"),
+    ("fig12", "bit-allocation heatmaps per budget"),
+    ("table1", "AMQ vs BitStack vs PB-LLM @ 2.5/3.0/3.5 bits"),
+    ("table2", "harder few-shot tasks (MMLU/GSM8K analog)"),
+    ("table3", "AMQ vs fixed-precision GPTQ/AWQ"),
+    ("table4", "search + compression wallclock costs"),
+    ("table5", "pruning threshold x calibration-set ablation"),
+    ("table7", "NSGA-II crossover-probability robustness"),
+    ("table8", "NSGA-II mutation-probability robustness"),
+    ("table9", "RBF vs MLP predictor ablation"),
+    ("table10", "search-iteration budget ablation"),
+    ("table11", "one-shot vs greedy vs AMQ (cost + quality)"),
+];

@@ -1,0 +1,77 @@
+//! Table 5 analog: pruning threshold x calibration-set ablation — which
+//! layers are excluded and how frontier C4 PPL responds.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::coordinator::{pruning, sensitivity, ProxyEvaluator, SearchSpace};
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let m = &ctx.assets.manifest;
+
+    // alternative calibration set: first 16 sequences of the shifted (C4)
+    // split, mirroring the paper's WikiText-2 vs C4 column
+    let b = ctx.rt.batch_size();
+    let t = ctx.rt.seq_len();
+    let mask = vec![1.0f32; b * t];
+    let alt_batches = vec![ctx.rt.prepare_batch(ctx.c4.batch(0, b), &mask)?];
+
+    let mut table = Table::new(
+        "Table 5 — pruning threshold x calibration set",
+        &["calib", "threshold", "outliers", "frac_%", "ppl@2.5", "ppl@3.0",
+          "ppl@3.5", "ppl@4.0"],
+    );
+
+    for (calib_name, batches) in [
+        ("wiki", &ctx.search_batches),
+        ("c4", &alt_batches),
+    ] {
+        // sensitivity under this calibration set
+        let full = SearchSpace::full(m);
+        let mut ev = ProxyEvaluator::new(&pipe.proxy, batches);
+        let sens = sensitivity::measure(&full, &mut ev)?;
+        for &thr in &[1.5f32, 2.0, 3.0, 5.0] {
+            let mut space = full.clone();
+            let rep = pruning::prune(&mut space, &sens, thr);
+            let names: Vec<String> = rep
+                .outliers
+                .iter()
+                .map(|&i| m.layers[i].name.clone())
+                .collect();
+            // light search on this space, then frontier PPL
+            let mut params = ctx.preset.clone();
+            params.iterations = (ctx.preset.iterations / 2).max(4);
+            let tag = format!("search_prune_{calib_name}_{}", (thr * 10.0) as u32);
+            let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
+            let archive = super::cache::archive_cached(&path, fresh, || {
+                let mut evaluator = pipe.evaluator(ctx);
+                let res = crate::coordinator::run_search(&space, &mut evaluator, &params)?;
+                Ok(res.archive)
+            })?;
+            let mut row = vec![
+                calib_name.to_string(),
+                format!("{thr}x"),
+                if names.is_empty() { "-".into() } else { names.join(" ") },
+                fmt(rep.excluded_frac * 100.0, 2),
+            ];
+            for &budget in &common::BUDGETS {
+                match archive.best_under(budget, common::TOL) {
+                    Some(s) => {
+                        let layers = common::deploy_layers(
+                            ctx, &s.config, &crate::quant::AwqClip::default(), true)?;
+                        let refs: Vec<&_> = layers.iter().collect();
+                        let (_w, c4) = common::ppl_only(
+                            ctx, &crate::eval::ModelHandle::Quant(&refs))?;
+                        row.push(fmt(c4, 2));
+                    }
+                    None => row.push("-".into()),
+                }
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table5.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Figures 5 & 8 analog: inference speed.  Two sources:
+//!  * the roofline cost model at 7B-equivalent scale (the paper's GPUs are
+//!    simulated; DESIGN.md §3 documents the substitution), and
+//!  * *measured* wall-clock of the real PJRT executables on this CPU
+//!    (fp32 graph vs Pallas dequant-matmul graph) as the honest local datum.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::costmodel::{self, DeployKind, HwProfile, L40S, RTX3090};
+use crate::report::{fmt, Table};
+use crate::Result;
+use std::time::Instant;
+
+pub fn run_fig5(ctx: &Ctx, _pipe: &Pipeline) -> Result<()> {
+    let m = &ctx.assets.manifest;
+    let mut table = Table::new(
+        "Figure 5 — layer-wise vs group-mixed speed (7B-equivalent, simulated)",
+        &["hw", "method", "tok_per_s"],
+    );
+    for hw in [&L40S, &RTX3090] {
+        let fp = costmodel::tokens_per_sec(hw, m, &DeployKind::Fp16);
+        let bits3 = vec![3u8; m.layers.len()];
+        let lw = costmodel::tokens_per_sec(hw, m, &DeployKind::LayerQuant(&bits3));
+        let gm = costmodel::tokens_per_sec(hw, m, &DeployKind::GroupMixed(3.0));
+        table.row(vec![hw.name.into(), "FP16".into(), fmt(fp as f32, 1)]);
+        table.row(vec![hw.name.into(), "group-mixed w3".into(), fmt(gm as f32, 1)]);
+        table.row(vec![hw.name.into(), "layer-wise w3".into(), fmt(lw as f32, 1)]);
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("fig5.csv"))?;
+    Ok(())
+}
+
+pub fn run_fig8(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let m = &ctx.assets.manifest;
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    let bs = common::bitstack_build(ctx, 10)?;
+    let mut table = Table::new(
+        "Figure 8 — tokens/s at each average bits (simulated)",
+        &["hw", "avg_bits", "AMQ", "BitStack", "PB-LLM", "FP16"],
+    );
+    for hw in [&L40S, &RTX3090] {
+        let fp = costmodel::tokens_per_sec(hw, m, &DeployKind::Fp16);
+        for &budget in &common::BUDGETS {
+            let cfg = common::pick(&archive, &pipe.space, budget)?;
+            let amq = costmodel::tokens_per_sec(hw, m, &DeployKind::LayerQuant(&cfg));
+            let loaded = bs.allocate(common::budget_bytes(&pipe.space, budget));
+            let bst = costmodel::tokens_per_sec(hw, m, &DeployKind::BitStack(&loaded));
+            let pb = costmodel::tokens_per_sec(
+                hw, m, &DeployKind::PbLlm((budget - 1.0) / 7.0));
+            table.row(vec![
+                hw.name.into(),
+                format!("{budget}"),
+                fmt(amq as f32, 1),
+                fmt(bst as f32, 1),
+                fmt(pb as f32, 1),
+                fmt(fp as f32, 1),
+            ]);
+        }
+    }
+    table.print();
+    println!();
+    measured(ctx, pipe)?;
+    table.to_csv(&ctx.out_dir.join("fig8.csv"))?;
+    Ok(())
+}
+
+/// Honest local measurement: per-batch latency of the fp32 executable vs the
+/// Pallas dequant-matmul executable on this CPU.
+pub fn measured(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
+    let b = ctx.rt.batch_size();
+    let t = ctx.rt.seq_len();
+    let toks = ctx.calib.batch(0, b);
+    let cfg3 = vec![3u8; ctx.assets.manifest.layers.len()];
+    let layers = pipe.proxy.assemble(&cfg3);
+
+    // warmup
+    let _ = ctx.rt.fp_logits(toks)?;
+    let _ = ctx.rt.quant_logits(toks, &layers)?;
+
+    let reps = 5;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = ctx.rt.fp_logits(toks)?;
+    }
+    let fp_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let _ = ctx.rt.quant_logits(toks, &layers)?;
+    }
+    let q_s = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "measured (CPU PJRT, batch {b}x{t}): fp32 {:.1} ms, quant(w3, Pallas) {:.1} ms \
+         ({:.0} vs {:.0} tok/s prefill)",
+        fp_s * 1e3,
+        q_s * 1e3,
+        (b * t) as f64 / fp_s,
+        (b * t) as f64 / q_s
+    );
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn hw_list() -> Vec<&'static HwProfile> {
+    vec![&L40S, &RTX3090]
+}

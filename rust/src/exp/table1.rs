@@ -1,0 +1,62 @@
+//! Table 1 analog: AMQ vs BitStack vs PB-LLM at average bits 2.5/3.0/3.5 —
+//! WikiText/C4-analog PPL + the six zero-shot task families.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::data::ZERO_SHOT;
+use crate::eval::ModelHandle;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    let mut table = Table::new(
+        "Table 1 — AMQ vs any-size baselines",
+        &[
+            "mem_MB", "avg_bits", "method", "wiki_ppl", "c4_ppl", "copy", "compl",
+            "agree", "major", "induc", "recall", "avg_acc",
+        ],
+    );
+
+    let mut push = |mem: f64, bits: String, method: &str, q: &common::QualityOut| {
+        let mut row = vec![
+            fmt(mem as f32, 1),
+            bits,
+            method.to_string(),
+            fmt(q.wiki_ppl, 2),
+            fmt(q.c4_ppl, 2),
+        ];
+        for f in ZERO_SHOT {
+            row.push(fmt(q.zero_shot.accuracy(f), 1));
+        }
+        row.push(fmt(q.zero_shot.macro_avg(&ZERO_SHOT), 2));
+        table.row(row);
+    };
+
+    // FP16 reference row
+    let fp_q = common::quality(ctx, &ModelHandle::Fp)?;
+    push(common::fp16_memory_mb(ctx), "16".into(), "FP16", &fp_q);
+
+    let bs = common::bitstack_build(ctx, 10)?;
+    for &budget in &[2.5f64, 3.0, 3.5] {
+        // AMQ: frontier config, deployed with asym-clip AWQ
+        let cfg = common::pick(&archive, &pipe.space, budget)?;
+        let amq_q = common::amq_quality(ctx, &cfg)?;
+        let mem = common::row_memory_mb(ctx, &pipe.space, &cfg);
+
+        // BitStack at the same searchable-weight byte budget
+        let bytes = common::budget_bytes(&pipe.space, budget);
+        let (bs_q, _loaded) = common::bitstack_quality(ctx, &bs, bytes)?;
+
+        // PB-LLM at matching average bits
+        let pb_q = common::pbllm_quality(ctx, budget)?;
+
+        push(mem, format!("{budget}"), "PB-LLM", &pb_q);
+        push(mem, format!("{budget}"), "BitStack", &bs_q);
+        push(mem, format!("{budget}"), "AMQ", &amq_q);
+    }
+
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table1.csv"))?;
+    Ok(())
+}

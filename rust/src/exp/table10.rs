@@ -1,0 +1,43 @@
+//! Table 10 analog: iteration-budget ablation — search cost vs frontier
+//! C4-analog PPL at each budget.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::coordinator::run_search;
+use crate::report::{fmt, Table};
+use crate::Result;
+use std::time::Instant;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, _fresh: bool) -> Result<()> {
+    let mut table = Table::new(
+        "Table 10 — iteration budget vs cost and C4 PPL",
+        &["iters", "time_s", "true_evals", "ppl@2.5", "ppl@3.0", "ppl@3.5", "ppl@4.0"],
+    );
+    // run fresh each time (timing is the point), half/default/double budget
+    let base = ctx.preset.iterations;
+    for iters in [base / 2, base, base * 2] {
+        let mut params = ctx.preset.clone();
+        params.iterations = iters.max(1);
+        let mut evaluator = pipe.evaluator(ctx);
+        let t0 = Instant::now();
+        let res = run_search(&pipe.space, &mut evaluator, &params)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let mut row = vec![
+            format!("{}", params.iterations),
+            fmt(secs as f32, 1),
+            format!("{}", res.true_evals),
+        ];
+        for &budget in &common::BUDGETS {
+            let cfg = common::pick(&res.archive, &pipe.space, budget)?;
+            let layers =
+                common::deploy_layers(ctx, &cfg, &crate::quant::AwqClip::default(), true)?;
+            let refs: Vec<&_> = layers.iter().collect();
+            let (_wiki, c4) = common::ppl_only(ctx, &crate::eval::ModelHandle::Quant(&refs))?;
+            row.push(fmt(c4, 2));
+        }
+        table.row(row);
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table10.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Table 2 analog: harder few-shot tasks (chained recall ≙ MMLU, modular
+//! arithmetic ≙ GSM8K), AMQ vs BitStack across budgets.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::data::FEW_SHOT;
+use crate::eval::ModelHandle;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let archive = common::main_archive(ctx, pipe, fresh)?;
+    let mut table = Table::new(
+        "Table 2 — harder few-shot tasks (MMLU/GSM8K analog)",
+        &["avg_bits", "method", "chain(MMLU~)", "modadd(GSM8K~)"],
+    );
+
+    let fp_fs = common::few_shot(ctx, &ModelHandle::Fp)?;
+    table.row(vec![
+        "16".into(),
+        "FP16".into(),
+        fmt(fp_fs.accuracy(FEW_SHOT[0]), 2),
+        fmt(fp_fs.accuracy(FEW_SHOT[1]), 2),
+    ]);
+
+    let bs = common::bitstack_build(ctx, 10)?;
+    for &budget in &common::BUDGETS {
+        let bytes = common::budget_bytes(&pipe.space, budget);
+        let loaded = bs.allocate(bytes);
+        let recon = bs.reconstruct_all(&loaded);
+        let overrides = ctx.rt.upload_weight_overrides(&recon)?;
+        let bs_fs = common::few_shot(ctx, &ModelHandle::Override(&overrides))?;
+
+        let cfg = common::pick(&archive, &pipe.space, budget)?;
+        let layers = common::deploy_layers(
+            ctx, &cfg, &crate::quant::AwqClip::default(), true)?;
+        let refs: Vec<&_> = layers.iter().collect();
+        let amq_fs = common::few_shot(ctx, &ModelHandle::Quant(&refs))?;
+
+        for (name, fs) in [("BitStack", &bs_fs), ("AMQ", &amq_fs)] {
+            table.row(vec![
+                format!("{budget}"),
+                name.into(),
+                fmt(fs.accuracy(FEW_SHOT[0]), 2),
+                fmt(fs.accuracy(FEW_SHOT[1]), 2),
+            ]);
+        }
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table2.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Table 4 analog: wall-clock search and compression costs of AWQ,
+//! BitStack and AMQ on this testbed (single-core CPU; the paper reports
+//! A100 hours — the *structure* of the comparison is what reproduces:
+//! AMQ search is cheap thanks to the proxy + predictor, BitStack search is
+//! dominated by block evaluation/sorting, AWQ has no search knob).
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::coordinator::run_search;
+use crate::quant::{AwqClip, Gptq, Quantizer};
+use crate::report::{fmt, Table};
+use crate::Result;
+use std::time::Instant;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
+    let mut table = Table::new(
+        "Table 4 — search + compression wall-clock (this testbed, seconds)",
+        &["method", "search_s", "compress_s", "notes"],
+    );
+
+    // AWQ: no search; compression = quantize all layers at one width.
+    let awq = AwqClip::default();
+    let t0 = Instant::now();
+    for l in &ctx.assets.manifest.layers {
+        let w = ctx.assets.weights.linear(&l.name)?;
+        let stats = ctx.assets.hessians.for_layer(&l.name)?;
+        let _ = awq.quantize(&w, 3, ctx.assets.manifest.group_size, Some(stats));
+    }
+    let awq_compress = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "AWQ".into(),
+        "-".into(),
+        fmt(awq_compress as f32, 2),
+        "fixed precision only".into(),
+    ]);
+
+    // GPTQ likewise.
+    let gptq = Gptq::default();
+    let t0 = Instant::now();
+    for l in &ctx.assets.manifest.layers {
+        let w = ctx.assets.weights.linear(&l.name)?;
+        let stats = ctx.assets.hessians.for_layer(&l.name)?;
+        let _ = gptq.quantize(&w, 3, ctx.assets.manifest.group_size, Some(stats));
+    }
+    table.row(vec![
+        "GPTQ".into(),
+        "-".into(),
+        fmt(t0.elapsed().as_secs_f64() as f32, 2),
+        "fixed precision only".into(),
+    ]);
+
+    // BitStack: "search" = residual decomposition + block sorting over
+    // budgets; compression = reconstruction at one budget.
+    let t0 = Instant::now();
+    let bs = common::bitstack_build(ctx, 10)?;
+    for &b in &common::BUDGETS {
+        let _ = bs.allocate(common::budget_bytes(&pipe.space, b));
+    }
+    let bs_search = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let loaded = bs.allocate(common::budget_bytes(&pipe.space, 3.0));
+    let _ = bs.reconstruct_all(&loaded);
+    let bs_compress = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "BitStack".into(),
+        fmt(bs_search as f32, 2),
+        fmt(bs_compress as f32, 2),
+        "decompose + block sort".into(),
+    ]);
+
+    // AMQ: search = proxy build + sensitivity + NSGA-II loop (fresh, not
+    // cached, so the number is honest); compression = deploy-time AWQ of
+    // the chosen config.
+    let t0 = Instant::now();
+    let mut evaluator = pipe.evaluator(ctx);
+    let res = run_search(&pipe.space, &mut evaluator, &ctx.preset)?;
+    let amq_search = pipe.proxy_build_secs + t0.elapsed().as_secs_f64();
+    let cfg = common::pick(&res.archive, &pipe.space, 3.0)?;
+    let t0 = Instant::now();
+    let _ = common::deploy_layers(ctx, &cfg, &awq, true)?;
+    let amq_compress = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "AMQ".into(),
+        fmt(amq_search as f32, 2),
+        fmt(amq_compress as f32, 2),
+        format!(
+            "{} true evals, {} predicted",
+            res.true_evals, res.predictor_queries
+        ),
+    ]);
+
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table4.csv"))?;
+    Ok(())
+}

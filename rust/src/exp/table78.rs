@@ -1,0 +1,58 @@
+//! Tables 7 & 8 analog: robustness of the search to NSGA-II crossover and
+//! mutation probabilities (PPL of the frontier configs at each budget).
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+fn sweep(
+    ctx: &Ctx,
+    pipe: &Pipeline,
+    fresh: bool,
+    name: &str,
+    values: &[f32],
+    set: fn(&mut crate::coordinator::SearchParams, f32),
+) -> Result<Table> {
+    let mut table = Table::new(
+        &format!("{name} robustness"),
+        &["avg_bits", name, "wiki_ppl", "c4_ppl"],
+    );
+    for &v in values {
+        let mut params = ctx.preset.clone();
+        set(&mut params, v);
+        let tag = format!("search_{}_{}", name, (v * 100.0) as u32);
+        let archive = common::search_cached(ctx, pipe, &params, &tag, fresh)?;
+        for &budget in &common::BUDGETS {
+            let cfg = common::pick(&archive, &pipe.space, budget)?;
+            let layers = common::deploy_layers(
+                ctx, &cfg, &crate::quant::AwqClip::default(), true)?;
+            let refs: Vec<&_> = layers.iter().collect();
+            let (wiki, c4) =
+                common::ppl_only(ctx, &crate::eval::ModelHandle::Quant(&refs))?;
+            table.row(vec![
+                format!("{budget}"),
+                format!("{v}"),
+                fmt(wiki, 2),
+                fmt(c4, 2),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+pub fn run_table7(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let t = sweep(ctx, pipe, fresh, "crossover_prob", &[0.5, 0.7, 0.9],
+                  |p, v| p.nsga.crossover_prob = v)?;
+    t.print();
+    t.to_csv(&ctx.out_dir.join("table7.csv"))?;
+    Ok(())
+}
+
+pub fn run_table8(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let t = sweep(ctx, pipe, fresh, "mutation_prob", &[0.01, 0.1, 0.3],
+                  |p, v| p.nsga.mutation_prob = v)?;
+    t.print();
+    t.to_csv(&ctx.out_dir.join("table8.csv"))?;
+    Ok(())
+}

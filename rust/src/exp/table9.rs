@@ -1,0 +1,36 @@
+//! Table 9 analog: RBF vs MLP quality predictor — frontier PPL per budget.
+
+use super::common::{self, Pipeline};
+use super::Ctx;
+use crate::coordinator::predictor::PredictorKind;
+use crate::report::{fmt, Table};
+use crate::Result;
+
+pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
+    let mut table = Table::new(
+        "Table 9 — predictor ablation",
+        &["avg_bits", "predictor", "wiki_ppl", "c4_ppl"],
+    );
+    for (kind, name) in [(PredictorKind::Mlp, "MLP"), (PredictorKind::Rbf, "RBF")] {
+        let mut params = ctx.preset.clone();
+        params.predictor = kind;
+        let archive =
+            common::search_cached(ctx, pipe, &params, &format!("search_pred_{name}"), fresh)?;
+        for &budget in &common::BUDGETS {
+            let cfg = common::pick(&archive, &pipe.space, budget)?;
+            let layers =
+                common::deploy_layers(ctx, &cfg, &crate::quant::AwqClip::default(), true)?;
+            let refs: Vec<&_> = layers.iter().collect();
+            let (wiki, c4) = common::ppl_only(ctx, &crate::eval::ModelHandle::Quant(&refs))?;
+            table.row(vec![
+                format!("{budget}"),
+                name.into(),
+                fmt(wiki, 2),
+                fmt(c4, 2),
+            ]);
+        }
+    }
+    table.print();
+    table.to_csv(&ctx.out_dir.join("table9.csv"))?;
+    Ok(())
+}

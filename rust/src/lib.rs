@@ -1,0 +1,61 @@
+//! # AMQ — Automated Mixed-Precision Weight-Only Quantization
+//!
+//! Reproduction of *"AMQ: Enabling AutoML for Mixed-precision Weight-Only
+//! Quantization of Large Language Models"* (EMNLP 2025) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: search-space
+//!   pruning, quantization proxy, RBF quality predictor and the NSGA-II
+//!   iterative search-and-update loop ([`coordinator`]), plus every substrate
+//!   it needs: quantizers ([`quant`]), a PJRT runtime ([`runtime`]),
+//!   evaluation ([`eval`]), an inference cost model ([`costmodel`]) and the
+//!   experiment harnesses ([`exp`]).
+//! * **L2** — the subject model's forward/scoring graphs, authored in JAX and
+//!   AOT-lowered to HLO text at build time (`python/compile/`).
+//! * **L1** — Pallas kernels (grouped dequant-matmul, JSD) inside those
+//!   graphs.
+//!
+//! Python never runs at search/serve time: `make artifacts` produces
+//! `artifacts/` once and the `repro` binary is self-contained afterwards.
+
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (eyre for rich error context).
+pub type Result<T> = eyre::Result<T>;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$AMQ_ARTIFACTS`, `./artifacts`, or
+/// walking up from the current dir (so examples/tests work from anywhere).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("AMQ_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}
+
+/// True when `make artifacts` has been run (integration tests / benches skip
+/// gracefully otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}

@@ -1,0 +1,216 @@
+//! `repro` — the AMQ reproduction CLI.
+//!
+//! Usage:
+//!   repro list                       show all experiments
+//!   repro <exp> [flags]             run one experiment (fig1, table3, ...)
+//!   repro all [flags]               run everything
+//!   repro search [flags]            run the main AMQ search and print the
+//!                                   Pareto frontier
+//!   repro check                     validate artifacts + runtime golden
+//!
+//! Flags:
+//!   --preset smoke|repro|paper      search budget preset (default: repro)
+//!   --fresh                         ignore cached search archives
+//!   --seed N                        search seed
+//!   --out DIR                       results directory (default: results)
+//!   --artifacts DIR                 artifacts directory
+
+use amq::coordinator::SearchParams;
+use amq::exp::{self, Ctx};
+use amq::Result;
+
+struct Args {
+    cmd: String,
+    preset: String,
+    fresh: bool,
+    seed: Option<u64>,
+    out: String,
+    artifacts: Option<String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        cmd: String::new(),
+        preset: "repro".into(),
+        fresh: false,
+        seed: None,
+        out: "results".into(),
+        artifacts: None,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--preset" => {
+                i += 1;
+                args.preset = argv[i].clone();
+            }
+            "--fresh" => args.fresh = true,
+            "--seed" => {
+                i += 1;
+                args.seed = Some(argv[i].parse().expect("--seed N"));
+            }
+            "--out" => {
+                i += 1;
+                args.out = argv[i].clone();
+            }
+            "--artifacts" => {
+                i += 1;
+                args.artifacts = Some(argv[i].clone());
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("unknown flag {flag}");
+                std::process::exit(2);
+            }
+            cmd => {
+                if args.cmd.is_empty() {
+                    args.cmd = cmd.to_string();
+                } else {
+                    eprintln!("unexpected argument {cmd}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        i += 1;
+    }
+    args
+}
+
+fn preset(name: &str, seed: Option<u64>) -> SearchParams {
+    let mut p = match name {
+        "smoke" => SearchParams::smoke(),
+        "repro" => SearchParams::default(),
+        "paper" => SearchParams::paper(),
+        other => {
+            eprintln!("unknown preset {other} (smoke|repro|paper)");
+            std::process::exit(2);
+        }
+    };
+    if let Some(s) = seed {
+        p.seed = s;
+    }
+    p
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    if args.cmd.is_empty() || args.cmd == "help" {
+        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR]");
+        println!("experiments:");
+        for (name, desc) in exp::EXPERIMENTS {
+            println!("  {name:8} {desc}");
+        }
+        return Ok(());
+    }
+    if args.cmd == "list" {
+        for (name, desc) in exp::EXPERIMENTS {
+            println!("{name:8} {desc}");
+        }
+        return Ok(());
+    }
+
+    let artifacts = args
+        .artifacts
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(amq::artifacts_dir);
+    eyre::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts not found at {} — run `make artifacts`",
+        artifacts.display()
+    );
+
+    let params = preset(&args.preset, args.seed);
+    let t0 = std::time::Instant::now();
+    let ctx = Ctx::load(&artifacts, std::path::Path::new(&args.out), params)?;
+    eprintln!("[repro] runtime + artifacts loaded in {:.1}s", t0.elapsed().as_secs_f64());
+
+    if args.cmd == "check" {
+        println!("artifacts: {}", artifacts.display());
+        println!("model: {} layers, {} searchable linears, vocab {}",
+                 ctx.assets.manifest.model.n_layers,
+                 ctx.assets.manifest.layers.len(),
+                 ctx.assets.manifest.model.vocab_size);
+        let space = amq::coordinator::SearchSpace::full(&ctx.assets.manifest);
+        println!("search space: 3^{} ≈ 10^{:.1} configurations",
+                 space.n_layers(), space.log10_size());
+        let q = exp::common::quality(&ctx, &amq::eval::ModelHandle::Fp)?;
+        println!("fp16: wiki_ppl {:.3}  c4_ppl {:.3}  zero-shot avg {:.1}%",
+                 q.wiki_ppl, q.c4_ppl,
+                 q.zero_shot.macro_avg(&amq::data::ZERO_SHOT));
+        println!("check OK");
+        return Ok(());
+    }
+
+    let t0 = std::time::Instant::now();
+    let pipe = exp::common::Pipeline::build(&ctx)?;
+    eprintln!(
+        "[repro] pipeline: proxy {:.1}s, {} outliers pruned, space 10^{:.1} -> 10^{:.1}",
+        pipe.proxy_build_secs,
+        pipe.prune_report.outliers.len(),
+        pipe.full_space.log10_size(),
+        pipe.space.log10_size()
+    );
+    let _ = t0;
+
+    let fresh = args.fresh;
+    let run_one = |name: &str| -> Result<()> {
+        eprintln!("\n===== {name} =====");
+        let t = std::time::Instant::now();
+        match name {
+            "fig1" | "fig7" => exp::fig1::run(&ctx, &pipe, fresh)?,
+            "fig2" => exp::fig2::run(&ctx, &pipe)?,
+            "fig5" => exp::speed::run_fig5(&ctx, &pipe)?,
+            "fig6" => exp::fig6::run(&ctx, &pipe, fresh)?,
+            "fig8" => exp::speed::run_fig8(&ctx, &pipe, fresh)?,
+            "fig9" | "fig10" => exp::fig9::run(&ctx, &pipe, fresh)?,
+            "fig11" => exp::fig11::run(&ctx, &pipe)?,
+            "fig12" => exp::fig12::run(&ctx, &pipe, fresh)?,
+            "table1" => exp::table1::run(&ctx, &pipe, fresh)?,
+            "table2" => exp::table2::run(&ctx, &pipe, fresh)?,
+            "table3" => exp::table3::run(&ctx, &pipe, fresh)?,
+            "table4" => exp::table4::run(&ctx, &pipe)?,
+            "table5" => exp::pruning_ablation::run(&ctx, &pipe, fresh)?,
+            "table7" => exp::table78::run_table7(&ctx, &pipe, fresh)?,
+            "table8" => exp::table78::run_table8(&ctx, &pipe, fresh)?,
+            "table9" => exp::table9::run(&ctx, &pipe, fresh)?,
+            "table10" => exp::table10::run(&ctx, &pipe, fresh)?,
+            "table11" | "table12" => exp::table11::run(&ctx, &pipe, fresh)?,
+            other => eyre::bail!("unknown experiment {other} (try `repro list`)"),
+        }
+        eprintln!("[{name}] done in {:.1}s", t.elapsed().as_secs_f64());
+        Ok(())
+    };
+
+    match args.cmd.as_str() {
+        "search" => {
+            let archive = exp::common::main_archive(&ctx, &pipe, fresh)?;
+            let front = archive.pareto_front();
+            println!("Pareto frontier ({} of {} samples):", front.len(), archive.len());
+            let mut rows: Vec<_> = front.iter().map(|&i| &archive.samples[i]).collect();
+            rows.sort_by(|a, b| a.avg_bits.partial_cmp(&b.avg_bits).unwrap());
+            for s in rows {
+                println!("  bits {:.3}  jsd {:.5}", s.avg_bits, s.jsd);
+            }
+        }
+        "all" => {
+            let order = [
+                "fig2", "table4", "table1", "table2", "table3", "fig1", "fig5",
+                "fig6", "fig8", "fig9", "fig12", "table9", "table11", "table7",
+                "table8", "table10", "table5", "fig11",
+            ];
+            for name in order {
+                run_one(name)?;
+            }
+        }
+        name => run_one(name)?,
+    }
+    let stats = ctx.rt.stats();
+    eprintln!(
+        "[runtime] fp {} calls {:.1}s | quant {} calls {:.1}s | scorer {} calls {:.1}s",
+        stats.fp_calls, stats.fp_time.as_secs_f64(),
+        stats.quant_calls, stats.quant_time.as_secs_f64(),
+        stats.scores_calls, stats.scores_time.as_secs_f64(),
+    );
+    Ok(())
+}

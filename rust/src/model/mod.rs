@@ -1,0 +1,147 @@
+//! Subject-model state on the rust side: named fp weights, calibration
+//! statistics, and the per-layer inventory the search runs over.
+
+use crate::data::{Bundle, Manifest};
+use crate::tensor::Mat;
+use crate::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// All fp32 parameters of the subject model, keyed by manifest names.
+pub struct WeightStore {
+    tensors: HashMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let bundle = Bundle::read(path)?;
+        let mut tensors = HashMap::new();
+        for name in bundle.names().map(str::to_string).collect::<Vec<_>>() {
+            let t = bundle.tensor(&name)?;
+            tensors.insert(name, (t.shape.clone(), t.as_f32()?.to_vec()));
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        self.tensors
+            .get(name)
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .ok_or_else(|| eyre::anyhow!("weight `{name}` missing"))
+    }
+
+    /// A 2-D linear weight as a [out, in] matrix.
+    pub fn linear(&self, name: &str) -> Result<Mat> {
+        let (shape, data) = self.get(name)?;
+        eyre::ensure!(shape.len() == 2, "{name} is not 2-D: {shape:?}");
+        Ok(Mat::from_vec(shape[0], shape[1], data.to_vec()))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+}
+
+/// Calibration statistics for one activation slot: H = E[x x^T], E[|x|].
+pub struct CalibStats {
+    pub hessian: Mat,      // [K, K]
+    pub mean_abs: Vec<f32>, // [K]
+}
+
+/// Per-layer calibration stats, resolved through the Q/K/V- and
+/// Gate/Up-sharing slot map (see python/compile/hessian.py).
+pub struct HessianStore {
+    slots: HashMap<String, CalibStats>,
+}
+
+/// Activation slot feeding a linear kind.
+pub fn act_slot(kind: &str) -> &'static str {
+    match kind {
+        "q" | "k" | "v" => "attn_in",
+        "o" => "o_in",
+        "gate" | "up" => "mlp_in",
+        "down" => "down_in",
+        other => panic!("unknown linear kind {other}"),
+    }
+}
+
+impl HessianStore {
+    pub fn load(path: &Path) -> Result<HessianStore> {
+        let bundle = Bundle::read(path)?;
+        let mut slots = HashMap::new();
+        let names: Vec<String> = bundle
+            .names()
+            .filter(|n| n.ends_with(".hessian"))
+            .map(str::to_string)
+            .collect();
+        for hname in names {
+            let slot = hname.trim_end_matches(".hessian").to_string();
+            let h = bundle.tensor(&hname)?;
+            eyre::ensure!(h.shape.len() == 2 && h.shape[0] == h.shape[1]);
+            let hess = Mat::from_vec(h.shape[0], h.shape[1], h.as_f32()?.to_vec());
+            let ma = bundle.tensor(&format!("{slot}.mean_abs"))?;
+            slots.insert(
+                slot,
+                CalibStats { hessian: hess, mean_abs: ma.as_f32()?.to_vec() },
+            );
+        }
+        Ok(HessianStore { slots })
+    }
+
+    /// Stats for a linear layer, e.g. "blk1.gate" -> slot "blk1.mlp_in".
+    pub fn for_layer(&self, layer_name: &str) -> Result<&CalibStats> {
+        let mut parts = layer_name.split('.');
+        let blk = parts.next().unwrap_or("");
+        let kind = parts.next().unwrap_or("");
+        let slot = format!("{blk}.{}", act_slot(kind));
+        self.slots
+            .get(&slot)
+            .ok_or_else(|| eyre::anyhow!("no calib stats for {layer_name} ({slot})"))
+    }
+}
+
+/// Convenience: load everything the coordinator needs from `artifacts/`.
+pub struct ModelAssets {
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    pub hessians: HessianStore,
+}
+
+impl ModelAssets {
+    pub fn load(artifacts_dir: &Path) -> Result<ModelAssets> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = WeightStore::load(&manifest.file("weights")?)?;
+        let hessians = HessianStore::load(&manifest.file("hessians")?)?;
+        // sanity: every searchable layer has a weight + calib stats
+        for l in &manifest.layers {
+            let w = weights.linear(&l.name)?;
+            eyre::ensure!(
+                w.rows == l.out_features && w.cols == l.in_features,
+                "weight shape mismatch for {}", l.name
+            );
+            let st = hessians.for_layer(&l.name)?;
+            eyre::ensure!(st.hessian.rows == l.in_features);
+        }
+        Ok(ModelAssets { manifest, weights, hessians })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_mapping() {
+        assert_eq!(act_slot("q"), "attn_in");
+        assert_eq!(act_slot("v"), "attn_in");
+        assert_eq!(act_slot("o"), "o_in");
+        assert_eq!(act_slot("up"), "mlp_in");
+        assert_eq!(act_slot("down"), "down_in");
+    }
+
+    #[test]
+    #[should_panic]
+    fn slot_mapping_rejects_unknown() {
+        act_slot("lm_head");
+    }
+}

@@ -1,0 +1,290 @@
+//! AWQ-style quantization with asymmetric clipping (Lin et al. 2024 +
+//! Gong et al. 2024) — the paper's deploy-time method for AMQ configs.
+//!
+//! Two activation-aware ingredients on top of grouped RTN:
+//!  1. *channel scaling*: input channel j is scaled by s_j = E|x_j|^alpha
+//!     before quantization (and the inverse folded into dequant via the
+//!     group scale), protecting salient channels;
+//!  2. *asymmetric clip search*: per group, grid-search independent shrink
+//!     factors for the min and max edge of the range, scoring candidates by
+//!     the Hessian-weighted output error tr(ΔW H ΔW^T).
+//!
+//! We fold the channel scale exactly into W (scale then unscale) rather than
+//! into neighboring layers, which keeps the representation layer-local — the
+//! property the quantization proxy relies on.
+
+use super::{affine_params, group_minmax, QuantizedLinear, Quantizer};
+use crate::model::CalibStats;
+use crate::tensor::Mat;
+
+pub struct AwqClip {
+    pub alpha_grid: Vec<f32>,
+    pub clip_grid: Vec<f32>,
+}
+
+impl Default for AwqClip {
+    fn default() -> Self {
+        AwqClip {
+            alpha_grid: vec![0.0, 0.25, 0.5],
+            clip_grid: vec![1.0, 0.9, 0.8, 0.7, 0.6],
+        }
+    }
+}
+
+impl Quantizer for AwqClip {
+    fn name(&self) -> &'static str {
+        "awq_clip"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        bits: u8,
+        group_size: usize,
+        stats: Option<&CalibStats>,
+    ) -> QuantizedLinear {
+        match stats {
+            Some(st) => self.quantize_with_stats(w, bits, group_size, st),
+            None => super::rtn::quantize_rtn(w, bits, group_size, 1.0),
+        }
+    }
+}
+
+impl AwqClip {
+    fn quantize_with_stats(
+        &self,
+        w: &Mat,
+        bits: u8,
+        group_size: usize,
+        st: &CalibStats,
+    ) -> QuantizedLinear {
+        let k = w.cols;
+        let mut best: Option<(f64, QuantizedLinear)> = None;
+        for &alpha in &self.alpha_grid {
+            // channel scale s_j = (E|x_j|)^alpha, normalized to mean 1
+            let mut s = vec![1.0f32; k];
+            if alpha > 0.0 {
+                let mut mean = 0.0f32;
+                for j in 0..k {
+                    s[j] = st.mean_abs[j].max(1e-8).powf(alpha);
+                    mean += s[j];
+                }
+                mean /= k as f32;
+                for v in &mut s {
+                    *v /= mean;
+                }
+            }
+            // W' = W * diag(s): quantize W', then fold 1/s back via dequant
+            // comparison (we keep codes/scale/zero of W' but divide scale
+            // per column is impossible in grouped form, so instead we score
+            // the *effective* W reconstruction: dequant(W')_oj / s_j).
+            let q = self.clip_quantize(w, &s, bits, group_size, st);
+            let dq = dequant_unscaled(&q, &s);
+            let err = super::hessian_error(w, &dq, &st.hessian);
+            if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+                best = Some((err, q));
+            }
+        }
+        let (_, mut q) = best.unwrap();
+        // Bake the channel scale back into scale-per-group approximately is
+        // impossible when s varies within a group; instead we store codes of
+        // the *scaled* weights and fold s into a corrected dequant by
+        // re-fitting scale/zero per group against the true W (least-squares
+        // affine refit keeps the grouped representation exact-form).
+        refit_affine(&mut q, w);
+        q
+    }
+
+    /// Grouped RTN of diag-scaled weights with per-group asymmetric clip
+    /// search under the Hessian metric (diagonal surrogate per group).
+    fn clip_quantize(
+        &self,
+        w: &Mat,
+        chan_scale: &[f32],
+        bits: u8,
+        group_size: usize,
+        st: &CalibStats,
+    ) -> QuantizedLinear {
+        let (n, k) = (w.rows, w.cols);
+        let g = k / group_size;
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let mut codes = vec![0u8; n * k];
+        let mut scale = vec![0f32; n * g];
+        let mut zero = vec![0f32; n * g];
+        // diagonal Hessian weights for the group-local clip score
+        let hdiag: Vec<f32> = (0..k).map(|i| st.hessian[(i, i)].max(0.0)).collect();
+
+        let mut ws = vec![0.0f32; group_size];
+        for o in 0..n {
+            for gi in 0..g {
+                let cols = gi * group_size..(gi + 1) * group_size;
+                for (j, c) in cols.clone().enumerate() {
+                    ws[j] = w[(o, c)] * chan_scale[c];
+                }
+                let (lo0, hi0) = group_minmax(&ws);
+                let mut best = (f64::INFINITY, 1.0f32, 1.0f32);
+                for &cl in &self.clip_grid {
+                    for &ch in &self.clip_grid {
+                        let lo = lo0 * cl;
+                        let hi = hi0 * ch;
+                        if hi <= lo {
+                            continue;
+                        }
+                        let (s, z) = affine_params(lo, hi, bits);
+                        let zr = z.round();
+                        let mut err = 0.0f64;
+                        for (j, c) in cols.clone().enumerate() {
+                            let q = (ws[j] / s + zr).round().clamp(0.0, qmax);
+                            let d = ws[j] - (q - zr) * s;
+                            let dw = d / chan_scale[c];
+                            err += (dw * dw * hdiag[c]) as f64;
+                        }
+                        if err < best.0 {
+                            best = (err, cl, ch);
+                        }
+                    }
+                }
+                let (s, z) = affine_params(lo0 * best.1, hi0 * best.2, bits);
+                let zr = z.round();
+                scale[o * g + gi] = s;
+                zero[o * g + gi] = zr;
+                for (j, c) in cols.clone().enumerate() {
+                    let q = (ws[j] / s + zr).round().clamp(0.0, qmax);
+                    codes[o * k + c] = q as u8;
+                }
+            }
+        }
+        QuantizedLinear {
+            out_features: n,
+            in_features: k,
+            group_size,
+            bits,
+            codes,
+            scale,
+            zero,
+        }
+    }
+}
+
+/// Reconstruction of channel-scaled codes back in original weight space.
+fn dequant_unscaled(q: &QuantizedLinear, chan_scale: &[f32]) -> Mat {
+    let mut dq = q.dequant();
+    for o in 0..dq.rows {
+        let row = dq.row_mut(o);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v /= chan_scale[j];
+        }
+    }
+    dq
+}
+
+/// Least-squares refit of (scale, zero) per group against the target W,
+/// keeping codes fixed: min_{s,b} Σ (w - (s*c + b))^2 with zero = -b/s.
+fn refit_affine(q: &mut QuantizedLinear, w: &Mat) {
+    let (n, k, gs) = (q.out_features, q.in_features, q.group_size);
+    let g = k / gs;
+    for o in 0..n {
+        for gi in 0..g {
+            let mut sc = 0.0f64;
+            let mut sw = 0.0f64;
+            let mut scc = 0.0f64;
+            let mut scw = 0.0f64;
+            for j in 0..gs {
+                let idx = o * k + gi * gs + j;
+                let c = q.codes[idx] as f64;
+                let wv = w.data[idx] as f64;
+                sc += c;
+                sw += wv;
+                scc += c * c;
+                scw += c * wv;
+            }
+            let m = gs as f64;
+            let denom = m * scc - sc * sc;
+            if denom.abs() < 1e-12 {
+                continue;
+            }
+            let s = (m * scw - sc * sw) / denom;
+            let b = (sw - s * sc) / m;
+            if s.abs() < 1e-12 {
+                continue;
+            }
+            q.scale[o * g + gi] = s as f32;
+            q.zero[o * g + gi] = (-b / s) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::CalibStats;
+    use crate::quant::{hessian_error, Rtn};
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut w = Mat::zeros(n, k);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let u = (state >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+            *v = if state & 15 == 0 { u * 1.0 } else { u * 0.1 }; // outliers
+        }
+        w
+    }
+
+    fn stats(k: usize, seed: u64) -> CalibStats {
+        let x = rand_w(4 * k, k, seed);
+        let mut h = Mat::zeros(k, k);
+        let mut ma = vec![0.0f32; k];
+        for r in 0..x.rows {
+            let row = x.row(r);
+            for i in 0..k {
+                ma[i] += row[i].abs();
+                for j in 0..k {
+                    h[(i, j)] += row[i] * row[j];
+                }
+            }
+        }
+        for v in &mut ma {
+            *v /= x.rows as f32;
+        }
+        CalibStats { hessian: h, mean_abs: ma }
+    }
+
+    #[test]
+    fn awq_improves_over_rtn_at_low_bits() {
+        let k = 32;
+        let w = rand_w(8, k, 21);
+        let st = stats(k, 22);
+        for bits in [2u8, 3] {
+            let e_rtn = hessian_error(
+                &w, &Rtn.quantize(&w, bits, 16, None).dequant(), &st.hessian);
+            let e_awq = hessian_error(
+                &w,
+                &AwqClip::default().quantize(&w, bits, 16, Some(&st)).dequant(),
+                &st.hessian,
+            );
+            assert!(e_awq <= e_rtn * 1.001, "bits={bits}: {e_awq} vs {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn refit_affine_never_hurts_l2() {
+        let w = rand_w(4, 32, 23);
+        let mut q = Rtn.quantize(&w, 2, 16, None);
+        let before = crate::quant::frob_error(&w, &q);
+        refit_affine(&mut q, &w);
+        let after = crate::quant::frob_error(&w, &q);
+        assert!(after <= before + 1e-5, "{after} vs {before}");
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let k = 32;
+        let w = rand_w(4, k, 24);
+        let st = stats(k, 25);
+        let q = AwqClip::default().quantize(&w, 2, 16, Some(&st));
+        assert!(q.codes.iter().all(|&c| c <= 3));
+    }
+}

@@ -1,0 +1,235 @@
+//! BitStack (Wang et al., 2024) — any-size compression baseline.
+//!
+//! Each layer's weight is decomposed into a stack of *residual blocks*:
+//! block i stores `sign(R_i)` (1 bit/weight) plus a rank-1 magnitude factor
+//! `u σ v^T` from a power-iteration SVD of `|R_i|` (fp16 vectors), so
+//!
+//!   W ≈ Σ_i  sign(R_i) ⊙ (u_i σ_i v_i^T),   R_{i+1} = R_i - W_i.
+//!
+//! Any memory budget is met by loading a prefix of each layer's stack; the
+//! global allocator spends the budget greedily on the block with the best
+//! marginal error reduction per byte (the paper's "block sorting").  At
+//! inference every loaded block is re-materialized, which is what makes
+//! BitStack slower than kernel-based quantization (Fig. 8).
+
+use crate::tensor::{power_iteration_rank1, Mat};
+
+/// One residual block.
+#[derive(Clone)]
+pub struct Block {
+    pub signs: Vec<u8>,   // bit-packed sign(R) (1 = negative)
+    pub u: Vec<f32>,      // [n]
+    pub sigma: f32,
+    pub v: Vec<f32>,      // [k]
+    pub err_after: f32,   // ||R_{i+1}||_F after applying this block
+}
+
+/// The per-layer block stack.
+pub struct BitStackLayer {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub blocks: Vec<Block>,
+    pub err_before: f32, // ||W||_F (error with 0 blocks loaded)
+}
+
+impl BitStackLayer {
+    /// Decompose `w` into up to `max_blocks` residual blocks.
+    pub fn decompose(name: &str, w: &Mat, max_blocks: usize) -> BitStackLayer {
+        let (n, k) = (w.rows, w.cols);
+        let mut residual = w.clone();
+        let mut blocks = Vec::with_capacity(max_blocks);
+        let err_before = residual.frob_norm();
+        for _ in 0..max_blocks {
+            // |R| and sign(R)
+            let mut absr = Mat::zeros(n, k);
+            let mut signs = vec![0u8; (n * k).div_ceil(8)];
+            for idx in 0..n * k {
+                let v = residual.data[idx];
+                absr.data[idx] = v.abs();
+                if v < 0.0 {
+                    signs[idx / 8] |= 1 << (idx % 8);
+                }
+            }
+            let (u, sigma, v) = power_iteration_rank1(&absr, 12);
+            // apply block, update residual
+            for i in 0..n {
+                let ui = sigma * u[i];
+                let rrow = residual.row_mut(i);
+                for j in 0..k {
+                    let idx = i * k + j;
+                    let sgn = if signs[idx / 8] >> (idx % 8) & 1 == 1 { -1.0 } else { 1.0 };
+                    rrow[j] -= sgn * ui * v[j];
+                }
+            }
+            let err_after = residual.frob_norm();
+            blocks.push(Block { signs, u, sigma, v, err_after });
+        }
+        BitStackLayer { name: name.to_string(), rows: n, cols: k, blocks, err_before }
+    }
+
+    /// Bytes per block: packed signs + fp16 u, v, sigma.
+    pub fn block_bytes(&self) -> usize {
+        (self.rows * self.cols).div_ceil(8) + 2 * (self.rows + self.cols) + 2
+    }
+
+    /// Reconstruct the weight from the first `n_blocks` blocks.
+    pub fn reconstruct(&self, n_blocks: usize) -> Mat {
+        let (n, k) = (self.rows, self.cols);
+        let mut w = Mat::zeros(n, k);
+        for b in self.blocks.iter().take(n_blocks) {
+            for i in 0..n {
+                let ui = b.sigma * b.u[i];
+                let wrow = w.row_mut(i);
+                for j in 0..k {
+                    let idx = i * k + j;
+                    let sgn = if b.signs[idx / 8] >> (idx % 8) & 1 == 1 { -1.0 } else { 1.0 };
+                    wrow[j] += sgn * ui * b.v[j];
+                }
+            }
+        }
+        w
+    }
+
+    /// Residual error with `n_blocks` loaded.
+    pub fn error(&self, n_blocks: usize) -> f32 {
+        if n_blocks == 0 {
+            self.err_before
+        } else {
+            self.blocks[n_blocks.min(self.blocks.len()) - 1].err_after
+        }
+    }
+}
+
+/// BitStack over a whole model: stacks for every searchable layer.
+pub struct BitStack {
+    pub layers: Vec<BitStackLayer>,
+}
+
+impl BitStack {
+    pub fn decompose(weights: &[(String, Mat)], max_blocks: usize) -> BitStack {
+        let layers = weights
+            .iter()
+            .map(|(name, w)| BitStackLayer::decompose(name, w, max_blocks))
+            .collect();
+        BitStack { layers }
+    }
+
+    /// Greedy budget allocation: returns blocks-per-layer for a total byte
+    /// budget (the paper's sorted block loading).
+    pub fn allocate(&self, budget_bytes: usize) -> Vec<usize> {
+        let mut loaded = vec![0usize; self.layers.len()];
+        let mut spent = 0usize;
+        loop {
+            // best marginal (error drop)/(bytes) among next blocks
+            let mut best: Option<(f64, usize)> = None;
+            for (li, layer) in self.layers.iter().enumerate() {
+                let i = loaded[li];
+                if i >= layer.blocks.len() {
+                    continue;
+                }
+                let bytes = layer.block_bytes();
+                if spent + bytes > budget_bytes {
+                    continue;
+                }
+                let drop = (layer.error(i) - layer.error(i + 1)) as f64;
+                let gain = drop / bytes as f64;
+                if best.map(|(g, _)| gain > g).unwrap_or(true) {
+                    best = Some((gain, li));
+                }
+            }
+            match best {
+                Some((_, li)) => {
+                    spent += self.layers[li].block_bytes();
+                    loaded[li] += 1;
+                }
+                None => break,
+            }
+        }
+        loaded
+    }
+
+    /// Total bytes for an allocation.
+    pub fn bytes(&self, loaded: &[usize]) -> usize {
+        self.layers
+            .iter()
+            .zip(loaded)
+            .map(|(l, &n)| n * l.block_bytes())
+            .sum()
+    }
+
+    /// Reconstruct all layers under an allocation.
+    pub fn reconstruct_all(&self, loaded: &[usize]) -> Vec<(String, Mat)> {
+        self.layers
+            .iter()
+            .zip(loaded)
+            .map(|(l, &n)| (l.name.clone(), l.reconstruct(n)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut w = Mat::zeros(n, k);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = ((state >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.2;
+        }
+        w
+    }
+
+    #[test]
+    fn residual_error_monotone() {
+        let w = rand_w(16, 24, 31);
+        let layer = BitStackLayer::decompose("t", &w, 6);
+        for i in 0..6 {
+            assert!(
+                layer.error(i + 1) <= layer.error(i) + 1e-6,
+                "block {i}: {} -> {}", layer.error(i), layer.error(i + 1)
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruct_matches_residual_error() {
+        let w = rand_w(8, 12, 32);
+        let layer = BitStackLayer::decompose("t", &w, 4);
+        let rec = layer.reconstruct(4);
+        let mut err = 0.0f32;
+        for (a, b) in w.data.iter().zip(&rec.data) {
+            err += (a - b) * (a - b);
+        }
+        assert!((err.sqrt() - layer.error(4)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn allocator_respects_budget_and_spends_it() {
+        let ws = vec![
+            ("a".to_string(), rand_w(16, 16, 33)),
+            ("b".to_string(), rand_w(16, 32, 34)),
+        ];
+        let bs = BitStack::decompose(&ws, 8);
+        let per_block = bs.layers[0].block_bytes();
+        let budget = per_block * 6;
+        let loaded = bs.allocate(budget);
+        let bytes = bs.bytes(&loaded);
+        assert!(bytes <= budget);
+        // should load at least a few blocks
+        assert!(loaded.iter().sum::<usize>() >= 3);
+    }
+
+    #[test]
+    fn more_budget_less_error() {
+        let ws = vec![("a".to_string(), rand_w(16, 16, 35))];
+        let bs = BitStack::decompose(&ws, 8);
+        let small = bs.allocate(bs.layers[0].block_bytes() * 2);
+        let large = bs.allocate(bs.layers[0].block_bytes() * 6);
+        assert!(bs.layers[0].error(large[0]) <= bs.layers[0].error(small[0]));
+    }
+}

@@ -1,0 +1,193 @@
+//! HQQ — Half-Quadratic Quantization (Badri & Shaji, 2023): AMQ's proxy.
+//!
+//! Activation-independent: per group, the scale is fixed from the min/max
+//! range and the *zero point* is optimized against a sparsity-promoting
+//! lp-norm (p < 1) of the reconstruction error via half-quadratic splitting:
+//!
+//!   min_z  phi(W - s*(round(W/s + z) - z))        phi = |.|_p^p
+//!
+//! alternating (e-step) a generalized soft-threshold on the residual and
+//! (z-step) a closed-form group mean.  This is what makes the quantization
+//! proxy cheap: each layer is quantized once per bit-width, with no
+//! activation data and no inter-layer dependencies.
+
+use super::{affine_params, group_minmax, QuantizedLinear, Quantizer};
+use crate::model::CalibStats;
+use crate::tensor::Mat;
+
+pub struct Hqq {
+    pub iters: usize,
+    pub p: f32,
+    pub beta0: f32,
+    pub kappa: f32,
+}
+
+impl Default for Hqq {
+    fn default() -> Self {
+        Hqq { iters: 20, p: 0.7, beta0: 10.0, kappa: 1.01 }
+    }
+}
+
+/// Generalized soft-threshold — prox of (1/beta)*|x|_p^p for p < 1
+/// (the HQQ paper's shrinkage operator):
+/// `max(0, |x| - (p/beta)|x|^{p-1}) * sign(x)`.
+#[inline]
+fn shrink(x: f32, beta: f32, p: f32) -> f32 {
+    let ax = x.abs();
+    if ax < 1e-12 {
+        return 0.0;
+    }
+    let mag = (ax - (p / beta) * ax.powf(p - 1.0)).max(0.0);
+    mag * x.signum()
+}
+
+impl Quantizer for Hqq {
+    fn name(&self) -> &'static str {
+        "hqq"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        bits: u8,
+        group_size: usize,
+        _stats: Option<&CalibStats>,
+    ) -> QuantizedLinear {
+        let (n, k) = (w.rows, w.cols);
+        assert_eq!(k % group_size, 0);
+        let g = k / group_size;
+        let qmax = ((1u32 << bits) - 1) as f32;
+        let mut codes = vec![0u8; n * k];
+        let mut scale = vec![0f32; n * g];
+        let mut zero = vec![0f32; n * g];
+
+        let mut wq = vec![0f32; group_size];
+        let mut e = vec![0f32; group_size];
+        for o in 0..n {
+            for gi in 0..g {
+                let grp = &w.row(o)[gi * group_size..(gi + 1) * group_size];
+                let (lo, hi) = group_minmax(grp);
+                let (s, z0) = affine_params(lo, hi, bits);
+                // start from the *rounded* zero (the RTN grid): at very low
+                // bits an integer zero-point keeps an exact grid point at 0,
+                // which dominates the lp objective for near-zero weights;
+                // the half-quadratic iterations then refine from there.
+                let mut z = z0.round();
+                let mut beta = self.beta0;
+                for _ in 0..self.iters {
+                    // quantize with current zero
+                    for (j, &v) in grp.iter().enumerate() {
+                        wq[j] = (v / s + z).round().clamp(0.0, qmax);
+                    }
+                    // e-step: residual shrinkage
+                    for (j, &v) in grp.iter().enumerate() {
+                        let r = v - s * (wq[j] - z);
+                        e[j] = shrink(r, beta, self.p);
+                    }
+                    // z-step: closed form group mean
+                    let mut acc = 0.0f32;
+                    for (j, &v) in grp.iter().enumerate() {
+                        acc += wq[j] - (v - e[j]) / s;
+                    }
+                    z = acc / group_size as f32;
+                    beta *= self.kappa;
+                }
+                scale[o * g + gi] = s;
+                zero[o * g + gi] = z;
+                for (j, &v) in grp.iter().enumerate() {
+                    let q = (v / s + z).round().clamp(0.0, qmax);
+                    codes[o * k + gi * group_size + j] = q as u8;
+                }
+            }
+        }
+        QuantizedLinear {
+            out_features: n,
+            in_features: k,
+            group_size,
+            bits,
+            codes,
+            scale,
+            zero,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{frob_error, Rtn};
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut w = Mat::zeros(n, k);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // heavy-ish tail: mix two scales so the lp objective matters
+            let u = (state >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+            *v = if state & 7 == 0 { u * 0.8 } else { u * 0.1 };
+        }
+        w
+    }
+
+    #[test]
+    fn shrink_is_contraction() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let y = shrink(x, 10.0, 0.7);
+            assert!(y.abs() <= x.abs() + 1e-7);
+            assert!(y * x >= 0.0, "sign preserved");
+        }
+    }
+
+    /// lp^p reconstruction error (HQQ's actual objective).
+    fn lp_error(w: &Mat, q: &crate::quant::QuantizedLinear, p: f32) -> f64 {
+        let dq = q.dequant();
+        w.data
+            .iter()
+            .zip(&dq.data)
+            .map(|(a, b)| ((a - b).abs() as f64).powf(p as f64))
+            .sum()
+    }
+
+    #[test]
+    fn hqq_beats_rtn_on_lp_objective() {
+        let w = rand_w(16, 128, 5);
+        for bits in [2u8, 3] {
+            let p = Hqq::default().p;
+            let e_rtn = lp_error(&w, &Rtn.quantize(&w, bits, 64, None), p);
+            let e_hqq = lp_error(&w, &Hqq::default().quantize(&w, bits, 64, None), p);
+            assert!(e_hqq <= e_rtn * 1.001, "bits={bits}: {e_hqq} vs {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn hqq_l2_not_catastrophically_worse_than_rtn() {
+        let w = rand_w(16, 128, 5);
+        for bits in [2u8, 3] {
+            let e_rtn = frob_error(&w, &Rtn.quantize(&w, bits, 64, None));
+            let e_hqq = frob_error(&w, &Hqq::default().quantize(&w, bits, 64, None));
+            // HQQ optimizes lp(0.7), not L2; it may trade some L2 error
+            assert!(e_hqq <= e_rtn * 1.35, "bits={bits}: {e_hqq} vs {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w = rand_w(8, 64, 6);
+        for bits in [2u8, 3, 4] {
+            let q = Hqq::default().quantize(&w, bits, 32, None);
+            let max = (1i16 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| (c as i16) <= max));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = rand_w(4, 64, 7);
+        let a = Hqq::default().quantize(&w, 3, 64, None);
+        let b = Hqq::default().quantize(&w, 3, 64, None);
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.zero, b.zero);
+    }
+}

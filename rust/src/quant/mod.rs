@@ -1,0 +1,222 @@
+//! Weight-only quantizers: the proxy (HQQ), deploy-time comparators
+//! (RTN, GPTQ, AWQ-clip) and the any-size baselines (BitStack, PB-LLM).
+//!
+//! All grouped quantizers emit the shared [`QuantizedLinear`] representation
+//! (int8 codes + per-group f32 scale/zero along `in_features`) that the L1
+//! Pallas kernel consumes; [`pack`] provides the physical 2/3/4-bit layouts
+//! used for memory accounting and the CPU fallback path.
+
+pub mod awq_clip;
+pub mod bitstack;
+pub mod gptq;
+pub mod hqq;
+pub mod pack;
+pub mod pbllm;
+pub mod rtn;
+
+pub use awq_clip::AwqClip;
+pub use bitstack::{BitStack, BitStackLayer};
+pub use gptq::Gptq;
+pub use hqq::Hqq;
+pub use pbllm::PbLlm;
+pub use rtn::Rtn;
+
+use crate::model::CalibStats;
+use crate::tensor::Mat;
+
+/// Per-group fp16 scale + fp16 zero -> 32 bits per group of weights.
+/// With group size 128 this is the paper's +0.25 bits/weight overhead.
+pub const GROUP_OVERHEAD_BITS: f64 = 32.0;
+
+/// A grouped-quantized linear layer `W[out, in]`:
+/// `W[o, g*gs+j] ≈ (codes[o, g*gs+j] - zero[o, g]) * scale[o, g]`.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub out_features: usize,
+    pub in_features: usize,
+    pub group_size: usize,
+    pub bits: u8,
+    pub codes: Vec<u8>,   // [out * in]
+    pub scale: Vec<f32>,  // [out * groups]
+    pub zero: Vec<f32>,   // [out * groups]
+}
+
+impl QuantizedLinear {
+    pub fn n_groups(&self) -> usize {
+        self.in_features / self.group_size
+    }
+
+    /// Reconstruct the f32 weight matrix.
+    pub fn dequant(&self) -> Mat {
+        let (n, k, gs) = (self.out_features, self.in_features, self.group_size);
+        let g = self.n_groups();
+        let mut w = Mat::zeros(n, k);
+        for o in 0..n {
+            for gi in 0..g {
+                let s = self.scale[o * g + gi];
+                let z = self.zero[o * g + gi];
+                for j in 0..gs {
+                    let idx = o * k + gi * gs + j;
+                    w.data[idx] = (self.codes[idx] as f32 - z) * s;
+                }
+            }
+        }
+        w
+    }
+
+    /// Logical bits per weight including group metadata overhead.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 + GROUP_OVERHEAD_BITS / self.group_size as f64
+    }
+
+    /// Memory in bytes (packed codes + fp16 scale/zero per group).
+    pub fn memory_bytes(&self) -> usize {
+        pack::packed_bytes(self.out_features * self.in_features, self.bits)
+            + self.n_groups() * self.out_features * 4
+    }
+}
+
+/// Frobenius reconstruction error ||W - Wq||_F.
+pub fn frob_error(w: &Mat, q: &QuantizedLinear) -> f32 {
+    let dq = q.dequant();
+    debug_assert_eq!(w.rows, dq.rows);
+    w.data
+        .iter()
+        .zip(&dq.data)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f32>()
+        .sqrt()
+}
+
+/// Hessian-weighted output error  tr(ΔW H ΔW^T)  — the calibration-aware
+/// proxy for E ||(W - Wq) x||^2 (used by AWQ-clip and ablations).
+pub fn hessian_error(w: &Mat, dq: &Mat, h: &Mat) -> f64 {
+    let n = w.rows;
+    let k = w.cols;
+    debug_assert_eq!(h.rows, k);
+    let mut total = 0.0f64;
+    let mut delta = vec![0.0f32; k];
+    for o in 0..n {
+        let wr = w.row(o);
+        let qr = dq.row(o);
+        for j in 0..k {
+            delta[j] = wr[j] - qr[j];
+        }
+        // delta^T H delta
+        let mut acc = 0.0f64;
+        for i in 0..k {
+            let di = delta[i];
+            if di == 0.0 {
+                continue;
+            }
+            let hrow = h.row(i);
+            let mut s = 0.0f32;
+            for j in 0..k {
+                s += hrow[j] * delta[j];
+            }
+            acc += (di * s) as f64;
+        }
+        total += acc;
+    }
+    total
+}
+
+/// A grouped weight-only quantizer (one layer at a time).
+pub trait Quantizer {
+    fn name(&self) -> &'static str;
+
+    /// Quantize `w` to `bits` with the layer's calibration stats (may be
+    /// ignored by activation-independent methods).
+    fn quantize(
+        &self,
+        w: &Mat,
+        bits: u8,
+        group_size: usize,
+        stats: Option<&CalibStats>,
+    ) -> QuantizedLinear;
+}
+
+/// Group-wise min/max affine parameters used by RTN/HQQ/AWQ starts.
+pub(crate) fn group_minmax(w: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in w {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        (0.0, 0.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+/// Affine (scale, zero) for an asymmetric range [lo, hi] at `bits`.
+pub(crate) fn affine_params(lo: f32, hi: f32, bits: u8) -> (f32, f32) {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let scale = ((hi - lo) / qmax).max(1e-8);
+    let zero = -lo / scale;
+    (scale, zero)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_w() -> Mat {
+        let mut w = Mat::zeros(4, 8);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v = ((i as f32) * 0.37).sin() * 0.1;
+        }
+        w
+    }
+
+    #[test]
+    fn dequant_roundtrip_exact_codes() {
+        let q = QuantizedLinear {
+            out_features: 2,
+            in_features: 4,
+            group_size: 2,
+            bits: 2,
+            codes: vec![0u8, 1, 2, 3, 3, 2, 1, 0],
+            scale: vec![0.5, 1.0, 0.25, 2.0],
+            zero: vec![1.0, 0.0, 2.0, 3.0],
+        };
+        let w = q.dequant();
+        assert_eq!(w[(0, 0)], (0.0 - 1.0) * 0.5);
+        assert_eq!(w[(0, 2)], 2.0 * 1.0);
+        assert_eq!(w[(1, 3)], (0.0 - 3.0) * 2.0);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let q = QuantizedLinear {
+            out_features: 1,
+            in_features: 128,
+            group_size: 128,
+            bits: 3,
+            codes: vec![0; 128],
+            scale: vec![1.0],
+            zero: vec![0.0],
+        };
+        assert!((q.bits_per_weight() - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hessian_error_identity_matches_frobenius() {
+        let w = toy_w();
+        let q = Rtn.quantize(&w, 3, 4, None);
+        let h = Mat::eye(8);
+        let he = hessian_error(&w, &q.dequant(), &h);
+        let fe = frob_error(&w, &q) as f64;
+        assert!((he - fe * fe).abs() < 1e-6, "{he} vs {}", fe * fe);
+    }
+
+    #[test]
+    fn affine_params_cover_range() {
+        let (s, z) = affine_params(-1.0, 1.0, 2);
+        // code 0 -> -1.0, code 3 -> 1.0
+        assert!(((0.0 - z) * s - -1.0).abs() < 1e-6);
+        assert!(((3.0 - z) * s - 1.0).abs() < 1e-6);
+    }
+}

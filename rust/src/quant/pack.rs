@@ -1,0 +1,138 @@
+//! Physical bit-packing for 2/3/4-bit codes.
+//!
+//! The AOT executables consume int8 codes (the logical representation); the
+//! packed layouts here are what a deployment kernel would stream, and they
+//! drive the memory accounting in the cost model and the tables.  3-bit uses
+//! the AutoGPTQ-style layout: 32 codes packed into three u32 words.
+
+/// Bytes needed to store `n` codes at `bits` (2, 3, 4 or 8).
+pub fn packed_bytes(n: usize, bits: u8) -> usize {
+    match bits {
+        2 => n.div_ceil(4),
+        3 => n.div_ceil(32) * 12, // 32 codes -> 3 u32 words
+        4 => n.div_ceil(2),
+        8 => n,
+        other => panic!("unsupported bit width {other}"),
+    }
+}
+
+/// Pack codes (< 2^bits each) into the physical layout.
+pub fn pack(codes: &[u8], bits: u8) -> Vec<u8> {
+    let n = codes.len();
+    match bits {
+        2 => {
+            let mut out = vec![0u8; packed_bytes(n, 2)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert!(c < 4);
+                out[i / 4] |= (c & 0b11) << ((i % 4) * 2);
+            }
+            out
+        }
+        4 => {
+            let mut out = vec![0u8; packed_bytes(n, 4)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert!(c < 16);
+                out[i / 2] |= (c & 0b1111) << ((i % 2) * 4);
+            }
+            out
+        }
+        3 => {
+            // 32 3-bit codes in 96 bits = three u32 little-endian words.
+            let mut out = vec![0u8; packed_bytes(n, 3)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert!(c < 8);
+                let block = i / 32;
+                let pos = (i % 32) * 3; // bit position within the 96-bit block
+                let base = block * 12;
+                let byte = base + pos / 8;
+                let shift = pos % 8;
+                let v = (c as u16 & 0b111) << shift;
+                out[byte] |= (v & 0xFF) as u8;
+                if shift > 5 {
+                    out[byte + 1] |= (v >> 8) as u8;
+                }
+            }
+            out
+        }
+        8 => codes.to_vec(),
+        other => panic!("unsupported bit width {other}"),
+    }
+}
+
+/// Unpack back to int8 codes (inverse of [`pack`]).
+pub fn unpack(data: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    match bits {
+        2 => (0..n)
+            .map(|i| (data[i / 4] >> ((i % 4) * 2)) & 0b11)
+            .collect(),
+        4 => (0..n)
+            .map(|i| (data[i / 2] >> ((i % 2) * 4)) & 0b1111)
+            .collect(),
+        3 => (0..n)
+            .map(|i| {
+                let block = i / 32;
+                let pos = (i % 32) * 3;
+                let base = block * 12;
+                let byte = base + pos / 8;
+                let shift = pos % 8;
+                let mut v = (data[byte] as u16) >> shift;
+                if shift > 5 {
+                    v |= (data[byte + 1] as u16) << (8 - shift);
+                }
+                (v & 0b111) as u8
+            })
+            .collect(),
+        8 => data.to_vec(),
+        other => panic!("unsupported bit width {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(n: usize, bits: u8, seed: u64) -> Vec<u8> {
+        let mut state = seed | 1;
+        (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                (state % (1 << bits)) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for bits in [2u8, 3, 4, 8] {
+            for n in [1usize, 7, 32, 33, 100, 1024] {
+                let c = codes(n, bits, (bits as u64) * 1000 + n as u64);
+                let packed = pack(&c, bits);
+                assert_eq!(packed.len(), packed_bytes(n, bits));
+                assert_eq!(unpack(&packed, bits, n), c, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(packed_bytes(128, 2), 32);
+        assert_eq!(packed_bytes(128, 3), 48);
+        assert_eq!(packed_bytes(128, 4), 64);
+        assert_eq!(packed_bytes(128, 8), 128);
+        // 3-bit rounds up to whole 32-code blocks
+        assert_eq!(packed_bytes(33, 3), 24);
+    }
+
+    #[test]
+    fn density_matches_bits() {
+        // per-weight storage converges to bits/8 bytes
+        let n = 1 << 16;
+        for bits in [2u8, 3, 4] {
+            let bytes = packed_bytes(n, bits) as f64;
+            let per = bytes * 8.0 / n as f64;
+            assert!((per - bits as f64).abs() < 0.01, "bits={bits} per={per}");
+        }
+    }
+}

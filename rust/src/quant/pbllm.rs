@@ -1,0 +1,170 @@
+//! PB-LLM (Shang et al., 2023) — partial binarization baseline.
+//!
+//! A salient fraction ρ of weights (ranked by the diagonal-Hessian-weighted
+//! magnitude h_jj * w^2, falling back to |w|) is kept in 8-bit grouped RTN;
+//! the remaining (1-ρ) are binarized per group to  sign(w) * E|w|.
+//! Memory ≈ ρ*8 + (1-ρ)*1 bits per weight (the paper's accounting: weight
+//! memory only, index overhead excluded — matching our Table 1 analog).
+
+use super::rtn::quantize_rtn;
+use crate::model::CalibStats;
+use crate::tensor::Mat;
+
+pub struct PbLlm {
+    /// Salient fraction kept at 8-bit.
+    pub rho: f32,
+    pub group_size: usize,
+}
+
+pub struct PbLlmLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub rho: f32,
+    pub group_size: usize,
+    dequant: Mat,
+}
+
+impl PbLlm {
+    pub fn new(rho: f32, group_size: usize) -> Self {
+        assert!((0.0..=1.0).contains(&rho));
+        PbLlm { rho, group_size }
+    }
+
+    /// Average bits per weight for a given salient fraction.
+    pub fn bits_per_weight(rho: f32) -> f64 {
+        (rho as f64) * 8.0 + (1.0 - rho as f64) * 1.0
+    }
+
+    pub fn quantize(&self, w: &Mat, stats: Option<&CalibStats>) -> PbLlmLayer {
+        let (n, k) = (w.rows, w.cols);
+        let gs = self.group_size.min(k);
+        // salience = h_jj * w^2 (sensitivity of the output to this weight)
+        let mut sal: Vec<(f32, usize)> = Vec::with_capacity(n * k);
+        for o in 0..n {
+            for j in 0..k {
+                let h = stats
+                    .map(|s| s.hessian[(j, j)].max(1e-12))
+                    .unwrap_or(1.0);
+                let v = w[(o, j)];
+                sal.push((h * v * v, o * k + j));
+            }
+        }
+        let n_salient = ((n * k) as f32 * self.rho).round() as usize;
+        sal.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut salient = vec![false; n * k];
+        for &(_, idx) in sal.iter().take(n_salient) {
+            salient[idx] = true;
+        }
+
+        // 8-bit RTN of the full matrix (salient entries copy from here).
+        let q8 = quantize_rtn(w, 8, gs, 1.0);
+        let dq8 = q8.dequant();
+
+        // binarize the rest per group: sign(w) * mean|w| over non-salient
+        let mut dequant = Mat::zeros(n, k);
+        let g = k / gs;
+        for o in 0..n {
+            for gi in 0..g {
+                let mut sum = 0.0f32;
+                let mut cnt = 0usize;
+                for j in gi * gs..(gi + 1) * gs {
+                    let idx = o * k + j;
+                    if !salient[idx] {
+                        sum += w.data[idx].abs();
+                        cnt += 1;
+                    }
+                }
+                let alpha = if cnt > 0 { sum / cnt as f32 } else { 0.0 };
+                for j in gi * gs..(gi + 1) * gs {
+                    let idx = o * k + j;
+                    dequant.data[idx] = if salient[idx] {
+                        dq8.data[idx]
+                    } else {
+                        alpha * w.data[idx].signum()
+                    };
+                }
+            }
+        }
+        PbLlmLayer { rows: n, cols: k, rho: self.rho, group_size: gs, dequant }
+    }
+}
+
+impl PbLlmLayer {
+    pub fn dequant(&self) -> &Mat {
+        &self.dequant
+    }
+
+    /// Weight-memory bytes (paper accounting: codes + group scales).
+    pub fn memory_bytes(&self) -> usize {
+        let n_w = self.rows * self.cols;
+        let bits = PbLlm::bits_per_weight(self.rho);
+        let code_bytes = (n_w as f64 * bits / 8.0).ceil() as usize;
+        let groups = self.rows * (self.cols / self.group_size);
+        code_bytes + groups * 4 // fp16 scale+zero / fp16 alpha per group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut w = Mat::zeros(n, k);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let u = (state >> 11) as f32 / (1u64 << 53) as f32 - 0.5;
+            *v = if state & 15 == 0 { u } else { u * 0.1 };
+        }
+        w
+    }
+
+    fn err(w: &Mat, dq: &Mat) -> f32 {
+        w.data
+            .iter()
+            .zip(&dq.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    #[test]
+    fn higher_rho_lower_error() {
+        let w = rand_w(16, 64, 41);
+        let e1 = err(&w, PbLlm::new(0.05, 32).quantize(&w, None).dequant());
+        let e2 = err(&w, PbLlm::new(0.3, 32).quantize(&w, None).dequant());
+        let e3 = err(&w, PbLlm::new(0.8, 32).quantize(&w, None).dequant());
+        assert!(e1 > e2 && e2 > e3, "{e1} {e2} {e3}");
+    }
+
+    #[test]
+    fn bits_accounting() {
+        assert!((PbLlm::bits_per_weight(0.0) - 1.0).abs() < 1e-9);
+        assert!((PbLlm::bits_per_weight(1.0) - 8.0).abs() < 1e-9);
+        let b = PbLlm::bits_per_weight(0.2);
+        assert!((b - (0.2 * 8.0 + 0.8)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rho_one_matches_8bit_rtn() {
+        let w = rand_w(8, 32, 42);
+        let dq = PbLlm::new(1.0, 32).quantize(&w, None);
+        let q8 = quantize_rtn(&w, 8, 32, 1.0).dequant();
+        for (a, b) in dq.dequant().data.iter().zip(&q8.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn binarized_part_uses_sign() {
+        let w = rand_w(4, 32, 43);
+        let layer = PbLlm::new(0.0, 32).quantize(&w, None);
+        for (a, b) in layer.dequant().data.iter().zip(&w.data) {
+            if *b != 0.0 {
+                assert!(a.signum() == b.signum() || *a == 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! RTN (round-to-nearest) grouped quantization — the simplest baseline and
+//! the starting point for the AWQ-style clip search.
+
+use super::{affine_params, group_minmax, QuantizedLinear, Quantizer};
+use crate::model::CalibStats;
+use crate::tensor::Mat;
+
+pub struct Rtn;
+
+impl Quantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        bits: u8,
+        group_size: usize,
+        _stats: Option<&CalibStats>,
+    ) -> QuantizedLinear {
+        quantize_rtn(w, bits, group_size, 1.0)
+    }
+}
+
+/// RTN with a symmetric range-shrink factor `clip` (1.0 = full range).
+pub fn quantize_rtn(w: &Mat, bits: u8, group_size: usize, clip: f32) -> QuantizedLinear {
+    let (n, k) = (w.rows, w.cols);
+    assert_eq!(k % group_size, 0, "in_features % group_size != 0");
+    let g = k / group_size;
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mut codes = vec![0u8; n * k];
+    let mut scale = vec![0f32; n * g];
+    let mut zero = vec![0f32; n * g];
+    for o in 0..n {
+        for gi in 0..g {
+            let grp = &w.row(o)[gi * group_size..(gi + 1) * group_size];
+            let (lo, hi) = group_minmax(grp);
+            let mid = 0.5 * (lo + hi);
+            let (lo, hi) = (mid + (lo - mid) * clip, mid + (hi - mid) * clip);
+            let (s, z) = affine_params(lo, hi, bits);
+            let zr = z.round();
+            scale[o * g + gi] = s;
+            zero[o * g + gi] = zr;
+            for (j, &v) in grp.iter().enumerate() {
+                let q = (v / s + zr).round().clamp(0.0, qmax);
+                codes[o * k + gi * group_size + j] = q as u8;
+            }
+        }
+    }
+    QuantizedLinear {
+        out_features: n,
+        in_features: k,
+        group_size,
+        bits,
+        codes,
+        scale,
+        zero,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::frob_error;
+
+    fn rand_w(n: usize, k: usize, seed: u64) -> Mat {
+        // simple xorshift-based deterministic pseudo-random weights
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut w = Mat::zeros(n, k);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = ((state >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.2;
+        }
+        w
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w = rand_w(8, 64, 1);
+        for bits in [2u8, 3, 4] {
+            let q = Rtn.quantize(&w, bits, 32, None);
+            let max = (1i16 << bits) - 1;
+            assert!(q.codes.iter().all(|&c| (c as i16) <= max));
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let w = rand_w(16, 128, 2);
+        let e2 = frob_error(&w, &Rtn.quantize(&w, 2, 64, None));
+        let e3 = frob_error(&w, &Rtn.quantize(&w, 3, 64, None));
+        let e4 = frob_error(&w, &Rtn.quantize(&w, 4, 64, None));
+        assert!(e2 > e3 && e3 > e4, "{e2} {e3} {e4}");
+    }
+
+    #[test]
+    fn four_bit_relative_error_reasonable() {
+        let w = rand_w(16, 128, 3);
+        let q = Rtn.quantize(&w, 4, 64, None);
+        let rel = frob_error(&w, &q) / w.frob_norm();
+        // uniform weights, 16 levels: expected rel err ~ step/range ~ 0.067
+        assert!(rel < 0.08, "rel err {rel}");
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let w = Mat::from_vec(1, 4, vec![0.3; 4]);
+        let q = Rtn.quantize(&w, 2, 4, None);
+        let dq = q.dequant();
+        for v in &dq.data {
+            assert!((v - 0.3).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Aligned text tables + CSV dumps for the experiment harnesses.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple table: headers + string rows, printed aligned and dumpable as CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Format helper: f32 with fixed decimals, NaN as "-".
+pub fn fmt(v: f32, decimals: usize) -> String {
+    if v.is_nan() {
+        "-".to_string()
+    } else if v.abs() >= 1e4 {
+        format!("{v:.2e}")
+    } else {
+        format!("{v:.decimals$}")
+    }
+}
+
+/// Write a simple series CSV (figure data): (x, multiple named ys).
+pub fn series_csv(path: &Path, xname: &str, ynames: &[&str],
+                  rows: &[(f32, Vec<f32>)]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "{xname},{}", ynames.join(","));
+    for (x, ys) in rows {
+        let yy: Vec<String> = ys.iter().map(|y| format!("{y}")).collect();
+        let _ = writeln!(s, "{x},{}", yy.join(","));
+    }
+    std::fs::write(path, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("t", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("long_header"));
+        assert!(r.lines().count() >= 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_handles_extremes() {
+        assert_eq!(fmt(f32::NAN, 2), "-");
+        assert_eq!(fmt(1.2345, 2), "1.23");
+        assert!(fmt(2.2e5, 2).contains('e'));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "z".into()]);
+        let dir = std::env::temp_dir().join("amq_report_test");
+        let path = dir.join("t.csv");
+        t.to_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with("\"a,b\",c"));
+        assert!(s.contains("\"x\"\"y\""));
+    }
+}

@@ -1,0 +1,426 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts once, keeps all static
+//! inputs resident as device buffers, and exposes the three entry points the
+//! coordinator uses (fp logits / quant logits / fused scorer).
+//!
+//! This is the L3 hot path.  Design rules:
+//!  * compile each executable once (`HloModuleProto::from_text_file` →
+//!    `client.compile`) and reuse forever;
+//!  * upload invariant inputs (fp weights, calibration batches, fp logits)
+//!    once as `PjRtBuffer`s; per-candidate marshalling is limited to the
+//!    quantized-layer buffers, which the proxy store also uploads only once
+//!    per (layer, bit-width) — so an *assembled candidate costs zero host→
+//!    device copies* (see coordinator::proxy);
+//!  * python never runs here.
+
+mod service;
+
+pub use service::{EvalService, ServiceStats};
+
+use crate::data::Manifest;
+use crate::model::WeightStore;
+use crate::quant::QuantizedLinear;
+use crate::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// How each executable argument is sourced, precomputed from the manifest
+/// argument-name list.
+#[derive(Clone, Debug, PartialEq)]
+enum ArgSlot {
+    Tokens,
+    Mask,
+    FpLogits,
+    FpParam(String),
+    /// (layer index in manifest order, 0=codes 1=scale 2=zero)
+    Quant(usize, u8),
+}
+
+fn plan_args(manifest: &Manifest, args: &[String]) -> Result<Vec<ArgSlot>> {
+    args.iter()
+        .map(|a| {
+            Ok(match a.as_str() {
+                "tokens" => ArgSlot::Tokens,
+                "mask" => ArgSlot::Mask,
+                "fp_logits" => ArgSlot::FpLogits,
+                name => {
+                    if let Some(rest) = name.strip_suffix(".codes") {
+                        ArgSlot::Quant(idx(manifest, rest)?, 0)
+                    } else if let Some(rest) = name.strip_suffix(".scale") {
+                        ArgSlot::Quant(idx(manifest, rest)?, 1)
+                    } else if let Some(rest) = name.strip_suffix(".zero") {
+                        ArgSlot::Quant(idx(manifest, rest)?, 2)
+                    } else {
+                        ArgSlot::FpParam(name.to_string())
+                    }
+                }
+            })
+        })
+        .collect()
+}
+
+fn idx(manifest: &Manifest, layer: &str) -> Result<usize> {
+    manifest
+        .layer_index(layer)
+        .ok_or_else(|| eyre::anyhow!("arg references unknown layer {layer}"))
+}
+
+/// Uploaded buffers for one quantized layer (codes/scale/zero).
+pub struct QuantLayerBufs {
+    pub codes: xla::PjRtBuffer,
+    pub scale: xla::PjRtBuffer,
+    pub zero: xla::PjRtBuffer,
+    pub bits: u8,
+}
+
+/// A calibration/evaluation batch resident on device.
+pub struct ScoreBatch {
+    pub tokens: xla::PjRtBuffer,
+    pub mask: xla::PjRtBuffer,
+    pub fp_logits: xla::PjRtBuffer,
+    pub host_tokens: Vec<i32>,
+    pub host_mask: Vec<f32>,
+    pub host_fp_logits: Vec<f32>,
+}
+
+/// Wall-clock accounting per executable (perf reporting, Table 4 analog).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub fp_calls: u64,
+    pub fp_time: Duration,
+    pub quant_calls: u64,
+    pub quant_time: Duration,
+    pub scores_calls: u64,
+    pub scores_time: Duration,
+    pub upload_bytes: u64,
+}
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    fp_exec: xla::PjRtLoadedExecutable,
+    quant_exec: xla::PjRtLoadedExecutable,
+    scores_exec: xla::PjRtLoadedExecutable,
+    fp_plan: Vec<ArgSlot>,
+    quant_plan: Vec<ArgSlot>,
+    scores_plan: Vec<ArgSlot>,
+    fp_param_bufs: HashMap<String, xla::PjRtBuffer>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load + compile everything from `artifacts/`.
+    pub fn load(artifacts_dir: &Path, weights: &WeightStore) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let compile = |key: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.hlo_path(key)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| eyre::anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let fp_exec = compile("model_fp")?;
+        let quant_exec = compile("model_quant")?;
+        let scores_exec = compile("scores_quant")?;
+
+        let fp_plan = plan_args(&manifest, &manifest.executable("model_fp")?.args)?;
+        let quant_plan = plan_args(&manifest, &manifest.executable("model_quant")?.args)?;
+        let scores_plan = plan_args(&manifest, &manifest.executable("scores_quant")?.args)?;
+
+        let mut rt = Runtime {
+            manifest,
+            client,
+            fp_exec,
+            quant_exec,
+            scores_exec,
+            fp_plan,
+            quant_plan,
+            scores_plan,
+            fp_param_bufs: HashMap::new(),
+            stats: RefCell::new(RuntimeStats::default()),
+        };
+        rt.upload_fp_params(weights)?;
+        Ok(rt)
+    }
+
+    /// Upload (or replace) the resident fp parameter buffers.
+    pub fn upload_fp_params(&mut self, weights: &WeightStore) -> Result<()> {
+        let mut bufs = HashMap::new();
+        let names: Vec<String> = self
+            .fp_plan
+            .iter()
+            .chain(&self.quant_plan)
+            .chain(&self.scores_plan)
+            .filter_map(|s| match s {
+                ArgSlot::FpParam(n) => Some(n.clone()),
+                _ => None,
+            })
+            .collect();
+        for name in names {
+            if bufs.contains_key(&name) {
+                continue;
+            }
+            let (shape, data) = weights.get(&name)?;
+            let buf = self.upload_f32(data, shape)?;
+            bufs.insert(name, buf);
+        }
+        self.fp_param_bufs = bufs;
+        Ok(())
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.manifest.eval_batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.model.seq_len
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.manifest.model.vocab_size
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = RuntimeStats::default();
+    }
+
+    // -- uploads ----------------------------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.stats.borrow_mut().upload_bytes += data.len() as u64;
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload one quantized layer (codes as int8 + f32 scale/zero).
+    /// The AOT kernel consumes s8 codes; grouped codes are <= 15 so the
+    /// u8 -> i8 conversion is lossless (asserted).
+    pub fn upload_quant_layer(&self, q: &QuantizedLinear) -> Result<QuantLayerBufs> {
+        let n = q.out_features;
+        let k = q.in_features;
+        let g = q.n_groups();
+        eyre::ensure!(q.bits <= 4, "AOT kernel path supports <= 4-bit codes");
+        let codes_i8: Vec<i8> = q.codes.iter().map(|&c| c as i8).collect();
+        Ok(QuantLayerBufs {
+            codes: self.upload_i8(&codes_i8, &[n, k])?,
+            scale: self.upload_f32(&q.scale, &[n, g])?,
+            zero: self.upload_f32(&q.zero, &[n, g])?,
+            bits: q.bits,
+        })
+    }
+
+    /// Upload a named set of fp weight overrides ([out,in] row-major mats).
+    pub fn upload_weight_overrides(
+        &self,
+        overrides: &[(String, crate::tensor::Mat)],
+    ) -> Result<HashMap<String, xla::PjRtBuffer>> {
+        let mut out = HashMap::new();
+        for (name, mat) in overrides {
+            out.insert(
+                name.clone(),
+                self.upload_f32(&mat.data, &[mat.rows, mat.cols])?,
+            );
+        }
+        Ok(out)
+    }
+
+    // -- fp path ----------------------------------------------------------
+
+    /// Run the fp executable with the resident weights.
+    pub fn fp_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.fp_logits_with(tokens, &HashMap::new())
+    }
+
+    /// Run the fp executable with some weights overridden (baselines:
+    /// BitStack / PB-LLM / fixed-precision reconstructions).
+    pub fn fp_logits_with(
+        &self,
+        tokens: &[i32],
+        overrides: &HashMap<String, xla::PjRtBuffer>,
+    ) -> Result<Vec<f32>> {
+        let b = self.batch_size();
+        let t = self.seq_len();
+        eyre::ensure!(tokens.len() == b * t, "tokens must be [{b},{t}]");
+        let tok_buf = self.upload_i32(tokens, &[b, t])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.fp_plan.len());
+        for slot in &self.fp_plan {
+            match slot {
+                ArgSlot::Tokens => args.push(&tok_buf),
+                ArgSlot::FpParam(name) => {
+                    let buf = overrides.get(name).or_else(|| self.fp_param_bufs.get(name));
+                    args.push(buf.ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?)
+                }
+                other => eyre::bail!("unexpected slot {other:?} in fp plan"),
+            }
+        }
+        let t0 = Instant::now();
+        let out = self.fp_exec.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.fp_calls += 1;
+            s.fp_time += t0.elapsed();
+        }
+        let logits = lit.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Prepare a resident evaluation batch: computes fp logits and uploads
+    /// tokens/mask/fp_logits once.
+    pub fn prepare_batch(&self, tokens: &[i32], mask: &[f32]) -> Result<ScoreBatch> {
+        let b = self.batch_size();
+        let t = self.seq_len();
+        eyre::ensure!(tokens.len() == b * t && mask.len() == b * t);
+        let fp = self.fp_logits(tokens)?;
+        Ok(ScoreBatch {
+            tokens: self.upload_i32(tokens, &[b, t])?,
+            mask: self.upload_f32(mask, &[b, t])?,
+            fp_logits: self.upload_f32(&fp, &[b, t, self.vocab()])?,
+            host_tokens: tokens.to_vec(),
+            host_mask: mask.to_vec(),
+            host_fp_logits: fp,
+        })
+    }
+
+    // -- quant path -------------------------------------------------------
+
+    /// Fused scorer: (mean JSD vs fp, mean CE) for an assembled candidate.
+    /// `layers[i]` must follow manifest layer order.
+    pub fn scores(&self, batch: &ScoreBatch, layers: &[&QuantLayerBufs]) -> Result<(f32, f32)> {
+        eyre::ensure!(layers.len() == self.manifest.layers.len());
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.scores_plan.len());
+        for slot in &self.scores_plan {
+            match slot {
+                ArgSlot::Tokens => args.push(&batch.tokens),
+                ArgSlot::Mask => args.push(&batch.mask),
+                ArgSlot::FpLogits => args.push(&batch.fp_logits),
+                ArgSlot::FpParam(name) => args.push(
+                    self.fp_param_bufs
+                        .get(name)
+                        .ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?,
+                ),
+                ArgSlot::Quant(li, part) => {
+                    let l = layers[*li];
+                    args.push(match part {
+                        0 => &l.codes,
+                        1 => &l.scale,
+                        _ => &l.zero,
+                    });
+                }
+            }
+        }
+        let t0 = Instant::now();
+        let out = self.scores_exec.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.scores_calls += 1;
+            s.scores_time += t0.elapsed();
+        }
+        let (jsd, ce) = lit.to_tuple2()?;
+        Ok((jsd.to_vec::<f32>()?[0], ce.to_vec::<f32>()?[0]))
+    }
+
+    /// Quantized-model logits (task evaluation path).
+    pub fn quant_logits(&self, tokens: &[i32], layers: &[&QuantLayerBufs]) -> Result<Vec<f32>> {
+        eyre::ensure!(layers.len() == self.manifest.layers.len());
+        let b = self.batch_size();
+        let t = self.seq_len();
+        eyre::ensure!(tokens.len() == b * t);
+        let tok_buf = self.upload_i32(tokens, &[b, t])?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.quant_plan.len());
+        for slot in &self.quant_plan {
+            match slot {
+                ArgSlot::Tokens => args.push(&tok_buf),
+                ArgSlot::FpParam(name) => args.push(
+                    self.fp_param_bufs
+                        .get(name)
+                        .ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?,
+                ),
+                ArgSlot::Quant(li, part) => {
+                    let l = layers[*li];
+                    args.push(match part {
+                        0 => &l.codes,
+                        1 => &l.scale,
+                        _ => &l.zero,
+                    });
+                }
+                other => eyre::bail!("unexpected slot {other:?} in quant plan"),
+            }
+        }
+        let t0 = Instant::now();
+        let out = self.quant_exec.execute_b(&args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.quant_calls += 1;
+            s.quant_time += t0.elapsed();
+        }
+        let logits = lit.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        crate::data::Manifest::from_json(
+            r#"{
+            "model": {"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                      "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                      "rope_theta": 10000.0, "rms_eps": 1e-5},
+            "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+            "layers": [{"name": "blk0.q", "out_features": 128, "in_features": 128}],
+            "fp_side_names": ["embed"],
+            "executables": {}, "files": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+
+    #[test]
+    fn plan_args_classifies_slots() {
+        let m = toy_manifest();
+        let args: Vec<String> = [
+            "tokens", "mask", "fp_logits", "embed",
+            "blk0.q.codes", "blk0.q.scale", "blk0.q.zero",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let plan = plan_args(&m, &args).unwrap();
+        assert_eq!(plan[0], ArgSlot::Tokens);
+        assert_eq!(plan[1], ArgSlot::Mask);
+        assert_eq!(plan[2], ArgSlot::FpLogits);
+        assert_eq!(plan[3], ArgSlot::FpParam("embed".into()));
+        assert_eq!(plan[4], ArgSlot::Quant(0, 0));
+        assert_eq!(plan[5], ArgSlot::Quant(0, 1));
+        assert_eq!(plan[6], ArgSlot::Quant(0, 2));
+    }
+
+    #[test]
+    fn plan_args_rejects_unknown_layer() {
+        let m = toy_manifest();
+        assert!(plan_args(&m, &["blkX.q.codes".to_string()]).is_err());
+    }
+}

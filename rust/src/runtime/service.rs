@@ -1,0 +1,160 @@
+//! EvalService — a single-worker request queue in the style of a serving
+//! router's batcher.  PJRT objects are not `Send`, so the whole runtime stack
+//! lives on one dedicated worker thread; callers (CLI, examples, the search
+//! loop when run concurrently) submit requests through a channel and receive
+//! results through per-request reply channels.
+//!
+//! Generic over request/response so tests can exercise the queueing logic
+//! without PJRT.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Queue/latency accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub total_queue_wait: Duration,
+    pub total_service_time: Duration,
+}
+
+impl ServiceStats {
+    pub fn mean_wait(&self) -> Duration {
+        if self.completed == 0 {
+            Duration::ZERO
+        } else {
+            self.total_queue_wait / self.completed as u32
+        }
+    }
+
+    pub fn mean_service(&self) -> Duration {
+        if self.completed == 0 {
+            Duration::ZERO
+        } else {
+            self.total_service_time / self.completed as u32
+        }
+    }
+}
+
+struct Request<Q, A> {
+    payload: Q,
+    enqueued: Instant,
+    reply: mpsc::Sender<A>,
+}
+
+/// Handle to the worker.  Dropping it shuts the worker down.
+pub struct EvalService<Q: Send + 'static, A: Send + 'static> {
+    tx: mpsc::Sender<Request<Q, A>>,
+    stats: Arc<Mutex<ServiceStats>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
+    /// Spawn a worker.  `builder` runs *on the worker thread* and constructs
+    /// the evaluation closure there (this is how non-Send PJRT state is
+    /// confined to the worker).
+    pub fn spawn<B, F>(builder: B) -> Self
+    where
+        B: FnOnce() -> F + Send + 'static,
+        F: FnMut(Q) -> A,
+    {
+        let (tx, rx) = mpsc::channel::<Request<Q, A>>();
+        let stats = Arc::new(Mutex::new(ServiceStats::default()));
+        let stats2 = stats.clone();
+        let worker = std::thread::spawn(move || {
+            let mut eval = builder();
+            while let Ok(req) = rx.recv() {
+                let started = Instant::now();
+                let wait = started - req.enqueued;
+                let answer = eval(req.payload);
+                let service = started.elapsed();
+                {
+                    let mut s = stats2.lock().unwrap();
+                    s.completed += 1;
+                    s.total_queue_wait += wait;
+                    s.total_service_time += service;
+                }
+                let _ = req.reply.send(answer);
+            }
+        });
+        EvalService { tx, stats, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns a receiver for the answer.
+    pub fn submit(&self, payload: Q) -> mpsc::Receiver<A> {
+        let (rtx, rrx) = mpsc::channel();
+        self.stats.lock().unwrap().submitted += 1;
+        let _ = self.tx.send(Request { payload, enqueued: Instant::now(), reply: rtx });
+        rrx
+    }
+
+    /// Submit and block for the answer.
+    pub fn call(&self, payload: Q) -> A {
+        self.submit(payload).recv().expect("worker died")
+    }
+
+    /// Submit a whole batch, then collect in order (pipeline-friendly).
+    pub fn call_batch(&self, payloads: Vec<Q>) -> Vec<A> {
+        let rxs: Vec<_> = payloads.into_iter().map(|p| self.submit(p)).collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl<Q: Send + 'static, A: Send + 'static> Drop for EvalService<Q, A> {
+    fn drop(&mut self) {
+        // Closing the channel stops the worker loop.
+        let (dead_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_single() {
+        let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x * 2);
+        assert_eq!(svc.call(21), 42);
+        let s = svc.stats();
+        assert_eq!(s.submitted, 1);
+        assert_eq!(s.completed, 1);
+    }
+
+    #[test]
+    fn batch_preserves_order() {
+        let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x + 1);
+        let out = svc.call_batch((0..100).collect());
+        assert_eq!(out, (1..101).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_state_is_threadlocal() {
+        // builder runs on the worker: stateful counter works without Sync
+        let svc: EvalService<(), u64> = EvalService::spawn(|| {
+            let mut count = 0u64;
+            move |_| {
+                count += 1;
+                count
+            }
+        });
+        assert_eq!(svc.call(()), 1);
+        assert_eq!(svc.call(()), 2);
+    }
+
+    #[test]
+    fn shutdown_joins_worker() {
+        let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x);
+        svc.call(1);
+        drop(svc); // must not hang
+    }
+}

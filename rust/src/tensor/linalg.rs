@@ -1,0 +1,235 @@
+//! Small dense linear algebra: Cholesky (f64 internally for stability) and a
+//! rank-1 power iteration.  Sizes here are at most d_ff x d_ff (256x256), so
+//! simple O(n^3) routines are plenty.
+
+use super::Mat;
+
+/// Cholesky factorization of a symmetric positive-definite matrix (f64).
+/// Returns the lower factor L with `A = L L^T`, or None if not SPD.
+pub fn cholesky_f64(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky, with automatic diagonal damping
+/// escalation if the factorization fails (predictor ridge solves).
+pub fn cholesky_solve(a: &Mat, b: &[f32]) -> Option<Vec<f32>> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(b.len(), n);
+    let mut a64: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mean_diag: f64 =
+        (0..n).map(|i| a64[i * n + i]).sum::<f64>() / n.max(1) as f64;
+    let mut damp = 0.0f64;
+    for _ in 0..6 {
+        let mut try_a = a64.clone();
+        if damp > 0.0 {
+            for i in 0..n {
+                try_a[i * n + i] += damp;
+            }
+        }
+        if let Some(l) = cholesky_f64(&try_a, n) {
+            // forward: L y = b
+            let mut y = vec![0.0f64; n];
+            for i in 0..n {
+                let mut s = b[i] as f64;
+                for k in 0..i {
+                    s -= l[i * n + k] * y[k];
+                }
+                y[i] = s / l[i * n + i];
+            }
+            // backward: L^T x = y
+            let mut x = vec![0.0f64; n];
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for k in i + 1..n {
+                    s -= l[k * n + i] * x[k];
+                }
+                x[i] = s / l[i * n + i];
+            }
+            return Some(x.iter().map(|&v| v as f32).collect());
+        }
+        damp = if damp == 0.0 { mean_diag.abs() * 1e-8 + 1e-12 } else { damp * 100.0 };
+        a64 = a.data.iter().map(|&v| v as f64).collect();
+    }
+    None
+}
+
+/// Upper Cholesky factor of the *inverse* of SPD `H` — the matrix GPTQ
+/// iterates on (`torch.linalg.cholesky(H.inverse(), upper=True)`): returns
+/// upper-triangular `U` with `H^{-1} = U^T U`; the GPTQ recurrence consumes
+/// its rows `U[j, j..]`.  `damp_frac * mean(diag(H))` is added to the
+/// diagonal first (escalating automatically if factorization still fails).
+pub fn cholesky_inverse_upper(h: &Mat, damp_frac: f64) -> Option<Mat> {
+    let n = h.rows;
+    let a: Vec<f64> = h.data.iter().map(|&v| v as f64).collect();
+    let mean_diag: f64 = (0..n).map(|i| a[i * n + i]).sum::<f64>() / n as f64;
+    let mut damp = damp_frac * mean_diag;
+    for _ in 0..8 {
+        let mut ad = a.clone();
+        for i in 0..n {
+            ad[i * n + i] += damp;
+        }
+        if let Some(l) = cholesky_f64(&ad, n) {
+            // Invert L (lower-triangular) -> Linv.
+            let mut linv = vec![0.0f64; n * n];
+            for i in 0..n {
+                linv[i * n + i] = 1.0 / l[i * n + i];
+                for j in 0..i {
+                    let mut s = 0.0;
+                    for k in j..i {
+                        s -= l[i * n + k] * linv[k * n + j];
+                    }
+                    linv[i * n + j] = s / l[i * n + i];
+                }
+            }
+            // Hinv = Linv^T Linv  (upper x lower product, symmetric).
+            let mut hinv = vec![0.0f64; n * n];
+            for i in 0..n {
+                for j in i..n {
+                    let mut s = 0.0;
+                    for k in j..n {
+                        // (Linv^T)[i,k] = Linv[k,i]
+                        s += linv[k * n + i] * linv[k * n + j];
+                    }
+                    hinv[i * n + j] = s;
+                    hinv[j * n + i] = s;
+                }
+            }
+            // Upper factor: Hinv = L' L'^T  =>  U = L'^T (Hinv = U^T U).
+            if let Some(lp) = cholesky_f64(&hinv, n) {
+                let mut out = Mat::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..=i {
+                        out[(j, i)] = lp[i * n + j] as f32;
+                    }
+                }
+                return Some(out);
+            }
+        }
+        damp = if damp == 0.0 { 1e-8 } else { damp * 10.0 };
+    }
+    None
+}
+
+/// Rank-1 approximation of a non-negative matrix via power iteration:
+/// returns (u, sigma, v) with `A ≈ sigma * u v^T`, |u|=|v|=1.
+pub fn power_iteration_rank1(a: &Mat, iters: usize) -> (Vec<f32>, f32, Vec<f32>) {
+    let (m, n) = (a.rows, a.cols);
+    // varied init so start vectors are never orthogonal to the top
+    // singular vector (a uniform start is degenerate for signed inputs)
+    let mut v: Vec<f32> = (0..n).map(|j| 1.0 + 0.37 * ((j as f32) * 0.91).sin()).collect();
+    let vn0 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    v.iter_mut().for_each(|x| *x /= vn0);
+    let mut u = vec![0.0f32; m];
+    for _ in 0..iters.max(1) {
+        // u = A v
+        for i in 0..m {
+            let row = a.row(i);
+            u[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        let un = u.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-20);
+        u.iter_mut().for_each(|x| *x /= un);
+        // v = A^T u
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in 0..m {
+                s += a[(i, j)] * u[i];
+            }
+            v[j] = s;
+        }
+        let vn = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-20);
+        v.iter_mut().for_each(|x| *x /= vn);
+    }
+    // sigma = u^T A v
+    let mut sigma = 0.0f32;
+    for i in 0..m {
+        let row = a.row(i);
+        let av: f32 = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        sigma += u[i] * av;
+    }
+    (u, sigma, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solve_spd() {
+        // A = [[4,1],[1,3]], b = [1,2] -> x = [1/11, 7/11]
+        let a = Mat::from_vec(2, 2, vec![4., 1., 1., 3.]);
+        let x = cholesky_solve(&a, &[1., 2.]).unwrap();
+        assert!((x[0] - 1.0 / 11.0).abs() < 1e-5);
+        assert!((x[1] - 7.0 / 11.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cholesky_solve_damps_semidefinite() {
+        let a = Mat::from_vec(2, 2, vec![1., 1., 1., 1.]); // singular
+        let x = cholesky_solve(&a, &[2., 2.]).unwrap();
+        // damped solution still approximately satisfies A x = b
+        let r0 = x[0] + x[1];
+        assert!((r0 - 2.0).abs() < 1e-2, "{r0}");
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_reconstructs() {
+        // H SPD; check U^T U = H^{-1} (with tiny damping tolerance).
+        let h = Mat::from_vec(3, 3, vec![4., 1., 0., 1., 3., 0.5, 0., 0.5, 2.]);
+        let u = cholesky_inverse_upper(&h, 0.0).unwrap();
+        let hinv_rec = u.transpose().matmul(&u);
+        let ident = hinv_rec.matmul(&h);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((ident[(i, j)] - want).abs() < 1e-3,
+                        "ident[{i},{j}]={}", ident[(i, j)]);
+            }
+        }
+        // upper-triangular
+        for i in 1..3 {
+            for j in 0..i {
+                assert_eq!(u[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_exact_on_rank1_input() {
+        let u0 = [1.0f32, 2.0, 3.0];
+        let v0 = [0.5f32, -0.5];
+        let mut a = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                a[(i, j)] = u0[i] * v0[j];
+            }
+        }
+        let (u, s, v) = power_iteration_rank1(&a, 30);
+        let mut rec = Mat::zeros(3, 2);
+        for i in 0..3 {
+            for j in 0..2 {
+                rec[(i, j)] = s * u[i] * v[j];
+            }
+        }
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny benchmark harness (criterion is unavailable in the offline build):
+//! warms up, runs adaptively until a time budget, reports median / mean /
+//! min over iterations.  Used by the `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after 1 warmup call), max 1000 iters.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget && times.len() < 1000 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let n = times.len();
+    let mean = times.iter().sum::<Duration>() / n as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        median: times[n / 2],
+        mean,
+        min: times[0],
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>12} {:>12}",
+        "benchmark", "min", "median", "mean"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 10);
+        assert!(r.min <= r.median && r.median <= r.mean * 10);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration tests over the real artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; they skip (with a notice) when
+//! artifacts are absent so a clean checkout still passes `cargo test`.
+//! PJRT client + executable compilation is expensive on this single-core
+//! testbed, so the runtime-level assertions share one `#[test]` body.
+
+use amq::data::{load_tokens, Manifest};
+use amq::eval::{self, ModelHandle};
+use amq::model::ModelAssets;
+use amq::quant::{Hqq, Quantizer, Rtn};
+use amq::runtime::Runtime;
+
+macro_rules! require_artifacts {
+    () => {
+        if !amq::artifacts_available() {
+            eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn assets_load_and_validate() {
+    require_artifacts!();
+    let dir = amq::artifacts_dir();
+    let assets = ModelAssets::load(&dir).unwrap();
+    assert_eq!(assets.manifest.layers.len(), assets.manifest.model.n_layers * 7);
+    assert_eq!(assets.manifest.group_size, 128);
+    // calibration splits exist with the right geometry
+    let calib = load_tokens(&assets.manifest.file("calib").unwrap()).unwrap();
+    assert_eq!(calib.seq_len, assets.manifest.model.seq_len);
+    assert!(calib.n_seqs >= assets.manifest.eval_batch);
+    let tasks = amq::data::load_tasks(&assets.manifest.file("tasks").unwrap()).unwrap();
+    assert!(!tasks.is_empty());
+}
+
+#[test]
+fn runtime_end_to_end() {
+    require_artifacts!();
+    let dir = amq::artifacts_dir();
+    let assets = ModelAssets::load(&dir).unwrap();
+    let m: &Manifest = &assets.manifest;
+    let rt = Runtime::load(&dir, &assets.weights).unwrap();
+    let b = rt.batch_size();
+    let t = rt.seq_len();
+    let v = rt.vocab();
+
+    // -- golden: rust-side fp logits match the python-side reference -----
+    let golden = amq::data::Bundle::read(&m.file("golden").unwrap()).unwrap();
+    let gtoks = golden.tensor("tokens").unwrap();
+    let gfp = golden.tensor("fp_logits").unwrap();
+    assert_eq!(gtoks.shape, vec![b, t]);
+    let logits = rt.fp_logits(gtoks.as_i32().unwrap()).unwrap();
+    assert_eq!(logits.len(), b * t * v);
+    let want = gfp.as_f32().unwrap(); // first 2 sequences only
+    let mut max_err = 0.0f32;
+    for (i, &w) in want.iter().enumerate() {
+        max_err = max_err.max((logits[i] - w).abs());
+    }
+    assert!(
+        max_err < 5e-2,
+        "fp logits deviate from python golden: max abs err {max_err}"
+    );
+
+    // -- scorer consistency: fused (jsd, ce) vs rust-mirror computation --
+    let calib = load_tokens(&m.file("calib").unwrap()).unwrap();
+    let toks = calib.batch(0, b);
+    let mask = vec![1.0f32; b * t];
+    let batch = rt.prepare_batch(toks, &mask).unwrap();
+
+    // quantize every layer at 3 bits with HQQ (the proxy quantizer)
+    let hqq = Hqq::default();
+    let mut qlayers = Vec::new();
+    for l in &m.layers {
+        let w = assets.weights.linear(&l.name).unwrap();
+        let q = hqq.quantize(&w, 3, m.group_size, None);
+        qlayers.push(rt.upload_quant_layer(&q).unwrap());
+    }
+    let refs: Vec<&_> = qlayers.iter().collect();
+    let (jsd_fused, ce_fused) = rt.scores(&batch, &refs).unwrap();
+    assert!(jsd_fused.is_finite() && jsd_fused > 0.0);
+    assert!(ce_fused > 0.0 && ce_fused < 10.0);
+
+    // mirror: quant logits -> rust jsd/ce
+    let qlogits = rt.quant_logits(toks, &refs).unwrap();
+    let jsd_mirror = eval::jsd_mean(&batch.host_fp_logits, &qlogits, v, &mask);
+    let ce_mirror = eval::cross_entropy(&qlogits, toks, &mask, b, t, v);
+    assert!(
+        (jsd_fused - jsd_mirror).abs() < 2e-3,
+        "fused jsd {jsd_fused} vs mirror {jsd_mirror}"
+    );
+    assert!(
+        (ce_fused - ce_mirror).abs() < 2e-2,
+        "fused ce {ce_fused} vs mirror {ce_mirror}"
+    );
+
+    // -- monotonicity: 2-bit hurts more than 4-bit --------------------------
+    let mut q2 = Vec::new();
+    let mut q4 = Vec::new();
+    for l in &m.layers {
+        let w = assets.weights.linear(&l.name).unwrap();
+        q2.push(rt.upload_quant_layer(&hqq.quantize(&w, 2, m.group_size, None)).unwrap());
+        q4.push(rt.upload_quant_layer(&hqq.quantize(&w, 4, m.group_size, None)).unwrap());
+    }
+    let r2: Vec<&_> = q2.iter().collect();
+    let r4: Vec<&_> = q4.iter().collect();
+    let (jsd2, _) = rt.scores(&batch, &r2).unwrap();
+    let (jsd4, _) = rt.scores(&batch, &r4).unwrap();
+    assert!(
+        jsd2 > jsd_fused && jsd_fused > jsd4,
+        "JSD should be monotone in bits: 2b={jsd2} 3b={jsd_fused} 4b={jsd4}"
+    );
+    assert!(jsd4 < 0.05, "4-bit HQQ should be near-lossless, jsd={jsd4}");
+
+    // -- fp PPL sane on the test split -----------------------------------
+    let wiki = load_tokens(&m.file("test_wiki").unwrap()).unwrap();
+    let ppl_fp = eval::perplexity_on(&rt, &ModelHandle::Fp, &wiki).unwrap();
+    assert!(
+        ppl_fp > 1.0 && ppl_fp < 40.0,
+        "trained-model wiki PPL should be modest, got {ppl_fp}"
+    );
+    // 4-bit quant ppl close to fp; 2-bit worse
+    let ppl_q4 = eval::perplexity_on(&rt, &ModelHandle::Quant(&r4), &wiki).unwrap();
+    let ppl_q2 = eval::perplexity_on(&rt, &ModelHandle::Quant(&r2), &wiki).unwrap();
+    assert!(ppl_q4 < ppl_q2, "4-bit PPL {ppl_q4} !< 2-bit PPL {ppl_q2}");
+    assert!(ppl_q4 < ppl_fp * 1.3, "4-bit PPL {ppl_q4} vs fp {ppl_fp}");
+
+    // -- override path: RTN-dequantized weights through the fp graph -----
+    let rtn = Rtn;
+    let mut overrides = std::collections::HashMap::new();
+    for l in &m.layers {
+        let w = assets.weights.linear(&l.name).unwrap();
+        let dq = rtn.quantize(&w, 4, m.group_size, None).dequant();
+        overrides.insert(
+            l.name.clone(),
+            rt.upload_f32(&dq.data, &[dq.rows, dq.cols]).unwrap(),
+        );
+    }
+    let ppl_ov =
+        eval::perplexity_on(&rt, &ModelHandle::Override(&overrides), &wiki).unwrap();
+    assert!(ppl_ov < ppl_fp * 1.3, "override PPL {ppl_ov} vs fp {ppl_fp}");
+
+    // -- task scoring runs and fp is above chance ---------------------------
+    let tasks = amq::data::load_tasks(&m.file("tasks").unwrap()).unwrap();
+    let subset: Vec<_> = tasks
+        .iter()
+        .filter(|t| t.family == "recall" || t.family == "agreement")
+        .take(60)
+        .cloned()
+        .collect();
+    let res = eval::tasks_on(&rt, &ModelHandle::Fp, &subset, m.pad_token()).unwrap();
+    let avg = res.macro_avg(&["recall", "agreement"]);
+    assert!(avg > 40.0, "fp model should beat 25% chance clearly, got {avg}");
+}

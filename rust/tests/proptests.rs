@@ -1,0 +1,288 @@
+//! Property-based tests on coordinator + quantizer invariants.
+//!
+//! The offline build has no `proptest`, so these are hand-rolled randomized
+//! properties: many seeded trials per invariant, with the failing seed
+//! printed so a failure is reproducible.
+
+use amq::coordinator::archive::pareto_front_of;
+use amq::coordinator::nsga2::{self, dominates, Individual};
+use amq::coordinator::space::SearchSpace;
+use amq::coordinator::Archive;
+use amq::quant::{frob_error, pack, Hqq, Quantizer, Rtn};
+use amq::tensor::Mat;
+use amq::util::Rng;
+
+const TRIALS: usize = 60;
+
+fn rand_space(rng: &mut Rng) -> SearchSpace {
+    let n = rng.range(2, 32);
+    let mut choices = Vec::new();
+    for _ in 0..n {
+        let set: Vec<u8> = match rng.below(4) {
+            0 => vec![2, 3, 4],
+            1 => vec![2, 4],
+            2 => vec![3, 4],
+            _ => vec![4],
+        };
+        choices.push(set);
+    }
+    SearchSpace {
+        params: (0..n).map(|_| 128 * (1 + rng.below(4))).collect(),
+        groups: (0..n).map(|_| 1 + rng.below(4)).collect(),
+        choices,
+        group_size: 128,
+    }
+}
+
+fn rand_mat(rng: &mut Rng, n: usize, k: usize) -> Mat {
+    let mut w = Mat::zeros(n, k);
+    for v in &mut w.data {
+        *v = rng.normal() * 0.15;
+    }
+    w
+}
+
+// ---------------------------------------------------------------------------
+// Space invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_configs_are_contained_and_bounded() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(seed);
+        let space = rand_space(&mut rng);
+        let cfg = space.random(&mut rng);
+        assert!(space.contains(&cfg), "seed {seed}");
+        let bits = space.avg_bits(&cfg);
+        assert!((2.0..=4.5).contains(&bits), "seed {seed}: {bits}");
+    }
+}
+
+#[test]
+fn prop_repair_is_idempotent_and_contained() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let space = rand_space(&mut rng);
+        let mut cfg: Vec<u8> = (0..space.n_layers())
+            .map(|_| [1u8, 2, 3, 4, 5][rng.below(5)])
+            .collect();
+        space.repair(&mut cfg);
+        assert!(space.contains(&cfg), "seed {seed}");
+        let again = {
+            let mut c = cfg.clone();
+            space.repair(&mut c);
+            c
+        };
+        assert_eq!(cfg, again, "seed {seed}: repair not idempotent");
+    }
+}
+
+#[test]
+fn prop_avg_bits_monotone_in_any_single_gene() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let space = rand_space(&mut rng);
+        let cfg = space.random(&mut rng);
+        let li = rng.below(space.n_layers());
+        for &b in &space.choices[li] {
+            for &b2 in &space.choices[li] {
+                if b2 <= b {
+                    continue;
+                }
+                let mut lo = cfg.clone();
+                lo[li] = b;
+                let mut hi = cfg.clone();
+                hi[li] = b2;
+                assert!(
+                    space.avg_bits(&lo) < space.avg_bits(&hi),
+                    "seed {seed}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pareto / NSGA-II invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pareto_front_is_mutually_non_dominating_and_complete() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let n = rng.range(2, 60);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+        let front = pareto_front_of(&pts);
+        assert!(!front.is_empty(), "seed {seed}");
+        // no front point dominated by any point
+        for &i in &front {
+            for (j, q) in pts.iter().enumerate() {
+                if j == i {
+                    continue;
+                }
+                let dominated = q.0 <= pts[i].0 && q.1 <= pts[i].1
+                    && (q.0 < pts[i].0 || q.1 < pts[i].1);
+                assert!(!dominated, "seed {seed}: front point {i} dominated by {j}");
+            }
+        }
+        // every non-front point is dominated by some point
+        for (j, q) in pts.iter().enumerate() {
+            if front.contains(&j) {
+                continue;
+            }
+            let dominated = pts.iter().enumerate().any(|(i, p)| {
+                i != j && p.0 <= q.0 && p.1 <= q.1 && (p.0 < q.0 || p.1 < q.1)
+            });
+            assert!(dominated, "seed {seed}: point {j} not on front yet undominated");
+        }
+    }
+}
+
+#[test]
+fn prop_non_dominated_sort_ranks_consistent_with_domination() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let n = rng.range(3, 40);
+        let mut pop: Vec<Individual> = (0..n)
+            .map(|_| Individual {
+                config: vec![],
+                obj: [rng.f64(), rng.f64()],
+                rank: 0,
+                crowding: 0.0,
+            })
+            .collect();
+        nsga2::non_dominated_sort(&mut pop);
+        for i in 0..n {
+            for j in 0..n {
+                if dominates(&pop[i].obj, &pop[j].obj) {
+                    assert!(
+                        pop[i].rank < pop[j].rank,
+                        "seed {seed}: dominator rank {} !< {}",
+                        pop[i].rank,
+                        pop[j].rank
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_nsga2_population_stays_in_space() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let space = rand_space(&mut rng);
+        let pop = nsga2::run(
+            &space,
+            vec![],
+            &nsga2::Nsga2Params {
+                pop_size: 24,
+                generations: 6,
+                crossover_prob: 0.9,
+                mutation_prob: 0.2,
+            },
+            &mut rng,
+            |cfg| [cfg.iter().map(|&b| b as f64).sum(), space.avg_bits(cfg)],
+        );
+        for ind in &pop {
+            assert!(space.contains(&ind.config), "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Archive invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_archive_best_under_is_feasible_and_optimal() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let mut archive = Archive::new();
+        let space = rand_space(&mut rng);
+        for _ in 0..rng.range(5, 80) {
+            let cfg = space.random(&mut rng);
+            let bits = space.avg_bits(&cfg);
+            archive.insert(cfg, rng.f32(), bits);
+        }
+        let budget = 2.0 + 2.5 * rng.f64();
+        if let Some(best) = archive.best_under(budget, 0.005) {
+            assert!(best.avg_bits <= budget + 0.005, "seed {seed}");
+            for s in &archive.samples {
+                if s.avg_bits <= budget + 0.005 {
+                    assert!(best.jsd <= s.jsd, "seed {seed}: not minimal");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pack_roundtrip_random_shapes() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let bits = [2u8, 3, 4, 8][rng.below(4)];
+        let n = rng.range(1, 3000);
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+        let packed = pack::pack(&codes, bits);
+        assert_eq!(packed.len(), pack::packed_bytes(n, bits), "seed {seed}");
+        assert_eq!(pack::unpack(&packed, bits, n), codes, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_quantizers_error_monotone_in_bits() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let n = 8 * rng.range(1, 5);
+        let k = 64 * rng.range(1, 4);
+        let w = rand_mat(&mut rng, n, k);
+        for q in [&Rtn as &dyn Quantizer, &Hqq::default() as &dyn Quantizer] {
+            let e2 = frob_error(&w, &q.quantize(&w, 2, 64, None));
+            let e4 = frob_error(&w, &q.quantize(&w, 4, 64, None));
+            assert!(e4 < e2, "seed {seed} {}: e4 {e4} !< e2 {e2}", q.name());
+        }
+    }
+}
+
+#[test]
+fn prop_dequant_matches_manual_reconstruction() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let n = rng.range(1, 12);
+        let gs = 32;
+        let g = rng.range(1, 4);
+        let k = gs * g;
+        let w = rand_mat(&mut rng, n, k);
+        let q = Rtn.quantize(&w, 3, gs, None);
+        let dq = q.dequant();
+        for _ in 0..10 {
+            let o = rng.below(n);
+            let j = rng.below(k);
+            let gi = j / gs;
+            let expect = (q.codes[o * k + j] as f32 - q.zero[o * g + gi])
+                * q.scale[o * g + gi];
+            assert!((dq[(o, j)] - expect).abs() < 1e-6, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_group_metadata_overhead_accounting() {
+    // bits_per_weight = bits + 32/gs exactly, for any geometry
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(10_000 + seed);
+        let gs = [32usize, 64, 128][rng.below(3)];
+        let g = rng.range(1, 5);
+        let (n, k) = (8, gs * g);
+        let w = rand_mat(&mut rng, n, k);
+        let bits = [2u8, 3, 4][rng.below(3)];
+        let q = Rtn.quantize(&w, bits, gs, None);
+        let want = bits as f64 + 32.0 / gs as f64;
+        assert!((q.bits_per_weight() - want).abs() < 1e-12, "seed {seed}");
+    }
+}
