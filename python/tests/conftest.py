@@ -1,0 +1,45 @@
+"""Test-suite bootstrap: import-path setup + dependency-missing guards.
+
+The L2 compile layer (``python/compile``) depends on JAX/Pallas, and the
+kernel sweeps additionally use ``hypothesis``.  CI runners (and the offline
+build image) may lack either, so instead of failing at collection time this
+conftest skips exactly the test modules whose imports are unavailable:
+
+* no ``numpy``      -> everything skips (nothing is importable);
+* no ``jax``        -> model/AOT/kernel tests skip, pure-numpy data tests run;
+* no ``hypothesis`` -> the kernel property sweeps skip.
+
+``python -m pytest python/tests -q`` therefore passes (with skips) on any
+runner, and exercises the full surface wherever the real deps exist.
+"""
+
+import importlib.util
+import os
+import sys
+
+# ``from compile import ...`` resolves against python/, regardless of cwd.
+_PYTHON_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _PYTHON_DIR not in sys.path:
+    sys.path.insert(0, _PYTHON_DIR)
+
+
+def _missing(*modules: str) -> list:
+    return [m for m in modules if importlib.util.find_spec(m) is None]
+
+
+# Per-module hard requirements (beyond numpy/pytest themselves).
+_REQUIREMENTS = {
+    "test_data.py": ["numpy"],
+    "test_model.py": ["numpy", "jax"],
+    "test_aot.py": ["numpy", "jax"],
+    "test_kernels.py": ["numpy", "jax", "hypothesis"],
+}
+
+collect_ignore = []
+for _file, _deps in _REQUIREMENTS.items():
+    _absent = _missing(*_deps)
+    if _absent:
+        sys.stderr.write(
+            f"[conftest] skipping {_file}: missing {', '.join(_absent)}\n"
+        )
+        collect_ignore.append(_file)

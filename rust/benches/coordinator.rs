@@ -5,6 +5,7 @@ use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
 use amq::coordinator::space::SearchSpace;
 use amq::coordinator::Archive;
+use amq::runtime::EvalService;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
 use std::time::Duration;
@@ -100,4 +101,33 @@ fn main() {
         std::hint::black_box(space.avg_bits(&cfg));
     })
     .print();
+
+    // -- evaluation pool: 1 vs N workers on a queue-bound workload --------
+    // Each request sleeps 2ms, standing in for a PJRT scorer round trip
+    // (the search hot path is device-wait bound, not CPU bound).  The
+    // per-candidate result is derived from a payload-seeded RNG, matching
+    // the pool's determinism contract.
+    header("evaluation pool (32-candidate batch, 2ms simulated device wait)");
+    let pool_bench = |workers: usize| {
+        let svc: EvalService<u64, f32> = EvalService::spawn_sharded(workers, |_shard| {
+            |candidate: u64| {
+                std::thread::sleep(Duration::from_millis(2));
+                let mut r = Rng::new(candidate ^ 0x9E3779B97F4A7C15);
+                r.f32()
+            }
+        });
+        let res = bench(
+            &format!("pool with {workers} worker(s)"),
+            Duration::from_secs(2),
+            || {
+                std::hint::black_box(svc.call_batch((0..32).collect()));
+            },
+        );
+        res.print();
+        res
+    };
+    let one = pool_bench(1);
+    let four = pool_bench(4);
+    let speedup = one.median.as_secs_f64() / four.median.as_secs_f64().max(1e-12);
+    println!("pool speedup (4 vs 1 workers): {speedup:.2}x  (target: >= 2x on queue-bound work)");
 }

@@ -23,6 +23,8 @@ pub mod sensitivity;
 pub mod space;
 
 pub use archive::{Archive, Sample};
-pub use proxy::{ConfigEvaluator, DeviceProxy, ProxyEvaluator, ProxyStore};
+pub use proxy::{
+    ConfigEvaluator, DeviceProxy, EvalPool, PooledEvaluator, ProxyEvaluator, ProxyStore,
+};
 pub use search::{run_search, SearchParams, SearchResult};
 pub use space::{Config, SearchSpace};

@@ -152,9 +152,11 @@ fn make_child(
     child
 }
 
-/// Run NSGA-II with an arbitrary objective function (the search plugs in
+/// Run NSGA-II with a per-config objective function (the search plugs in
 /// `(predictor(config), avg_bits(config))`).  Returns the final population
-/// sorted by (rank, -crowding).
+/// sorted by (rank, -crowding).  Thin wrapper over [`run_batched`]; the RNG
+/// stream and results are identical to evaluating inline because objective
+/// evaluation never consumes the RNG.
 pub fn run<F>(
     space: &SearchSpace,
     seed_pop: Vec<Config>,
@@ -165,28 +167,55 @@ pub fn run<F>(
 where
     F: FnMut(&Config) -> [f64; 2],
 {
-    let mut pop: Vec<Individual> = Vec::with_capacity(params.pop_size);
-    for cfg in seed_pop.into_iter().take(params.pop_size) {
-        let obj = objectives(&cfg);
-        pop.push(Individual { config: cfg, obj, rank: 0, crowding: 0.0 });
+    run_batched(space, seed_pop, params, rng, |cfgs| {
+        cfgs.iter().map(&mut objectives).collect()
+    })
+}
+
+/// Run NSGA-II with a *batched* objective: each generation's offspring are
+/// produced first (all genetic operators run, consuming the RNG), then the
+/// whole cohort is scored in one call — the hook the sharded evaluation
+/// pool uses to fan per-individual scoring out across workers.
+pub fn run_batched<F>(
+    space: &SearchSpace,
+    seed_pop: Vec<Config>,
+    params: &Nsga2Params,
+    rng: &mut Rng,
+    mut objectives: F,
+) -> Vec<Individual>
+where
+    F: FnMut(&[Config]) -> Vec<[f64; 2]>,
+{
+    let mut init: Vec<Config> = seed_pop.into_iter().take(params.pop_size).collect();
+    while init.len() < params.pop_size {
+        init.push(space.random(rng));
     }
-    while pop.len() < params.pop_size {
-        let cfg = space.random(rng);
-        let obj = objectives(&cfg);
-        pop.push(Individual { config: cfg, obj, rank: 0, crowding: 0.0 });
-    }
+    let objs = objectives(&init);
+    assert_eq!(objs.len(), init.len(), "batched objective must score every config");
+    let mut pop: Vec<Individual> = init
+        .into_iter()
+        .zip(objs)
+        .map(|(config, obj)| Individual { config, obj, rank: 0, crowding: 0.0 })
+        .collect();
     rank_population(&mut pop);
 
     for _gen in 0..params.generations {
-        // offspring
-        let mut children: Vec<Individual> = Vec::with_capacity(params.pop_size);
-        while children.len() < params.pop_size {
+        // offspring cohort (genetic operators only — no scoring yet)
+        let mut offspring: Vec<Config> = Vec::with_capacity(params.pop_size);
+        while offspring.len() < params.pop_size {
             let p1 = tournament(&pop, rng).config.clone();
             let p2 = tournament(&pop, rng).config.clone();
-            let child = make_child(space, &p1, &p2, params, rng);
-            let obj = objectives(&child);
-            children.push(Individual { config: child, obj, rank: 0, crowding: 0.0 });
+            offspring.push(make_child(space, &p1, &p2, params, rng));
         }
+        // score the whole cohort at once (a short result would silently
+        // shrink the population through the zip below — hard error instead)
+        let objs = objectives(&offspring);
+        assert_eq!(objs.len(), offspring.len(), "batched objective must score every config");
+        let mut children: Vec<Individual> = offspring
+            .into_iter()
+            .zip(objs)
+            .map(|(config, obj)| Individual { config, obj, rank: 0, crowding: 0.0 })
+            .collect();
         pop.append(&mut children);
         rank_population(&mut pop);
         // environmental selection: best pop_size by (rank, crowding)
@@ -306,6 +335,29 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.config, y.config);
+        }
+    }
+
+    #[test]
+    fn batched_matches_per_config() {
+        // run() and run_batched() must walk the identical RNG stream and
+        // produce the identical population (the pool-dispatch refactor must
+        // not change search results).
+        let space = toy_space(7);
+        let p = Nsga2Params { pop_size: 20, generations: 6, crossover_prob: 0.9, mutation_prob: 0.15 };
+        let score = |cfg: &Config| {
+            let q: f64 = cfg.iter().map(|&b| ((4 - b) as f64).powi(2)).sum();
+            [q, space.avg_bits(cfg)]
+        };
+        let a = run(&space, vec![], &p, &mut Rng::new(31), score);
+        let b = run_batched(&space, vec![], &p, &mut Rng::new(31), |cfgs| {
+            cfgs.iter().map(score).collect()
+        });
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.obj, y.obj);
+            assert_eq!(x.rank, y.rank);
         }
     }
 }

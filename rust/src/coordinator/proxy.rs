@@ -8,9 +8,10 @@ use super::space::Config;
 use crate::data::Manifest;
 use crate::model::{HessianStore, WeightStore};
 use crate::quant::{QuantizedLinear, Quantizer};
-use crate::runtime::{QuantLayerBufs, Runtime, ScoreBatch};
+use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch, ServiceStats};
 use crate::Result;
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Host-side precomputed quantizations: (layer index, bits) -> layer.
@@ -70,8 +71,10 @@ impl ProxyStore {
 }
 
 /// Device-side proxy: all pieces uploaded once; assembly picks buffer refs.
+/// The host-side [`ProxyStore`] is behind an `Arc` so pool shards can reuse
+/// one quantization pass — only the device buffers are per-shard.
 pub struct DeviceProxy<'rt> {
-    pub store: ProxyStore,
+    pub store: Arc<ProxyStore>,
     bufs: Vec<Vec<QuantLayerBufs>>,
     rt: &'rt Runtime,
     pub upload_time: Duration,
@@ -79,6 +82,11 @@ pub struct DeviceProxy<'rt> {
 
 impl<'rt> DeviceProxy<'rt> {
     pub fn new(rt: &'rt Runtime, store: ProxyStore) -> Result<DeviceProxy<'rt>> {
+        Self::new_shared(rt, Arc::new(store))
+    }
+
+    /// Upload from a shared host-side store.
+    pub fn new_shared(rt: &'rt Runtime, store: Arc<ProxyStore>) -> Result<DeviceProxy<'rt>> {
         let t0 = Instant::now();
         let mut bufs = Vec::with_capacity(store.layers.len());
         for per_bits in &store.layers {
@@ -111,8 +119,32 @@ pub trait ConfigEvaluator {
     /// Mean calibration JSD of an assembled configuration (lower = better).
     fn eval_jsd(&mut self, config: &Config) -> Result<f32>;
 
+    /// Evaluate a batch of configurations, returning JSDs in input order.
+    ///
+    /// The default runs sequentially; pool-backed evaluators override this
+    /// to fan the batch out across worker shards.  Implementations must be
+    /// deterministic per configuration so results are bit-identical
+    /// regardless of batching or worker count.
+    fn eval_jsd_batch(&mut self, configs: &[Config]) -> Result<Vec<f32>> {
+        configs.iter().map(|c| self.eval_jsd(c)).collect()
+    }
+
     /// Number of true evaluations performed so far.
     fn count(&self) -> usize;
+}
+
+/// Mean fused-scorer JSD of an assembled configuration over a batch set —
+/// the single definition of the search's true-evaluation quantity, shared
+/// by the in-thread [`ProxyEvaluator`] and the pool shards so their results
+/// are bit-identical by construction.
+pub fn mean_jsd(proxy: &DeviceProxy, batches: &[ScoreBatch], config: &Config) -> Result<f32> {
+    let layers = proxy.assemble(config);
+    let mut sum = 0.0f64;
+    for b in batches {
+        let (jsd, _ce) = proxy.runtime().scores(b, &layers)?;
+        sum += jsd as f64;
+    }
+    Ok((sum / batches.len().max(1) as f64) as f32)
 }
 
 /// PJRT-backed evaluator: assembles through the device proxy and runs the
@@ -143,17 +175,100 @@ impl ConfigEvaluator for ProxyEvaluator<'_> {
             return Ok(v);
         }
         let t0 = Instant::now();
-        let layers = self.proxy.assemble(config);
-        let mut sum = 0.0f64;
-        for b in self.batches {
-            let (jsd, _ce) = self.proxy.runtime().scores(b, &layers)?;
-            sum += jsd as f64;
-        }
-        let jsd = (sum / self.batches.len().max(1) as f64) as f32;
+        let jsd = mean_jsd(self.proxy, self.batches, config)?;
         self.evals += 1;
         self.eval_time += t0.elapsed();
         self.cache.insert(config.clone(), jsd);
         Ok(jsd)
+    }
+
+    fn count(&self) -> usize {
+        self.evals
+    }
+}
+
+/// The sharded evaluation pool's wire types: owned configurations in,
+/// per-candidate JSD results out.
+pub type EvalPool = EvalService<Config, Result<f32>>;
+
+/// Pool-backed [`ConfigEvaluator`]: fans candidate batches out across the
+/// shards of an [`EvalPool`] and reassembles replies in submission order, so
+/// the archive a search produces is identical for any worker count.
+///
+/// The JSD cache and the true-eval counter live on the caller side (like
+/// [`ProxyEvaluator`]); shards stay stateless with respect to candidates.
+pub struct PooledEvaluator {
+    svc: Arc<EvalPool>,
+    cache: HashMap<Config, f32>,
+    evals: usize,
+    pub eval_time: Duration,
+}
+
+impl PooledEvaluator {
+    /// Spawn a fresh pool: `builder(shard)` runs on each worker thread and
+    /// constructs that shard's evaluation closure there (this is where a
+    /// non-`Send` PJRT runtime stack gets built per shard).
+    pub fn spawn<B, F>(workers: usize, builder: B) -> Self
+    where
+        B: Fn(usize) -> F + Send + Sync + 'static,
+        F: FnMut(Config) -> Result<f32> + 'static,
+    {
+        Self::from_service(Arc::new(EvalService::spawn_sharded(workers, builder)))
+    }
+
+    /// Wrap an existing (possibly shared) pool.  Each wrapper gets its own
+    /// cache/counters; the underlying shards are reused across searches.
+    pub fn from_service(svc: Arc<EvalPool>) -> Self {
+        PooledEvaluator {
+            svc,
+            cache: HashMap::new(),
+            evals: 0,
+            eval_time: Duration::ZERO,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.svc.n_workers()
+    }
+
+    pub fn pool_stats(&self) -> ServiceStats {
+        self.svc.stats()
+    }
+}
+
+impl ConfigEvaluator for PooledEvaluator {
+    fn eval_jsd(&mut self, config: &Config) -> Result<f32> {
+        Ok(self.eval_jsd_batch(std::slice::from_ref(config))?[0])
+    }
+
+    fn eval_jsd_batch(&mut self, configs: &[Config]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        // Unseen, batch-deduplicated candidates, in first-occurrence order.
+        let mut pending: Vec<Config> = Vec::new();
+        for c in configs {
+            if !self.cache.contains_key(c) && !pending.contains(c) {
+                pending.push(c.clone());
+            }
+        }
+        // Fan out, then reassemble in submission order (deterministic).
+        let replies: Vec<_> = pending.iter().map(|c| self.svc.submit(c.clone())).collect();
+        for (c, rx) in pending.iter().zip(replies) {
+            let jsd = rx
+                .recv()
+                .map_err(|_| eyre::anyhow!("evaluation pool worker died"))??;
+            self.evals += 1;
+            self.cache.insert(c.clone(), jsd);
+        }
+        self.eval_time += t0.elapsed();
+        configs
+            .iter()
+            .map(|c| {
+                self.cache
+                    .get(c)
+                    .copied()
+                    .ok_or_else(|| eyre::anyhow!("missing pooled eval result"))
+            })
+            .collect()
     }
 
     fn count(&self) -> usize {
@@ -225,5 +340,62 @@ mod tests {
         let asm = store.assemble(&vec![2, 3]);
         assert_eq!(asm[0].codes, store.layers[0][0].codes);
         assert_eq!(asm[1].codes, store.layers[1][1].codes);
+    }
+
+    /// Deterministic synthetic shard eval: quadratic bit penalty, plus a
+    /// per-candidate seeded perturbation (the RNG is derived from the
+    /// payload, never from shard state — the pool's determinism contract).
+    fn synth_pool(workers: usize) -> PooledEvaluator {
+        PooledEvaluator::spawn(workers, |_shard| {
+            |cfg: Config| -> Result<f32> {
+                let mut seed = 0xA076_1D64_78BD_642Fu64;
+                for &b in &cfg {
+                    seed = seed.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+                }
+                let mut rng = crate::util::Rng::new(seed);
+                let base: f32 = cfg.iter().map(|&b| ((4 - b) as f32).powi(2)).sum();
+                Ok(base + rng.f32() * 1e-3)
+            }
+        })
+    }
+
+    #[test]
+    fn pooled_evaluator_caches_and_counts() {
+        let mut ev = synth_pool(2);
+        let a = ev.eval_jsd(&vec![2, 3, 4]).unwrap();
+        let b = ev.eval_jsd(&vec![2, 3, 4]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(ev.count(), 1, "cache hit must not re-evaluate");
+        let out = ev
+            .eval_jsd_batch(&[vec![2, 3, 4], vec![4, 4, 4], vec![2, 3, 4]])
+            .unwrap();
+        assert_eq!(out[0], a);
+        assert_eq!(out[2], a);
+        assert_eq!(ev.count(), 2, "batch dedups against cache and itself");
+    }
+
+    #[test]
+    fn pooled_evaluator_bit_identical_across_worker_counts() {
+        let configs: Vec<Config> = (0..24)
+            .map(|i| (0..6).map(|j| [2u8, 3, 4][(i + j) % 3]).collect())
+            .collect();
+        let mut one = synth_pool(1);
+        let mut four = synth_pool(4);
+        let a = one.eval_jsd_batch(&configs).unwrap();
+        let b = four.eval_jsd_batch(&configs).unwrap();
+        assert_eq!(a, b, "results must not depend on worker count");
+    }
+
+    #[test]
+    fn pooled_evaluator_surfaces_shard_errors() {
+        let mut ev = PooledEvaluator::spawn(2, |_shard| {
+            |cfg: Config| -> Result<f32> {
+                eyre::ensure!(cfg.len() == 3, "bad config length {}", cfg.len());
+                Ok(1.0)
+            }
+        });
+        assert!(ev.eval_jsd(&vec![2, 3, 4]).is_ok());
+        assert!(ev.eval_jsd(&vec![2, 3]).is_err());
+        assert_eq!(ev.count(), 1, "failed evals are not counted or cached");
     }
 }

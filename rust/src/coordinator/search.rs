@@ -129,18 +129,38 @@ pub fn run_search(
     let mut predictor_queries = 0usize;
 
     // -- initial sampling, spread across the bits range ------------------
+    // Candidates are drawn in chunks and true-evaluated through
+    // `eval_jsd_batch`, which pool-backed evaluators fan out across worker
+    // shards.  The RNG stream and the archive contents depend only on the
+    // chunk boundaries, never on how a chunk was scheduled, so the result
+    // is identical for any worker count.
     let lo = space.avg_bits(&space.choices.iter().map(|c| *c.iter().min().unwrap()).collect::<Vec<_>>());
     let hi = space.avg_bits(&space.choices.iter().map(|c| *c.iter().max().unwrap()).collect::<Vec<_>>());
+    let chunk_size = params.candidates_per_iter.max(1);
     let mut tries = 0;
     while archive.len() < params.n_init && tries < params.n_init * 50 {
-        tries += 1;
-        let target = lo + (hi - lo) * rng.f64();
-        let cfg = space.random_near(&mut rng, target, 0.05);
-        if archive.contains(&cfg) {
-            continue;
+        let want = (params.n_init - archive.len()).min(chunk_size);
+        let mut chunk: Vec<Config> = Vec::with_capacity(want);
+        while chunk.len() < want && tries < params.n_init * 50 {
+            tries += 1;
+            let target = lo + (hi - lo) * rng.f64();
+            let cfg = space.random_near(&mut rng, target, 0.05);
+            if archive.contains(&cfg) || chunk.contains(&cfg) {
+                continue;
+            }
+            chunk.push(cfg);
         }
-        let jsd = evaluator.eval_jsd(&cfg)?;
-        archive.insert(cfg.clone(), jsd, space.avg_bits(&cfg));
+        let jsds = evaluator.eval_jsd_batch(&chunk)?;
+        eyre::ensure!(
+            jsds.len() == chunk.len(),
+            "evaluator returned {} results for {} candidates",
+            jsds.len(),
+            chunk.len()
+        );
+        for (cfg, jsd) in chunk.into_iter().zip(jsds) {
+            let bits = space.avg_bits(&cfg);
+            archive.insert(cfg, jsd, bits);
+        }
     }
 
     let mut history = Vec::new();
@@ -158,19 +178,25 @@ pub fn run_search(
         let mut pred = predictor::make(params.predictor, params.seed ^ it as u64);
         pred.fit(&xs, &ys);
 
-        // NSGA-II against the predictor, seeded with the current front
+        // NSGA-II against the predictor, seeded with the current front.
+        // The batched objective scores a whole generation of offspring at
+        // once (per-individual fan-out when the predictor is remote/pooled).
         let seed_pop: Vec<Config> = archive
             .pareto_front()
             .into_iter()
             .map(|i| archive.samples[i].config.clone())
             .collect();
         let mut queries = 0usize;
-        let pop = nsga2::run(space, seed_pop, &params.nsga, &mut rng, |cfg| {
-            queries += 1;
-            [
-                pred.predict(&space.features(cfg, &active)) as f64,
-                space.avg_bits(cfg),
-            ]
+        let pop = nsga2::run_batched(space, seed_pop, &params.nsga, &mut rng, |cfgs| {
+            queries += cfgs.len();
+            cfgs.iter()
+                .map(|cfg| {
+                    [
+                        pred.predict(&space.features(cfg, &active)) as f64,
+                        space.avg_bits(cfg),
+                    ]
+                })
+                .collect()
         });
         predictor_queries += queries;
 
@@ -192,27 +218,60 @@ pub fn run_search(
                 .collect()
         };
 
-        // true evaluation + archive update
-        let mut new_evals = 0;
+        // true evaluation + archive update: the whole candidate set goes to
+        // the evaluator as one batch (concurrent across pool shards), then
+        // archive insertion replays the replies in submission order.
+        let mut to_eval: Vec<Config> = Vec::new();
         for cfg in picked {
-            if archive.contains(&cfg) {
-                continue;
+            if !archive.contains(&cfg) && !to_eval.contains(&cfg) {
+                to_eval.push(cfg);
             }
-            let jsd = evaluator.eval_jsd(&cfg)?;
-            if archive.insert(cfg.clone(), jsd, space.avg_bits(&cfg)) {
+        }
+        let jsds = evaluator.eval_jsd_batch(&to_eval)?;
+        eyre::ensure!(
+            jsds.len() == to_eval.len(),
+            "evaluator returned {} results for {} candidates",
+            jsds.len(),
+            to_eval.len()
+        );
+        let mut new_evals = 0;
+        for (cfg, jsd) in to_eval.into_iter().zip(jsds) {
+            let bits = space.avg_bits(&cfg);
+            if archive.insert(cfg, jsd, bits) {
                 new_evals += 1;
             }
         }
-        // keep exploring if the predictor front collapsed (all seen)
+        // keep exploring if the predictor front collapsed (all seen): draw
+        // refill chunks until quota, stopping at the first duplicate draw
         while new_evals < params.candidates_per_iter / 2 {
-            let target = lo + (hi - lo) * rng.f64();
-            let cfg = space.random_near(&mut rng, target, 0.05);
-            if archive.contains(&cfg) {
+            let want = params.candidates_per_iter / 2 - new_evals;
+            let mut chunk: Vec<Config> = Vec::with_capacity(want);
+            let mut saw_duplicate = false;
+            while chunk.len() < want {
+                let target = lo + (hi - lo) * rng.f64();
+                let cfg = space.random_near(&mut rng, target, 0.05);
+                if archive.contains(&cfg) || chunk.contains(&cfg) {
+                    saw_duplicate = true;
+                    break;
+                }
+                chunk.push(cfg);
+            }
+            let jsds = evaluator.eval_jsd_batch(&chunk)?;
+            eyre::ensure!(
+                jsds.len() == chunk.len(),
+                "evaluator returned {} results for {} candidates",
+                jsds.len(),
+                chunk.len()
+            );
+            for (cfg, jsd) in chunk.into_iter().zip(jsds) {
+                let bits = space.avg_bits(&cfg);
+                if archive.insert(cfg, jsd, bits) {
+                    new_evals += 1;
+                }
+            }
+            if saw_duplicate {
                 break;
             }
-            let jsd = evaluator.eval_jsd(&cfg)?;
-            archive.insert(cfg.clone(), jsd, space.avg_bits(&cfg));
-            new_evals += 1;
         }
 
         history.push(IterStat {

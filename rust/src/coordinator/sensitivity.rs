@@ -3,7 +3,7 @@
 //! calibration JSD of the assembled model.
 
 use super::proxy::ConfigEvaluator;
-use super::space::SearchSpace;
+use super::space::{Config, SearchSpace};
 use crate::Result;
 
 #[derive(Clone, Debug)]
@@ -25,12 +25,22 @@ pub fn measure(
         .map(|c| *c.iter().max().unwrap())
         .collect();
     let baseline = evaluator.eval_jsd(&max_cfg)?;
-    let mut jsd = Vec::with_capacity(n);
-    for li in 0..n {
-        let mut cfg = max_cfg.clone();
-        cfg[li] = *space.choices[li].iter().min().unwrap();
-        jsd.push(evaluator.eval_jsd(&cfg)?);
-    }
+    // One single-layer-at-min config per layer, dispatched as a single
+    // batch: a pool-backed evaluator scans all layers concurrently.
+    let probes: Vec<Config> = (0..n)
+        .map(|li| {
+            let mut cfg = max_cfg.clone();
+            cfg[li] = *space.choices[li].iter().min().unwrap();
+            cfg
+        })
+        .collect();
+    let jsd = evaluator.eval_jsd_batch(&probes)?;
+    eyre::ensure!(
+        jsd.len() == probes.len(),
+        "evaluator returned {} results for {} probes",
+        jsd.len(),
+        probes.len()
+    );
     Ok(Sensitivity { jsd, baseline })
 }
 

@@ -3,14 +3,18 @@
 
 use super::{cache, Ctx};
 use crate::coordinator::{
-    pruning, run_search, sensitivity, Archive, Config, DeviceProxy,
-    ProxyEvaluator, ProxyStore, SearchParams, SearchSpace,
+    pruning, run_search, sensitivity, Archive, Config, ConfigEvaluator, DeviceProxy,
+    EvalPool, PooledEvaluator, ProxyEvaluator, ProxyStore, SearchParams, SearchSpace,
 };
+use crate::data::load_tokens;
 use crate::eval::{self, ModelHandle, TaskResults};
+use crate::model::ModelAssets;
 use crate::quant::{AwqClip, BitStack, Hqq, PbLlm, Quantizer};
-use crate::runtime::QuantLayerBufs;
+use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch};
 use crate::Result;
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 /// Memory budgets (average bits) used across Tables 1/2 and Figures 1/7/8.
@@ -29,22 +33,34 @@ pub struct Pipeline<'rt> {
     pub proxy_build_secs: f64,
 }
 
+/// The proxy store every evaluation path shares (HQQ, activation-independent
+/// — the whole point of §3.3).  Single definition so the main thread and the
+/// pool shards quantize identically.
+pub(super) fn build_proxy_store(assets: &ModelAssets) -> Result<ProxyStore> {
+    ProxyStore::build(&assets.manifest, &assets.weights, None, &Hqq::default())
+}
+
 impl<'rt> Pipeline<'rt> {
     /// Build the HQQ proxy, measure sensitivity, prune at 2x median.
     pub fn build(ctx: &'rt Ctx) -> Result<Pipeline<'rt>> {
         let t0 = Instant::now();
-        let store = ProxyStore::build(
-            &ctx.assets.manifest,
-            &ctx.assets.weights,
-            None, // HQQ is activation-independent — the whole point of §3.3
-            &Hqq::default(),
-        )?;
+        let store = build_proxy_store(&ctx.assets)?;
         let proxy = DeviceProxy::new(&ctx.rt, store)?;
         let proxy_build_secs = t0.elapsed().as_secs_f64();
 
         let full_space = SearchSpace::full(&ctx.assets.manifest);
-        let mut evaluator = ProxyEvaluator::new(&proxy, &ctx.search_batches);
-        let sens = sensitivity::measure(&full_space, &mut evaluator)?;
+        // The sensitivity scan is one batched dispatch of n_layers probes,
+        // so it fans out across pool shards when `--workers > 1`.
+        let sens = match ctx.eval_pool() {
+            Some(svc) => {
+                let mut evaluator = PooledEvaluator::from_service(svc);
+                sensitivity::measure(&full_space, &mut evaluator)?
+            }
+            None => {
+                let mut evaluator = ProxyEvaluator::new(&proxy, &ctx.search_batches);
+                sensitivity::measure(&full_space, &mut evaluator)?
+            }
+        };
         let mut space = full_space.clone();
         let prune_report = pruning::prune(&mut space, &sens, 2.0);
         Ok(Pipeline {
@@ -62,6 +78,100 @@ impl<'rt> Pipeline<'rt> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sharded evaluation pool (--workers N)
+// ---------------------------------------------------------------------------
+
+/// One shard's complete evaluation stack: its own PJRT runtime, its own
+/// uploaded proxy pieces, its own resident calibration batches.  Built on
+/// the worker thread (PJRT objects are not `Send`).
+struct ShardStack {
+    proxy: DeviceProxy<'static>,
+    batches: Vec<ScoreBatch>,
+}
+
+impl ShardStack {
+    fn build(
+        artifacts: &Path,
+        assets: &ModelAssets,
+        store: Arc<ProxyStore>,
+    ) -> Result<ShardStack> {
+        // Shards live for the process lifetime, so one leaked Runtime per
+        // shard stands in for a self-referential struct (DeviceProxy
+        // borrows the runtime it uploads to).
+        let rt: &'static Runtime =
+            Box::leak(Box::new(Runtime::load(artifacts, &assets.weights)?));
+        let proxy = DeviceProxy::new_shared(rt, store)?;
+        let calib = load_tokens(&assets.manifest.file("calib")?)?;
+        let batches = super::prepare_search_batches(rt, &calib)?;
+        Ok(ShardStack { proxy, batches })
+    }
+
+    /// Mean calibration JSD of an assembled candidate — literally the same
+    /// function [`ProxyEvaluator`] calls, so pooled and in-thread searches
+    /// agree bit-for-bit by construction.
+    fn eval(&self, cfg: &Config) -> Result<f32> {
+        crate::coordinator::proxy::mean_jsd(&self.proxy, &self.batches, cfg)
+    }
+}
+
+/// Host-side state shared by every pool shard: one `ModelAssets` load and
+/// one HQQ quantization pass (both plain `Send + Sync` data) serve all
+/// workers; only the PJRT runtime stack is per-shard.  The error arm keeps
+/// a `String` so a failed load is reported by every shard, not retried.
+type SharedShardInit = OnceLock<std::result::Result<(Arc<ModelAssets>, Arc<ProxyStore>), String>>;
+
+/// Spawn the PJRT-backed evaluation pool for `ctx.workers` shards.  Each
+/// shard lazily builds its runtime stack on first request, so an unused
+/// pool costs nothing.
+pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
+    let artifacts = ctx.artifacts.clone();
+    let shared: Arc<SharedShardInit> = Arc::new(OnceLock::new());
+    EvalService::spawn_sharded(ctx.workers, move |_shard| {
+        let artifacts = artifacts.clone();
+        let shared = shared.clone();
+        let mut stack: Option<ShardStack> = None;
+        let mut failed: Option<String> = None;
+        move |cfg: Config| -> Result<f32> {
+            if let Some(msg) = &failed {
+                eyre::bail!("shard init previously failed: {msg}");
+            }
+            if stack.is_none() {
+                let built = shared
+                    .get_or_init(|| {
+                        let assets = ModelAssets::load(&artifacts).map_err(|e| format!("{e}"))?;
+                        let store = build_proxy_store(&assets).map_err(|e| format!("{e}"))?;
+                        Ok((Arc::new(assets), Arc::new(store)))
+                    })
+                    .as_ref()
+                    .map_err(|e| eyre::anyhow!("{e}"))
+                    .and_then(|(assets, store)| {
+                        ShardStack::build(&artifacts, assets, store.clone())
+                    });
+                match built {
+                    Ok(s) => stack = Some(s),
+                    Err(e) => {
+                        let msg = format!("{e}");
+                        failed = Some(msg.clone());
+                        eyre::bail!("shard init failed: {msg}");
+                    }
+                }
+            }
+            stack.as_ref().unwrap().eval(&cfg)
+        }
+    })
+}
+
+/// The evaluator a search should drive: pool-backed when `--workers > 1`
+/// (each shard owns a full runtime stack), the in-thread proxy evaluator
+/// otherwise.  Both produce identical archives for a fixed seed.
+pub fn search_evaluator<'a>(ctx: &'a Ctx, pipe: &'a Pipeline) -> Box<dyn ConfigEvaluator + 'a> {
+    match ctx.eval_pool() {
+        Some(svc) => Box::new(PooledEvaluator::from_service(svc)),
+        None => Box::new(pipe.evaluator(ctx)),
+    }
+}
+
 /// The main AMQ search (ctx.preset), cached under `results/cache/`.
 pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> {
     let tag = format!(
@@ -70,13 +180,15 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
     );
     let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
     cache::archive_cached(&path, fresh, || {
-        let mut evaluator = pipe.evaluator(ctx);
-        let res = run_search(&pipe.space, &mut evaluator, &ctx.preset)?;
+        let mut evaluator = search_evaluator(ctx, pipe);
+        let res = run_search(&pipe.space, evaluator.as_mut(), &ctx.preset)?;
         eprintln!(
-            "[search] {} true evals, {} predictor queries, {:.1}s",
+            "[search] {} true evals, {} predictor queries, {:.1}s ({} worker{})",
             res.true_evals,
             res.predictor_queries,
-            res.total_time.as_secs_f64()
+            res.total_time.as_secs_f64(),
+            ctx.workers,
+            if ctx.workers == 1 { "" } else { "s" }
         );
         Ok(res.archive)
     })
@@ -248,8 +360,8 @@ pub fn search_cached(
 ) -> Result<Archive> {
     let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
     cache::archive_cached(&path, fresh, || {
-        let mut evaluator = pipe.evaluator(ctx);
-        let res = run_search(&pipe.space, &mut evaluator, params)?;
+        let mut evaluator = search_evaluator(ctx, pipe);
+        let res = run_search(&pipe.space, evaluator.as_mut(), params)?;
         Ok(res.archive)
     })
 }

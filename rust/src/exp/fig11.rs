@@ -1,7 +1,7 @@
 //! Figure 11 analog: robustness over random seeds — frontier C4-proxy JSD
 //! per bit-width as the search iterates, for 6 seeds.
 
-use super::common::Pipeline;
+use super::common::{self, Pipeline};
 use super::Ctx;
 use crate::coordinator::run_search;
 use crate::report::{fmt, Table};
@@ -22,8 +22,8 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
         params.seed = seed;
         // lighter budget per seed: fig11 is about variance, not depth
         params.iterations = ctx.preset.iterations;
-        let mut evaluator = pipe.evaluator(ctx);
-        let res = run_search(&pipe.space, &mut evaluator, &params)?;
+        let mut evaluator = common::search_evaluator(ctx, pipe);
+        let res = run_search(&pipe.space, evaluator.as_mut(), &params)?;
         histories.push(res.history);
     }
 

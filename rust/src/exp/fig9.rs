@@ -14,9 +14,12 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
         let tag = "search_unpruned";
         let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
         super::cache::archive_cached(&path, fresh, || {
-            let mut evaluator = pipe.evaluator(ctx);
-            let res =
-                crate::coordinator::run_search(&pipe.full_space, &mut evaluator, &ctx.preset)?;
+            let mut evaluator = common::search_evaluator(ctx, pipe);
+            let res = crate::coordinator::run_search(
+                &pipe.full_space,
+                evaluator.as_mut(),
+                &ctx.preset,
+            )?;
             Ok(res.archive)
         })?
     };

@@ -24,16 +24,33 @@ pub mod table4;
 pub mod table78;
 pub mod table9;
 
-use crate::coordinator::SearchParams;
+use crate::coordinator::{EvalPool, SearchParams};
 use crate::data::{load_tasks, load_tokens, TaskInstance, TokenSplit};
 use crate::model::ModelAssets;
-use crate::runtime::{Runtime, ScoreBatch};
+use crate::runtime::{Runtime, ScoreBatch, ServiceStats};
 use crate::Result;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
 
 /// Number of calibration sequences used on the search hot path (1 PJRT
 /// call per candidate).  Final tables evaluate on the full splits.
 pub const SEARCH_CALIB_SEQS: usize = 16;
+
+/// Prepared batches over the first [`SEARCH_CALIB_SEQS`] calibration
+/// sequences — the single definition shared by [`Ctx::load`] and the pool
+/// shards, so pooled and in-thread evaluation score identical data.
+pub fn prepare_search_batches(rt: &Runtime, calib: &TokenSplit) -> Result<Vec<ScoreBatch>> {
+    let b = rt.batch_size();
+    let t = rt.seq_len();
+    let mask = vec![1.0f32; b * t];
+    let n = SEARCH_CALIB_SEQS.min(calib.n_seqs);
+    eyre::ensure!(n % b == 0, "search calib must divide batch");
+    let mut batches = Vec::new();
+    for start in (0..n).step_by(b) {
+        batches.push(rt.prepare_batch(calib.batch(start, b), &mask)?);
+    }
+    Ok(batches)
+}
 
 /// Everything an experiment needs, loaded once.
 pub struct Ctx {
@@ -47,10 +64,29 @@ pub struct Ctx {
     pub search_batches: Vec<ScoreBatch>,
     pub out_dir: PathBuf,
     pub preset: SearchParams,
+    /// Artifacts directory (worker shards reload their own runtime from it).
+    pub artifacts: PathBuf,
+    /// Evaluation-pool width (`--workers N`); 1 = in-thread evaluation.
+    pub workers: usize,
+    /// Lazily-spawned sharded evaluation pool, shared across searches.
+    pool: OnceLock<Arc<EvalPool>>,
 }
 
 impl Ctx {
     pub fn load(artifacts_dir: &Path, out_dir: &Path, preset: SearchParams) -> Result<Ctx> {
+        Self::load_with_workers(artifacts_dir, out_dir, preset, 1)
+    }
+
+    /// Load with an explicit evaluation-pool width.  `workers <= 1` keeps
+    /// every true-evaluation on the calling thread (the seed behaviour);
+    /// `workers > 1` spawns that many shards on first use, each owning its
+    /// own PJRT runtime stack.
+    pub fn load_with_workers(
+        artifacts_dir: &Path,
+        out_dir: &Path,
+        preset: SearchParams,
+        workers: usize,
+    ) -> Result<Ctx> {
         let assets = ModelAssets::load(artifacts_dir)?;
         let rt = Runtime::load(artifacts_dir, &assets.weights)?;
         let calib = load_tokens(&assets.manifest.file("calib")?)?;
@@ -58,15 +94,7 @@ impl Ctx {
         let c4 = load_tokens(&assets.manifest.file("test_c4")?)?;
         let tasks = load_tasks(&assets.manifest.file("tasks")?)?;
 
-        let b = rt.batch_size();
-        let t = rt.seq_len();
-        let mask = vec![1.0f32; b * t];
-        let n = SEARCH_CALIB_SEQS.min(calib.n_seqs);
-        eyre::ensure!(n % b == 0, "search calib must divide batch");
-        let mut search_batches = Vec::new();
-        for start in (0..n).step_by(b) {
-            search_batches.push(rt.prepare_batch(calib.batch(start, b), &mask)?);
-        }
+        let search_batches = prepare_search_batches(&rt, &calib)?;
         std::fs::create_dir_all(out_dir)?;
         std::fs::create_dir_all(out_dir.join("cache"))?;
         Ok(Ctx {
@@ -79,7 +107,29 @@ impl Ctx {
             search_batches,
             out_dir: out_dir.to_path_buf(),
             preset,
+            artifacts: artifacts_dir.to_path_buf(),
+            workers: workers.max(1),
+            pool: OnceLock::new(),
         })
+    }
+
+    /// The shared evaluation pool, spawned on first use (None when running
+    /// single-worker).  Shards initialize lazily on their first request, so
+    /// spawning the pool is cheap.
+    pub fn eval_pool(&self) -> Option<Arc<EvalPool>> {
+        if self.workers <= 1 {
+            return None;
+        }
+        Some(
+            self.pool
+                .get_or_init(|| Arc::new(common::spawn_search_pool(self)))
+                .clone(),
+        )
+    }
+
+    /// Pool statistics, if a pool was ever spawned (does not spawn one).
+    pub fn pool_stats(&self) -> Option<ServiceStats> {
+        self.pool.get().map(|p| p.stats())
     }
 
     /// Prepared batches over a whole token split (for final JSD evals).

@@ -45,8 +45,9 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
             let tag = format!("search_prune_{calib_name}_{}", (thr * 10.0) as u32);
             let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
             let archive = super::cache::archive_cached(&path, fresh, || {
-                let mut evaluator = pipe.evaluator(ctx);
-                let res = crate::coordinator::run_search(&space, &mut evaluator, &params)?;
+                let mut evaluator = common::search_evaluator(ctx, pipe);
+                let res =
+                    crate::coordinator::run_search(&space, evaluator.as_mut(), &params)?;
                 Ok(res.archive)
             })?;
             let mut row = vec![

@@ -18,9 +18,9 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, _fresh: bool) -> Result<()> {
     for iters in [base / 2, base, base * 2] {
         let mut params = ctx.preset.clone();
         params.iterations = iters.max(1);
-        let mut evaluator = pipe.evaluator(ctx);
+        let mut evaluator = common::search_evaluator(ctx, pipe);
         let t0 = Instant::now();
-        let res = run_search(&pipe.space, &mut evaluator, &params)?;
+        let res = run_search(&pipe.space, evaluator.as_mut(), &params)?;
         let secs = t0.elapsed().as_secs_f64();
         let mut row = vec![
             format!("{}", params.iterations),

@@ -72,8 +72,8 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
     // cached, so the number is honest); compression = deploy-time AWQ of
     // the chosen config.
     let t0 = Instant::now();
-    let mut evaluator = pipe.evaluator(ctx);
-    let res = run_search(&pipe.space, &mut evaluator, &ctx.preset)?;
+    let mut evaluator = common::search_evaluator(ctx, pipe);
+    let res = run_search(&pipe.space, evaluator.as_mut(), &ctx.preset)?;
     let amq_search = pipe.proxy_build_secs + t0.elapsed().as_secs_f64();
     let cfg = common::pick(&res.archive, &pipe.space, 3.0)?;
     let t0 = Instant::now();

@@ -14,6 +14,9 @@
 //!   --seed N                        search seed
 //!   --out DIR                       results directory (default: results)
 //!   --artifacts DIR                 artifacts directory
+//!   --workers N                     evaluation-pool shards (default: 1);
+//!                                   each shard owns its own runtime stack,
+//!                                   archives are identical for any N
 
 use amq::coordinator::SearchParams;
 use amq::exp::{self, Ctx};
@@ -26,6 +29,7 @@ struct Args {
     seed: Option<u64>,
     out: String,
     artifacts: Option<String>,
+    workers: usize,
 }
 
 fn parse_args() -> Args {
@@ -36,6 +40,7 @@ fn parse_args() -> Args {
         seed: None,
         out: "results".into(),
         artifacts: None,
+        workers: 1,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -57,6 +62,10 @@ fn parse_args() -> Args {
             "--artifacts" => {
                 i += 1;
                 args.artifacts = Some(argv[i].clone());
+            }
+            "--workers" => {
+                i += 1;
+                args.workers = argv[i].parse().expect("--workers N");
             }
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
@@ -95,7 +104,7 @@ fn preset(name: &str, seed: Option<u64>) -> SearchParams {
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR]");
+        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -122,8 +131,18 @@ fn main() -> Result<()> {
 
     let params = preset(&args.preset, args.seed);
     let t0 = std::time::Instant::now();
-    let ctx = Ctx::load(&artifacts, std::path::Path::new(&args.out), params)?;
-    eprintln!("[repro] runtime + artifacts loaded in {:.1}s", t0.elapsed().as_secs_f64());
+    let ctx = Ctx::load_with_workers(
+        &artifacts,
+        std::path::Path::new(&args.out),
+        params,
+        args.workers,
+    )?;
+    eprintln!(
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{})",
+        t0.elapsed().as_secs_f64(),
+        ctx.workers,
+        if ctx.workers == 1 { "" } else { "s" }
+    );
 
     if args.cmd == "check" {
         println!("artifacts: {}", artifacts.display());
@@ -212,5 +231,20 @@ fn main() -> Result<()> {
         stats.quant_calls, stats.quant_time.as_secs_f64(),
         stats.scores_calls, stats.scores_time.as_secs_f64(),
     );
+    if let Some(pool) = ctx.pool_stats() {
+        let per_shard: Vec<String> = pool
+            .per_shard
+            .iter()
+            .enumerate()
+            .map(|(i, s)| format!("#{i}:{} ({:.1}s busy)", s.completed, s.busy.as_secs_f64()))
+            .collect();
+        eprintln!(
+            "[pool] {} evals | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
+            pool.completed,
+            pool.mean_wait().as_secs_f64() * 1e3,
+            pool.mean_service().as_secs_f64() * 1e3,
+            per_shard.join(" "),
+        );
+    }
     Ok(())
 }

@@ -14,7 +14,7 @@
 
 mod service;
 
-pub use service::{EvalService, ServiceStats};
+pub use service::{EvalService, ServiceStats, ShardStats};
 
 use crate::data::Manifest;
 use crate::model::WeightStore;

@@ -1,8 +1,21 @@
-//! EvalService — a single-worker request queue in the style of a serving
-//! router's batcher.  PJRT objects are not `Send`, so the whole runtime stack
+//! EvalService — a sharded evaluation pool in the style of a serving
+//! router's batcher.  PJRT objects are not `Send`, so each runtime stack
 //! lives on one dedicated worker thread; callers (CLI, examples, the search
-//! loop when run concurrently) submit requests through a channel and receive
-//! results through per-request reply channels.
+//! loop) submit requests through a shared channel and receive results
+//! through per-request reply channels.
+//!
+//! Sharding model:
+//!  * N workers share a single FIFO request channel (work-sharing: whichever
+//!    shard is idle takes the next request, so a slow candidate never blocks
+//!    the queue behind one thread);
+//!  * each worker owns its own evaluation state, built *on the worker
+//!    thread* by the shard builder — this is how non-`Send` PJRT state is
+//!    confined per shard;
+//!  * every request carries its own reply channel, and `call_batch` collects
+//!    replies in submission order — results are therefore deterministically
+//!    ordered and bit-identical regardless of worker count, **provided** the
+//!    evaluation closure is a pure function of the payload (seed any
+//!    randomness per-candidate from the payload, never from shard state).
 //!
 //! Generic over request/response so tests can exercise the queueing logic
 //! without PJRT.
@@ -11,13 +24,22 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Queue/latency accounting.
+/// Per-shard accounting: how many requests the shard served and how long it
+/// spent serving them (busy time / wall time = utilization).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub completed: u64,
+    pub busy: Duration,
+}
+
+/// Queue/latency accounting, aggregated across shards.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub submitted: u64,
     pub completed: u64,
     pub total_queue_wait: Duration,
     pub total_service_time: Duration,
+    pub per_shard: Vec<ShardStats>,
 }
 
 impl ServiceStats {
@@ -36,6 +58,15 @@ impl ServiceStats {
             self.total_service_time / self.completed as u32
         }
     }
+
+    /// Fraction of `wall` each shard spent serving requests.
+    pub fn shard_utilization(&self, wall: Duration) -> Vec<f64> {
+        let w = wall.as_secs_f64().max(1e-12);
+        self.per_shard
+            .iter()
+            .map(|s| s.busy.as_secs_f64() / w)
+            .collect()
+    }
 }
 
 struct Request<Q, A> {
@@ -44,42 +75,92 @@ struct Request<Q, A> {
     reply: mpsc::Sender<A>,
 }
 
-/// Handle to the worker.  Dropping it shuts the worker down.
+/// Handle to the worker pool.  Dropping it shuts every worker down (after
+/// the queue drains).
 pub struct EvalService<Q: Send + 'static, A: Send + 'static> {
     tx: mpsc::Sender<Request<Q, A>>,
     stats: Arc<Mutex<ServiceStats>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
-    /// Spawn a worker.  `builder` runs *on the worker thread* and constructs
-    /// the evaluation closure there (this is how non-Send PJRT state is
-    /// confined to the worker).
+    /// Spawn a single worker.  `builder` runs *on the worker thread* and
+    /// constructs the evaluation closure there (back-compat single-shard
+    /// API; see [`EvalService::spawn_sharded`]).
     pub fn spawn<B, F>(builder: B) -> Self
     where
         B: FnOnce() -> F + Send + 'static,
-        F: FnMut(Q) -> A,
+        F: FnMut(Q) -> A + 'static,
     {
+        let cell = Mutex::new(Some(builder));
+        Self::spawn_sharded(1, move |_shard| {
+            let b = cell
+                .lock()
+                .unwrap()
+                .take()
+                .expect("single-shard builder invoked twice");
+            b()
+        })
+    }
+
+    /// Spawn `workers` shards.  `builder(shard_index)` runs once *on each
+    /// worker thread* and constructs that shard's evaluation closure there
+    /// (confining non-`Send` runtime state to its shard).
+    pub fn spawn_sharded<B, F>(workers: usize, builder: B) -> Self
+    where
+        B: Fn(usize) -> F + Send + Sync + 'static,
+        F: FnMut(Q) -> A + 'static,
+    {
+        let n = workers.max(1);
         let (tx, rx) = mpsc::channel::<Request<Q, A>>();
-        let stats = Arc::new(Mutex::new(ServiceStats::default()));
-        let stats2 = stats.clone();
-        let worker = std::thread::spawn(move || {
-            let mut eval = builder();
-            while let Ok(req) = rx.recv() {
-                let started = Instant::now();
-                let wait = started - req.enqueued;
-                let answer = eval(req.payload);
-                let service = started.elapsed();
-                {
-                    let mut s = stats2.lock().unwrap();
-                    s.completed += 1;
-                    s.total_queue_wait += wait;
-                    s.total_service_time += service;
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(Mutex::new(ServiceStats {
+            per_shard: vec![ShardStats::default(); n],
+            ..ServiceStats::default()
+        }));
+        let builder = Arc::new(builder);
+        let mut handles = Vec::with_capacity(n);
+        for shard in 0..n {
+            let rx = rx.clone();
+            let stats = stats.clone();
+            let builder = builder.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut eval = (*builder)(shard);
+                loop {
+                    // Holding the lock while blocked in recv() is the queue
+                    // discipline: exactly one idle shard waits on the channel,
+                    // the rest wait on the mutex.  The lock is released before
+                    // evaluation so other shards can pick up the next request.
+                    let req = {
+                        let guard = match rx.lock() {
+                            Ok(g) => g,
+                            Err(_) => break,
+                        };
+                        guard.recv()
+                    };
+                    let Ok(req) = req else { break };
+                    let started = Instant::now();
+                    let wait = started - req.enqueued;
+                    let answer = eval(req.payload);
+                    let service = started.elapsed();
+                    {
+                        let mut s = stats.lock().unwrap();
+                        s.completed += 1;
+                        s.total_queue_wait += wait;
+                        s.total_service_time += service;
+                        s.per_shard[shard].completed += 1;
+                        s.per_shard[shard].busy += service;
+                    }
+                    let _ = req.reply.send(answer);
                 }
-                let _ = req.reply.send(answer);
-            }
-        });
-        EvalService { tx, stats, worker: Some(worker) }
+            }));
+        }
+        EvalService { tx, stats, workers: handles }
+    }
+
+    /// Number of worker shards.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit a request; returns a receiver for the answer.
@@ -95,7 +176,8 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
         self.submit(payload).recv().expect("worker died")
     }
 
-    /// Submit a whole batch, then collect in order (pipeline-friendly).
+    /// Submit a whole batch, then collect replies in submission order —
+    /// the deterministic-reassembly primitive the search loop relies on.
     pub fn call_batch(&self, payloads: Vec<Q>) -> Vec<A> {
         let rxs: Vec<_> = payloads.into_iter().map(|p| self.submit(p)).collect();
         rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
@@ -108,10 +190,10 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
 
 impl<Q: Send + 'static, A: Send + 'static> Drop for EvalService<Q, A> {
     fn drop(&mut self) {
-        // Closing the channel stops the worker loop.
+        // Closing the channel stops the worker loops once the queue drains.
         let (dead_tx, _) = mpsc::channel();
         drop(std::mem::replace(&mut self.tx, dead_tx));
-        if let Some(w) = self.worker.take() {
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -128,6 +210,7 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.submitted, 1);
         assert_eq!(s.completed, 1);
+        assert_eq!(s.per_shard.len(), 1);
     }
 
     #[test]
@@ -156,5 +239,70 @@ mod tests {
         let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x);
         svc.call(1);
         drop(svc); // must not hang
+    }
+
+    #[test]
+    fn sharded_batch_preserves_order_under_contention() {
+        // Payload-dependent delays force out-of-order completion across
+        // shards; reply-channel reassembly must still return submission order.
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(4, |_shard| {
+            |x: u32| {
+                std::thread::sleep(Duration::from_micros(((x * 7919) % 977) as u64));
+                x + 1
+            }
+        });
+        let out = svc.call_batch((0..200).collect());
+        assert_eq!(out, (1..201).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sharded_results_identical_to_single() {
+        let eval = |x: u32| x.wrapping_mul(2654435761) ^ 0x9E37;
+        let one: EvalService<u32, u32> = EvalService::spawn_sharded(1, move |_| eval);
+        let four: EvalService<u32, u32> = EvalService::spawn_sharded(4, move |_| eval);
+        let inputs: Vec<u32> = (0..64).collect();
+        assert_eq!(one.call_batch(inputs.clone()), four.call_batch(inputs));
+    }
+
+    #[test]
+    fn sharded_stats_aggregate() {
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(3, |_s| |x: u32| x);
+        let _ = svc.call_batch((0..30).collect());
+        let s = svc.stats();
+        assert_eq!(s.submitted, 30);
+        assert_eq!(s.completed, 30);
+        assert_eq!(s.per_shard.len(), 3);
+        assert_eq!(s.per_shard.iter().map(|p| p.completed).sum::<u64>(), 30);
+        assert_eq!(s.shard_utilization(Duration::from_secs(1)).len(), 3);
+    }
+
+    #[test]
+    fn sharded_work_actually_distributes() {
+        // With blocking work and more requests than shards, no shard can
+        // serve everything: at least two shards must complete requests.
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(4, |_s| {
+            |x: u32| {
+                std::thread::sleep(Duration::from_millis(5));
+                x
+            }
+        });
+        let _ = svc.call_batch((0..16).collect());
+        let s = svc.stats();
+        let active = s.per_shard.iter().filter(|p| p.completed > 0).count();
+        assert!(active >= 2, "expected >=2 active shards, got {active}");
+    }
+
+    #[test]
+    fn shard_builder_sees_its_index() {
+        let svc: EvalService<(), usize> =
+            EvalService::spawn_sharded(1, |shard| move |_| shard);
+        assert_eq!(svc.call(()), 0);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(0, |_s| |x: u32| x);
+        assert_eq!(svc.n_workers(), 1);
+        assert_eq!(svc.call(7), 7);
     }
 }

@@ -1,0 +1,150 @@
+//! Sharded-evaluation-pool integration tests (no artifacts required):
+//! the pool must speed up queue-bound workloads without changing a single
+//! bit of the search result — `--workers 1` and `--workers 4` archives are
+//! identical for a fixed seed.
+
+use amq::coordinator::{
+    run_search, ConfigEvaluator, Config, PooledEvaluator, SearchParams, SearchSpace,
+};
+use amq::runtime::EvalService;
+use amq::util::Rng;
+use std::time::{Duration, Instant};
+
+fn toy_space(n: usize) -> SearchSpace {
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n],
+        params: vec![128 * 128; n],
+        groups: vec![128; n],
+        group_size: 128,
+    }
+}
+
+/// Deterministic synthetic "true evaluation": a heterogeneous quadratic bit
+/// penalty plus a small perturbation from a per-candidate seeded RNG (the
+/// pool's determinism contract: all randomness derives from the payload).
+fn synth_jsd(cfg: &Config) -> f32 {
+    let mut seed = 0xCBF2_9CE4_8422_2325u64;
+    for &b in cfg {
+        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(b as u64);
+    }
+    let mut rng = Rng::new(seed);
+    let base: f32 = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let w = if i % 4 == 0 { 1.0 } else { 0.05 };
+            w * ((4 - b) as f32).powi(2)
+        })
+        .sum();
+    base + rng.f32() * 1e-4
+}
+
+fn pooled(workers: usize) -> PooledEvaluator {
+    PooledEvaluator::spawn(workers, |_shard| {
+        |cfg: Config| -> amq::Result<f32> { Ok(synth_jsd(&cfg)) }
+    })
+}
+
+#[test]
+fn search_archive_identical_across_worker_counts() {
+    let space = toy_space(12);
+    let mut params = SearchParams::smoke();
+    params.seed = 17;
+
+    let mut ev1 = pooled(1);
+    let a = run_search(&space, &mut ev1, &params).unwrap();
+    let mut ev4 = pooled(4);
+    let b = run_search(&space, &mut ev4, &params).unwrap();
+
+    assert_eq!(a.archive.len(), b.archive.len());
+    for (x, y) in a.archive.samples.iter().zip(&b.archive.samples) {
+        assert_eq!(x.config, y.config, "configs diverge across worker counts");
+        assert_eq!(x.jsd.to_bits(), y.jsd.to_bits(), "jsd not bit-identical");
+        assert_eq!(x.avg_bits.to_bits(), y.avg_bits.to_bits());
+    }
+    assert_eq!(a.true_evals, b.true_evals);
+    assert_eq!(a.predictor_queries, b.predictor_queries);
+}
+
+#[test]
+fn pooled_matches_sequential_trait_default() {
+    // The pool must agree with the plain sequential ConfigEvaluator path.
+    struct Seq {
+        evals: usize,
+    }
+    impl ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.evals += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.evals
+        }
+    }
+
+    let space = toy_space(10);
+    let mut params = SearchParams::smoke();
+    params.seed = 5;
+    let a = run_search(&space, &mut Seq { evals: 0 }, &params).unwrap();
+    let mut ev = pooled(3);
+    let b = run_search(&space, &mut ev, &params).unwrap();
+    assert_eq!(a.archive.len(), b.archive.len());
+    for (x, y) in a.archive.samples.iter().zip(&b.archive.samples) {
+        assert_eq!(x.config, y.config);
+        assert_eq!(x.jsd.to_bits(), y.jsd.to_bits());
+    }
+}
+
+#[test]
+fn pool_throughput_scales_on_queue_bound_workload() {
+    // Each "evaluation" blocks for 10ms (a stand-in for a device round
+    // trip).  Four shards must clear a 32-candidate batch well under the
+    // sequential time — generous margins to stay robust on loaded CI boxes.
+    const DELAY: Duration = Duration::from_millis(10);
+    const BATCH: u32 = 32;
+
+    let run = |workers: usize| {
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(workers, |_shard| {
+            |x: u32| {
+                std::thread::sleep(DELAY);
+                x
+            }
+        });
+        let t0 = Instant::now();
+        let out = svc.call_batch((0..BATCH).collect());
+        let elapsed = t0.elapsed();
+        assert_eq!(out, (0..BATCH).collect::<Vec<_>>());
+        elapsed
+    };
+
+    let sequential_floor = DELAY * BATCH; // 320ms of pure work
+    let t1 = run(1);
+    assert!(
+        t1 >= sequential_floor,
+        "1 worker finished {t1:?}, below the physical floor {sequential_floor:?}"
+    );
+    let t4 = run(4);
+    // 4 shards: ideal 80ms; require merely < 75% of the 1-worker floor.
+    assert!(
+        t4 < sequential_floor * 3 / 4,
+        "4 workers took {t4:?}, expected well under {sequential_floor:?}"
+    );
+}
+
+#[test]
+fn pool_reports_per_shard_stats() {
+    let svc: EvalService<u32, u32> = EvalService::spawn_sharded(4, |_shard| {
+        |x: u32| {
+            std::thread::sleep(Duration::from_millis(3));
+            x * 2
+        }
+    });
+    let _ = svc.call_batch((0..20).collect());
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 20);
+    assert_eq!(stats.per_shard.len(), 4);
+    assert_eq!(stats.per_shard.iter().map(|s| s.completed).sum::<u64>(), 20);
+    let active = stats.per_shard.iter().filter(|s| s.completed > 0).count();
+    assert!(active >= 2, "work should spread across shards, got {active}");
+    assert!(stats.total_service_time >= Duration::from_millis(20 * 3));
+}

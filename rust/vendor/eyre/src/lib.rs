@@ -1,0 +1,147 @@
+//! Offline stand-in for the `eyre` crate (API-compatible subset).
+//!
+//! The build environment has no registry access, so the workspace vendors
+//! the exact surface the `amq` crate uses:
+//!
+//! * [`Report`] — an error value built from a message or any
+//!   `std::error::Error`, with `Display`/`Debug` and a source chain;
+//! * [`Result<T>`] — `std::result::Result<T, Report>`;
+//! * `anyhow!` / `eyre!` — construct a `Report` from a format string;
+//! * `bail!` — early-return `Err(anyhow!(...))`;
+//! * `ensure!` — `bail!` unless a condition holds (with or without message).
+//!
+//! To use the real crate instead, delete this directory and point the
+//! workspace at crates.io (`eyre = "0.6"`); no call sites change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error value: a message plus an optional source error.
+pub struct Report {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Report {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Report {
+        Report { msg: message.to_string(), source: None }
+    }
+
+    /// The root-cause chain, outermost first (empty for message-only reports).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next = self.source.as_deref().map(|e| e as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for (i, cause) in self.chain().enumerate() {
+            if i == 0 {
+                write!(f, "\n\nCaused by:")?;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+// `Report` deliberately does NOT implement `std::error::Error`, which is what
+// makes this blanket conversion coherent (mirroring real eyre/anyhow).
+impl<E: StdError + Send + Sync + 'static> From<E> for Report {
+    fn from(err: E) -> Report {
+        Report { msg: err.to_string(), source: Some(Box::new(err)) }
+    }
+}
+
+/// Crate-style result alias: `eyre::Result<T>`.
+pub type Result<T, E = Report> = std::result::Result<T, E>;
+
+/// Construct a [`Report`] from a format string (anyhow-compat spelling).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Report::msg(format!($($arg)*)) };
+}
+
+/// Construct a [`Report`] from a format string (eyre-native spelling).
+#[macro_export]
+macro_rules! eyre {
+    ($($arg:tt)*) => { $crate::Report::msg(format!($($arg)*)) };
+}
+
+/// Early-return `Err(Report)` from the enclosing function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Early-return unless `cond` holds.  With a single argument the message is
+/// the stringified condition (eyre behaviour).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn needs_two(x: i32) -> Result<i32> {
+        ensure!(x == 2, "want 2, got {x}");
+        Ok(x * 10)
+    }
+
+    fn bare_ensure(x: i32) -> Result<()> {
+        ensure!(x > 0);
+        Ok(())
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(needs_two(2).unwrap(), 20);
+        let err = needs_two(3).unwrap_err();
+        assert_eq!(err.to_string(), "want 2, got 3");
+        assert!(bare_ensure(1).is_ok());
+        assert!(bare_ensure(-1).unwrap_err().to_string().contains("x > 0"));
+    }
+
+    #[test]
+    fn from_std_error_keeps_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let rep: Report = io.into();
+        assert_eq!(rep.to_string(), "gone");
+        assert_eq!(rep.chain().count(), 1);
+        let dbg = format!("{rep:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}
