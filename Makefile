@@ -1,0 +1,28 @@
+# AMQ reproduction build entry points.
+#
+# `make artifacts` runs the python L2 compile path once (data -> train ->
+# hessians -> HLO text -> manifest); everything downstream (the `repro`
+# binary, benches, artifact-gated integration tests) is rust-only and
+# self-contained afterwards.
+
+PYTHON ?= python3
+
+.PHONY: artifacts artifacts-smoke test clean-artifacts
+
+# Full build (AMQ_TRAIN_STEPS=2000 by default; ~minutes on a laptop CPU).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
+
+# Reduced-step build for CI smoke: same artifact geometry, faster training.
+# Quality-sensitive runtime assertions are not valid against this model;
+# the artifact-gated host-side tests (asset validation, proxy-bank build)
+# are.
+artifacts-smoke:
+	cd python && AMQ_TRAIN_STEPS=$${AMQ_TRAIN_STEPS:-300} \
+		$(PYTHON) -m compile.aot --outdir ../artifacts --tasks-per-family 16
+
+test:
+	cargo build --release && cargo test -q
+
+clean-artifacts:
+	rm -rf artifacts

@@ -37,7 +37,8 @@ fn main() -> amq::Result<()> {
 
     let cfg = common::pick(&archive, &pipe.space, target_bits)?;
     let actual = pipe.space.avg_bits(&cfg);
-    let kind = DeployKind::LayerQuant(&cfg);
+    let cfg_bits = pipe.space.config_bits(&cfg);
+    let kind = DeployKind::LayerQuant(&cfg_bits);
     println!(
         "selected config: {actual:.3} avg bits, {:.0} MB @7B-equivalent",
         costmodel::model_memory_mb(m, &kind)

@@ -84,8 +84,16 @@ fn main() -> amq::Result<()> {
     let oneshot_cfg = amq::coordinator::oneshot::one_shot(&pipe.space, &scores, budget);
     let oneshot_jsd = ev2.eval_jsd(&oneshot_cfg)?;
     while pipe.space.avg_bits(&uni_cfg) > budget {
-        let i = uni_cfg.iter().position(|&b| b > 2).unwrap();
-        uni_cfg[i] = 2;
+        // demote the first demotable layer one bit step; pruned
+        // (pinned-at-max) layers have no lower gene and are skipped
+        let Some((i, g)) = uni_cfg
+            .iter()
+            .enumerate()
+            .find_map(|(i, &g)| pipe.space.demote(i, g).map(|d| (i, d)))
+        else {
+            break;
+        };
+        uni_cfg[i] = g;
     }
     let uni_jsd = ev2.eval_jsd(&uni_cfg)?;
     check("amq-beats-naive", amq_jsd <= uni_jsd,

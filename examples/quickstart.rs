@@ -4,7 +4,7 @@
 //!
 //!     make artifacts && cargo run --release --offline --example quickstart
 
-use amq::coordinator::{run_search, SearchParams};
+use amq::coordinator::{gene_bits, gene_method, run_search, SearchParams};
 use amq::exp::common::{self, Pipeline};
 use amq::exp::Ctx;
 
@@ -52,8 +52,13 @@ fn main() -> amq::Result<()> {
     let budget = 3.0;
     let cfg = common::pick(&res.archive, &pipe.space, budget)?;
     println!("\nbest config under {budget} bits (actual {:.3}):", pipe.space.avg_bits(&cfg));
-    for (l, b) in ctx.assets.manifest.layers.iter().zip(&cfg) {
-        print!("{}={b} ", l.name);
+    let multi = pipe.space.n_methods() > 1;
+    for (l, &g) in ctx.assets.manifest.layers.iter().zip(&cfg) {
+        if multi {
+            print!("{}={}@{} ", l.name, gene_bits(g), gene_method(g).name());
+        } else {
+            print!("{}={} ", l.name, gene_bits(g));
+        }
     }
     println!();
 

@@ -191,6 +191,10 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
         },
         "group_size": C.GROUP_SIZE,
         "bit_choices": list(C.BIT_CHOICES),
+        # Quantization methods the search genome may assign per layer
+        # (rust quant::registry names).  The coordinator's --methods flag
+        # overrides this enable list at search time.
+        "methods": ["hqq"],
         "eval_batch": B,
         "layers": [
             {"name": n,

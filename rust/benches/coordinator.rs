@@ -3,9 +3,11 @@
 
 use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
-use amq::coordinator::space::SearchSpace;
-use amq::coordinator::Archive;
+use amq::coordinator::space::{gene, SearchSpace};
+use amq::coordinator::{Archive, Config, ProxyBank};
+use amq::quant::{MethodId, Quantizer};
 use amq::runtime::EvalService;
+use amq::tensor::Mat;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
 use std::time::Duration;
@@ -54,17 +56,19 @@ fn main() {
     })
     .print();
 
+    let nsga_params = Nsga2Params {
+        pop_size: 100,
+        generations: 15,
+        crossover_prob: 0.9,
+        mutation_prob: 0.1,
+    };
     let mut seed = 0u64;
     bench("nsga-ii pop100 x 15 gens (predictor-free)", Duration::from_secs(2), || {
         seed += 1;
         let mut r = Rng::new(seed);
-        let pop = nsga2::run(
-            &space,
-            vec![],
-            &Nsga2Params { pop_size: 100, generations: 15, crossover_prob: 0.9, mutation_prob: 0.1 },
-            &mut r,
-            |cfg| [cfg.iter().map(|&b| (4 - b) as f64).sum(), space.avg_bits(cfg)],
-        );
+        let pop = nsga2::run(&space, vec![], &nsga_params, &mut r, |cfg| {
+            [cfg.iter().map(|&b| (4 - b) as f64).sum(), space.avg_bits(cfg)]
+        });
         std::hint::black_box(pop.len());
     })
     .print();
@@ -73,13 +77,9 @@ fn main() {
         seed += 1;
         let mut r = Rng::new(seed);
         let active: Vec<usize> = (0..28).collect();
-        let pop = nsga2::run(
-            &space,
-            vec![],
-            &Nsga2Params { pop_size: 100, generations: 15, crossover_prob: 0.9, mutation_prob: 0.1 },
-            &mut r,
-            |cfg| [rbf.predict(&space.features(cfg, &active)) as f64, space.avg_bits(cfg)],
-        );
+        let pop = nsga2::run(&space, vec![], &nsga_params, &mut r, |cfg| {
+            [rbf.predict(&space.features(cfg, &active)) as f64, space.avg_bits(cfg)]
+        });
         std::hint::black_box(pop.len());
     })
     .print();
@@ -97,8 +97,70 @@ fn main() {
     .print();
 
     bench("space avg_bits", budget, || {
-        let cfg = vec![3u8; 28];
+        let cfg = vec![3u16; 28];
         std::hint::black_box(space.avg_bits(&cfg));
+    })
+    .print();
+
+    // -- proxy bank: build + assemble cost, 1 vs 4 methods ----------------
+    // 28 layers of 64x256 synthetic weights quantized at {2,3,4} bits per
+    // enabled method: the per-method build/upload cost of the method-aware
+    // genome, and the (cheap, pointer-chasing) per-candidate assembly.
+    header("proxy bank (28 layers x {2,3,4} bits, synthetic 64x256 weights)");
+    let mats: Vec<Mat> = (0..28)
+        .map(|i| {
+            let mut rng = Rng::new(100 + i as u64);
+            let mut w = Mat::zeros(64, 256);
+            for v in &mut w.data {
+                *v = rng.normal() * 0.1;
+            }
+            w
+        })
+        .collect();
+    let build_bank = |methods: &[MethodId]| -> ProxyBank {
+        let pieces = methods
+            .iter()
+            .map(|m| {
+                let q = m.build();
+                mats.iter()
+                    .map(|w| [2u8, 3, 4].iter().map(|&b| q.quantize(w, b, 128, None)).collect())
+                    .collect()
+            })
+            .collect();
+        ProxyBank::from_parts(methods.to_vec(), vec![2, 3, 4], pieces).unwrap()
+    };
+    let one_method = [MethodId::Hqq];
+    let four_methods = [MethodId::Hqq, MethodId::Rtn, MethodId::Gptq, MethodId::AwqClip];
+    for methods in [&one_method[..], &four_methods[..]] {
+        let res = bench(
+            &format!("bank build ({} method(s))", methods.len()),
+            Duration::from_secs(2),
+            || {
+                std::hint::black_box(build_bank(methods).memory_bytes());
+            },
+        );
+        res.print();
+    }
+    let bank1 = build_bank(&one_method);
+    let bank4 = build_bank(&four_methods);
+    println!(
+        "bank memory: 1 method {:.1} MB, 4 methods {:.1} MB",
+        bank1.memory_bytes() as f64 / 1e6,
+        bank4.memory_bytes() as f64 / 1e6
+    );
+    let mut rng_asm = Rng::new(3);
+    let methods4 = four_methods;
+    bench("bank assemble (1 method, 28 layers)", budget, || {
+        let cfg: Config = (0..28).map(|_| [2u16, 3, 4][rng_asm.below(3)]).collect();
+        std::hint::black_box(bank1.assemble(&cfg).len());
+    })
+    .print();
+    let mut rng_asm4 = Rng::new(4);
+    bench("bank assemble (4 methods, 28 layers)", budget, || {
+        let cfg: Config = (0..28)
+            .map(|_| gene(methods4[rng_asm4.below(4)], [2u8, 3, 4][rng_asm4.below(3)]))
+            .collect();
+        std::hint::black_box(bank4.assemble(&cfg).len());
     })
     .print();
 

@@ -3,9 +3,9 @@
 //! latency, proxy assembly, candidate evaluation, and upload costs —
 //! one line per paper-relevant cost.
 
-use amq::coordinator::{ConfigEvaluator, ProxyEvaluator, ProxyStore, SearchSpace};
+use amq::coordinator::{ConfigEvaluator, ProxyBank, ProxyEvaluator, SearchSpace};
 use amq::model::ModelAssets;
-use amq::quant::Hqq;
+use amq::quant::{Hqq, MethodRegistry};
 use amq::runtime::Runtime;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
@@ -27,8 +27,9 @@ fn main() -> amq::Result<()> {
     let batch = rt.prepare_batch(&toks, &mask)?;
 
     header("end-to-end (PJRT CPU, batch 16x128)");
-    let store = ProxyStore::build(&assets.manifest, &assets.weights, None, &Hqq::default())?;
-    let proxy = amq::coordinator::DeviceProxy::new(&rt, store)?;
+    let bank =
+        ProxyBank::build(&assets.manifest, &assets.weights, None, &MethodRegistry::default())?;
+    let proxy = amq::coordinator::DeviceProxy::new(&rt, bank)?;
     let space = SearchSpace::full(&assets.manifest);
     let mut rng = Rng::new(0);
 
@@ -38,7 +39,7 @@ fn main() -> amq::Result<()> {
     })
     .print();
 
-    let cfg3 = vec![3u8; 28];
+    let cfg3 = space.uniform(3);
     let layers = proxy.assemble(&cfg3);
     bench("fused scorer call (jsd+ce)", Duration::from_secs(6), || {
         std::hint::black_box(rt.scores(&batch, &layers).unwrap());

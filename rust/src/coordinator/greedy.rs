@@ -5,7 +5,7 @@
 //! contrasts with AMQ.
 
 use super::proxy::ConfigEvaluator;
-use super::space::{Config, SearchSpace};
+use super::space::{Config, Gene, SearchSpace};
 use crate::Result;
 
 pub struct GreedyResult {
@@ -20,28 +20,22 @@ pub fn greedy(
     target_bits: f64,
 ) -> Result<GreedyResult> {
     let start_evals = evaluator.count();
-    let mut cfg: Config = space
-        .choices
-        .iter()
-        .map(|c| *c.iter().max().unwrap())
-        .collect();
+    let mut cfg: Config = space.max_config();
     let mut steps = 0usize;
     while space.avg_bits(&cfg) > target_bits {
-        let mut best: Option<(f32, usize, u8)> = None;
+        let mut best: Option<(f32, usize, Gene)> = None;
         for li in 0..space.n_layers() {
-            let cur = cfg[li];
-            let lower = space.choices[li].iter().copied().filter(|&b| b < cur).max();
-            let Some(b) = lower else { continue };
+            let Some(g) = space.demote(li, cfg[li]) else { continue };
             let mut cand = cfg.clone();
-            cand[li] = b;
+            cand[li] = g;
             let jsd = evaluator.eval_jsd(&cand)?;
             if best.map(|(j, _, _)| jsd < j).unwrap_or(true) {
-                best = Some((jsd, li, b));
+                best = Some((jsd, li, g));
             }
         }
         match best {
-            Some((_, li, b)) => {
-                cfg[li] = b;
+            Some((_, li, g)) => {
+                cfg[li] = g;
                 steps += 1;
             }
             None => break, // nothing left to demote
@@ -64,11 +58,9 @@ pub fn greedy_step(
 ) -> Result<Option<Config>> {
     let mut best: Option<(f32, Config)> = None;
     for li in 0..space.n_layers() {
-        let cur = cfg[li];
-        let lower = space.choices[li].iter().copied().filter(|&b| b < cur).max();
-        let Some(b) = lower else { continue };
+        let Some(g) = space.demote(li, cfg[li]) else { continue };
         let mut cand = cfg.clone();
-        cand[li] = b;
+        cand[li] = g;
         let jsd = evaluator.eval_jsd(&cand)?;
         if best.as_ref().map(|(j, _)| jsd < *j).unwrap_or(true) {
             best = Some((jsd, cand));

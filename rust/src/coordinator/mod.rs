@@ -1,10 +1,13 @@
 //! The AMQ coordinator — the paper's contribution (§3, Algorithm 1):
 //!
-//! * [`space`] — layer-wise bit-width search space + average-bits objective;
-//! * [`sensitivity`] — per-layer low-bit sensitivity scan (Fig. 2);
+//! * [`space`] — layer-wise `(method, bits)` search space + average-bits
+//!   objective (genes over the `quant::registry` method axis);
+//! * [`sensitivity`] — per-layer low-bit sensitivity scan (Fig. 2) and the
+//!   per-`(layer, method, bits)` gene scan;
 //! * [`pruning`] — 2x-median outlier exclusion (§3.2, Table 5);
-//! * [`proxy`] — precomputed HQQ pieces + zero-copy candidate assembly
-//!   (§3.3) and the [`proxy::ConfigEvaluator`] true-evaluation interface;
+//! * [`proxy`] — the precomputed `(method, layer, bits)` piece bank +
+//!   zero-copy candidate assembly (§3.3) and the
+//!   [`proxy::ConfigEvaluator`] true-evaluation interface;
 //! * [`predictor`] — RBF (default) / MLP quality predictors (§3.4);
 //! * [`nsga2`] — the multi-objective genetic engine;
 //! * [`search`] — the iterative search-and-update loop (§3.5);
@@ -24,7 +27,8 @@ pub mod space;
 
 pub use archive::{Archive, Sample};
 pub use proxy::{
-    ConfigEvaluator, DeviceProxy, EvalPool, PooledEvaluator, ProxyEvaluator, ProxyStore,
+    ConfigEvaluator, DeviceProxy, EvalPool, MethodBuildStats, PooledEvaluator, ProxyBank,
+    ProxyEvaluator,
 };
 pub use search::{run_search, SearchParams, SearchResult};
-pub use space::{Config, SearchSpace};
+pub use space::{gene, gene_bits, gene_method, Config, Gene, SearchSpace};

@@ -1,6 +1,9 @@
-//! NSGA-II (Deb et al., 2002) over bit-width configurations: fast
-//! non-dominated sort, crowding distance, binary tournament, uniform
+//! NSGA-II (Deb et al., 2002) over `(method, bits)` gene configurations:
+//! fast non-dominated sort, crowding distance, binary tournament, uniform
 //! crossover and per-gene mutation (the paper's §3.5 search engine).
+//! The operators are genome-agnostic — a gene is an opaque choice from
+//! `space.choices[i]` — so the RNG stream is identical to the legacy
+//! bits-only genome whenever the per-layer choice counts match.
 
 use super::space::{Config, SearchSpace};
 use crate::util::Rng;
@@ -328,7 +331,8 @@ mod tests {
     #[test]
     fn deterministic_under_seed() {
         let space = toy_space(5);
-        let p = Nsga2Params { pop_size: 16, generations: 4, crossover_prob: 0.9, mutation_prob: 0.1 };
+        let p =
+            Nsga2Params { pop_size: 16, generations: 4, crossover_prob: 0.9, mutation_prob: 0.1 };
         let f = |cfg: &Config| [cfg.iter().map(|&b| b as f64).sum::<f64>(), 0.0];
         let a = run(&space, vec![], &p, &mut Rng::new(9), f);
         let b = run(&space, vec![], &p, &mut Rng::new(9), f);
@@ -344,7 +348,8 @@ mod tests {
         // produce the identical population (the pool-dispatch refactor must
         // not change search results).
         let space = toy_space(7);
-        let p = Nsga2Params { pop_size: 20, generations: 6, crossover_prob: 0.9, mutation_prob: 0.15 };
+        let p =
+            Nsga2Params { pop_size: 20, generations: 6, crossover_prob: 0.9, mutation_prob: 0.15 };
         let score = |cfg: &Config| {
             let q: f64 = cfg.iter().map(|&b| ((4 - b) as f64).powi(2)).sum();
             [q, space.avg_bits(cfg)]

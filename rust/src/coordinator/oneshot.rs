@@ -6,36 +6,29 @@ use super::space::{Config, SearchSpace};
 
 /// Build a configuration hitting `target_bits` (±tol best effort) from a
 /// sensitivity ranking: walk the layers from least to most sensitive,
-/// demoting 4->3->2 until the target is reached.
+/// demoting 4->3->2 (method preserved per gene) until the target is
+/// reached.
 pub fn one_shot(space: &SearchSpace, sensitivity: &[f32], target_bits: f64) -> Config {
     let n = space.n_layers();
     assert_eq!(sensitivity.len(), n);
-    let mut cfg: Config = space
-        .choices
-        .iter()
-        .map(|c| *c.iter().max().unwrap())
-        .collect();
+    let mut cfg: Config = space.max_config();
     // least sensitive first
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| sensitivity[a].partial_cmp(&sensitivity[b]).unwrap());
 
     // pass 1: demote max -> mid, pass 2: mid -> min (preserves the one-shot
     // "most sensitive stay high" structure)
-    for pass in 0..2 {
+    for _pass in 0..2 {
         for &li in &order {
             if space.avg_bits(&cfg) <= target_bits {
                 return cfg;
             }
-            let choices = &space.choices[li];
-            if choices.len() <= 1 {
+            if space.choices[li].len() <= 1 {
                 continue;
             }
-            let cur = cfg[li];
-            let lower: Option<u8> = choices.iter().copied().filter(|&b| b < cur).max();
-            if let Some(b) = lower {
-                // pass 0 only takes one step down; pass 1 goes to minimum
-                cfg[li] = b;
-                let _ = pass;
+            if let Some(g) = space.demote(li, cfg[li]) {
+                // each pass takes one bit step down per layer
+                cfg[li] = g;
             }
         }
     }

@@ -19,11 +19,29 @@ pub trait QualityPredictor {
     fn name(&self) -> &'static str;
 }
 
-/// Which predictor the search uses (Table 9 ablation).
+/// Which predictor the search uses (Table 9 ablation; CLI `--predictor`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PredictorKind {
     Rbf,
     Mlp,
+}
+
+impl PredictorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::Rbf => "rbf",
+            PredictorKind::Mlp => "mlp",
+        }
+    }
+
+    /// Parse a CLI predictor name.
+    pub fn parse(s: &str) -> crate::Result<PredictorKind> {
+        match s.trim() {
+            "rbf" => Ok(PredictorKind::Rbf),
+            "mlp" => Ok(PredictorKind::Mlp),
+            other => eyre::bail!("unknown predictor `{other}` (available: rbf, mlp)"),
+        }
+    }
 }
 
 pub fn make(kind: PredictorKind, seed: u64) -> Box<dyn QualityPredictor> {
@@ -83,6 +101,15 @@ mod tests {
             }
         }
         (conc - disc) as f32 / ((n * (n - 1) / 2) as f32)
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [PredictorKind::Rbf, PredictorKind::Mlp] {
+            assert_eq!(PredictorKind::parse(k.name()).unwrap(), k);
+            assert_eq!(make(k, 0).name(), k.name());
+        }
+        assert!(PredictorKind::parse("nope").is_err());
     }
 
     #[test]

@@ -1,56 +1,170 @@
-//! Quantization proxy (§3.3): every searchable layer is quantized once per
-//! bit-width with the activation-independent proxy quantizer (HQQ); any
-//! candidate configuration is then *assembled* by picking the precomputed
-//! (layer, bits) pieces.  The pieces are also uploaded to the PJRT device
-//! once, so assembly costs zero host->device copies on the search hot path.
+//! Quantization proxy (§3.3), generalized over methods: every searchable
+//! layer is quantized once per *(method, bit-width)* with each enabled
+//! quantizer; any candidate configuration is then *assembled* by picking
+//! the precomputed `(method, layer, bits)` pieces.  The pieces are also
+//! uploaded to the PJRT device once, so assembly costs zero host->device
+//! copies on the search hot path.
+//!
+//! With the default single-method registry (HQQ) this is exactly the
+//! paper's activation-independent proxy; enabling more methods widens the
+//! genome without changing the assembly contract.
 
-use super::space::Config;
+use super::space::{gene_bits, gene_method, Config, Gene};
 use crate::data::Manifest;
 use crate::model::{HessianStore, WeightStore};
-use crate::quant::{QuantizedLinear, Quantizer};
+use crate::quant::{MethodId, MethodRegistry, QuantizedLinear, Quantizer};
 use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch, ServiceStats};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Host-side precomputed quantizations: (layer index, bits) -> layer.
-pub struct ProxyStore {
-    pub quantizer_name: &'static str,
-    pub bit_choices: Vec<u8>,
-    /// `layers[li][bi]` for bit_choices[bi].
-    pub layers: Vec<Vec<QuantizedLinear>>,
+/// Per-method build accounting: quantization wall-clock and resident bytes
+/// of all `(layer, bits)` pieces of one method.
+#[derive(Clone, Debug)]
+pub struct MethodBuildStats {
+    pub method: MethodId,
     pub build_time: Duration,
+    pub memory_bytes: usize,
 }
 
-impl ProxyStore {
-    /// Quantize every layer at every candidate bit-width.
+/// Host-side precomputed quantizations for every enabled method:
+/// `(method, layer index, bits) -> quantized layer`.
+///
+/// Weight matrices and Hessian statistics are loaded once per layer and
+/// shared across methods — the method axis multiplies quantization work,
+/// never I/O.
+pub struct ProxyBank {
+    /// Enabled methods, bank-slot order.
+    pub methods: Vec<MethodId>,
+    pub bit_choices: Vec<u8>,
+    /// `pieces[slot][li][bi]` for methods[slot], bit_choices[bi].
+    pieces: Vec<Vec<Vec<QuantizedLinear>>>,
+    /// Per-method build time + memory.
+    pub stats: Vec<MethodBuildStats>,
+}
+
+impl ProxyBank {
+    /// Quantize every layer at every candidate bit-width with every enabled
+    /// method.  `hessians` are consulted only by methods that use
+    /// calibration statistics.
     pub fn build(
         manifest: &Manifest,
         weights: &WeightStore,
         hessians: Option<&HessianStore>,
-        quantizer: &dyn Quantizer,
-    ) -> Result<ProxyStore> {
-        let t0 = Instant::now();
-        let mut layers = Vec::with_capacity(manifest.layers.len());
+        registry: &MethodRegistry,
+    ) -> Result<ProxyBank> {
+        let methods: Vec<MethodId> = registry.enabled().to_vec();
+        let quantizers: Vec<Box<dyn Quantizer>> = methods.iter().map(|m| m.build()).collect();
+        let mut pieces: Vec<Vec<Vec<QuantizedLinear>>> =
+            (0..methods.len()).map(|_| Vec::with_capacity(manifest.layers.len())).collect();
+        let mut build_time = vec![Duration::ZERO; methods.len()];
         for l in &manifest.layers {
+            // one weight / stats load per layer, shared by every method
             let w = weights.linear(&l.name)?;
             let stats = match hessians {
                 Some(h) => Some(h.for_layer(&l.name)?),
                 None => None,
             };
-            let mut per_bits = Vec::with_capacity(manifest.bit_choices.len());
-            for &bits in &manifest.bit_choices {
-                per_bits.push(quantizer.quantize(&w, bits, manifest.group_size, stats));
+            for (slot, method) in methods.iter().enumerate() {
+                let t0 = Instant::now();
+                let layer_stats = if method.needs_stats() { stats } else { None };
+                let mut per_bits = Vec::with_capacity(manifest.bit_choices.len());
+                for &bits in &manifest.bit_choices {
+                    per_bits.push(quantizers[slot].quantize(
+                        &w,
+                        bits,
+                        manifest.group_size,
+                        layer_stats,
+                    ));
+                }
+                pieces[slot].push(per_bits);
+                build_time[slot] += t0.elapsed();
             }
-            layers.push(per_bits);
         }
-        Ok(ProxyStore {
-            quantizer_name: quantizer.name(),
-            bit_choices: manifest.bit_choices.clone(),
-            layers,
-            build_time: t0.elapsed(),
-        })
+        let stats = methods
+            .iter()
+            .zip(&pieces)
+            .zip(build_time)
+            .map(|((&method, rows), build_time)| MethodBuildStats {
+                method,
+                build_time,
+                memory_bytes: rows
+                    .iter()
+                    .flat_map(|per_bits| per_bits.iter())
+                    .map(|q| q.memory_bytes())
+                    .sum(),
+            })
+            .collect();
+        Ok(ProxyBank { methods, bit_choices: manifest.bit_choices.clone(), pieces, stats })
+    }
+
+    /// Assemble a bank from already-quantized pieces (`pieces[slot][li][bi]`)
+    /// — synthetic banks for tests and benches; build times are zero,
+    /// memory accounting is real.
+    pub fn from_parts(
+        methods: Vec<MethodId>,
+        bit_choices: Vec<u8>,
+        pieces: Vec<Vec<Vec<QuantizedLinear>>>,
+    ) -> Result<ProxyBank> {
+        eyre::ensure!(!methods.is_empty(), "proxy bank needs at least one method");
+        eyre::ensure!(
+            pieces.len() == methods.len(),
+            "piece slots ({}) must match methods ({})",
+            pieces.len(),
+            methods.len()
+        );
+        let n_layers = pieces[0].len();
+        for (slot, rows) in pieces.iter().enumerate() {
+            eyre::ensure!(
+                rows.len() == n_layers,
+                "method slot {slot} has {} layers, expected {n_layers}",
+                rows.len()
+            );
+            for per_bits in rows {
+                eyre::ensure!(
+                    per_bits.len() == bit_choices.len(),
+                    "piece row has {} bit variants, expected {}",
+                    per_bits.len(),
+                    bit_choices.len()
+                );
+            }
+        }
+        let stats = methods
+            .iter()
+            .zip(&pieces)
+            .map(|(&method, rows)| MethodBuildStats {
+                method,
+                build_time: Duration::ZERO,
+                memory_bytes: rows
+                    .iter()
+                    .flat_map(|per_bits| per_bits.iter())
+                    .map(|q| q.memory_bytes())
+                    .sum(),
+            })
+            .collect();
+        Ok(ProxyBank { methods, bit_choices, pieces, stats })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.pieces.first().map(|rows| rows.len()).unwrap_or(0)
+    }
+
+    /// Total quantization wall-clock across methods.
+    pub fn build_time(&self) -> Duration {
+        self.stats.iter().map(|s| s.build_time).sum()
+    }
+
+    /// Total resident bytes across all pieces.
+    pub fn memory_bytes(&self) -> usize {
+        self.stats.iter().map(|s| s.memory_bytes).sum()
+    }
+
+    fn slot(&self, method: MethodId) -> usize {
+        self.methods
+            .iter()
+            .position(|&m| m == method)
+            .unwrap_or_else(|| panic!("method {} not precomputed in bank", method.name()))
     }
 
     fn bit_index(&self, bits: u8) -> usize {
@@ -60,51 +174,64 @@ impl ProxyStore {
             .unwrap_or_else(|| panic!("bit width {bits} not precomputed"))
     }
 
+    /// The precomputed piece for one layer's gene.
+    pub fn piece(&self, li: usize, g: Gene) -> &QuantizedLinear {
+        &self.pieces[self.slot(gene_method(g))][li][self.bit_index(gene_bits(g))]
+    }
+
     /// Host-side assembly (for tests / CPU paths).
-    pub fn assemble(&self, config: &Config) -> Vec<&QuantizedLinear> {
-        config
-            .iter()
-            .enumerate()
-            .map(|(li, &b)| &self.layers[li][self.bit_index(b)])
-            .collect()
+    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantizedLinear> {
+        config.iter().enumerate().map(|(li, &g)| self.piece(li, g)).collect()
     }
 }
 
 /// Device-side proxy: all pieces uploaded once; assembly picks buffer refs.
-/// The host-side [`ProxyStore`] is behind an `Arc` so pool shards can reuse
+/// The host-side [`ProxyBank`] is behind an `Arc` so pool shards can reuse
 /// one quantization pass — only the device buffers are per-shard.
 pub struct DeviceProxy<'rt> {
-    pub store: Arc<ProxyStore>,
-    bufs: Vec<Vec<QuantLayerBufs>>,
+    pub bank: Arc<ProxyBank>,
+    /// `bufs[slot][li][bi]`, mirroring the bank's piece layout.
+    bufs: Vec<Vec<Vec<QuantLayerBufs>>>,
     rt: &'rt Runtime,
+    /// Per-method upload wall-clock, bank-slot order.
+    pub upload_times: Vec<Duration>,
     pub upload_time: Duration,
 }
 
 impl<'rt> DeviceProxy<'rt> {
-    pub fn new(rt: &'rt Runtime, store: ProxyStore) -> Result<DeviceProxy<'rt>> {
-        Self::new_shared(rt, Arc::new(store))
+    pub fn new(rt: &'rt Runtime, bank: ProxyBank) -> Result<DeviceProxy<'rt>> {
+        Self::new_shared(rt, Arc::new(bank))
     }
 
-    /// Upload from a shared host-side store.
-    pub fn new_shared(rt: &'rt Runtime, store: Arc<ProxyStore>) -> Result<DeviceProxy<'rt>> {
+    /// Upload from a shared host-side bank.
+    pub fn new_shared(rt: &'rt Runtime, bank: Arc<ProxyBank>) -> Result<DeviceProxy<'rt>> {
         let t0 = Instant::now();
-        let mut bufs = Vec::with_capacity(store.layers.len());
-        for per_bits in &store.layers {
-            let mut row = Vec::with_capacity(per_bits.len());
-            for q in per_bits {
-                row.push(rt.upload_quant_layer(q)?);
+        let mut bufs = Vec::with_capacity(bank.pieces.len());
+        let mut upload_times = Vec::with_capacity(bank.pieces.len());
+        for rows in &bank.pieces {
+            let t_m = Instant::now();
+            let mut slot = Vec::with_capacity(rows.len());
+            for per_bits in rows {
+                let mut row = Vec::with_capacity(per_bits.len());
+                for q in per_bits {
+                    row.push(rt.upload_quant_layer(q)?);
+                }
+                slot.push(row);
             }
-            bufs.push(row);
+            bufs.push(slot);
+            upload_times.push(t_m.elapsed());
         }
-        Ok(DeviceProxy { store, bufs, rt, upload_time: t0.elapsed() })
+        Ok(DeviceProxy { bank, bufs, rt, upload_times, upload_time: t0.elapsed() })
     }
 
     /// Zero-copy assembly of a configuration into buffer references.
-    pub fn assemble(&self, config: &Config) -> Vec<&QuantLayerBufs> {
+    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
         config
             .iter()
             .enumerate()
-            .map(|(li, &b)| &self.bufs[li][self.store.bit_index(b)])
+            .map(|(li, &g)| {
+                &self.bufs[self.bank.slot(gene_method(g))][li][self.bank.bit_index(gene_bits(g))]
+            })
             .collect()
     }
 
@@ -279,67 +406,111 @@ impl ConfigEvaluator for PooledEvaluator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::space::gene;
     use crate::quant::Rtn;
     use crate::tensor::Mat;
 
-    fn toy_store() -> ProxyStore {
-        // 2 layers x 3 bit choices of small random weights
-        let mk = |seed: u64| {
-            let mut state = seed | 1;
-            let mut w = Mat::zeros(8, 128);
-            for v in &mut w.data {
-                state ^= state << 13;
-                state ^= state >> 7;
-                state ^= state << 17;
-                *v = ((state >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.2;
-            }
-            w
-        };
-        let rtn = Rtn;
-        let layers = (0..2)
-            .map(|i| {
-                let w = mk(i + 1);
-                vec![
-                    rtn.quantize(&w, 2, 128, None),
-                    rtn.quantize(&w, 3, 128, None),
-                    rtn.quantize(&w, 4, 128, None),
-                ]
+    fn toy_weight(seed: u64) -> Mat {
+        let mut state = seed | 1;
+        let mut w = Mat::zeros(8, 128);
+        for v in &mut w.data {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            *v = ((state >> 11) as f32 / (1u64 << 53) as f32 - 0.5) * 0.2;
+        }
+        w
+    }
+
+    fn toy_bank(methods: &[MethodId]) -> ProxyBank {
+        // 2 layers x |methods| x 3 bit choices of small random weights
+        let pieces = methods
+            .iter()
+            .map(|m| {
+                let q = m.build();
+                (0..2u64)
+                    .map(|i| {
+                        let w = toy_weight(i + 1);
+                        vec![
+                            q.quantize(&w, 2, 128, None),
+                            q.quantize(&w, 3, 128, None),
+                            q.quantize(&w, 4, 128, None),
+                        ]
+                    })
+                    .collect()
             })
             .collect();
-        ProxyStore {
-            quantizer_name: "rtn",
-            bit_choices: vec![2, 3, 4],
-            layers,
-            build_time: Duration::ZERO,
-        }
+        ProxyBank::from_parts(methods.to_vec(), vec![2, 3, 4], pieces).unwrap()
     }
 
     #[test]
     fn assemble_picks_right_bits() {
-        let store = toy_store();
-        let asm = store.assemble(&vec![2, 4]);
+        let bank = toy_bank(&[MethodId::Rtn]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 4)]);
         assert_eq!(asm[0].bits, 2);
         assert_eq!(asm[1].bits, 4);
-        let asm = store.assemble(&vec![3, 3]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 3), gene(MethodId::Rtn, 3)]);
         assert_eq!(asm[0].bits, 3);
         assert_eq!(asm[1].bits, 3);
     }
 
     #[test]
+    fn assemble_picks_right_method() {
+        let bank = toy_bank(&[MethodId::Hqq, MethodId::Rtn]);
+        let cfg = vec![gene(MethodId::Rtn, 3), gene(MethodId::Hqq, 2)];
+        let asm = bank.assemble(&cfg);
+        assert_eq!(asm[0].codes, bank.piece(0, gene(MethodId::Rtn, 3)).codes);
+        assert_eq!(asm[1].codes, bank.piece(1, gene(MethodId::Hqq, 2)).codes);
+        // HQQ refines the RTN start, so 2-bit pieces of the two methods
+        // genuinely differ on random weights
+        let h = bank.piece(0, gene(MethodId::Hqq, 2));
+        let r = bank.piece(0, gene(MethodId::Rtn, 2));
+        assert_eq!((h.bits, r.bits), (2, 2));
+        assert_ne!(h.codes, r.codes, "methods must produce distinct pieces");
+    }
+
+    #[test]
     #[should_panic]
     fn assemble_rejects_unknown_bits() {
-        let store = toy_store();
-        store.assemble(&vec![5, 3]);
+        let bank = toy_bank(&[MethodId::Rtn]);
+        bank.assemble(&[gene(MethodId::Rtn, 5), gene(MethodId::Rtn, 3)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assemble_rejects_unknown_method() {
+        let bank = toy_bank(&[MethodId::Rtn]);
+        bank.assemble(&[gene(MethodId::Hqq, 3), gene(MethodId::Rtn, 3)]);
     }
 
     #[test]
     fn assembly_equals_direct_quantization() {
         // the proxy invariant: assembling precomputed pieces is *identical*
         // to quantizing the model at that configuration directly
-        let store = toy_store();
-        let asm = store.assemble(&vec![2, 3]);
-        assert_eq!(asm[0].codes, store.layers[0][0].codes);
-        assert_eq!(asm[1].codes, store.layers[1][1].codes);
+        let bank = toy_bank(&[MethodId::Rtn]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 3)]);
+        let w0 = toy_weight(1);
+        let w1 = toy_weight(2);
+        assert_eq!(asm[0].codes, Rtn.quantize(&w0, 2, 128, None).codes);
+        assert_eq!(asm[1].codes, Rtn.quantize(&w1, 3, 128, None).codes);
+    }
+
+    #[test]
+    fn bank_reports_per_method_stats() {
+        let bank = toy_bank(&[MethodId::Hqq, MethodId::Rtn]);
+        assert_eq!(bank.stats.len(), 2);
+        assert_eq!(bank.n_layers(), 2);
+        for s in &bank.stats {
+            // 2 layers x 3 bit choices of 8x128 weights each
+            let expect: usize = (0..2)
+                .flat_map(|li| {
+                    [2u8, 3, 4].map(|b| bank.piece(li, gene(s.method, b)).memory_bytes())
+                })
+                .sum();
+            assert_eq!(s.memory_bytes, expect);
+            assert!(s.memory_bytes > 0);
+        }
+        assert_eq!(bank.memory_bytes(), bank.stats.iter().map(|s| s.memory_bytes).sum::<usize>());
     }
 
     /// Deterministic synthetic shard eval: quadratic bit penalty, plus a
@@ -349,11 +520,12 @@ mod tests {
         PooledEvaluator::spawn(workers, |_shard| {
             |cfg: Config| -> Result<f32> {
                 let mut seed = 0xA076_1D64_78BD_642Fu64;
-                for &b in &cfg {
-                    seed = seed.wrapping_mul(0x100000001B3).wrapping_add(b as u64);
+                for &g in &cfg {
+                    seed = seed.wrapping_mul(0x100000001B3).wrapping_add(g as u64);
                 }
                 let mut rng = crate::util::Rng::new(seed);
-                let base: f32 = cfg.iter().map(|&b| ((4 - b) as f32).powi(2)).sum();
+                let base: f32 =
+                    cfg.iter().map(|&g| ((4 - gene_bits(g) as i32) as f32).powi(2)).sum();
                 Ok(base + rng.f32() * 1e-3)
             }
         })
@@ -377,7 +549,7 @@ mod tests {
     #[test]
     fn pooled_evaluator_bit_identical_across_worker_counts() {
         let configs: Vec<Config> = (0..24)
-            .map(|i| (0..6).map(|j| [2u8, 3, 4][(i + j) % 3]).collect())
+            .map(|i| (0..6).map(|j| [2u16, 3, 4][(i + j) % 3]).collect())
             .collect();
         let mut one = synth_pool(1);
         let mut four = synth_pool(4);

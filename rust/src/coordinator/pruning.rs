@@ -44,8 +44,8 @@ pub fn prune(
     over.truncate(cap);
     over.sort();
     for &li in &over {
-        let max_bits = *space.choices[li].iter().max().unwrap();
-        space.pin(li, max_bits);
+        let max_gene = space.max_gene(li);
+        space.pin(li, max_gene);
     }
     PruneReport {
         excluded_frac: over.len() as f32 / scores.len() as f32,

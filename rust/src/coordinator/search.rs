@@ -134,8 +134,8 @@ pub fn run_search(
     // shards.  The RNG stream and the archive contents depend only on the
     // chunk boundaries, never on how a chunk was scheduled, so the result
     // is identical for any worker count.
-    let lo = space.avg_bits(&space.choices.iter().map(|c| *c.iter().min().unwrap()).collect::<Vec<_>>());
-    let hi = space.avg_bits(&space.choices.iter().map(|c| *c.iter().max().unwrap()).collect::<Vec<_>>());
+    let lo = space.avg_bits(&space.min_config());
+    let hi = space.avg_bits(&space.max_config());
     let chunk_size = params.candidates_per_iter.max(1);
     let mut tries = 0;
     while archive.len() < params.n_init && tries < params.n_init * 50 {

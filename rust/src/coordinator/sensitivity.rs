@@ -1,9 +1,11 @@
 //! Per-layer quantization sensitivity (Figure 2): quantize one layer to the
 //! lowest bit-width while keeping all others at the highest, and measure the
-//! calibration JSD of the assembled model.
+//! calibration JSD of the assembled model.  With a multi-method genome the
+//! gene scan generalizes this to every `(layer, method, bits)` probe.
 
 use super::proxy::ConfigEvaluator;
-use super::space::{Config, SearchSpace};
+use super::space::{gene_bits, gene_method, Config, SearchSpace};
+use crate::quant::MethodId;
 use crate::Result;
 
 #[derive(Clone, Debug)]
@@ -19,18 +21,14 @@ pub fn measure(
     evaluator: &mut dyn ConfigEvaluator,
 ) -> Result<Sensitivity> {
     let n = space.n_layers();
-    let max_cfg: Vec<u8> = space
-        .choices
-        .iter()
-        .map(|c| *c.iter().max().unwrap())
-        .collect();
+    let max_cfg = space.max_config();
     let baseline = evaluator.eval_jsd(&max_cfg)?;
     // One single-layer-at-min config per layer, dispatched as a single
     // batch: a pool-backed evaluator scans all layers concurrently.
     let probes: Vec<Config> = (0..n)
         .map(|li| {
             let mut cfg = max_cfg.clone();
-            cfg[li] = *space.choices[li].iter().min().unwrap();
+            cfg[li] = space.min_gene(li);
             cfg
         })
         .collect();
@@ -51,24 +49,106 @@ impl Sensitivity {
     }
 }
 
+/// One gene-scan probe: layer `li` set to `(method, bits)`, all other
+/// layers at their max gene.
+#[derive(Clone, Debug)]
+pub struct GeneProbe {
+    pub layer: usize,
+    pub method: MethodId,
+    pub bits: u8,
+    pub jsd: f32,
+}
+
+/// The per-`(layer, method, bits)` sensitivity scan of a (multi-method)
+/// space: how much each gene choice hurts relative to the all-max baseline.
+#[derive(Clone, Debug)]
+pub struct GeneScan {
+    pub baseline: f32,
+    pub probes: Vec<GeneProbe>,
+}
+
+impl GeneScan {
+    /// Probes of one layer, in choice order.
+    pub fn layer(&self, li: usize) -> Vec<&GeneProbe> {
+        self.probes.iter().filter(|p| p.layer == li).collect()
+    }
+
+    /// The gentlest (lowest-JSD) probe per layer — which `(method, bits)`
+    /// a layer tolerates best.
+    pub fn best_per_layer(&self, n_layers: usize) -> Vec<Option<&GeneProbe>> {
+        (0..n_layers)
+            .map(|li| {
+                self.probes
+                    .iter()
+                    .filter(|p| p.layer == li)
+                    .min_by(|a, b| a.jsd.partial_cmp(&b.jsd).unwrap_or(std::cmp::Ordering::Equal))
+            })
+            .collect()
+    }
+}
+
+/// Scan every non-max gene of every layer (others at max), dispatched as a
+/// single batch so pool shards scan concurrently.  Cost:
+/// `1 + sum(choices per layer - 1)` true evaluations.
+pub fn scan_genes(
+    space: &SearchSpace,
+    evaluator: &mut dyn ConfigEvaluator,
+) -> Result<GeneScan> {
+    let max_cfg = space.max_config();
+    let baseline = evaluator.eval_jsd(&max_cfg)?;
+    let mut meta: Vec<(usize, MethodId, u8)> = Vec::new();
+    let mut probes: Vec<Config> = Vec::new();
+    for li in 0..space.n_layers() {
+        for &g in &space.choices[li] {
+            if g == max_cfg[li] {
+                continue;
+            }
+            let mut cfg = max_cfg.clone();
+            cfg[li] = g;
+            meta.push((li, gene_method(g), gene_bits(g)));
+            probes.push(cfg);
+        }
+    }
+    let jsd = evaluator.eval_jsd_batch(&probes)?;
+    eyre::ensure!(
+        jsd.len() == probes.len(),
+        "evaluator returned {} results for {} probes",
+        jsd.len(),
+        probes.len()
+    );
+    Ok(GeneScan {
+        baseline,
+        probes: meta
+            .into_iter()
+            .zip(jsd)
+            .map(|((layer, method, bits), jsd)| GeneProbe { layer, method, bits, jsd })
+            .collect(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::space::toy_space;
+    use crate::coordinator::space::{toy_space, toy_space_methods};
 
-    /// Synthetic evaluator: layer i contributes weight[i] * (4 - bits)^2.
+    /// Synthetic evaluator: layer i contributes weight[i] * (4 - bits)^2,
+    /// doubled for RTN genes (a method-quality gap the scan must see).
     pub struct SynthEval {
         pub weights: Vec<f32>,
         pub evals: usize,
     }
 
     impl ConfigEvaluator for SynthEval {
-        fn eval_jsd(&mut self, config: &super::super::space::Config) -> Result<f32> {
+        fn eval_jsd(&mut self, config: &Config) -> Result<f32> {
             self.evals += 1;
             Ok(config
                 .iter()
                 .enumerate()
-                .map(|(i, &b)| self.weights[i] * ((4 - b) as f32).powi(2))
+                .map(|(i, &g)| {
+                    let penalty = ((4 - gene_bits(g) as i32) as f32).powi(2);
+                    let factor = if gene_method(g) == MethodId::Rtn { 2.0 } else { 1.0 };
+                    self.weights[i] * penalty * factor
+                })
                 .sum())
         }
 
@@ -92,5 +172,41 @@ mod tests {
         assert_eq!(order[1], 3);
         // one eval for baseline + one per layer
         assert_eq!(ev.count(), 6);
+    }
+
+    #[test]
+    fn gene_scan_covers_every_choice_and_sees_methods() {
+        let space = toy_space_methods(3, &[MethodId::Hqq, MethodId::Rtn]);
+        let mut ev = SynthEval { weights: vec![1.0, 0.5, 0.2], evals: 0 };
+        let scan = scan_genes(&space, &mut ev).unwrap();
+        // 6 choices per layer, one of which is the max gene -> 5 probes each
+        assert_eq!(scan.probes.len(), 3 * 5);
+        assert_eq!(ev.count(), 1 + 15);
+        // the synthetic evaluator penalizes rtn 2x: at equal bits, hqq
+        // probes must score strictly better on every layer
+        for li in 0..3 {
+            let probes = scan.layer(li);
+            for bits in [2u8, 3] {
+                let hqq = probes
+                    .iter()
+                    .find(|p| p.method == MethodId::Hqq && p.bits == bits)
+                    .unwrap();
+                let rtn = probes
+                    .iter()
+                    .find(|p| p.method == MethodId::Rtn && p.bits == bits)
+                    .unwrap();
+                assert!(hqq.jsd < rtn.jsd, "layer {li} bits {bits}");
+            }
+            // rtn@4 carries zero bit penalty in the synthetic model, so it
+            // ties the baseline and wins the layer
+            let best = scan.best_per_layer(3)[li].unwrap();
+            assert_eq!((best.method, best.bits), (MethodId::Rtn, 4));
+            assert_eq!(best.jsd, scan.baseline);
+        }
+        // single-method spaces degrade to the classic per-layer scan shape
+        let single = toy_space(4);
+        let mut ev2 = SynthEval { weights: vec![0.1; 4], evals: 0 };
+        let scan2 = scan_genes(&single, &mut ev2).unwrap();
+        assert_eq!(scan2.probes.len(), 4 * 2);
     }
 }

@@ -1,32 +1,77 @@
-//! Search space: per-layer candidate bit-widths, configurations, and the
-//! average-bits / memory objective (§3.1 of the paper).
+//! Search space: per-layer candidate `(method, bits)` genes, configurations,
+//! and the average-bits / memory objective (§3.1 of the paper, generalized
+//! to the method axis the official AMQ repo searches over).
 
 use crate::data::Manifest;
-use crate::quant::GROUP_OVERHEAD_BITS;
+use crate::quant::{MethodId, MethodRegistry};
 use crate::util::Rng;
 
-/// A configuration: one bit-width per searchable layer (manifest order).
-pub type Config = Vec<u8>;
+/// A per-layer gene: quantization method + bit-width, packed into a `u16`
+/// with the stable [`MethodId`] index in the high byte and the bit-width in
+/// the low byte.
+///
+/// Packing is load-bearing: genes of the default single-method genome
+/// (method 0 = the HQQ proxy) are numerically identical to the legacy
+/// bits-only `Vec<u8>` genome, so archives, JSON caches and RNG streams are
+/// unchanged when one method is enabled.
+pub type Gene = u16;
+
+/// Pack a `(method, bits)` gene.
+#[inline]
+pub fn gene(method: MethodId, bits: u8) -> Gene {
+    ((method.index() as Gene) << 8) | bits as Gene
+}
+
+/// The bit-width of a gene.
+#[inline]
+pub fn gene_bits(g: Gene) -> u8 {
+    (g & 0xFF) as u8
+}
+
+/// The method of a gene.
+#[inline]
+pub fn gene_method(g: Gene) -> MethodId {
+    MethodId::from_index((g >> 8) as usize)
+        .unwrap_or_else(|| panic!("invalid method byte in gene {g:#06x}"))
+}
+
+/// A configuration: one `(method, bits)` gene per searchable layer
+/// (manifest order).
+pub type Config = Vec<Gene>;
 
 /// The (possibly pruned) search space.
 #[derive(Clone, Debug)]
 pub struct SearchSpace {
-    /// Allowed bit-widths per layer; pruned layers have a single choice.
-    pub choices: Vec<Vec<u8>>,
+    /// Allowed genes per layer; pruned layers have a single choice.
+    pub choices: Vec<Vec<Gene>>,
     /// Parameter count per layer (average-bits weights).
     pub params: Vec<usize>,
-    /// Groups per layer (metadata overhead accounting).
+    /// Total quantization groups per layer (= params / group_size for the
+    /// per-`(row, group)` fp16 scale+zero metadata every grouped method
+    /// emits).
     pub groups: Vec<usize>,
     pub group_size: usize,
 }
 
 impl SearchSpace {
-    /// Full space: every layer may take any of the manifest bit choices.
+    /// Full space over the manifest's enabled methods (the `methods` list,
+    /// defaulting to single-method HQQ): every layer may take any
+    /// `(method, bits)` combination.
     pub fn full(m: &Manifest) -> SearchSpace {
+        Self::with_methods(m, &MethodRegistry::from_names(&m.methods))
+    }
+
+    /// Full space over an explicit method registry (CLI `--methods`).
+    pub fn with_methods(m: &Manifest, registry: &MethodRegistry) -> SearchSpace {
+        let layer_choices: Vec<Gene> = registry
+            .enabled()
+            .iter()
+            .flat_map(|&method| m.bit_choices.iter().map(move |&b| gene(method, b)))
+            .collect();
         SearchSpace {
-            choices: vec![m.bit_choices.clone(); m.layers.len()],
+            choices: vec![layer_choices; m.layers.len()],
             params: m.layers.iter().map(|l| l.params()).collect(),
-            groups: m.layers.iter().map(|l| l.n_groups(m.group_size)).collect(),
+            groups: m.layers.iter().map(|l| l.params() / m.group_size).collect(),
             group_size: m.group_size,
         }
     }
@@ -35,14 +80,45 @@ impl SearchSpace {
         self.choices.len()
     }
 
-    /// log10 of the number of configurations (the paper's 10^106 headline).
+    /// log10 of the number of configurations (the paper's 10^106 headline;
+    /// the method axis multiplies the per-layer choice count).
     pub fn log10_size(&self) -> f64 {
         self.choices.iter().map(|c| (c.len() as f64).log10()).sum()
     }
 
-    /// Pin a layer to a single bit-width (pruning).
-    pub fn pin(&mut self, layer: usize, bits: u8) {
-        self.choices[layer] = vec![bits];
+    /// Bitmask of the method indices present anywhere in the space — a
+    /// tight allocation-free scan, cheap enough for the predictor hot path
+    /// (`features` is called once per NSGA-II candidate).
+    #[inline]
+    fn method_mask(&self) -> u8 {
+        let mut mask = 0u8;
+        for c in &self.choices {
+            for &g in c {
+                mask |= 1u8 << ((g >> 8) & 0x07);
+            }
+        }
+        mask
+    }
+
+    /// Distinct methods appearing anywhere in the space, in stable
+    /// [`MethodId`] index order.
+    pub fn methods(&self) -> Vec<MethodId> {
+        let mask = self.method_mask();
+        MethodId::ALL
+            .iter()
+            .copied()
+            .filter(|m| mask & (1u8 << m.index()) != 0)
+            .collect()
+    }
+
+    /// Number of distinct methods in the space (1 = legacy genome).
+    pub fn n_methods(&self) -> usize {
+        self.method_mask().count_ones() as usize
+    }
+
+    /// Pin a layer to a single gene (pruning).
+    pub fn pin(&mut self, layer: usize, g: Gene) {
+        self.choices[layer] = vec![g];
     }
 
     /// Layers that still have more than one choice.
@@ -52,26 +128,94 @@ impl SearchSpace {
             .collect()
     }
 
-    /// Weighted average bits of a config, including per-group fp16
-    /// scale+zero overhead (group size 128 -> +0.25, range [2.25, 4.25]).
-    pub fn avg_bits(&self, config: &[u8]) -> f64 {
+    /// The lowest-bits gene of a layer (ties broken toward the lowest
+    /// method index, deterministically).
+    pub fn min_gene(&self, layer: usize) -> Gene {
+        *self.choices[layer]
+            .iter()
+            .min_by_key(|&&g| (gene_bits(g), g))
+            .unwrap()
+    }
+
+    /// The highest-bits gene of a layer (ties broken toward the lowest
+    /// method index, deterministically).
+    pub fn max_gene(&self, layer: usize) -> Gene {
+        *self.choices[layer]
+            .iter()
+            .max_by_key(|&&g| (gene_bits(g), std::cmp::Reverse(g)))
+            .unwrap()
+    }
+
+    /// All-minimum-bits configuration.
+    pub fn min_config(&self) -> Config {
+        (0..self.n_layers()).map(|li| self.min_gene(li)).collect()
+    }
+
+    /// All-maximum-bits configuration.
+    pub fn max_config(&self) -> Config {
+        (0..self.n_layers()).map(|li| self.max_gene(li)).collect()
+    }
+
+    /// Uniform-bits configuration at `bits`; each layer keeps the method of
+    /// an existing choice with those bits when available (lowest method
+    /// index), falling back to the layer's first listed method.
+    pub fn uniform(&self, bits: u8) -> Config {
+        (0..self.n_layers())
+            .map(|li| {
+                self.choices[li]
+                    .iter()
+                    .copied()
+                    .filter(|&g| gene_bits(g) == bits)
+                    .min()
+                    .unwrap_or_else(|| gene(gene_method(self.choices[li][0]), bits))
+            })
+            .collect()
+    }
+
+    /// One step down in bits for a layer's gene, preferring the same
+    /// method; `None` when nothing below the current bits exists.
+    pub fn demote(&self, layer: usize, g: Gene) -> Option<Gene> {
+        let bits = gene_bits(g);
+        let method = gene_method(g);
+        let step = |same_method: bool| {
+            self.choices[layer]
+                .iter()
+                .copied()
+                .filter(|&c| gene_bits(c) < bits && (!same_method || gene_method(c) == method))
+                .max_by_key(|&c| (gene_bits(c), std::cmp::Reverse(c)))
+        };
+        step(true).or_else(|| step(false))
+    }
+
+    /// The bit-widths of a config (deploy-time view; drops the methods).
+    pub fn config_bits(&self, config: &[Gene]) -> Vec<u8> {
+        config.iter().map(|&g| gene_bits(g)).collect()
+    }
+
+    /// Weighted average bits of a config, including the per-group metadata
+    /// overhead of each gene's *method* (fp16 scale+zero -> +32 bits/group;
+    /// group size 128 -> +0.25 bits/weight, range [2.25, 4.25]).
+    pub fn avg_bits(&self, config: &[Gene]) -> f64 {
         debug_assert_eq!(config.len(), self.n_layers());
         let mut num = 0.0f64;
         let mut den = 0.0f64;
         for i in 0..self.n_layers() {
             let p = self.params[i] as f64;
-            num += p * config[i] as f64 + self.groups[i] as f64 * GROUP_OVERHEAD_BITS;
+            num += p * gene_bits(config[i]) as f64
+                + self.groups[i] as f64 * gene_method(config[i]).group_overhead_bits();
             den += p;
         }
         num / den
     }
 
-    /// Searchable-weight memory in MB for a config (codes + group metadata).
-    pub fn memory_mb(&self, config: &[u8]) -> f64 {
+    /// Searchable-weight memory in MB for a config (codes + per-method
+    /// group metadata) — agrees with `ProxyBank` per-piece
+    /// `memory_bytes()` accounting.
+    pub fn memory_mb(&self, config: &[Gene]) -> f64 {
         let bits: f64 = (0..self.n_layers())
             .map(|i| {
-                self.params[i] as f64 * config[i] as f64
-                    + self.groups[i] as f64 * GROUP_OVERHEAD_BITS
+                self.params[i] as f64 * gene_bits(config[i]) as f64
+                    + self.groups[i] as f64 * gene_method(config[i]).group_overhead_bits()
             })
             .sum();
         bits / 8.0 / 1e6
@@ -83,7 +227,9 @@ impl SearchSpace {
     }
 
     /// Random configuration biased toward a target average bit-width:
-    /// sample uniformly, then repair toward the target by single-layer moves.
+    /// sample uniformly, then repair toward the target by single-layer
+    /// bit moves (the gene's method is preserved when it offers the needed
+    /// step, so multi-method init populations stay method-diverse).
     pub fn random_near(&self, rng: &mut Rng, target_bits: f64, tol: f64) -> Config {
         let mut cfg = self.random(rng);
         for _ in 0..10_000 {
@@ -92,63 +238,88 @@ impl SearchSpace {
                 break;
             }
             let li = rng.below(self.n_layers());
-            let cur = cfg[li];
+            let cur_bits = gene_bits(cfg[li]);
+            let cur_method = gene_method(cfg[li]);
             let want_up = avg < target_bits;
-            let cands: Vec<u8> = self.choices[li]
-                .iter()
-                .copied()
-                .filter(|&b| if want_up { b > cur } else { b < cur })
-                .collect();
-            if let Some(&b) = cands.first() {
-                cfg[li] = if want_up {
-                    *cands.iter().min().unwrap()
+            let pick = |same_method: bool| {
+                let cands = self.choices[li].iter().copied().filter(|&g| {
+                    let dir_ok = if want_up {
+                        gene_bits(g) > cur_bits
+                    } else {
+                        gene_bits(g) < cur_bits
+                    };
+                    dir_ok && (!same_method || gene_method(g) == cur_method)
+                });
+                if want_up {
+                    cands.min_by_key(|&g| (gene_bits(g), g))
                 } else {
-                    *cands.iter().max().unwrap()
-                };
-                let _ = b;
+                    cands.max_by_key(|&g| (gene_bits(g), std::cmp::Reverse(g)))
+                }
+            };
+            if let Some(g) = pick(true).or_else(|| pick(false)) {
+                cfg[li] = g;
             }
         }
         cfg
     }
 
-    /// Clamp a config to the space (after crossover/mutation of pinned dims).
+    /// Clamp a config to the space (after crossover/mutation of pinned
+    /// dims): snap to the nearest allowed gene by bits distance, preferring
+    /// the same method among equally near choices.
     pub fn repair(&self, config: &mut Config) {
         for i in 0..self.n_layers() {
             if !self.choices[i].contains(&config[i]) {
-                // snap to nearest allowed choice
-                let c = *self.choices[i]
+                let bits = gene_bits(config[i]) as i32;
+                let method = gene_method(config[i]);
+                let g = *self.choices[i]
                     .iter()
-                    .min_by_key(|&&b| (b as i32 - config[i] as i32).abs())
+                    .min_by_key(|&&c| {
+                        ((gene_bits(c) as i32 - bits).abs(), gene_method(c) != method, c)
+                    })
                     .unwrap();
-                config[i] = c;
+                config[i] = g;
             }
         }
     }
 
     /// True when every gene is an allowed choice.
-    pub fn contains(&self, config: &[u8]) -> bool {
+    pub fn contains(&self, config: &[Gene]) -> bool {
         config.len() == self.n_layers()
             && config
                 .iter()
                 .zip(&self.choices)
-                .all(|(b, c)| c.contains(b))
+                .all(|(g, c)| c.contains(g))
     }
 
     /// Normalized feature vector for the quality predictor: active layers
-    /// only, bits mapped to [0, 1].
-    pub fn features(&self, config: &[u8], active: &[usize]) -> Vec<f32> {
-        active
+    /// only, bits mapped to [0, 1].  When the space carries more than one
+    /// method, a one-hot method channel per active layer is appended after
+    /// the bits block, so single-method feature vectors stay byte-identical
+    /// to the legacy encoding.
+    pub fn features(&self, config: &[Gene], active: &[usize]) -> Vec<f32> {
+        let mut out: Vec<f32> = active
             .iter()
             .map(|&i| {
-                let lo = *self.choices[i].iter().min().unwrap() as f32;
-                let hi = *self.choices[i].iter().max().unwrap() as f32;
+                let lo = self.choices[i].iter().map(|&g| gene_bits(g)).min().unwrap() as f32;
+                let hi = self.choices[i].iter().map(|&g| gene_bits(g)).max().unwrap() as f32;
                 if hi > lo {
-                    (config[i] as f32 - lo) / (hi - lo)
+                    (gene_bits(config[i]) as f32 - lo) / (hi - lo)
                 } else {
                     0.0
                 }
             })
-            .collect()
+            .collect();
+        if self.method_mask().count_ones() > 1 {
+            let methods = self.methods();
+            out.reserve(active.len() * methods.len());
+            for &i in active {
+                let m = gene_method(config[i]);
+                for &cand in &methods {
+                    out.push(if cand == m { 1.0 } else { 0.0 });
+                }
+            }
+        }
+        out
     }
 }
 
@@ -162,16 +333,58 @@ pub fn toy_space(n_layers: usize) -> SearchSpace {
     }
 }
 
+/// A toy space whose layers may take every `(method, bits)` combination of
+/// the given methods.
+#[cfg(test)]
+pub fn toy_space_methods(n_layers: usize, methods: &[MethodId]) -> SearchSpace {
+    let choices: Vec<Gene> = methods
+        .iter()
+        .flat_map(|&m| [2u8, 3, 4].iter().map(move |&b| gene(m, b)))
+        .collect();
+    SearchSpace {
+        choices: vec![choices; n_layers],
+        params: vec![128 * 128; n_layers],
+        groups: vec![128; n_layers],
+        group_size: 128,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
+    fn gene_packing_roundtrip() {
+        for m in MethodId::ALL {
+            for b in [2u8, 3, 4, 8] {
+                let g = gene(m, b);
+                assert_eq!(gene_bits(g), b);
+                assert_eq!(gene_method(g), m);
+            }
+        }
+        // single-method (hqq) genes are numerically the bit-width — the
+        // legacy-genome compatibility contract
+        assert_eq!(gene(MethodId::Hqq, 3), 3);
+        assert_eq!(gene(MethodId::Rtn, 3), 0x0103);
+    }
+
+    #[test]
     fn avg_bits_uniform_configs() {
         let s = toy_space(8);
-        assert!((s.avg_bits(&vec![2u8; 8]) - 2.25).abs() < 1e-9);
-        assert!((s.avg_bits(&vec![3u8; 8]) - 3.25).abs() < 1e-9);
-        assert!((s.avg_bits(&vec![4u8; 8]) - 4.25).abs() < 1e-9);
+        assert!((s.avg_bits(&vec![2u16; 8]) - 2.25).abs() < 1e-9);
+        assert!((s.avg_bits(&vec![3u16; 8]) - 3.25).abs() < 1e-9);
+        assert!((s.avg_bits(&vec![4u16; 8]) - 4.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn avg_bits_ignores_method_at_equal_overhead() {
+        // all registered methods emit the same fp16 scale/zero metadata, so
+        // avg_bits depends only on the bits axis today
+        let s = toy_space_methods(6, &[MethodId::Hqq, MethodId::Rtn]);
+        let hqq3 = s.uniform(3);
+        let rtn3: Config = vec![gene(MethodId::Rtn, 3); 6];
+        assert!((s.avg_bits(&hqq3) - s.avg_bits(&rtn3)).abs() < 1e-12);
+        assert!((s.avg_bits(&hqq3) - 3.25).abs() < 1e-9);
     }
 
     #[test]
@@ -179,6 +392,11 @@ mod tests {
         let s = toy_space(28);
         // 3^28 ~= 10^13.36
         assert!((s.log10_size() - 28.0 * 3f64.log10()).abs() < 1e-9);
+        // the method axis multiplies the genome
+        let m = toy_space_methods(28, &[MethodId::Hqq, MethodId::Rtn]);
+        assert!((m.log10_size() - 28.0 * 6f64.log10()).abs() < 1e-9);
+        assert_eq!(m.n_methods(), 2);
+        assert_eq!(toy_space(5).n_methods(), 1);
     }
 
     #[test]
@@ -195,19 +413,58 @@ mod tests {
         let mut rng = Rng::new(1);
         for target in [2.5f64, 3.0, 3.5, 4.0] {
             let cfg = s.random_near(&mut rng, target, 0.05);
-            assert!((s.avg_bits(&cfg) - target).abs() <= 0.06,
-                    "target {target} got {}", s.avg_bits(&cfg));
+            assert!(
+                (s.avg_bits(&cfg) - target).abs() <= 0.06,
+                "target {target} got {}",
+                s.avg_bits(&cfg)
+            );
         }
+    }
+
+    #[test]
+    fn random_near_preserves_methods_multi() {
+        let s = toy_space_methods(28, &[MethodId::Hqq, MethodId::Rtn]);
+        let mut rng = Rng::new(5);
+        let cfg = s.random_near(&mut rng, 3.0, 0.05);
+        assert!(s.contains(&cfg));
+        assert!((s.avg_bits(&cfg) - 3.0).abs() <= 0.06);
+        // with 28 layers and uniform method sampling, both methods should
+        // survive the bit-repair walk
+        let rtn = cfg.iter().filter(|&&g| gene_method(g) == MethodId::Rtn).count();
+        assert!(rtn > 0 && rtn < 28, "method diversity lost: {rtn}/28");
     }
 
     #[test]
     fn repair_snaps_to_choices() {
         let mut s = toy_space(3);
         s.pin(0, 4);
-        let mut cfg = vec![2u8, 3, 3];
+        let mut cfg = vec![2u16, 3, 3];
         s.repair(&mut cfg);
         assert_eq!(cfg[0], 4);
         assert!(s.contains(&cfg));
+    }
+
+    #[test]
+    fn repair_prefers_same_method() {
+        let mut s = toy_space_methods(2, &[MethodId::Hqq, MethodId::Rtn]);
+        // layer 0 restricted to rtn@{2,4}; a stray rtn@3 must stay rtn
+        s.choices[0] = vec![gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 4), gene(MethodId::Hqq, 2)];
+        let mut cfg = vec![gene(MethodId::Rtn, 3), gene(MethodId::Hqq, 3)];
+        s.repair(&mut cfg);
+        assert_eq!(cfg[0], gene(MethodId::Rtn, 2), "same-method tie must win");
+        assert_eq!(cfg[1], gene(MethodId::Hqq, 3));
+    }
+
+    #[test]
+    fn min_max_uniform_demote_helpers() {
+        let s = toy_space_methods(3, &[MethodId::Hqq, MethodId::Rtn]);
+        assert_eq!(s.min_gene(0), gene(MethodId::Hqq, 2));
+        assert_eq!(s.max_gene(0), gene(MethodId::Hqq, 4));
+        assert_eq!(s.uniform(3), vec![gene(MethodId::Hqq, 3); 3]);
+        // demote keeps the method
+        assert_eq!(s.demote(0, gene(MethodId::Rtn, 4)), Some(gene(MethodId::Rtn, 3)));
+        assert_eq!(s.demote(0, gene(MethodId::Rtn, 2)), None);
+        assert_eq!(s.config_bits(&s.max_config()), vec![4, 4, 4]);
     }
 
     #[test]
@@ -219,8 +476,37 @@ mod tests {
     }
 
     #[test]
+    fn features_append_method_one_hot_only_when_multi() {
+        let s = toy_space_methods(3, &[MethodId::Hqq, MethodId::Rtn]);
+        let active = vec![0usize, 1, 2];
+        let cfg = vec![gene(MethodId::Hqq, 2), gene(MethodId::Rtn, 3), gene(MethodId::Hqq, 4)];
+        let f = s.features(&cfg, &active);
+        // 3 bits features + 3 layers x 2-way one-hot
+        assert_eq!(f.len(), 9);
+        assert_eq!(&f[..3], &[0.0, 0.5, 1.0]);
+        assert_eq!(&f[3..], &[1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        // single-method spaces keep the legacy layout exactly
+        let legacy = toy_space(3).features(&[2, 3, 4], &active);
+        assert_eq!(legacy.len(), 3);
+    }
+
+    #[test]
+    fn with_methods_builds_cross_product() {
+        let m = crate::data::manifest::toy_manifest();
+        let single = SearchSpace::full(&m);
+        assert_eq!(single.choices[0], vec![2u16, 3, 4]);
+        let reg = MethodRegistry::parse("hqq,rtn").unwrap();
+        let multi = SearchSpace::with_methods(&m, &reg);
+        assert_eq!(multi.choices[0].len(), 6);
+        assert_eq!(multi.n_methods(), 2);
+        assert!(multi.log10_size() > single.log10_size());
+        // group accounting covers every (row, group) metadata entry
+        assert_eq!(single.groups[0], m.layers[0].params() / m.group_size);
+    }
+
+    #[test]
     fn memory_tracks_bits() {
         let s = toy_space(4);
-        assert!(s.memory_mb(&vec![2u8; 4]) < s.memory_mb(&vec![4u8; 4]));
+        assert!(s.memory_mb(&vec![2u16; 4]) < s.memory_mb(&vec![4u16; 4]));
     }
 }

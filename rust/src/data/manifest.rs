@@ -63,6 +63,10 @@ pub struct Manifest {
     pub model: ModelSpec,
     pub group_size: usize,
     pub bit_choices: Vec<u8>,
+    /// Quantization methods the search genome may assign per layer
+    /// (names understood by `quant::registry`).  Optional in the JSON;
+    /// defaults to the single-method HQQ proxy (the legacy genome).
+    pub methods: Vec<String>,
     pub eval_batch: usize,
     pub layers: Vec<LayerSpec>,
     pub fp_side_names: Vec<String>,
@@ -148,6 +152,14 @@ impl Manifest {
                 special_tokens.insert(k.clone(), t.as_usize()? as u32);
             }
         }
+        let methods = match v.opt("methods") {
+            Some(ms) => ms
+                .as_arr()?
+                .iter()
+                .map(|m| Ok(m.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec!["hqq".to_string()],
+        };
         Ok(Manifest {
             model,
             group_size: v.get("group_size")?.as_usize()?,
@@ -157,6 +169,7 @@ impl Manifest {
                 .iter()
                 .map(|b| Ok(b.as_usize()? as u8))
                 .collect::<Result<Vec<_>>>()?,
+            methods,
             eval_batch: v.get("eval_batch")?.as_usize()?,
             layers,
             fp_side_names,
@@ -257,6 +270,12 @@ mod tests {
         assert!(m.layer("nope").is_err());
         assert_eq!(m.total_linear_params(), 2 * (128 * 128 + 128 * 256));
         assert_eq!(m.pad_token(), 396);
+    }
+
+    #[test]
+    fn methods_default_to_single_hqq() {
+        let m = toy_manifest();
+        assert_eq!(m.methods, vec!["hqq".to_string()]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 pub mod json;
 
 mod bundle;
-mod manifest;
+pub mod manifest;
 mod tasks;
 
 pub use bundle::{Bundle, Payload, Tensor};

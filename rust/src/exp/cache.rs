@@ -35,11 +35,13 @@ pub fn load_archive(path: &Path) -> Result<Archive> {
     let v = Value::parse(&text)?;
     let mut archive = Archive::new();
     for smp in v.get("samples")?.as_arr()? {
+        // Genes serialize as bare integers; single-method (hqq) configs are
+        // numerically the bit-widths, so legacy bits-only caches round-trip.
         let config: Config = smp
             .get("config")?
             .as_arr()?
             .iter()
-            .map(|b| Ok(b.as_usize()? as u8))
+            .map(|b| Ok(b.as_usize()? as u16))
             .collect::<Result<Vec<_>>>()?;
         archive.insert(
             config,

@@ -3,13 +3,14 @@
 
 use super::{cache, Ctx};
 use crate::coordinator::{
-    pruning, run_search, sensitivity, Archive, Config, ConfigEvaluator, DeviceProxy,
-    EvalPool, PooledEvaluator, ProxyEvaluator, ProxyStore, SearchParams, SearchSpace,
+    gene_bits, gene_method, pruning, run_search, sensitivity, Archive, Config,
+    ConfigEvaluator, DeviceProxy, EvalPool, PooledEvaluator, ProxyBank, ProxyEvaluator,
+    SearchParams, SearchSpace,
 };
 use crate::data::load_tokens;
 use crate::eval::{self, ModelHandle, TaskResults};
 use crate::model::ModelAssets;
-use crate::quant::{AwqClip, BitStack, Hqq, PbLlm, Quantizer};
+use crate::quant::{AwqClip, BitStack, MethodId, MethodRegistry, PbLlm, Quantizer};
 use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch};
 use crate::Result;
 use std::collections::HashMap;
@@ -33,22 +34,29 @@ pub struct Pipeline<'rt> {
     pub proxy_build_secs: f64,
 }
 
-/// The proxy store every evaluation path shares (HQQ, activation-independent
-/// — the whole point of §3.3).  Single definition so the main thread and the
-/// pool shards quantize identically.
-pub(super) fn build_proxy_store(assets: &ModelAssets) -> Result<ProxyStore> {
-    ProxyStore::build(&assets.manifest, &assets.weights, None, &Hqq::default())
+/// The proxy bank every evaluation path shares: each enabled method's
+/// `(layer, bits)` pieces, quantized once (§3.3 generalized over the
+/// method axis).  Single definition so the main thread and the pool shards
+/// quantize identically.  Hessian statistics are loaded only when an
+/// enabled method consumes them, so the single-method HQQ default stays
+/// activation-independent.
+pub(super) fn build_proxy_bank(
+    assets: &ModelAssets,
+    registry: &MethodRegistry,
+) -> Result<ProxyBank> {
+    let hessians = registry.any_needs_stats().then_some(&assets.hessians);
+    ProxyBank::build(&assets.manifest, &assets.weights, hessians, registry)
 }
 
 impl<'rt> Pipeline<'rt> {
-    /// Build the HQQ proxy, measure sensitivity, prune at 2x median.
+    /// Build the proxy bank, measure sensitivity, prune at 2x median.
     pub fn build(ctx: &'rt Ctx) -> Result<Pipeline<'rt>> {
         let t0 = Instant::now();
-        let store = build_proxy_store(&ctx.assets)?;
-        let proxy = DeviceProxy::new(&ctx.rt, store)?;
+        let bank = build_proxy_bank(&ctx.assets, &ctx.registry)?;
+        let proxy = DeviceProxy::new(&ctx.rt, bank)?;
         let proxy_build_secs = t0.elapsed().as_secs_f64();
 
-        let full_space = SearchSpace::full(&ctx.assets.manifest);
+        let full_space = SearchSpace::with_methods(&ctx.assets.manifest, &ctx.registry);
         // The sensitivity scan is one batched dispatch of n_layers probes,
         // so it fans out across pool shards when `--workers > 1`.
         let sens = match ctx.eval_pool() {
@@ -94,14 +102,14 @@ impl ShardStack {
     fn build(
         artifacts: &Path,
         assets: &ModelAssets,
-        store: Arc<ProxyStore>,
+        bank: Arc<ProxyBank>,
     ) -> Result<ShardStack> {
         // Shards live for the process lifetime, so one leaked Runtime per
         // shard stands in for a self-referential struct (DeviceProxy
         // borrows the runtime it uploads to).
         let rt: &'static Runtime =
             Box::leak(Box::new(Runtime::load(artifacts, &assets.weights)?));
-        let proxy = DeviceProxy::new_shared(rt, store)?;
+        let proxy = DeviceProxy::new_shared(rt, bank)?;
         let calib = load_tokens(&assets.manifest.file("calib")?)?;
         let batches = super::prepare_search_batches(rt, &calib)?;
         Ok(ShardStack { proxy, batches })
@@ -116,19 +124,22 @@ impl ShardStack {
 }
 
 /// Host-side state shared by every pool shard: one `ModelAssets` load and
-/// one HQQ quantization pass (both plain `Send + Sync` data) serve all
-/// workers; only the PJRT runtime stack is per-shard.  The error arm keeps
-/// a `String` so a failed load is reported by every shard, not retried.
-type SharedShardInit = OnceLock<std::result::Result<(Arc<ModelAssets>, Arc<ProxyStore>), String>>;
+/// one quantization pass per enabled method (both plain `Send + Sync`
+/// data) serve all workers; only the PJRT runtime stack is per-shard.  The
+/// error arm keeps a `String` so a failed load is reported by every shard,
+/// not retried.
+type SharedShardInit = OnceLock<std::result::Result<(Arc<ModelAssets>, Arc<ProxyBank>), String>>;
 
 /// Spawn the PJRT-backed evaluation pool for `ctx.workers` shards.  Each
 /// shard lazily builds its runtime stack on first request, so an unused
 /// pool costs nothing.
 pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
     let artifacts = ctx.artifacts.clone();
+    let registry = ctx.registry.clone();
     let shared: Arc<SharedShardInit> = Arc::new(OnceLock::new());
     EvalService::spawn_sharded(ctx.workers, move |_shard| {
         let artifacts = artifacts.clone();
+        let registry = registry.clone();
         let shared = shared.clone();
         let mut stack: Option<ShardStack> = None;
         let mut failed: Option<String> = None;
@@ -140,13 +151,14 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
                 let built = shared
                     .get_or_init(|| {
                         let assets = ModelAssets::load(&artifacts).map_err(|e| format!("{e}"))?;
-                        let store = build_proxy_store(&assets).map_err(|e| format!("{e}"))?;
-                        Ok((Arc::new(assets), Arc::new(store)))
+                        let bank =
+                            build_proxy_bank(&assets, &registry).map_err(|e| format!("{e}"))?;
+                        Ok((Arc::new(assets), Arc::new(bank)))
                     })
                     .as_ref()
                     .map_err(|e| eyre::anyhow!("{e}"))
-                    .and_then(|(assets, store)| {
-                        ShardStack::build(&artifacts, assets, store.clone())
+                    .and_then(|(assets, bank)| {
+                        ShardStack::build(&artifacts, assets, bank.clone())
                     });
                 match built {
                     Ok(s) => stack = Some(s),
@@ -173,13 +185,20 @@ pub fn search_evaluator<'a>(ctx: &'a Ctx, pipe: &'a Pipeline) -> Box<dyn ConfigE
 }
 
 /// The main AMQ search (ctx.preset), cached under `results/cache/`.
+/// Any non-default method list gets its own cache key — including a
+/// *single* non-hqq method — so `--methods rtn` can never collide with a
+/// default-genome archive; the default hqq tag is unchanged, so legacy
+/// caches keep hitting.
 pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> {
-    let tag = format!(
+    let mut tag = format!(
         "search_main_i{}_n{}_s{}",
         ctx.preset.iterations, ctx.preset.n_init, ctx.preset.seed
     );
+    if ctx.registry.single() != Some(MethodId::Hqq) {
+        tag = format!("{tag}_m{}", ctx.registry.names().join("-"));
+    }
     let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
-    cache::archive_cached(&path, fresh, || {
+    let archive = cache::archive_cached(&path, fresh, || {
         let mut evaluator = search_evaluator(ctx, pipe);
         let res = run_search(&pipe.space, evaluator.as_mut(), &ctx.preset)?;
         eprintln!(
@@ -191,7 +210,22 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
             if ctx.workers == 1 { "" } else { "s" }
         );
         Ok(res.archive)
-    })
+    })?;
+    Ok(rebits(archive, &pipe.space))
+}
+
+/// Recompute every sample's avg_bits from its genes against the *current*
+/// space accounting.  Cached archives are authoritative only on (config,
+/// jsd); the stored bits may predate an accounting change (e.g. the
+/// group-metadata fix) and would otherwise leak stale budgets into
+/// frontier selection.
+pub fn rebits(archive: Archive, space: &SearchSpace) -> Archive {
+    let mut out = Archive::new();
+    for s in archive.samples {
+        let bits = space.avg_bits(&s.config);
+        out.insert(s.config, s.jsd, bits);
+    }
+    out
 }
 
 /// Pick the frontier config for a budget (panics with context if none).
@@ -206,7 +240,8 @@ pub fn pick(archive: &Archive, space: &SearchSpace, budget: f64) -> Result<Confi
         })
 }
 
-/// Deploy-quantize a configuration with a given quantizer and upload.
+/// Deploy-quantize a configuration's *bit-widths* with a given quantizer
+/// and upload (the fixed-deploy-method comparators).
 pub fn deploy_layers(
     ctx: &Ctx,
     config: &Config,
@@ -222,7 +257,29 @@ pub fn deploy_layers(
         } else {
             None
         };
-        let q = quantizer.quantize(&w, config[li], m.group_size, stats);
+        let q = quantizer.quantize(&w, gene_bits(config[li]), m.group_size, stats);
+        out.push(ctx.rt.upload_quant_layer(&q)?);
+    }
+    Ok(out)
+}
+
+/// Deploy-quantize a configuration honoring each gene's *method*: every
+/// layer is quantized with its assigned method at its assigned bit-width
+/// (method-aware genomes deploy what they searched).
+pub fn deploy_gene_layers(ctx: &Ctx, config: &Config) -> Result<Vec<QuantLayerBufs>> {
+    let m = &ctx.assets.manifest;
+    let mut quantizers: HashMap<MethodId, Box<dyn Quantizer>> = HashMap::new();
+    let mut out = Vec::with_capacity(m.layers.len());
+    for (li, l) in m.layers.iter().enumerate() {
+        let method = gene_method(config[li]);
+        let quantizer = quantizers.entry(method).or_insert_with(|| method.build());
+        let stats = if method.needs_stats() {
+            Some(ctx.assets.hessians.for_layer(&l.name)?)
+        } else {
+            None
+        };
+        let w = ctx.assets.weights.linear(&l.name)?;
+        let q = quantizer.quantize(&w, gene_bits(config[li]), m.group_size, stats);
         out.push(ctx.rt.upload_quant_layer(&q)?);
     }
     Ok(out)
@@ -268,9 +325,16 @@ pub fn ppl_only(ctx: &Ctx, handle: &ModelHandle) -> Result<(f32, f32)> {
     ))
 }
 
-/// AMQ deploy evaluation: config -> asym-clip AWQ layers -> quality.
+/// AMQ deploy evaluation.  Legacy single-method (HQQ-proxy) configs deploy
+/// with asym-clip AWQ (the paper's deploy quantizer); configs that carry
+/// explicit non-default method genes deploy each layer with its own method.
 pub fn amq_quality(ctx: &Ctx, config: &Config) -> Result<QualityOut> {
-    let layers = deploy_layers(ctx, config, &AwqClip::default(), true)?;
+    let proxy_only = config.iter().all(|&g| gene_method(g) == MethodId::Hqq);
+    let layers = if proxy_only {
+        deploy_layers(ctx, config, &AwqClip::default(), true)?
+    } else {
+        deploy_gene_layers(ctx, config)?
+    };
     let refs: Vec<&QuantLayerBufs> = layers.iter().collect();
     quality(ctx, &ModelHandle::Quant(&refs))
 }
@@ -323,9 +387,10 @@ pub fn pbllm_quality(ctx: &Ctx, avg_bits: f64) -> Result<QualityOut> {
     quality(ctx, &ModelHandle::Override(&overrides))
 }
 
-/// Uniform fixed-precision configuration at `bits` for every layer.
+/// Uniform fixed-precision configuration at `bits` for every layer (each
+/// layer keeps a method present in its choices).
 pub fn uniform_config(space: &SearchSpace, bits: u8) -> Config {
-    vec![bits; space.n_layers()]
+    space.uniform(bits)
 }
 
 /// JSD of an arbitrary override model vs the fp reference on the search
@@ -350,7 +415,9 @@ pub fn proxy_full_jsd(ctx: &Ctx, pipe: &Pipeline, config: &Config) -> Result<f32
     Ok((sum / batches.len() as f64) as f32)
 }
 
-/// Run a search with explicit params (ablations), cached by tag.
+/// Run a search with explicit params (ablations), cached by tag.  Like
+/// [`main_archive`], non-default method lists extend the cache key and
+/// cached bits are recomputed against the current accounting.
 pub fn search_cached(
     ctx: &Ctx,
     pipe: &Pipeline,
@@ -358,12 +425,17 @@ pub fn search_cached(
     tag: &str,
     fresh: bool,
 ) -> Result<Archive> {
+    let mut tag = tag.to_string();
+    if ctx.registry.single() != Some(MethodId::Hqq) {
+        tag = format!("{tag}_m{}", ctx.registry.names().join("-"));
+    }
     let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
-    cache::archive_cached(&path, fresh, || {
+    let archive = cache::archive_cached(&path, fresh, || {
         let mut evaluator = search_evaluator(ctx, pipe);
         let res = run_search(&pipe.space, evaluator.as_mut(), params)?;
         Ok(res.archive)
-    })
+    })?;
+    Ok(rebits(archive, &pipe.space))
 }
 
 /// Memory column (MB) for an AMQ/uniform config row: searchable weights at

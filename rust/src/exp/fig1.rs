@@ -33,7 +33,8 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
         // AMQ
         let cfg = common::pick(&archive, &pipe.space, budget)?;
         let amq_q = common::amq_quality(ctx, &cfg)?;
-        let speed = costmodel::tokens_per_sec(&L40S, m, &DeployKind::LayerQuant(&cfg));
+        let cfg_bits = pipe.space.config_bits(&cfg);
+        let speed = costmodel::tokens_per_sec(&L40S, m, &DeployKind::LayerQuant(&cfg_bits));
         table.row(vec![
             format!("{budget}"),
             "AMQ".into(),

@@ -4,6 +4,7 @@
 
 use super::common::{self, Pipeline};
 use super::Ctx;
+use crate::coordinator::{gene_bits, gene_method};
 use crate::report::Table;
 use crate::Result;
 
@@ -14,9 +15,10 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
     let m = &ctx.assets.manifest;
     let n_blocks = m.model.n_layers;
 
+    let multi = pipe.space.n_methods() > 1;
     let mut csv = Table::new(
         "Figure 12 — bit allocation per layer",
-        &["avg_bits", "layer", "bits"],
+        &["avg_bits", "layer", "bits", "method"],
     );
     for &budget in &common::BUDGETS {
         let cfg = common::pick(&archive, &pipe.space, budget)?;
@@ -28,8 +30,18 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
             for b in 0..n_blocks {
                 let name = format!("blk{b}.{kind}");
                 let li = m.layer_index(&name).unwrap();
-                cells.push(format!("  {} ", cfg[li]));
-                csv.row(vec![format!("{budget}"), name, cfg[li].to_string()]);
+                let (bits, method) = (gene_bits(cfg[li]), gene_method(cfg[li]));
+                if multi {
+                    cells.push(format!(" {bits}@{} ", method.name()));
+                } else {
+                    cells.push(format!("  {bits} "));
+                }
+                csv.row(vec![
+                    format!("{budget}"),
+                    name,
+                    bits.to_string(),
+                    method.name().to_string(),
+                ]);
             }
             println!("{kind:>6}  {}", cells.join("  "));
         }
@@ -37,7 +49,9 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
         let mut means = Vec::new();
         for kind in KINDS {
             let vals: Vec<f32> = (0..n_blocks)
-                .map(|b| cfg[m.layer_index(&format!("blk{b}.{kind}")).unwrap()] as f32)
+                .map(|b| {
+                    gene_bits(cfg[m.layer_index(&format!("blk{b}.{kind}")).unwrap()]) as f32
+                })
                 .collect();
             means.push(format!(
                 "{kind}={:.2}",

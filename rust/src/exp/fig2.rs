@@ -18,16 +18,11 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
         "Figure 2 — single-layer 2-bit sensitivity (others 4-bit)",
         &["layer", "kind", "block", "jsd", "wiki_ppl"],
     );
-    let max_cfg: Vec<u8> = pipe
-        .full_space
-        .choices
-        .iter()
-        .map(|c| *c.iter().max().unwrap())
-        .collect();
+    let max_cfg = pipe.full_space.max_config();
     let mut rows = Vec::new();
     for (li, l) in m.layers.iter().enumerate() {
         let mut cfg = max_cfg.clone();
-        cfg[li] = 2;
+        cfg[li] = pipe.full_space.min_gene(li);
         let layers = pipe.proxy.assemble(&cfg);
         let ppl = eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?;
         rows.push((l.name.clone(), l.kind().to_string(), l.block(), scores[li], ppl));

@@ -13,7 +13,7 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
     let without = {
         let tag = "search_unpruned";
         let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
-        super::cache::archive_cached(&path, fresh, || {
+        let archive = super::cache::archive_cached(&path, fresh, || {
             let mut evaluator = common::search_evaluator(ctx, pipe);
             let res = crate::coordinator::run_search(
                 &pipe.full_space,
@@ -21,7 +21,8 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
                 &ctx.preset,
             )?;
             Ok(res.archive)
-        })?
+        })?;
+        common::rebits(archive, &pipe.full_space)
     };
 
     // Fig 9: histogram of explored avg-bits

@@ -27,6 +27,7 @@ pub mod table9;
 use crate::coordinator::{EvalPool, SearchParams};
 use crate::data::{load_tasks, load_tokens, TaskInstance, TokenSplit};
 use crate::model::ModelAssets;
+use crate::quant::MethodRegistry;
 use crate::runtime::{Runtime, ScoreBatch, ServiceStats};
 use crate::Result;
 use std::path::{Path, PathBuf};
@@ -68,6 +69,9 @@ pub struct Ctx {
     pub artifacts: PathBuf,
     /// Evaluation-pool width (`--workers N`); 1 = in-thread evaluation.
     pub workers: usize,
+    /// Enabled quantization methods (`--methods`, default: the manifest's
+    /// list, which defaults to single-method HQQ — the legacy genome).
+    pub registry: MethodRegistry,
     /// Lazily-spawned sharded evaluation pool, shared across searches.
     pool: OnceLock<Arc<EvalPool>>,
 }
@@ -77,15 +81,28 @@ impl Ctx {
         Self::load_with_workers(artifacts_dir, out_dir, preset, 1)
     }
 
-    /// Load with an explicit evaluation-pool width.  `workers <= 1` keeps
-    /// every true-evaluation on the calling thread (the seed behaviour);
-    /// `workers > 1` spawns that many shards on first use, each owning its
-    /// own PJRT runtime stack.
+    /// Load with an explicit evaluation-pool width and the manifest's
+    /// method enable list.
     pub fn load_with_workers(
         artifacts_dir: &Path,
         out_dir: &Path,
         preset: SearchParams,
         workers: usize,
+    ) -> Result<Ctx> {
+        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None)
+    }
+
+    /// Load with explicit options.  `workers <= 1` keeps every
+    /// true-evaluation on the calling thread (the seed behaviour);
+    /// `workers > 1` spawns that many shards on first use, each owning its
+    /// own PJRT runtime stack.  `registry` overrides the manifest's method
+    /// enable list (CLI `--methods`).
+    pub fn load_with_opts(
+        artifacts_dir: &Path,
+        out_dir: &Path,
+        preset: SearchParams,
+        workers: usize,
+        registry: Option<MethodRegistry>,
     ) -> Result<Ctx> {
         let assets = ModelAssets::load(artifacts_dir)?;
         let rt = Runtime::load(artifacts_dir, &assets.weights)?;
@@ -97,6 +114,8 @@ impl Ctx {
         let search_batches = prepare_search_batches(&rt, &calib)?;
         std::fs::create_dir_all(out_dir)?;
         std::fs::create_dir_all(out_dir.join("cache"))?;
+        let registry =
+            registry.unwrap_or_else(|| MethodRegistry::from_names(&assets.manifest.methods));
         Ok(Ctx {
             assets,
             rt,
@@ -109,6 +128,7 @@ impl Ctx {
             preset,
             artifacts: artifacts_dir.to_path_buf(),
             workers: workers.max(1),
+            registry,
             pool: OnceLock::new(),
         })
     }

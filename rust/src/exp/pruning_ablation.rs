@@ -3,7 +3,7 @@
 
 use super::common::{self, Pipeline};
 use super::Ctx;
-use crate::coordinator::{pruning, sensitivity, ProxyEvaluator, SearchSpace};
+use crate::coordinator::{pruning, sensitivity, ProxyEvaluator};
 use crate::report::{fmt, Table};
 use crate::Result;
 
@@ -27,8 +27,9 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
         ("wiki", &ctx.search_batches),
         ("c4", &alt_batches),
     ] {
-        // sensitivity under this calibration set
-        let full = SearchSpace::full(m);
+        // sensitivity under this calibration set (same genome as the
+        // pipeline, so the proxy bank covers every probed gene)
+        let full = pipe.full_space.clone();
         let mut ev = ProxyEvaluator::new(&pipe.proxy, batches);
         let sens = sensitivity::measure(&full, &mut ev)?;
         for &thr in &[1.5f32, 2.0, 3.0, 5.0] {
@@ -50,6 +51,7 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
                     crate::coordinator::run_search(&space, evaluator.as_mut(), &params)?;
                 Ok(res.archive)
             })?;
+            let archive = common::rebits(archive, &space);
             let mut row = vec![
                 calib_name.to_string(),
                 format!("{thr}x"),

@@ -43,7 +43,8 @@ pub fn run_fig8(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
         let fp = costmodel::tokens_per_sec(hw, m, &DeployKind::Fp16);
         for &budget in &common::BUDGETS {
             let cfg = common::pick(&archive, &pipe.space, budget)?;
-            let amq = costmodel::tokens_per_sec(hw, m, &DeployKind::LayerQuant(&cfg));
+            let cfg_bits = pipe.space.config_bits(&cfg);
+            let amq = costmodel::tokens_per_sec(hw, m, &DeployKind::LayerQuant(&cfg_bits));
             let loaded = bs.allocate(common::budget_bytes(&pipe.space, budget));
             let bst = costmodel::tokens_per_sec(hw, m, &DeployKind::BitStack(&loaded));
             let pb = costmodel::tokens_per_sec(
@@ -71,7 +72,7 @@ pub fn measured(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
     let b = ctx.rt.batch_size();
     let t = ctx.rt.seq_len();
     let toks = ctx.calib.batch(0, b);
-    let cfg3 = vec![3u8; ctx.assets.manifest.layers.len()];
+    let cfg3 = pipe.full_space.uniform(3);
     let layers = pipe.proxy.assemble(&cfg3);
 
     // warmup

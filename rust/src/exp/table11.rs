@@ -68,8 +68,7 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
                     .iter().cloned().enumerate().collect();
                 targets.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
                 let mut current_target_idx = 0usize;
-                let mut cfg: crate::coordinator::Config = pipe
-                    .space.choices.iter().map(|c| *c.iter().max().unwrap()).collect();
+                let mut cfg: crate::coordinator::Config = pipe.space.max_config();
                 while pipe.space.avg_bits(&cfg) > lowest {
                     let res = greedy::greedy_step(&pipe.space, &mut ev, &cfg)?;
                     match res {

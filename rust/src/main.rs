@@ -17,9 +17,16 @@
 //!   --workers N                     evaluation-pool shards (default: 1);
 //!                                   each shard owns its own runtime stack,
 //!                                   archives are identical for any N
+//!   --methods LIST                  comma-separated quantization methods
+//!                                   the genome may assign per layer
+//!                                   (hqq,rtn,gptq,awq_clip; default: the
+//!                                   manifest's list, normally just hqq)
+//!   --predictor rbf|mlp             quality predictor (default: rbf)
 
+use amq::coordinator::predictor::PredictorKind;
 use amq::coordinator::SearchParams;
 use amq::exp::{self, Ctx};
+use amq::quant::MethodRegistry;
 use amq::Result;
 
 struct Args {
@@ -30,6 +37,8 @@ struct Args {
     out: String,
     artifacts: Option<String>,
     workers: usize,
+    methods: Option<String>,
+    predictor: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -41,6 +50,8 @@ fn parse_args() -> Args {
         out: "results".into(),
         artifacts: None,
         workers: 1,
+        methods: None,
+        predictor: None,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -67,6 +78,14 @@ fn parse_args() -> Args {
                 i += 1;
                 args.workers = argv[i].parse().expect("--workers N");
             }
+            "--methods" => {
+                i += 1;
+                args.methods = Some(argv[i].clone());
+            }
+            "--predictor" => {
+                i += 1;
+                args.predictor = Some(argv[i].clone());
+            }
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -85,7 +104,7 @@ fn parse_args() -> Args {
     args
 }
 
-fn preset(name: &str, seed: Option<u64>) -> SearchParams {
+fn preset(name: &str, seed: Option<u64>, predictor: Option<&str>) -> SearchParams {
     let mut p = match name {
         "smoke" => SearchParams::smoke(),
         "repro" => SearchParams::default(),
@@ -98,7 +117,98 @@ fn preset(name: &str, seed: Option<u64>) -> SearchParams {
     if let Some(s) = seed {
         p.seed = s;
     }
+    if let Some(name) = predictor {
+        p.predictor = match PredictorKind::parse(name) {
+            Ok(k) => k,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        };
+    }
     p
+}
+
+/// Per-method gene counts of a config, e.g. `"hqq:20 rtn:8"`.
+fn method_mix(config: &[amq::coordinator::Gene]) -> String {
+    let mut counts: Vec<(&'static str, usize)> = Vec::new();
+    for &g in config {
+        let name = amq::coordinator::gene_method(g).name();
+        match counts.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((name, 1)),
+        }
+    }
+    counts
+        .iter()
+        .map(|(n, c)| format!("{n}:{c}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// JSON search report: enabled methods, per-method proxy build stats, the
+/// genome size, and the frontier with per-layer (method, bits) assignments.
+fn write_search_report(
+    path: &std::path::Path,
+    ctx: &Ctx,
+    pipe: &exp::common::Pipeline,
+    frontier: &[&amq::coordinator::Sample],
+) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut s = String::from("{\n");
+    let _ = write!(
+        s,
+        "  \"methods\": [{}],\n",
+        ctx.registry
+            .names()
+            .iter()
+            .map(|n| format!("\"{n}\""))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
+    let _ = write!(s, "  \"log10_space_size\": {:.3},\n", pipe.space.log10_size());
+    let _ = write!(s, "  \"n_layers\": {},\n", pipe.space.n_layers());
+    s.push_str("  \"proxy_bank\": [");
+    for (i, st) in pipe.proxy.bank.stats.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        let _ = write!(
+            s,
+            "{{\"method\": \"{}\", \"build_seconds\": {:.4}, \"memory_mb\": {:.3}}}",
+            st.method.name(),
+            st.build_time.as_secs_f64(),
+            st.memory_bytes as f64 / 1e6,
+        );
+    }
+    s.push_str("],\n  \"frontier\": [\n");
+    for (i, smp) in frontier.iter().enumerate() {
+        if i > 0 {
+            s.push_str(",\n");
+        }
+        let _ = write!(
+            s,
+            "    {{\"avg_bits\": {:.4}, \"jsd\": {}, \"layers\": [",
+            smp.avg_bits, smp.jsd
+        );
+        for (li, &g) in smp.config.iter().enumerate() {
+            if li > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(
+                s,
+                "{{\"name\": \"{}\", \"method\": \"{}\", \"bits\": {}}}",
+                ctx.assets.manifest.layers[li].name,
+                amq::coordinator::gene_method(g).name(),
+                amq::coordinator::gene_bits(g),
+            );
+        }
+        s.push_str("]}");
+    }
+    s.push_str("\n  ]\n}\n");
+    std::fs::write(path, s)?;
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -129,19 +239,26 @@ fn main() -> Result<()> {
         artifacts.display()
     );
 
-    let params = preset(&args.preset, args.seed);
+    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let registry = match args.methods.as_deref() {
+        Some(list) => Some(MethodRegistry::parse(list)?),
+        None => None,
+    };
     let t0 = std::time::Instant::now();
-    let ctx = Ctx::load_with_workers(
+    let ctx = Ctx::load_with_opts(
         &artifacts,
         std::path::Path::new(&args.out),
         params,
         args.workers,
+        registry,
     )?;
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
         ctx.workers,
-        if ctx.workers == 1 { "" } else { "s" }
+        if ctx.workers == 1 { "" } else { "s" },
+        ctx.registry.names().join(","),
+        ctx.preset.predictor.name(),
     );
 
     if args.cmd == "check" {
@@ -150,9 +267,16 @@ fn main() -> Result<()> {
                  ctx.assets.manifest.model.n_layers,
                  ctx.assets.manifest.layers.len(),
                  ctx.assets.manifest.model.vocab_size);
-        let space = amq::coordinator::SearchSpace::full(&ctx.assets.manifest);
-        println!("search space: 3^{} ≈ 10^{:.1} configurations",
-                 space.n_layers(), space.log10_size());
+        let space =
+            amq::coordinator::SearchSpace::with_methods(&ctx.assets.manifest, &ctx.registry);
+        let per_layer = space.choices.first().map(|c| c.len()).unwrap_or(0);
+        println!(
+            "search space: {per_layer}^{} ≈ 10^{:.1} configurations ({} method{})",
+            space.n_layers(),
+            space.log10_size(),
+            ctx.registry.len(),
+            if ctx.registry.len() == 1 { "" } else { "s" }
+        );
         let q = exp::common::quality(&ctx, &amq::eval::ModelHandle::Fp)?;
         println!("fp16: wiki_ppl {:.3}  c4_ppl {:.3}  zero-shot avg {:.1}%",
                  q.wiki_ppl, q.c4_ppl,
@@ -170,6 +294,15 @@ fn main() -> Result<()> {
         pipe.full_space.log10_size(),
         pipe.space.log10_size()
     );
+    for s in &pipe.proxy.bank.stats {
+        eprintln!(
+            "[bank] {:>8}: {} (layer, bits) pieces built in {:.2}s, {:.1} MB resident",
+            s.method.name(),
+            pipe.proxy.bank.n_layers() * pipe.proxy.bank.bit_choices.len(),
+            s.build_time.as_secs_f64(),
+            s.memory_bytes as f64 / 1e6,
+        );
+    }
     let _ = t0;
 
     let fresh = args.fresh;
@@ -208,9 +341,22 @@ fn main() -> Result<()> {
             println!("Pareto frontier ({} of {} samples):", front.len(), archive.len());
             let mut rows: Vec<_> = front.iter().map(|&i| &archive.samples[i]).collect();
             rows.sort_by(|a, b| a.avg_bits.partial_cmp(&b.avg_bits).unwrap());
-            for s in rows {
-                println!("  bits {:.3}  jsd {:.5}", s.avg_bits, s.jsd);
+            let multi = ctx.registry.len() > 1;
+            for s in &rows {
+                if multi {
+                    println!(
+                        "  bits {:.3}  jsd {:.5}  methods [{}]",
+                        s.avg_bits,
+                        s.jsd,
+                        method_mix(&s.config)
+                    );
+                } else {
+                    println!("  bits {:.3}  jsd {:.5}", s.avg_bits, s.jsd);
+                }
             }
+            let report = ctx.out_dir.join("search_report.json");
+            write_search_report(&report, &ctx, &pipe, &rows)?;
+            eprintln!("[report] wrote {}", report.display());
         }
         "all" => {
             let order = [

@@ -12,6 +12,7 @@ pub mod gptq;
 pub mod hqq;
 pub mod pack;
 pub mod pbllm;
+pub mod registry;
 pub mod rtn;
 
 pub use awq_clip::AwqClip;
@@ -19,6 +20,7 @@ pub use bitstack::{BitStack, BitStackLayer};
 pub use gptq::Gptq;
 pub use hqq::Hqq;
 pub use pbllm::PbLlm;
+pub use registry::{MethodId, MethodRegistry};
 pub use rtn::Rtn;
 
 use crate::model::CalibStats;

@@ -1,0 +1,244 @@
+//! Quantization-method registry: names, parses and constructs every grouped
+//! quantizer the search genome can assign to a layer.
+//!
+//! The genome (see [`crate::coordinator::space`]) stores a [`MethodId`] next
+//! to the bit-width in every per-layer gene, so the *method* is a searched
+//! axis exactly like the precision.  The registry is the single source of
+//! truth for method identity: stable indices (the gene encoding), display
+//! names (CLI / manifest / reports), construction of the `dyn Quantizer`,
+//! and per-method accounting metadata.
+
+use super::{AwqClip, Gptq, Hqq, Quantizer, Rtn, GROUP_OVERHEAD_BITS};
+use crate::Result;
+
+/// A registered grouped weight-only quantization method.
+///
+/// The discriminants are the *stable* gene encoding (high byte of a packed
+/// gene) — append new methods, never renumber, or serialized archives stop
+/// round-tripping.  Index 0 must stay the activation-independent proxy
+/// (HQQ) so single-method genes are numerically identical to the legacy
+/// bits-only genome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MethodId {
+    Hqq = 0,
+    Rtn = 1,
+    Gptq = 2,
+    AwqClip = 3,
+}
+
+impl MethodId {
+    /// All registered methods, in stable index order.
+    pub const ALL: [MethodId; 4] = [
+        MethodId::Hqq,
+        MethodId::Rtn,
+        MethodId::Gptq,
+        MethodId::AwqClip,
+    ];
+
+    /// Stable numeric index (the gene encoding).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Option<MethodId> {
+        MethodId::ALL.get(i).copied()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodId::Hqq => "hqq",
+            MethodId::Rtn => "rtn",
+            MethodId::Gptq => "gptq",
+            MethodId::AwqClip => "awq_clip",
+        }
+    }
+
+    /// Parse a CLI / manifest method name ("awq" aliases "awq_clip").
+    pub fn parse(s: &str) -> Result<MethodId> {
+        match s.trim() {
+            "hqq" => Ok(MethodId::Hqq),
+            "rtn" => Ok(MethodId::Rtn),
+            "gptq" => Ok(MethodId::Gptq),
+            "awq" | "awq_clip" => Ok(MethodId::AwqClip),
+            other => eyre::bail!(
+                "unknown quantization method `{other}` (available: {})",
+                MethodId::ALL.map(|m| m.name()).join(", ")
+            ),
+        }
+    }
+
+    /// Construct the quantizer.
+    pub fn build(self) -> Box<dyn Quantizer> {
+        match self {
+            MethodId::Hqq => Box::new(Hqq::default()),
+            MethodId::Rtn => Box::new(Rtn),
+            MethodId::Gptq => Box::new(Gptq::default()),
+            MethodId::AwqClip => Box::new(AwqClip::default()),
+        }
+    }
+
+    /// Whether `quantize()` consumes calibration statistics (Hessian
+    /// diagonals); activation-independent methods ignore them.
+    pub fn needs_stats(self) -> bool {
+        matches!(self, MethodId::Gptq | MethodId::AwqClip)
+    }
+
+    /// Per-group metadata overhead in bits (fp16 scale + fp16 zero for all
+    /// currently registered grouped methods).  The search-space objectives
+    /// consult this per gene, so a future method with different metadata
+    /// geometry is accounted correctly without touching the objectives.
+    pub fn group_overhead_bits(self) -> f64 {
+        GROUP_OVERHEAD_BITS
+    }
+}
+
+/// An ordered set of *enabled* methods (manifest- or CLI-driven).
+///
+/// Order is user-facing only (reports, bank slots); the gene encoding uses
+/// the stable [`MethodId`] index, never the position in this list.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MethodRegistry {
+    enabled: Vec<MethodId>,
+}
+
+impl Default for MethodRegistry {
+    /// The single-method default: the HQQ proxy, i.e. the legacy genome.
+    fn default() -> Self {
+        MethodRegistry { enabled: vec![MethodId::Hqq] }
+    }
+}
+
+impl MethodRegistry {
+    /// Build from an explicit list; deduplicates, preserves first-seen
+    /// order, rejects an empty result.
+    pub fn new(methods: &[MethodId]) -> Result<MethodRegistry> {
+        let mut enabled: Vec<MethodId> = Vec::new();
+        for &m in methods {
+            if !enabled.contains(&m) {
+                enabled.push(m);
+            }
+        }
+        eyre::ensure!(!enabled.is_empty(), "method registry cannot be empty");
+        Ok(MethodRegistry { enabled })
+    }
+
+    /// Parse a comma-separated enable list, e.g. `"hqq,rtn,gptq"`.
+    pub fn parse(list: &str) -> Result<MethodRegistry> {
+        let methods = list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(MethodId::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Self::new(&methods)
+    }
+
+    /// Build from manifest-style names, warning on (and skipping) unknown
+    /// entries; falls back to the default when nothing parses.  Infallible
+    /// so `SearchSpace::full` stays infallible.
+    pub fn from_names(names: &[String]) -> MethodRegistry {
+        let mut methods = Vec::new();
+        for n in names {
+            match MethodId::parse(n) {
+                Ok(m) => methods.push(m),
+                Err(e) => eprintln!("[registry] skipping manifest method: {e}"),
+            }
+        }
+        Self::new(&methods).unwrap_or_default()
+    }
+
+    pub fn enabled(&self) -> &[MethodId] {
+        &self.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.enabled.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.enabled.is_empty()
+    }
+
+    pub fn contains(&self, m: MethodId) -> bool {
+        self.enabled.contains(&m)
+    }
+
+    /// The one enabled method, when exactly one is enabled.
+    pub fn single(&self) -> Option<MethodId> {
+        match self.enabled.as_slice() {
+            [m] => Some(*m),
+            _ => None,
+        }
+    }
+
+    /// Whether any enabled method consumes calibration statistics.
+    pub fn any_needs_stats(&self) -> bool {
+        self.enabled.iter().any(|m| m.needs_stats())
+    }
+
+    /// Display names in enable order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.enabled.iter().map(|m| m.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_stable() {
+        for (i, m) in MethodId::ALL.iter().enumerate() {
+            assert_eq!(m.index(), i);
+            assert_eq!(MethodId::from_index(i), Some(*m));
+        }
+        assert_eq!(MethodId::from_index(MethodId::ALL.len()), None);
+        // index 0 is the legacy single-method proxy — load-bearing for the
+        // bits-only genome compatibility
+        assert_eq!(MethodId::from_index(0), Some(MethodId::Hqq));
+    }
+
+    #[test]
+    fn parse_roundtrip_and_aliases() {
+        for m in MethodId::ALL {
+            assert_eq!(MethodId::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(MethodId::parse("awq").unwrap(), MethodId::AwqClip);
+        assert!(MethodId::parse("nope").is_err());
+    }
+
+    #[test]
+    fn registry_parse_dedups_and_orders() {
+        let r = MethodRegistry::parse("rtn,hqq,rtn").unwrap();
+        assert_eq!(r.enabled(), &[MethodId::Rtn, MethodId::Hqq]);
+        assert_eq!(r.len(), 2);
+        assert!(r.single().is_none());
+        assert!(MethodRegistry::parse("").is_err());
+        assert!(MethodRegistry::parse("hqq,bogus").is_err());
+    }
+
+    #[test]
+    fn default_is_single_hqq() {
+        let r = MethodRegistry::default();
+        assert_eq!(r.single(), Some(MethodId::Hqq));
+        assert!(!r.any_needs_stats());
+        let multi = MethodRegistry::parse("hqq,gptq").unwrap();
+        assert!(multi.any_needs_stats());
+    }
+
+    #[test]
+    fn from_names_skips_unknown_and_falls_back() {
+        let r = MethodRegistry::from_names(&["rtn".into(), "bogus".into()]);
+        assert_eq!(r.enabled(), &[MethodId::Rtn]);
+        let r = MethodRegistry::from_names(&["bogus".into()]);
+        assert_eq!(r.single(), Some(MethodId::Hqq));
+        let r = MethodRegistry::from_names(&[]);
+        assert_eq!(r.single(), Some(MethodId::Hqq));
+    }
+
+    #[test]
+    fn builders_construct_named_quantizers() {
+        for m in MethodId::ALL {
+            assert_eq!(m.build().name(), m.name());
+        }
+    }
+}

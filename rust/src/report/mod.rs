@@ -69,7 +69,8 @@ impl Table {
                 c.to_string()
             }
         };
-        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        let headers = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>();
+        let _ = writeln!(s, "{}", headers.join(","));
         for row in &self.rows {
             let _ = writeln!(s, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
         }

@@ -1,0 +1,222 @@
+//! Genome-compatibility tests for the method-aware refactor: the default
+//! single-method genome must reproduce the pre-refactor bits-only archives
+//! (numerically identical genes, identical RNG stream, identical JSON
+//! serialization), for every worker count; multi-method genomes must
+//! actually search the method axis.
+
+use amq::coordinator::{
+    gene_bits, gene_method, run_search, Config, PooledEvaluator, SearchParams, SearchSpace,
+};
+use amq::data::Manifest;
+use amq::exp::cache;
+use amq::quant::{MethodId, MethodRegistry};
+use amq::util::Rng;
+
+/// A 4-layer toy manifest (no artifacts needed) for space construction.
+const MANIFEST_JSON: &str = r#"{
+    "model": {"vocab_size": 512, "d_model": 128, "n_layers": 2,
+              "n_heads": 4, "d_ff": 256, "seq_len": 128,
+              "rope_theta": 10000.0, "rms_eps": 1e-5},
+    "group_size": 128,
+    "bit_choices": [2, 3, 4],
+    "eval_batch": 16,
+    "layers": [
+        {"name": "blk0.q", "out_features": 128, "in_features": 128},
+        {"name": "blk0.down", "out_features": 128, "in_features": 256},
+        {"name": "blk1.q", "out_features": 128, "in_features": 128},
+        {"name": "blk1.down", "out_features": 128, "in_features": 256}
+    ],
+    "fp_side_names": ["embed"],
+    "executables": {},
+    "files": {"weights": "weights.bin"}
+}"#;
+
+fn legacy_space(n: usize) -> SearchSpace {
+    // the pre-refactor literal shape: bits-only choices, one method
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n],
+        params: vec![128 * 128; n],
+        groups: vec![128; n],
+        group_size: 128,
+    }
+}
+
+/// Deterministic synthetic "true evaluation", seeded purely from the
+/// payload (the pool determinism contract).  On single-method configs this
+/// is a pure function of the bit-widths, exactly as pre-refactor.
+fn synth_jsd(cfg: &Config) -> f32 {
+    let mut seed = 0x6C62_272E_07BB_0142u64;
+    for &g in cfg {
+        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(g as u64);
+    }
+    let mut rng = Rng::new(seed);
+    let base: f32 = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| {
+            let w = if i % 3 == 0 { 1.0 } else { 0.05 };
+            let method_factor = if gene_method(g) == MethodId::Rtn { 0.5 } else { 1.0 };
+            // (5 - bits)^2 keeps a nonzero floor at 4 bits, so the method
+            // factor matters on the quality end of the frontier too
+            w * method_factor * ((5 - gene_bits(g) as i32) as f32).powi(2)
+        })
+        .sum();
+    base + rng.f32() * 1e-4
+}
+
+fn pooled(workers: usize) -> PooledEvaluator {
+    PooledEvaluator::spawn(workers, |_shard| {
+        |cfg: Config| -> amq::Result<f32> { Ok(synth_jsd(&cfg)) }
+    })
+}
+
+/// FNV-1a over the archive's full content (gene values, jsd bits, avg-bits
+/// bits) — the reproducibility fingerprint.
+fn archive_hash(archive: &amq::coordinator::Archive) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01B3);
+    };
+    for s in &archive.samples {
+        for &g in &s.config {
+            mix(g as u64);
+        }
+        mix(s.jsd.to_bits() as u64);
+        mix(s.avg_bits.to_bits());
+    }
+    h
+}
+
+#[test]
+fn single_method_archive_identical_across_paths_and_worker_counts() {
+    let space = legacy_space(12);
+    let mut params = SearchParams::smoke();
+    params.seed = 17;
+
+    // sequential (trait-default batching), pooled x1, pooled x4
+    struct Seq(usize);
+    impl amq::coordinator::ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.0 += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.0
+        }
+    }
+    let a = run_search(&space, &mut Seq(0), &params).unwrap();
+    let b = run_search(&space, &mut pooled(1), &params).unwrap();
+    let c = run_search(&space, &mut pooled(4), &params).unwrap();
+
+    let ha = archive_hash(&a.archive);
+    assert_eq!(ha, archive_hash(&b.archive), "pooled x1 diverged from sequential");
+    assert_eq!(ha, archive_hash(&c.archive), "pooled x4 diverged from sequential");
+
+    // every gene of the default genome is numerically a bare bit-width —
+    // the pre-refactor archive value domain
+    for s in &a.archive.samples {
+        for &g in &s.config {
+            assert!(g <= 0xFF, "single-method gene {g:#06x} left the bits-only domain");
+            assert_eq!(gene_method(g), MethodId::Hqq);
+        }
+    }
+}
+
+#[test]
+fn single_method_space_constructors_agree() {
+    // with_methods(hqq) must build the very space the legacy literal built:
+    // same choices, same RNG stream, same search result
+    let m = Manifest::from_json(MANIFEST_JSON).unwrap();
+    let reg = MethodRegistry::default();
+    let space = SearchSpace::with_methods(&m, &reg);
+    let full = SearchSpace::full(&m); // manifest defaults to ["hqq"]
+    assert_eq!(space.choices, full.choices);
+    assert_eq!(space.choices[0], vec![2u16, 3, 4]);
+
+    let mut params = SearchParams::smoke();
+    params.seed = 23;
+    let a = run_search(&space, &mut pooled(2), &params).unwrap();
+    let b = run_search(&full, &mut pooled(3), &params).unwrap();
+    assert_eq!(archive_hash(&a.archive), archive_hash(&b.archive));
+}
+
+#[test]
+fn legacy_archive_json_byte_format_unchanged() {
+    // the serialized archive of a single-method run is byte-identical to
+    // the pre-refactor format: configs are bare integers
+    let mut a = amq::coordinator::Archive::new();
+    a.insert(vec![2, 3], 0.125, 2.75);
+    a.insert(vec![4, 4], 0.5, 4.25);
+    let dir = std::env::temp_dir().join("amq_genome_test");
+    let path = dir.join("legacy.json");
+    cache::save_archive(&path, &a).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text,
+        "{\"samples\": [\
+         {\"config\": [2,3], \"jsd\": 0.125, \"bits\": 2.75},\
+         {\"config\": [4,4], \"jsd\": 0.5, \"bits\": 4.25}]}"
+    );
+    let back = cache::load_archive(&path).unwrap();
+    assert_eq!(archive_hash(&a), archive_hash(&back));
+}
+
+#[test]
+fn multi_method_search_opens_the_method_axis() {
+    // two methods -> genome doubles per layer; the synthetic evaluator
+    // halves the penalty of rtn genes, so the search must discover them
+    let m = Manifest::from_json(MANIFEST_JSON).unwrap();
+    let reg = MethodRegistry::parse("hqq,rtn").unwrap();
+    let space = SearchSpace::with_methods(&m, &reg);
+    let single = SearchSpace::with_methods(&m, &MethodRegistry::default());
+    let n = m.layers.len() as f64;
+    assert!((single.log10_size() - n * 3f64.log10()).abs() < 1e-9);
+    assert!(
+        (space.log10_size() - n * 6f64.log10()).abs() < 1e-9,
+        "two methods x three bit-widths must give 6 gene choices per layer: {}",
+        space.log10_size()
+    );
+
+    let mut params = SearchParams::smoke();
+    params.seed = 41;
+    let res = run_search(&space, &mut pooled(3), &params).unwrap();
+    assert!(!res.archive.is_empty());
+    let mut rtn_genes = 0usize;
+    let mut total = 0usize;
+    for s in &res.archive.samples {
+        assert!(space.contains(&s.config));
+        total += s.config.len();
+        rtn_genes += s
+            .config
+            .iter()
+            .filter(|&&g| gene_method(g) == MethodId::Rtn)
+            .count();
+    }
+    assert!(rtn_genes > 0, "search never explored the second method");
+    assert!(rtn_genes < total, "search collapsed onto one method");
+    // the favored method must beat anything the hqq-only genome can say:
+    // the best hqq-only jsd is the all-hqq@4 floor, so going below it
+    // requires rtn genes on the quality end of the frontier
+    let best = res
+        .archive
+        .samples
+        .iter()
+        .min_by(|a, b| a.jsd.partial_cmp(&b.jsd).unwrap())
+        .unwrap();
+    let hqq_floor = synth_jsd(&single.uniform(4));
+    assert!(
+        best.jsd < hqq_floor - 1e-3,
+        "best jsd {} should beat the hqq-only floor {hqq_floor}",
+        best.jsd
+    );
+    let best_rtn = best
+        .config
+        .iter()
+        .filter(|&&g| gene_method(g) == MethodId::Rtn)
+        .count();
+    assert!(best_rtn > 0, "a floor-beating config must carry rtn genes");
+    // determinism across worker counts holds for the widened genome too
+    let res2 = run_search(&space, &mut pooled(1), &params).unwrap();
+    assert_eq!(archive_hash(&res.archive), archive_hash(&res2.archive));
+}

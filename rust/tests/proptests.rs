@@ -7,8 +7,8 @@
 use amq::coordinator::archive::pareto_front_of;
 use amq::coordinator::nsga2::{self, dominates, Individual};
 use amq::coordinator::space::SearchSpace;
-use amq::coordinator::Archive;
-use amq::quant::{frob_error, pack, Hqq, Quantizer, Rtn};
+use amq::coordinator::{gene, gene_bits, Archive, Config, Gene, ProxyBank};
+use amq::quant::{frob_error, pack, Hqq, MethodId, Quantizer, Rtn};
 use amq::tensor::Mat;
 use amq::util::Rng;
 
@@ -18,12 +18,42 @@ fn rand_space(rng: &mut Rng) -> SearchSpace {
     let n = rng.range(2, 32);
     let mut choices = Vec::new();
     for _ in 0..n {
-        let set: Vec<u8> = match rng.below(4) {
+        let set: Vec<Gene> = match rng.below(4) {
             0 => vec![2, 3, 4],
             1 => vec![2, 4],
             2 => vec![3, 4],
             _ => vec![4],
         };
+        choices.push(set);
+    }
+    SearchSpace {
+        params: (0..n).map(|_| 128 * (1 + rng.below(4))).collect(),
+        groups: (0..n).map(|_| 1 + rng.below(4)).collect(),
+        choices,
+        group_size: 128,
+    }
+}
+
+/// A random *multi-method* space: every layer offers the cross product of a
+/// random subset of methods and a random bit set.
+fn rand_method_space(rng: &mut Rng) -> SearchSpace {
+    let n = rng.range(2, 24);
+    let methods: &[MethodId] = match rng.below(3) {
+        0 => &[MethodId::Hqq, MethodId::Rtn],
+        1 => &[MethodId::Hqq, MethodId::Rtn, MethodId::Gptq],
+        _ => &[MethodId::Rtn, MethodId::AwqClip],
+    };
+    let mut choices = Vec::new();
+    for _ in 0..n {
+        let bits: &[u8] = match rng.below(3) {
+            0 => &[2, 3, 4],
+            1 => &[2, 4],
+            _ => &[3, 4],
+        };
+        let set: Vec<Gene> = methods
+            .iter()
+            .flat_map(|&m| bits.iter().map(move |&b| gene(m, b)))
+            .collect();
         choices.push(set);
     }
     SearchSpace {
@@ -63,8 +93,8 @@ fn prop_repair_is_idempotent_and_contained() {
     for seed in 0..TRIALS as u64 {
         let mut rng = Rng::new(1000 + seed);
         let space = rand_space(&mut rng);
-        let mut cfg: Vec<u8> = (0..space.n_layers())
-            .map(|_| [1u8, 2, 3, 4, 5][rng.below(5)])
+        let mut cfg: Config = (0..space.n_layers())
+            .map(|_| [1u16, 2, 3, 4, 5][rng.below(5)])
             .collect();
         space.repair(&mut cfg);
         assert!(space.contains(&cfg), "seed {seed}");
@@ -99,6 +129,108 @@ fn prop_avg_bits_monotone_in_any_single_gene() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn prop_multi_method_space_ops_contained() {
+    // the single-method invariants must survive the method axis: random and
+    // repaired configs stay in the space, min/max/uniform/demote respect it,
+    // and avg_bits is monotone in any single gene's bits
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(12_000 + seed);
+        let space = rand_method_space(&mut rng);
+        let cfg = space.random(&mut rng);
+        assert!(space.contains(&cfg), "seed {seed}");
+        assert!(space.contains(&space.min_config()), "seed {seed}");
+        assert!(space.contains(&space.max_config()), "seed {seed}");
+        assert!(
+            space.avg_bits(&space.min_config()) <= space.avg_bits(&cfg)
+                && space.avg_bits(&cfg) <= space.avg_bits(&space.max_config()),
+            "seed {seed}"
+        );
+        let mut mangled: Config = cfg.clone();
+        let li = rng.below(space.n_layers());
+        mangled[li] = gene(MethodId::AwqClip, 7);
+        space.repair(&mut mangled);
+        assert!(space.contains(&mangled), "seed {seed}: repair left the space");
+        if let Some(g) = space.demote(li, cfg[li]) {
+            assert!(space.choices[li].contains(&g), "seed {seed}");
+            assert!(gene_bits(g) < gene_bits(cfg[li]), "seed {seed}");
+        }
+        // feature dimension: bits block + one-hot block for active layers
+        let active = space.active_layers();
+        let f = space.features(&cfg, &active);
+        let expect = if space.n_methods() > 1 {
+            active.len() * (1 + space.n_methods())
+        } else {
+            active.len()
+        };
+        assert_eq!(f.len(), expect, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_space_accounting_matches_proxy_bank() {
+    // SearchSpace::avg_bits / memory_mb must agree with the bank's
+    // per-piece memory_bytes() for every enabled (method, bits) pair
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(13_000 + seed);
+        let methods = [MethodId::Hqq, MethodId::Rtn];
+        let gs = 128usize;
+        let bit_choices = [2u8, 3, 4];
+        // random layer geometry (rows x groups-of-128 columns)
+        let n_layers = rng.range(1, 4);
+        let geom: Vec<(usize, usize)> = (0..n_layers)
+            .map(|_| (8 * rng.range(1, 3), gs * rng.range(1, 3)))
+            .collect();
+        let mats: Vec<Mat> = geom.iter().map(|&(n, k)| rand_mat(&mut rng, n, k)).collect();
+        let pieces: Vec<Vec<Vec<_>>> = methods
+            .iter()
+            .map(|m| {
+                let q = m.build();
+                mats.iter()
+                    .map(|w| bit_choices.iter().map(|&b| q.quantize(w, b, gs, None)).collect())
+                    .collect()
+            })
+            .collect();
+        let bank = ProxyBank::from_parts(methods.to_vec(), bit_choices.to_vec(), pieces).unwrap();
+        let space = SearchSpace {
+            choices: vec![
+                methods
+                    .iter()
+                    .flat_map(|&m| bit_choices.iter().map(move |&b| gene(m, b)))
+                    .collect();
+                n_layers
+            ],
+            params: geom.iter().map(|&(n, k)| n * k).collect(),
+            groups: geom.iter().map(|&(n, k)| n * k / gs).collect(),
+            group_size: gs,
+        };
+        let total_params: usize = space.params.iter().sum();
+        for &m in &methods {
+            for &b in &bit_choices {
+                let cfg: Config = vec![gene(m, b); n_layers];
+                let bank_bytes: usize =
+                    (0..n_layers).map(|li| bank.piece(li, cfg[li]).memory_bytes()).sum();
+                let space_bytes = space.memory_mb(&cfg) * 1e6;
+                assert!(
+                    (space_bytes - bank_bytes as f64).abs() < 1e-6 * space_bytes.max(1.0),
+                    "seed {seed} {m:?}@{b}: space {space_bytes} vs bank {bank_bytes}"
+                );
+                let bank_avg_bits = bank_bytes as f64 * 8.0 / total_params as f64;
+                assert!(
+                    (space.avg_bits(&cfg) - bank_avg_bits).abs() < 1e-9,
+                    "seed {seed} {m:?}@{b}: avg_bits {} vs bank {bank_avg_bits}",
+                    space.avg_bits(&cfg)
+                );
+            }
+        }
+        // per-method bank stats add up to the sum of their pieces
+        assert_eq!(
+            bank.memory_bytes(),
+            bank.stats.iter().map(|s| s.memory_bytes).sum::<usize>()
+        );
     }
 }
 
