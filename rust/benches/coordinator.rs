@@ -4,13 +4,18 @@
 use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
 use amq::coordinator::space::{gene, SearchSpace};
-use amq::coordinator::{Archive, Config, ProxyBank};
+use amq::coordinator::{
+    run_search, Archive, BankShareStats, Config, ConfigEvaluator, PooledEvaluator, ProxyBank,
+    SearchParams,
+};
 use amq::quant::{MethodId, Quantizer};
 use amq::runtime::EvalService;
 use amq::tensor::Mat;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
-use std::time::Duration;
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn toy_space(n: usize) -> SearchSpace {
     SearchSpace {
@@ -192,4 +197,114 @@ fn main() {
     let four = pool_bench(4);
     let speedup = one.median.as_secs_f64() / four.median.as_secs_f64().max(1e-12);
     println!("pool speedup (4 vs 1 workers): {speedup:.2}x  (target: >= 2x on queue-bound work)");
+
+    // -- batched candidate scoring: the search hot path end to end --------
+    // A full smoke search through the pooled evaluator at every
+    // (workers, score-batch) corner: archives must hash identically, and
+    // the dispatch counters quantify the dedup + microbatching win.  The
+    // numbers land in BENCH_search.json (same schema as `repro search`) so
+    // CI can track the perf trajectory as an artifact.
+    header("batched candidate scoring (smoke search, synthetic 0.2ms scorer)");
+    let search_space = toy_space(16);
+    let synth = |cfg: Config| -> amq::Result<f32> {
+        // payload-seeded (the pool determinism contract) + a fixed delay
+        // standing in for a scorer device round trip
+        std::thread::sleep(Duration::from_micros(200));
+        let mut seed = 0x6A09_E667_F3BC_C908u64;
+        for &g in &cfg {
+            seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(g as u64);
+        }
+        let mut r = Rng::new(seed);
+        let base: f32 = cfg
+            .iter()
+            .enumerate()
+            .map(|(i, &g)| {
+                let w = if i % 4 == 0 { 1.0 } else { 0.05 };
+                w * ((4 - g) as f32).powi(2)
+            })
+            .sum();
+        Ok(base + r.f32() * 1e-4)
+    };
+    let archive_hash = |a: &Archive| -> u64 {
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x1000_0000_01B3);
+        };
+        for s in &a.samples {
+            for &g in &s.config {
+                mix(g as u64);
+            }
+            mix(s.jsd.to_bits() as u64);
+            mix(s.avg_bits.to_bits());
+        }
+        h
+    };
+    let mut params = SearchParams::smoke();
+    params.seed = 7;
+    let mut rows = String::new();
+    let mut hashes: Vec<u64> = Vec::new();
+    for (workers, score_batch) in [(1usize, 1usize), (1, 8), (4, 1), (4, 8)] {
+        let mut ev =
+            PooledEvaluator::spawn(workers, move |_shard| synth).with_score_batch(score_batch);
+        let t0 = Instant::now();
+        let res = run_search(&search_space, &mut ev, &params).unwrap();
+        let wall = t0.elapsed();
+        let stats = ev.batch_stats().unwrap();
+        hashes.push(archive_hash(&res.archive));
+        let cps = res.true_evals as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "workers {workers} k {score_batch}: {:>8} wall, {:.0} cand/s, {} dispatches \
+             for {} requested ({} dedup hits, {:.2}x reduction)",
+            format!("{:.0?}", wall),
+            cps,
+            stats.dispatches,
+            stats.requested,
+            stats.cache_hits + stats.dup_hits,
+            stats.dispatch_reduction(),
+        );
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+        }
+        let _ = write!(
+            rows,
+            "    {{\"workers\": {workers}, \"score_batch\": {score_batch}, \
+             \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
+             \"scorer_dispatches\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
+             \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
+            wall.as_secs_f64(),
+            res.true_evals,
+            cps,
+            stats.dispatches,
+            stats.requested,
+            stats.cache_hits + stats.dup_hits,
+            stats.dedup_fraction(),
+            stats.dispatch_reduction(),
+        );
+    }
+    let identical = hashes.iter().all(|&h| h == hashes[0]);
+    assert!(identical, "archives diverged across (workers, score-batch) combos");
+    println!("archives identical across all (workers, score-batch) combos: {identical}");
+
+    // shared-bank residency: 4 shards referencing one Arc'd bank count 1x
+    let shard_refs: Vec<Arc<ProxyBank>> = {
+        let shared = Arc::new(build_bank(&four_methods));
+        (0..4).map(|_| shared.clone()).collect()
+    };
+    let share = BankShareStats::from_shard_banks(&shard_refs);
+    println!(
+        "bank residency with 4 shards: {:.1} MB resident vs {:.1} MB unshared",
+        share.resident_bytes as f64 / 1e6,
+        share.referenced_bytes as f64 / 1e6
+    );
+
+    let out = std::env::var("AMQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_search.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"coordinator_synthetic_search\",\n  \"identical_archives\": \
+         {identical},\n  \"runs\": [\n{rows}\n  ],\n  \"bank\": {{\"resident_bytes\": {}, \
+         \"unshared_bytes\": {}, \"shards\": {}}}\n}}\n",
+        share.resident_bytes, share.referenced_bytes, share.shards,
+    );
+    std::fs::write(&out, json).unwrap();
+    println!("wrote {out}");
 }

@@ -27,8 +27,8 @@ pub mod space;
 
 pub use archive::{Archive, Sample};
 pub use proxy::{
-    ConfigEvaluator, DeviceProxy, EvalPool, MethodBuildStats, PooledEvaluator, ProxyBank,
-    ProxyEvaluator,
+    BankShareStats, ConfigEvaluator, DeviceBank, DeviceProxy, EvalBatchStats, EvalPool,
+    MethodBuildStats, PooledEvaluator, ProxyBank, ProxyEvaluator,
 };
 pub use search::{run_search, SearchParams, SearchResult};
 pub use space::{gene, gene_bits, gene_method, Config, Gene, SearchSpace};

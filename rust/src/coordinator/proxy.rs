@@ -185,26 +185,28 @@ impl ProxyBank {
     }
 }
 
-/// Device-side proxy: all pieces uploaded once; assembly picks buffer refs.
-/// The host-side [`ProxyBank`] is behind an `Arc` so pool shards can reuse
-/// one quantization pass — only the device buffers are per-shard.
-pub struct DeviceProxy<'rt> {
+/// The process-wide device-side bank: every `(method, layer, bits)` piece
+/// uploaded **exactly once**, then `Arc`-shared by the main thread and every
+/// evaluation-pool shard.  Before this split each shard uploaded (and kept
+/// resident) its own private copy — N workers meant N uploads and N× device
+/// bytes; now uploads and residency are 1× regardless of pool width.
+///
+/// Holds no runtime reference: a [`DeviceProxy`] pairs a shared bank with
+/// the runtime that executes against it.
+pub struct DeviceBank {
+    /// The host-side bank the buffers mirror.
     pub bank: Arc<ProxyBank>,
     /// `bufs[slot][li][bi]`, mirroring the bank's piece layout.
     bufs: Vec<Vec<Vec<QuantLayerBufs>>>,
-    rt: &'rt Runtime,
     /// Per-method upload wall-clock, bank-slot order.
     pub upload_times: Vec<Duration>,
     pub upload_time: Duration,
 }
 
-impl<'rt> DeviceProxy<'rt> {
-    pub fn new(rt: &'rt Runtime, bank: ProxyBank) -> Result<DeviceProxy<'rt>> {
-        Self::new_shared(rt, Arc::new(bank))
-    }
-
-    /// Upload from a shared host-side bank.
-    pub fn new_shared(rt: &'rt Runtime, bank: Arc<ProxyBank>) -> Result<DeviceProxy<'rt>> {
+impl DeviceBank {
+    /// Upload every piece of a host bank.  Called once per process; sharing
+    /// is the caller's job (wrap in `Arc`, clone the handle per shard).
+    pub fn upload(rt: &Runtime, bank: Arc<ProxyBank>) -> Result<DeviceBank> {
         let t0 = Instant::now();
         let mut bufs = Vec::with_capacity(bank.pieces.len());
         let mut upload_times = Vec::with_capacity(bank.pieces.len());
@@ -221,23 +223,163 @@ impl<'rt> DeviceProxy<'rt> {
             bufs.push(slot);
             upload_times.push(t_m.elapsed());
         }
-        Ok(DeviceProxy { bank, bufs, rt, upload_times, upload_time: t0.elapsed() })
+        Ok(DeviceBank { bank, bufs, upload_times, upload_time: t0.elapsed() })
+    }
+
+    /// Number of uploaded pieces (= methods × layers × bit choices).
+    pub fn n_pieces(&self) -> usize {
+        self.bufs.iter().flat_map(|rows| rows.iter()).map(|r| r.len()).sum()
+    }
+
+    /// Device-resident bytes of the uploaded pieces (mirrors the host
+    /// bank's packed-codes + group-metadata accounting).
+    pub fn resident_bytes(&self) -> usize {
+        self.bank.memory_bytes()
+    }
+
+    /// The uploaded buffers of one layer's gene.
+    pub fn piece(&self, li: usize, g: Gene) -> &QuantLayerBufs {
+        &self.bufs[self.bank.slot(gene_method(g))][li][self.bank.bit_index(gene_bits(g))]
     }
 
     /// Zero-copy assembly of a configuration into buffer references.
     pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
-        config
-            .iter()
-            .enumerate()
-            .map(|(li, &g)| {
-                &self.bufs[self.bank.slot(gene_method(g))][li][self.bank.bit_index(gene_bits(g))]
-            })
-            .collect()
+        config.iter().enumerate().map(|(li, &g)| self.piece(li, g)).collect()
+    }
+}
+
+/// Device-bank residency accounting across pool shards: every distinct bank
+/// is counted **once**, no matter how many shards reference it through an
+/// `Arc` — the "shared vs private" memory story in one struct.
+#[derive(Clone, Debug, Default)]
+pub struct BankShareStats {
+    /// Bank references registered (one per initialized shard).
+    pub shards: usize,
+    /// Bytes the shards would hold with private per-shard copies.
+    pub referenced_bytes: usize,
+    /// Bytes actually resident (each distinct bank counted once).
+    pub resident_bytes: usize,
+}
+
+impl BankShareStats {
+    /// Aggregate the banks the pool shards actually hold.  Shards sharing
+    /// one bank contribute its bytes to `referenced_bytes` each, but to
+    /// `resident_bytes` once (identity = `Arc` pointer).
+    pub fn from_shard_banks(banks: &[Arc<ProxyBank>]) -> BankShareStats {
+        let mut seen: Vec<*const ProxyBank> = Vec::new();
+        let mut stats = BankShareStats { shards: banks.len(), ..Default::default() };
+        for b in banks {
+            let bytes = b.memory_bytes();
+            stats.referenced_bytes += bytes;
+            let ptr = Arc::as_ptr(b);
+            if !seen.contains(&ptr) {
+                seen.push(ptr);
+                stats.resident_bytes += bytes;
+            }
+        }
+        stats
+    }
+}
+
+/// Thin per-runtime view over a shared [`DeviceBank`]: the scoring state a
+/// shard (or the main thread) actually owns is this pair of pointers —
+/// uploads happen in [`DeviceBank::upload`], exactly once per process.
+pub struct DeviceProxy<'rt> {
+    /// The shared host-side bank (same `Arc` as `dev.bank`).
+    pub bank: Arc<ProxyBank>,
+    /// The shared device buffers.
+    pub dev: Arc<DeviceBank>,
+    rt: &'rt Runtime,
+}
+
+impl<'rt> DeviceProxy<'rt> {
+    /// Upload a private bank (single-runtime paths: benches, examples).
+    pub fn new(rt: &'rt Runtime, bank: ProxyBank) -> Result<DeviceProxy<'rt>> {
+        Self::new_shared(rt, Arc::new(bank))
+    }
+
+    /// Upload from a shared host-side bank.
+    pub fn new_shared(rt: &'rt Runtime, bank: Arc<ProxyBank>) -> Result<DeviceProxy<'rt>> {
+        Ok(Self::from_device_bank(rt, Arc::new(DeviceBank::upload(rt, bank)?)))
+    }
+
+    /// Wrap an already-uploaded shared bank — zero device work.
+    pub fn from_device_bank(rt: &'rt Runtime, dev: Arc<DeviceBank>) -> DeviceProxy<'rt> {
+        DeviceProxy { bank: dev.bank.clone(), dev, rt }
+    }
+
+    /// Zero-copy assembly of a configuration into buffer references.
+    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
+        self.dev.assemble(config)
     }
 
     pub fn runtime(&self) -> &Runtime {
         self.rt
     }
+}
+
+/// Dispatch/dedup accounting of an evaluator's batched hot path.
+#[derive(Clone, Debug, Default)]
+pub struct EvalBatchStats {
+    /// Configurations passed through `eval_jsd_batch` (+ single evals).
+    pub requested: u64,
+    /// Served from the cross-generation cache without any dispatch.
+    pub cache_hits: u64,
+    /// Duplicates collapsed *within* one incoming batch.  `run_search`
+    /// pre-filters its batches against the archive, so on that path both
+    /// hit counters are a defense-in-depth backstop (typically zero);
+    /// direct `eval_jsd_batch` callers get real protection.
+    pub dup_hits: u64,
+    /// Configurations actually scored.
+    pub evaluated: u64,
+    /// Scorer dispatches issued (microbatch chunks, not candidates).
+    pub dispatches: u64,
+    /// The microbatch size the evaluator packs chunks to.
+    pub score_batch: usize,
+}
+
+impl EvalBatchStats {
+    /// Fraction of requested configs that never reached the scorer.
+    pub fn dedup_fraction(&self) -> f64 {
+        if self.requested == 0 {
+            0.0
+        } else {
+            (self.cache_hits + self.dup_hits) as f64 / self.requested as f64
+        }
+    }
+
+    /// Requested configs per dispatch — the combined dedup × batching win
+    /// (1.0 = the old one-dispatch-per-candidate behaviour).
+    pub fn dispatch_reduction(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.requested as f64 / self.dispatches as f64
+        }
+    }
+}
+
+/// Split an incoming batch into the unseen, batch-deduplicated configs (in
+/// first-occurrence order), updating the dedup counters — the single dedup
+/// definition shared by the plain and pooled evaluators so sequential and
+/// pooled runs issue identical scoring work.
+fn dedup_pending(
+    cache: &HashMap<Config, f32>,
+    configs: &[Config],
+    stats: &mut EvalBatchStats,
+) -> Vec<Config> {
+    stats.requested += configs.len() as u64;
+    let mut pending: Vec<Config> = Vec::new();
+    for c in configs {
+        if cache.contains_key(c) {
+            stats.cache_hits += 1;
+        } else if pending.contains(c) {
+            stats.dup_hits += 1;
+        } else {
+            pending.push(c.clone());
+        }
+    }
+    pending
 }
 
 /// True-evaluation interface the search loop drives.  Implemented by the
@@ -248,9 +390,10 @@ pub trait ConfigEvaluator {
 
     /// Evaluate a batch of configurations, returning JSDs in input order.
     ///
-    /// The default runs sequentially; pool-backed evaluators override this
-    /// to fan the batch out across worker shards.  Implementations must be
-    /// deterministic per configuration so results are bit-identical
+    /// The default runs sequentially; the production evaluators override it
+    /// to dedup the batch and dispatch scorer-sized chunks (pool-backed ones
+    /// additionally fan chunks out across worker shards).  Implementations
+    /// must be deterministic per configuration so results are bit-identical
     /// regardless of batching or worker count.
     fn eval_jsd_batch(&mut self, configs: &[Config]) -> Result<Vec<f32>> {
         configs.iter().map(|c| self.eval_jsd(c)).collect()
@@ -258,6 +401,11 @@ pub trait ConfigEvaluator {
 
     /// Number of true evaluations performed so far.
     fn count(&self) -> usize;
+
+    /// Dispatch/dedup accounting, when the evaluator tracks it.
+    fn batch_stats(&self) -> Option<EvalBatchStats> {
+        None
+    }
 }
 
 /// Mean fused-scorer JSD of an assembled configuration over a batch set —
@@ -265,23 +413,50 @@ pub trait ConfigEvaluator {
 /// by the in-thread [`ProxyEvaluator`] and the pool shards so their results
 /// are bit-identical by construction.
 pub fn mean_jsd(proxy: &DeviceProxy, batches: &[ScoreBatch], config: &Config) -> Result<f32> {
-    let layers = proxy.assemble(config);
-    let mut sum = 0.0f64;
-    for b in batches {
-        let (jsd, _ce) = proxy.runtime().scores(b, &layers)?;
-        sum += jsd as f64;
+    Ok(mean_jsd_batch(proxy, batches, std::slice::from_ref(config))?[0])
+}
+
+/// Mean fused-scorer JSD of a *chunk* of configurations, in input order.
+/// Candidates are assembled once, then each calibration batch is scored for
+/// the whole chunk through [`Runtime::scores_chunk`] (static scorer args
+/// resolved once per batch per chunk).  The per-candidate accumulation
+/// order matches the single-candidate path, so results are bit-identical
+/// to calling [`mean_jsd`] per config.
+pub fn mean_jsd_batch(
+    proxy: &DeviceProxy,
+    batches: &[ScoreBatch],
+    configs: &[Config],
+) -> Result<Vec<f32>> {
+    if configs.is_empty() {
+        return Ok(Vec::new());
     }
-    Ok((sum / batches.len().max(1) as f64) as f32)
+    let assembled: Vec<Vec<&QuantLayerBufs>> =
+        configs.iter().map(|c| proxy.assemble(c)).collect();
+    let candidates: Vec<&[&QuantLayerBufs]> =
+        assembled.iter().map(|v| v.as_slice()).collect();
+    let mut sums = vec![0.0f64; configs.len()];
+    for b in batches {
+        let scored = proxy.runtime().scores_chunk(b, &candidates)?;
+        for (sum, (jsd, _ce)) in sums.iter_mut().zip(scored) {
+            *sum += jsd as f64;
+        }
+    }
+    let n = batches.len().max(1) as f64;
+    Ok(sums.into_iter().map(|s| (s / n) as f32).collect())
 }
 
 /// PJRT-backed evaluator: assembles through the device proxy and runs the
 /// fused scorer over the prepared calibration batches, caching results.
+/// Batches are deduped and dispatched in `score_batch`-sized chunks, so
+/// sequential (non-pooled) runs get the same dispatch savings as the pool.
 pub struct ProxyEvaluator<'rt> {
     pub proxy: &'rt DeviceProxy<'rt>,
     pub batches: &'rt [ScoreBatch],
     cache: HashMap<Config, f32>,
     evals: usize,
     pub eval_time: Duration,
+    score_batch: usize,
+    stats: EvalBatchStats,
 }
 
 impl<'rt> ProxyEvaluator<'rt> {
@@ -292,35 +467,67 @@ impl<'rt> ProxyEvaluator<'rt> {
             cache: HashMap::new(),
             evals: 0,
             eval_time: Duration::ZERO,
+            score_batch: 1,
+            stats: EvalBatchStats { score_batch: 1, ..Default::default() },
         }
+    }
+
+    /// Set the microbatch size (`--score-batch`).  Results are identical
+    /// for any value; only dispatch granularity changes.
+    pub fn with_score_batch(mut self, k: usize) -> Self {
+        self.score_batch = k.max(1);
+        self.stats.score_batch = self.score_batch;
+        self
     }
 }
 
 impl ConfigEvaluator for ProxyEvaluator<'_> {
     fn eval_jsd(&mut self, config: &Config) -> Result<f32> {
-        if let Some(&v) = self.cache.get(config) {
-            return Ok(v);
-        }
+        Ok(self.eval_jsd_batch(std::slice::from_ref(config))?[0])
+    }
+
+    fn eval_jsd_batch(&mut self, configs: &[Config]) -> Result<Vec<f32>> {
         let t0 = Instant::now();
-        let jsd = mean_jsd(self.proxy, self.batches, config)?;
-        self.evals += 1;
+        let pending = dedup_pending(&self.cache, configs, &mut self.stats);
+        for chunk in pending.chunks(self.score_batch.max(1)) {
+            let jsds = mean_jsd_batch(self.proxy, self.batches, chunk)?;
+            self.stats.dispatches += 1;
+            for (c, jsd) in chunk.iter().zip(jsds) {
+                self.evals += 1;
+                self.stats.evaluated += 1;
+                self.cache.insert(c.clone(), jsd);
+            }
+        }
         self.eval_time += t0.elapsed();
-        self.cache.insert(config.clone(), jsd);
-        Ok(jsd)
+        configs
+            .iter()
+            .map(|c| {
+                self.cache
+                    .get(c)
+                    .copied()
+                    .ok_or_else(|| eyre::anyhow!("missing proxy eval result"))
+            })
+            .collect()
     }
 
     fn count(&self) -> usize {
         self.evals
     }
+
+    fn batch_stats(&self) -> Option<EvalBatchStats> {
+        Some(self.stats.clone())
+    }
 }
 
-/// The sharded evaluation pool's wire types: owned configurations in,
-/// per-candidate JSD results out.
-pub type EvalPool = EvalService<Config, Result<f32>>;
+/// The sharded evaluation pool's wire types: a *microbatch* of owned
+/// configurations in, per-candidate JSD results (input order) out.  One
+/// request = one scorer dispatch on a shard.
+pub type EvalPool = EvalService<Vec<Config>, Result<Vec<f32>>>;
 
-/// Pool-backed [`ConfigEvaluator`]: fans candidate batches out across the
-/// shards of an [`EvalPool`] and reassembles replies in submission order, so
-/// the archive a search produces is identical for any worker count.
+/// Pool-backed [`ConfigEvaluator`]: dedups each candidate batch, packs it
+/// into `score_batch`-sized chunks, fans the chunks out across the shards
+/// of an [`EvalPool`] and reassembles replies in submission order, so the
+/// archive a search produces is identical for any `(workers, score_batch)`.
 ///
 /// The JSD cache and the true-eval counter live on the caller side (like
 /// [`ProxyEvaluator`]); shards stay stateless with respect to candidates.
@@ -329,18 +536,26 @@ pub struct PooledEvaluator {
     cache: HashMap<Config, f32>,
     evals: usize,
     pub eval_time: Duration,
+    score_batch: usize,
+    stats: EvalBatchStats,
 }
 
 impl PooledEvaluator {
-    /// Spawn a fresh pool: `builder(shard)` runs on each worker thread and
-    /// constructs that shard's evaluation closure there (this is where a
-    /// non-`Send` PJRT runtime stack gets built per shard).
+    /// Spawn a fresh pool from a *per-candidate* evaluation closure:
+    /// `builder(shard)` runs on each worker thread and constructs that
+    /// shard's closure there; the pool wraps it into the microbatch wire
+    /// format (chunks map over the closure).
     pub fn spawn<B, F>(workers: usize, builder: B) -> Self
     where
         B: Fn(usize) -> F + Send + Sync + 'static,
         F: FnMut(Config) -> Result<f32> + 'static,
     {
-        Self::from_service(Arc::new(EvalService::spawn_sharded(workers, builder)))
+        Self::from_service(Arc::new(EvalService::spawn_sharded(workers, move |shard| {
+            let mut eval = builder(shard);
+            move |chunk: Vec<Config>| -> Result<Vec<f32>> {
+                chunk.into_iter().map(&mut eval).collect()
+            }
+        })))
     }
 
     /// Wrap an existing (possibly shared) pool.  Each wrapper gets its own
@@ -351,7 +566,17 @@ impl PooledEvaluator {
             cache: HashMap::new(),
             evals: 0,
             eval_time: Duration::ZERO,
+            score_batch: 1,
+            stats: EvalBatchStats { score_batch: 1, ..Default::default() },
         }
+    }
+
+    /// Set the microbatch size (`--score-batch`).  Results are identical
+    /// for any value; only dispatch granularity changes.
+    pub fn with_score_batch(mut self, k: usize) -> Self {
+        self.score_batch = k.max(1);
+        self.stats.score_batch = self.score_batch;
+        self
     }
 
     pub fn workers(&self) -> usize {
@@ -370,21 +595,36 @@ impl ConfigEvaluator for PooledEvaluator {
 
     fn eval_jsd_batch(&mut self, configs: &[Config]) -> Result<Vec<f32>> {
         let t0 = Instant::now();
-        // Unseen, batch-deduplicated candidates, in first-occurrence order.
-        let mut pending: Vec<Config> = Vec::new();
-        for c in configs {
-            if !self.cache.contains_key(c) && !pending.contains(c) {
-                pending.push(c.clone());
-            }
-        }
-        // Fan out, then reassemble in submission order (deterministic).
-        let replies: Vec<_> = pending.iter().map(|c| self.svc.submit(c.clone())).collect();
-        for (c, rx) in pending.iter().zip(replies) {
-            let jsd = rx
+        let pending = dedup_pending(&self.cache, configs, &mut self.stats);
+        // Pack into scorer-sized chunks, fan out, then reassemble in
+        // submission order (deterministic for any worker count).  The chunk
+        // size is additionally capped at ceil(pending / workers) so a
+        // generation smaller than k × workers still spreads across every
+        // shard instead of serializing onto one — chunking is invisible in
+        // the results either way.
+        let workers = self.svc.n_workers().max(1);
+        let k = self
+            .score_batch
+            .max(1)
+            .min(pending.len().div_ceil(workers).max(1));
+        let chunks: Vec<&[Config]> = pending.chunks(k).collect();
+        let replies: Vec<_> = chunks.iter().map(|c| self.svc.submit(c.to_vec())).collect();
+        for (chunk, rx) in chunks.iter().zip(replies) {
+            let jsds = rx
                 .recv()
                 .map_err(|_| eyre::anyhow!("evaluation pool worker died"))??;
-            self.evals += 1;
-            self.cache.insert(c.clone(), jsd);
+            self.stats.dispatches += 1;
+            eyre::ensure!(
+                jsds.len() == chunk.len(),
+                "pool shard returned {} results for a {}-candidate chunk",
+                jsds.len(),
+                chunk.len()
+            );
+            for (c, jsd) in chunk.iter().zip(jsds) {
+                self.evals += 1;
+                self.stats.evaluated += 1;
+                self.cache.insert(c.clone(), jsd);
+            }
         }
         self.eval_time += t0.elapsed();
         configs
@@ -400,6 +640,10 @@ impl ConfigEvaluator for PooledEvaluator {
 
     fn count(&self) -> usize {
         self.evals
+    }
+
+    fn batch_stats(&self) -> Option<EvalBatchStats> {
+        Some(self.stats.clone())
     }
 }
 
@@ -569,5 +813,78 @@ mod tests {
         assert!(ev.eval_jsd(&vec![2, 3, 4]).is_ok());
         assert!(ev.eval_jsd(&vec![2, 3]).is_err());
         assert_eq!(ev.count(), 1, "failed evals are not counted or cached");
+    }
+
+    #[test]
+    fn score_batch_chunking_is_invisible_in_results() {
+        // identical inputs through k=1 and k=8 must give identical outputs
+        // and identical eval counts; only the dispatch count changes
+        let configs: Vec<Config> = (0..24)
+            .map(|i| (0..5).map(|j| [2u16, 3, 4][(i + 2 * j) % 3]).collect())
+            .collect();
+        let mut k1 = synth_pool(2);
+        // workers = 1 so the dispatch count is exactly ceil(evaluated / 8)
+        // (with more workers, chunks are further split to keep shards busy)
+        let mut k8 = synth_pool(1).with_score_batch(8);
+        let a = k1.eval_jsd_batch(&configs).unwrap();
+        let b = k8.eval_jsd_batch(&configs).unwrap();
+        assert_eq!(a, b, "score-batch size must not change results");
+        assert_eq!(k1.count(), k8.count());
+        let (s1, s8) = (k1.batch_stats().unwrap(), k8.batch_stats().unwrap());
+        assert_eq!(s1.evaluated, s8.evaluated);
+        assert!(
+            s8.dispatches < s1.dispatches,
+            "k=8 must dispatch fewer chunks ({} vs {})",
+            s8.dispatches,
+            s1.dispatches
+        );
+        assert_eq!(s8.dispatches, (s8.evaluated as usize).div_ceil(8) as u64);
+        assert!(s8.dispatch_reduction() > s1.dispatch_reduction());
+    }
+
+    #[test]
+    fn dedup_stats_count_cache_and_batch_duplicates() {
+        let mut ev = synth_pool(1).with_score_batch(4);
+        // 3 unique configs, one repeated twice within the batch
+        let batch = vec![
+            vec![2u16, 3, 4],
+            vec![3, 3, 3],
+            vec![2, 3, 4],
+            vec![4, 4, 4],
+        ];
+        ev.eval_jsd_batch(&batch).unwrap();
+        let s = ev.batch_stats().unwrap();
+        assert_eq!(s.requested, 4);
+        assert_eq!(s.dup_hits, 1);
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.evaluated, 3);
+        assert_eq!(s.dispatches, 1, "3 unique configs fit one k=4 chunk");
+        // resubmitting the same batch is pure cache traffic
+        ev.eval_jsd_batch(&batch).unwrap();
+        let s = ev.batch_stats().unwrap();
+        assert_eq!(s.requested, 8);
+        assert_eq!(s.cache_hits, 4);
+        assert_eq!(s.evaluated, 3);
+        assert_eq!(s.dispatches, 1, "no new dispatch for an all-cached batch");
+        assert!((s.dedup_fraction() - 5.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bank_share_stats_count_shared_banks_once() {
+        // 4 shards referencing one Arc'd bank: referenced = 4x, resident = 1x
+        let bank = Arc::new(toy_bank(&[MethodId::Hqq]));
+        let bytes = bank.memory_bytes();
+        assert!(bytes > 0);
+        let shards: Vec<Arc<ProxyBank>> = (0..4).map(|_| bank.clone()).collect();
+        let s = BankShareStats::from_shard_banks(&shards);
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.referenced_bytes, 4 * bytes);
+        assert_eq!(s.resident_bytes, bytes, "shared bank bytes must be counted once");
+        // two *distinct* banks genuinely add up
+        let other = Arc::new(toy_bank(&[MethodId::Rtn]));
+        let mixed = vec![bank.clone(), bank.clone(), other.clone()];
+        let s = BankShareStats::from_shard_banks(&mixed);
+        assert_eq!(s.resident_bytes, bytes + other.memory_bytes());
+        assert_eq!(s.referenced_bytes, 2 * bytes + other.memory_bytes());
     }
 }

@@ -1,21 +1,19 @@
 //! Shared experiment pipeline: sensitivity -> pruning -> proxy -> search,
 //! plus deploy-time evaluation helpers used by every table.
 
-use super::{cache, Ctx};
+use super::{cache, Ctx, SearchRunStats};
 use crate::coordinator::{
     gene_bits, gene_method, pruning, run_search, sensitivity, Archive, Config,
-    ConfigEvaluator, DeviceProxy, EvalPool, PooledEvaluator, ProxyBank, ProxyEvaluator,
-    SearchParams, SearchSpace,
+    ConfigEvaluator, DeviceBank, DeviceProxy, EvalPool, PooledEvaluator, ProxyBank,
+    ProxyEvaluator, SearchParams, SearchSpace,
 };
-use crate::data::load_tokens;
 use crate::eval::{self, ModelHandle, TaskResults};
 use crate::model::ModelAssets;
 use crate::quant::{AwqClip, BitStack, MethodId, MethodRegistry, PbLlm, Quantizer};
-use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch};
+use crate::runtime::{EvalService, QuantLayerBufs};
 use crate::Result;
 use std::collections::HashMap;
-use std::path::Path;
-use std::sync::{Arc, OnceLock};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Memory budgets (average bits) used across Tables 1/2 and Figures 1/7/8.
@@ -49,11 +47,15 @@ pub(super) fn build_proxy_bank(
 }
 
 impl<'rt> Pipeline<'rt> {
-    /// Build the proxy bank, measure sensitivity, prune at 2x median.
+    /// Build (or reuse) the process-wide device bank, measure sensitivity,
+    /// prune at 2x median.
     pub fn build(ctx: &'rt Ctx) -> Result<Pipeline<'rt>> {
         let t0 = Instant::now();
-        let bank = build_proxy_bank(&ctx.assets, &ctx.registry)?;
-        let proxy = DeviceProxy::new(&ctx.rt, bank)?;
+        // Quantization + upload happen in Ctx::device_bank, exactly once —
+        // the pool shards wrap the *same* Arc'd bank, so `--workers N`
+        // costs 1x uploads and 1x resident device bytes, not Nx.
+        let dev = ctx.device_bank()?;
+        let proxy = DeviceProxy::from_device_bank(&ctx.rt, dev);
         let proxy_build_secs = t0.elapsed().as_secs_f64();
 
         let full_space = SearchSpace::with_methods(&ctx.assets.manifest, &ctx.registry);
@@ -61,11 +63,13 @@ impl<'rt> Pipeline<'rt> {
         // so it fans out across pool shards when `--workers > 1`.
         let sens = match ctx.eval_pool() {
             Some(svc) => {
-                let mut evaluator = PooledEvaluator::from_service(svc);
+                let mut evaluator =
+                    PooledEvaluator::from_service(svc).with_score_batch(ctx.score_batch);
                 sensitivity::measure(&full_space, &mut evaluator)?
             }
             None => {
-                let mut evaluator = ProxyEvaluator::new(&proxy, &ctx.search_batches);
+                let mut evaluator = ProxyEvaluator::new(&proxy, &ctx.search_batches)
+                    .with_score_batch(ctx.score_batch);
                 sensitivity::measure(&full_space, &mut evaluator)?
             }
         };
@@ -82,7 +86,7 @@ impl<'rt> Pipeline<'rt> {
     }
 
     pub fn evaluator<'a>(&'a self, ctx: &'a Ctx) -> ProxyEvaluator<'a> {
-        ProxyEvaluator::new(&self.proxy, &ctx.search_batches)
+        ProxyEvaluator::new(&self.proxy, &ctx.search_batches).with_score_batch(ctx.score_batch)
     }
 }
 
@@ -90,96 +94,64 @@ impl<'rt> Pipeline<'rt> {
 // Sharded evaluation pool (--workers N)
 // ---------------------------------------------------------------------------
 
-/// One shard's complete evaluation stack: its own PJRT runtime, its own
-/// uploaded proxy pieces, its own resident calibration batches.  Built on
-/// the worker thread (PJRT objects are not `Send`).
-struct ShardStack {
-    proxy: DeviceProxy<'static>,
-    batches: Vec<ScoreBatch>,
-}
-
-impl ShardStack {
-    fn build(
-        artifacts: &Path,
-        assets: &ModelAssets,
-        bank: Arc<ProxyBank>,
-    ) -> Result<ShardStack> {
-        // Shards live for the process lifetime, so one leaked Runtime per
-        // shard stands in for a self-referential struct (DeviceProxy
-        // borrows the runtime it uploads to).
-        let rt: &'static Runtime =
-            Box::leak(Box::new(Runtime::load(artifacts, &assets.weights)?));
-        let proxy = DeviceProxy::new_shared(rt, bank)?;
-        let calib = load_tokens(&assets.manifest.file("calib")?)?;
-        let batches = super::prepare_search_batches(rt, &calib)?;
-        Ok(ShardStack { proxy, batches })
-    }
-
-    /// Mean calibration JSD of an assembled candidate — literally the same
-    /// function [`ProxyEvaluator`] calls, so pooled and in-thread searches
-    /// agree bit-for-bit by construction.
-    fn eval(&self, cfg: &Config) -> Result<f32> {
-        crate::coordinator::proxy::mean_jsd(&self.proxy, &self.batches, cfg)
-    }
-}
-
-/// Host-side state shared by every pool shard: one `ModelAssets` load and
-/// one quantization pass per enabled method (both plain `Send + Sync`
-/// data) serve all workers; only the PJRT runtime stack is per-shard.  The
-/// error arm keeps a `String` so a failed load is reported by every shard,
-/// not retried.
-type SharedShardInit = OnceLock<std::result::Result<(Arc<ModelAssets>, Arc<ProxyBank>), String>>;
-
-/// Spawn the PJRT-backed evaluation pool for `ctx.workers` shards.  Each
-/// shard lazily builds its runtime stack on first request, so an unused
-/// pool costs nothing.
+/// Spawn the evaluation pool for `ctx.workers` shards.  The shards share
+/// *everything heavy* with the main thread — the `Sync` PJRT runtime, the
+/// process-wide uploaded [`DeviceBank`] and the prepared calibration
+/// batches — so per-shard scoring state is nothing but a few `Arc` handles,
+/// resolved lazily on the shard's first request (an unused pool costs
+/// nothing, and the first toucher — main thread or any shard — pays the
+/// one-time quantize + upload for everyone).
+///
+/// The wire unit is a *microbatch* of candidates: one request = one scorer
+/// dispatch of up to `--score-batch` configs on whichever shard is idle.
 pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
-    let artifacts = ctx.artifacts.clone();
+    let rt = ctx.rt.clone();
+    let batches = ctx.search_batches.clone();
+    let assets = ctx.assets.clone();
     let registry = ctx.registry.clone();
-    let shared: Arc<SharedShardInit> = Arc::new(OnceLock::new());
+    let cell = ctx.device_bank.clone();
+    let shard_banks = ctx.shard_banks.clone();
     EvalService::spawn_sharded(ctx.workers, move |_shard| {
-        let artifacts = artifacts.clone();
+        let rt = rt.clone();
+        let batches = batches.clone();
+        let assets = assets.clone();
         let registry = registry.clone();
-        let shared = shared.clone();
-        let mut stack: Option<ShardStack> = None;
-        let mut failed: Option<String> = None;
-        move |cfg: Config| -> Result<f32> {
-            if let Some(msg) = &failed {
-                eyre::bail!("shard init previously failed: {msg}");
-            }
-            if stack.is_none() {
-                let built = shared
+        let cell = cell.clone();
+        let shard_banks = shard_banks.clone();
+        let mut dev: Option<Arc<DeviceBank>> = None;
+        move |chunk: Vec<Config>| -> Result<Vec<f32>> {
+            if dev.is_none() {
+                let resolved = cell
                     .get_or_init(|| {
-                        let assets = ModelAssets::load(&artifacts).map_err(|e| format!("{e}"))?;
-                        let bank =
-                            build_proxy_bank(&assets, &registry).map_err(|e| format!("{e}"))?;
-                        Ok((Arc::new(assets), Arc::new(bank)))
+                        let bank = build_proxy_bank(&assets, &registry)
+                            .map_err(|e| format!("{e}"))?;
+                        DeviceBank::upload(&rt, Arc::new(bank))
+                            .map(Arc::new)
+                            .map_err(|e| format!("{e}"))
                     })
-                    .as_ref()
-                    .map_err(|e| eyre::anyhow!("{e}"))
-                    .and_then(|(assets, bank)| {
-                        ShardStack::build(&artifacts, assets, bank.clone())
-                    });
-                match built {
-                    Ok(s) => stack = Some(s),
-                    Err(e) => {
-                        let msg = format!("{e}");
-                        failed = Some(msg.clone());
-                        eyre::bail!("shard init failed: {msg}");
-                    }
-                }
+                    .clone()
+                    .map_err(|e| eyre::anyhow!("shard init failed: {e}"))?;
+                // accounting: this shard references the shared bank
+                shard_banks.lock().unwrap().push(resolved.bank.clone());
+                dev = Some(resolved);
             }
-            stack.as_ref().unwrap().eval(&cfg)
+            let proxy = DeviceProxy::from_device_bank(&rt, dev.as_ref().unwrap().clone());
+            // Literally the same scoring function the in-thread
+            // [`ProxyEvaluator`] calls, over the same shared batches, so
+            // pooled and sequential searches agree bit-for-bit.
+            crate::coordinator::proxy::mean_jsd_batch(&proxy, &batches, &chunk)
         }
     })
 }
 
-/// The evaluator a search should drive: pool-backed when `--workers > 1`
-/// (each shard owns a full runtime stack), the in-thread proxy evaluator
-/// otherwise.  Both produce identical archives for a fixed seed.
+/// The evaluator a search should drive: pool-backed when `--workers > 1`,
+/// the in-thread proxy evaluator otherwise.  Both dedup and microbatch
+/// identically and produce identical archives for a fixed seed.
 pub fn search_evaluator<'a>(ctx: &'a Ctx, pipe: &'a Pipeline) -> Box<dyn ConfigEvaluator + 'a> {
     match ctx.eval_pool() {
-        Some(svc) => Box::new(PooledEvaluator::from_service(svc)),
+        Some(svc) => {
+            Box::new(PooledEvaluator::from_service(svc).with_score_batch(ctx.score_batch))
+        }
         None => Box::new(pipe.evaluator(ctx)),
     }
 }
@@ -202,13 +174,31 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
         let mut evaluator = search_evaluator(ctx, pipe);
         let res = run_search(&pipe.space, evaluator.as_mut(), &ctx.preset)?;
         eprintln!(
-            "[search] {} true evals, {} predictor queries, {:.1}s ({} worker{})",
+            "[search] {} true evals, {} predictor queries, {:.1}s ({} worker{}, score-batch {})",
             res.true_evals,
             res.predictor_queries,
             res.total_time.as_secs_f64(),
             ctx.workers,
-            if ctx.workers == 1 { "" } else { "s" }
+            if ctx.workers == 1 { "" } else { "s" },
+            ctx.score_batch,
         );
+        if let Some(s) = evaluator.batch_stats() {
+            eprintln!(
+                "[search] {} scorer dispatches for {} requested configs \
+                 ({} cache hits, {} in-batch dups; {:.2}x fewer dispatches)",
+                s.dispatches,
+                s.requested,
+                s.cache_hits,
+                s.dup_hits,
+                s.dispatch_reduction(),
+            );
+        }
+        ctx.note_eval_stats(evaluator.batch_stats());
+        ctx.note_search_stats(SearchRunStats {
+            true_evals: res.true_evals,
+            predictor_queries: res.predictor_queries,
+            wall_secs: res.total_time.as_secs_f64(),
+        });
         Ok(res.archive)
     })?;
     Ok(rebits(archive, &pipe.space))
@@ -433,6 +423,12 @@ pub fn search_cached(
     let archive = cache::archive_cached(&path, fresh, || {
         let mut evaluator = search_evaluator(ctx, pipe);
         let res = run_search(&pipe.space, evaluator.as_mut(), params)?;
+        ctx.note_eval_stats(evaluator.batch_stats());
+        ctx.note_search_stats(SearchRunStats {
+            true_evals: res.true_evals,
+            predictor_queries: res.predictor_queries,
+            wall_secs: res.total_time.as_secs_f64(),
+        });
         Ok(res.archive)
     })?;
     Ok(rebits(archive, &pipe.space))

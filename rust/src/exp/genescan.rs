@@ -1,0 +1,80 @@
+//! `repro genescan` — the per-`(layer, method, bits)` gene sensitivity
+//! scan (`sensitivity::scan_genes`) as a standalone experiment: how much
+//! each gene choice hurts relative to the all-max baseline, which
+//! `(method, bits)` each layer tolerates best, and a machine-readable JSON
+//! dump.  The scan is one batched dispatch, so it dedups, microbatches and
+//! fans out across pool shards exactly like the search hot path.
+
+use super::{common, Ctx};
+use crate::coordinator::sensitivity;
+use crate::report::{fmt, Table};
+use crate::Result;
+use std::fmt::Write as _;
+
+pub fn run(ctx: &Ctx, pipe: &common::Pipeline) -> Result<()> {
+    let space = &pipe.full_space;
+    let mut evaluator = common::search_evaluator(ctx, pipe);
+    let scan = sensitivity::scan_genes(space, evaluator.as_mut())?;
+
+    let layer_name = |li: usize| ctx.assets.manifest.layers[li].name.clone();
+
+    let mut table = Table::new(
+        "gene sensitivity scan (Δjsd vs all-max baseline)",
+        &["layer", "method", "bits", "jsd", "delta"],
+    );
+    for p in &scan.probes {
+        table.row(vec![
+            layer_name(p.layer),
+            p.method.name().to_string(),
+            p.bits.to_string(),
+            fmt(p.jsd, 5),
+            fmt(p.jsd - scan.baseline, 5),
+        ]);
+    }
+    table.print();
+
+    let mut best = Table::new(
+        "gentlest probe per layer",
+        &["layer", "method", "bits", "delta"],
+    );
+    for (li, probe) in scan.best_per_layer(space.n_layers()).iter().enumerate() {
+        if let Some(p) = probe {
+            best.row(vec![
+                layer_name(li),
+                p.method.name().to_string(),
+                p.bits.to_string(),
+                fmt(p.jsd - scan.baseline, 5),
+            ]);
+        }
+    }
+    best.print();
+    if let Some(s) = evaluator.batch_stats() {
+        eprintln!(
+            "[genescan] {} probes in {} scorer dispatches (score-batch {})",
+            scan.probes.len(),
+            s.dispatches,
+            s.score_batch,
+        );
+    }
+
+    let mut json = String::from("{\n");
+    let _ = write!(json, "  \"baseline_jsd\": {},\n  \"probes\": [\n", scan.baseline);
+    for (i, p) in scan.probes.iter().enumerate() {
+        if i > 0 {
+            json.push_str(",\n");
+        }
+        let _ = write!(
+            json,
+            "    {{\"layer\": \"{}\", \"method\": \"{}\", \"bits\": {}, \"jsd\": {}}}",
+            layer_name(p.layer),
+            p.method.name(),
+            p.bits,
+            p.jsd,
+        );
+    }
+    json.push_str("\n  ]\n}\n");
+    let path = ctx.out_dir.join("genescan.json");
+    std::fs::write(&path, json)?;
+    eprintln!("[genescan] wrote {}", path.display());
+    Ok(())
+}

@@ -13,6 +13,7 @@ pub mod fig12;
 pub mod fig2;
 pub mod fig6;
 pub mod fig9;
+pub mod genescan;
 pub mod pruning_ablation;
 pub mod speed;
 pub mod table1;
@@ -24,14 +25,16 @@ pub mod table4;
 pub mod table78;
 pub mod table9;
 
-use crate::coordinator::{EvalPool, SearchParams};
+use crate::coordinator::{
+    BankShareStats, DeviceBank, EvalBatchStats, EvalPool, ProxyBank, SearchParams,
+};
 use crate::data::{load_tasks, load_tokens, TaskInstance, TokenSplit};
 use crate::model::ModelAssets;
 use crate::quant::MethodRegistry;
 use crate::runtime::{Runtime, ScoreBatch, ServiceStats};
 use crate::Result;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Number of calibration sequences used on the search hot path (1 PJRT
 /// call per candidate).  Final tables evaluate on the full splits.
@@ -53,27 +56,56 @@ pub fn prepare_search_batches(rt: &Runtime, calib: &TokenSplit) -> Result<Vec<Sc
     Ok(batches)
 }
 
-/// Everything an experiment needs, loaded once.
+/// Default microbatch size for candidate scoring (`--score-batch`).
+/// Results are identical for any value; only dispatch granularity changes.
+pub const DEFAULT_SCORE_BATCH: usize = 8;
+
+/// Headline numbers of the most recent (non-cached) search run, stashed for
+/// the machine-readable bench report.
+#[derive(Clone, Debug, Default)]
+pub struct SearchRunStats {
+    pub true_evals: usize,
+    pub predictor_queries: usize,
+    pub wall_secs: f64,
+}
+
+/// Everything an experiment needs, loaded once.  The heavyweight pieces
+/// (assets, runtime, calibration batches, the uploaded device bank) are
+/// behind `Arc`s: the main thread and every evaluation-pool shard share one
+/// copy of each — shards own nothing but cheap handles.
 pub struct Ctx {
-    pub assets: ModelAssets,
-    pub rt: Runtime,
+    pub assets: Arc<ModelAssets>,
+    pub rt: Arc<Runtime>,
     pub calib: TokenSplit,
     pub wiki: TokenSplit,
     pub c4: TokenSplit,
     pub tasks: Vec<TaskInstance>,
-    /// Prepared batches over the first [`SEARCH_CALIB_SEQS`] calib seqs.
-    pub search_batches: Vec<ScoreBatch>,
+    /// Prepared batches over the first [`SEARCH_CALIB_SEQS`] calib seqs,
+    /// shared with the pool shards.
+    pub search_batches: Arc<Vec<ScoreBatch>>,
     pub out_dir: PathBuf,
     pub preset: SearchParams,
-    /// Artifacts directory (worker shards reload their own runtime from it).
+    /// Artifacts directory.
     pub artifacts: PathBuf,
     /// Evaluation-pool width (`--workers N`); 1 = in-thread evaluation.
     pub workers: usize,
+    /// Scoring microbatch size (`--score-batch K`).
+    pub score_batch: usize,
     /// Enabled quantization methods (`--methods`, default: the manifest's
     /// list, which defaults to single-method HQQ — the legacy genome).
     pub registry: MethodRegistry,
     /// Lazily-spawned sharded evaluation pool, shared across searches.
     pool: OnceLock<Arc<EvalPool>>,
+    /// The process-wide device bank: quantized once, uploaded once, shared
+    /// by the main thread and every pool shard (the error arm memoizes a
+    /// failed build so shards report it instead of retrying).
+    device_bank: Arc<OnceLock<std::result::Result<Arc<DeviceBank>, String>>>,
+    /// Bank references registered by initialized pool shards (accounting).
+    shard_banks: Arc<Mutex<Vec<Arc<ProxyBank>>>>,
+    /// Dispatch/dedup stats of the most recent search evaluator.
+    last_eval_stats: Mutex<Option<EvalBatchStats>>,
+    /// Headline numbers of the most recent (non-cached) search run.
+    last_search: Mutex<Option<SearchRunStats>>,
 }
 
 impl Ctx {
@@ -89,29 +121,32 @@ impl Ctx {
         preset: SearchParams,
         workers: usize,
     ) -> Result<Ctx> {
-        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None)
+        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None, DEFAULT_SCORE_BATCH)
     }
 
     /// Load with explicit options.  `workers <= 1` keeps every
     /// true-evaluation on the calling thread (the seed behaviour);
-    /// `workers > 1` spawns that many shards on first use, each owning its
-    /// own PJRT runtime stack.  `registry` overrides the manifest's method
-    /// enable list (CLI `--methods`).
+    /// `workers > 1` spawns that many shards on first use — all sharing
+    /// this context's runtime, proxy device bank and calibration batches.
+    /// `registry` overrides the manifest's method enable list (CLI
+    /// `--methods`); `score_batch` is the scoring microbatch size (CLI
+    /// `--score-batch`, clamped to >= 1).
     pub fn load_with_opts(
         artifacts_dir: &Path,
         out_dir: &Path,
         preset: SearchParams,
         workers: usize,
         registry: Option<MethodRegistry>,
+        score_batch: usize,
     ) -> Result<Ctx> {
-        let assets = ModelAssets::load(artifacts_dir)?;
-        let rt = Runtime::load(artifacts_dir, &assets.weights)?;
+        let assets = Arc::new(ModelAssets::load(artifacts_dir)?);
+        let rt = Arc::new(Runtime::load(artifacts_dir, &assets.weights)?);
         let calib = load_tokens(&assets.manifest.file("calib")?)?;
         let wiki = load_tokens(&assets.manifest.file("test_wiki")?)?;
         let c4 = load_tokens(&assets.manifest.file("test_c4")?)?;
         let tasks = load_tasks(&assets.manifest.file("tasks")?)?;
 
-        let search_batches = prepare_search_batches(&rt, &calib)?;
+        let search_batches = Arc::new(prepare_search_batches(&rt, &calib)?);
         std::fs::create_dir_all(out_dir)?;
         std::fs::create_dir_all(out_dir.join("cache"))?;
         let registry =
@@ -128,9 +163,30 @@ impl Ctx {
             preset,
             artifacts: artifacts_dir.to_path_buf(),
             workers: workers.max(1),
+            score_batch: score_batch.max(1),
             registry,
             pool: OnceLock::new(),
+            device_bank: Arc::new(OnceLock::new()),
+            shard_banks: Arc::new(Mutex::new(Vec::new())),
+            last_eval_stats: Mutex::new(None),
+            last_search: Mutex::new(None),
         })
+    }
+
+    /// The process-wide device bank: the proxy quantization pass and the
+    /// device upload both happen exactly once, on first demand, and every
+    /// caller (pipeline build, pool shards) shares the same `Arc`.
+    pub fn device_bank(&self) -> Result<Arc<DeviceBank>> {
+        self.device_bank
+            .get_or_init(|| {
+                let bank = common::build_proxy_bank(&self.assets, &self.registry)
+                    .map_err(|e| format!("{e}"))?;
+                DeviceBank::upload(&self.rt, Arc::new(bank))
+                    .map(Arc::new)
+                    .map_err(|e| format!("{e}"))
+            })
+            .clone()
+            .map_err(|e| eyre::anyhow!("device bank unavailable: {e}"))
     }
 
     /// The shared evaluation pool, spawned on first use (None when running
@@ -150,6 +206,38 @@ impl Ctx {
     /// Pool statistics, if a pool was ever spawned (does not spawn one).
     pub fn pool_stats(&self) -> Option<ServiceStats> {
         self.pool.get().map(|p| p.stats())
+    }
+
+    /// Device-bank residency across the shards that actually initialized:
+    /// the shared bank is counted once, however many shards reference it.
+    pub fn bank_share_stats(&self) -> Option<BankShareStats> {
+        let banks = self.shard_banks.lock().unwrap();
+        if banks.is_empty() {
+            None
+        } else {
+            Some(BankShareStats::from_shard_banks(&banks))
+        }
+    }
+
+    /// Stash the dispatch/dedup stats of a finished search evaluator
+    /// (reported by `repro` and serialized into the bench JSON).
+    pub fn note_eval_stats(&self, stats: Option<EvalBatchStats>) {
+        if let Some(s) = stats {
+            *self.last_eval_stats.lock().unwrap() = Some(s);
+        }
+    }
+
+    pub fn last_eval_stats(&self) -> Option<EvalBatchStats> {
+        self.last_eval_stats.lock().unwrap().clone()
+    }
+
+    /// Stash the headline numbers of a finished (non-cached) search run.
+    pub fn note_search_stats(&self, stats: SearchRunStats) {
+        *self.last_search.lock().unwrap() = Some(stats);
+    }
+
+    pub fn last_search_stats(&self) -> Option<SearchRunStats> {
+        self.last_search.lock().unwrap().clone()
     }
 
     /// Prepared batches over a whole token split (for final JSD evals).
@@ -178,6 +266,7 @@ pub const EXPERIMENTS: &[(&str, &str)] = &[
     ("fig7", "accuracy vs avg-bits trade-off curves"),
     ("fig8", "tokens/s at each avg-bits for all methods"),
     ("fig9", "search bit-histogram with vs without pruning"),
+    ("genescan", "per-(layer, method, bits) gene sensitivity scan"),
     ("fig10", "frontier PPL with vs without pruning"),
     ("fig11", "frontier PPL vs iteration over 6 seeds"),
     ("fig12", "bit-allocation heatmaps per budget"),

@@ -24,8 +24,8 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
     );
 
     for (calib_name, batches) in [
-        ("wiki", &ctx.search_batches),
-        ("c4", &alt_batches),
+        ("wiki", ctx.search_batches.as_slice()),
+        ("c4", alt_batches.as_slice()),
     ] {
         // sensitivity under this calibration set (same genome as the
         // pipeline, so the proxy bank covers every probed gene)

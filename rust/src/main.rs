@@ -15,8 +15,12 @@
 //!   --out DIR                       results directory (default: results)
 //!   --artifacts DIR                 artifacts directory
 //!   --workers N                     evaluation-pool shards (default: 1);
-//!                                   each shard owns its own runtime stack,
-//!                                   archives are identical for any N
+//!                                   shards share one runtime + one device
+//!                                   bank, archives are identical for any N
+//!   --score-batch K                 scoring microbatch size (default: 8);
+//!                                   candidates are deduped per generation
+//!                                   and dispatched K per scorer call,
+//!                                   archives are identical for any K
 //!   --methods LIST                  comma-separated quantization methods
 //!                                   the genome may assign per layer
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
@@ -37,6 +41,7 @@ struct Args {
     out: String,
     artifacts: Option<String>,
     workers: usize,
+    score_batch: usize,
     methods: Option<String>,
     predictor: Option<String>,
 }
@@ -50,6 +55,7 @@ fn parse_args() -> Args {
         out: "results".into(),
         artifacts: None,
         workers: 1,
+        score_batch: exp::DEFAULT_SCORE_BATCH,
         methods: None,
         predictor: None,
     };
@@ -77,6 +83,10 @@ fn parse_args() -> Args {
             "--workers" => {
                 i += 1;
                 args.workers = argv[i].parse().expect("--workers N");
+            }
+            "--score-batch" => {
+                i += 1;
+                args.score_batch = argv[i].parse().expect("--score-batch K");
             }
             "--methods" => {
                 i += 1;
@@ -167,6 +177,33 @@ fn write_search_report(
             .join(", ")
     );
     let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
+    let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
+    let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
+    if let Some(es) = ctx.last_eval_stats() {
+        let _ = write!(
+            s,
+            "  \"eval\": {{\"requested\": {}, \"cache_hits\": {}, \"dup_hits\": {}, \
+             \"evaluated\": {}, \"dispatches\": {}, \"dedup_fraction\": {:.4}, \
+             \"dispatch_reduction\": {:.3}}},\n",
+            es.requested,
+            es.cache_hits,
+            es.dup_hits,
+            es.evaluated,
+            es.dispatches,
+            es.dedup_fraction(),
+            es.dispatch_reduction(),
+        );
+    }
+    if let Some(bs) = ctx.bank_share_stats() {
+        let _ = write!(
+            s,
+            "  \"bank_sharing\": {{\"shards\": {}, \"resident_mb\": {:.3}, \
+             \"unshared_mb\": {:.3}}},\n",
+            bs.shards,
+            bs.resident_bytes as f64 / 1e6,
+            bs.referenced_bytes as f64 / 1e6,
+        );
+    }
     let _ = write!(s, "  \"log10_space_size\": {:.3},\n", pipe.space.log10_size());
     let _ = write!(s, "  \"n_layers\": {},\n", pipe.space.n_layers());
     s.push_str("  \"proxy_bank\": [");
@@ -211,10 +248,71 @@ fn write_search_report(
     Ok(())
 }
 
+/// Machine-readable perf snapshot of the search hot path (CI uploads this
+/// as the `BENCH_search` artifact; the coordinator bench emits the same
+/// schema on synthetic workloads).  `cached: true` means the archive came
+/// from disk and the dispatch counters refer to no fresh work.
+fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipeline) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut s = String::from("{\n");
+    let _ = write!(s, "  \"bench\": \"repro_search\",\n");
+    let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
+    let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
+    let _ = write!(s, "  \"methods\": \"{}\",\n", ctx.registry.names().join(","));
+    let _ = write!(s, "  \"cached\": {},\n", ctx.last_search_stats().is_none());
+    if let Some(run) = ctx.last_search_stats() {
+        let _ = write!(s, "  \"wall_seconds\": {:.3},\n", run.wall_secs);
+        let _ = write!(s, "  \"true_evals\": {},\n", run.true_evals);
+        let _ = write!(s, "  \"predictor_queries\": {},\n", run.predictor_queries);
+        let _ = write!(
+            s,
+            "  \"candidates_per_sec\": {:.2},\n",
+            run.true_evals as f64 / run.wall_secs.max(1e-9),
+        );
+    }
+    if let Some(es) = ctx.last_eval_stats() {
+        let _ = write!(s, "  \"scorer_dispatches\": {},\n", es.dispatches);
+        let _ = write!(s, "  \"requested_configs\": {},\n", es.requested);
+        let _ = write!(s, "  \"dedup_hits\": {},\n", es.cache_hits + es.dup_hits);
+        let _ = write!(s, "  \"dedup_fraction\": {:.4},\n", es.dedup_fraction());
+        let _ = write!(s, "  \"dispatch_reduction\": {:.3},\n", es.dispatch_reduction());
+    }
+    // Device-level truth: executes are still per (candidate, batch) on the
+    // fixed single-candidate HLO — chunking amortizes dispatch, not FLOPs.
+    let _ = write!(s, "  \"device_scorer_calls\": {},\n", ctx.rt.stats().scores_calls);
+    if let Some(pool) = ctx.pool_stats() {
+        let _ = write!(
+            s,
+            "  \"pool\": {{\"dispatches\": {}, \"mean_wait_ms\": {:.3}, \
+             \"mean_service_ms\": {:.3}}},\n",
+            pool.completed,
+            pool.mean_wait().as_secs_f64() * 1e3,
+            pool.mean_service().as_secs_f64() * 1e3,
+        );
+    }
+    let bank_bytes = pipe.proxy.bank.memory_bytes();
+    if let Some(bs) = ctx.bank_share_stats() {
+        let _ = write!(
+            s,
+            "  \"bank\": {{\"resident_bytes\": {}, \"unshared_bytes\": {}, \"shards\": {}}}\n",
+            bs.resident_bytes, bs.referenced_bytes, bs.shards,
+        );
+    } else {
+        let _ = write!(
+            s,
+            "  \"bank\": {{\"resident_bytes\": {bank_bytes}, \"unshared_bytes\": {bank_bytes}, \
+             \"shards\": 1}}\n",
+        );
+    }
+    s.push_str("}\n");
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N]");
+        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -251,12 +349,14 @@ fn main() -> Result<()> {
         params,
         args.workers,
         registry,
+        args.score_batch,
     )?;
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, methods: {}, predictor: {})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
         ctx.workers,
         if ctx.workers == 1 { "" } else { "s" },
+        ctx.score_batch,
         ctx.registry.names().join(","),
         ctx.preset.predictor.name(),
     );
@@ -316,6 +416,7 @@ fn main() -> Result<()> {
             "fig6" => exp::fig6::run(&ctx, &pipe, fresh)?,
             "fig8" => exp::speed::run_fig8(&ctx, &pipe, fresh)?,
             "fig9" | "fig10" => exp::fig9::run(&ctx, &pipe, fresh)?,
+            "genescan" => exp::genescan::run(&ctx, &pipe)?,
             "fig11" => exp::fig11::run(&ctx, &pipe)?,
             "fig12" => exp::fig12::run(&ctx, &pipe, fresh)?,
             "table1" => exp::table1::run(&ctx, &pipe, fresh)?,
@@ -357,6 +458,9 @@ fn main() -> Result<()> {
             let report = ctx.out_dir.join("search_report.json");
             write_search_report(&report, &ctx, &pipe, &rows)?;
             eprintln!("[report] wrote {}", report.display());
+            let bench = ctx.out_dir.join("BENCH_search.json");
+            write_bench_json(&bench, &ctx, &pipe)?;
+            eprintln!("[report] wrote {}", bench.display());
         }
         "all" => {
             let order = [
@@ -385,11 +489,20 @@ fn main() -> Result<()> {
             .map(|(i, s)| format!("#{i}:{} ({:.1}s busy)", s.completed, s.busy.as_secs_f64()))
             .collect();
         eprintln!(
-            "[pool] {} evals | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
+            "[pool] {} dispatches | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
             pool.completed,
             pool.mean_wait().as_secs_f64() * 1e3,
             pool.mean_service().as_secs_f64() * 1e3,
             per_shard.join(" "),
+        );
+    }
+    if let Some(bs) = ctx.bank_share_stats() {
+        eprintln!(
+            "[bank] {:.1} MB resident, shared by {} shard{} (private copies would hold {:.1} MB)",
+            bs.resident_bytes as f64 / 1e6,
+            bs.shards,
+            if bs.shards == 1 { "" } else { "s" },
+            bs.referenced_bytes as f64 / 1e6,
         );
     }
     Ok(())

@@ -7,9 +7,12 @@
 //!    `client.compile`) and reuse forever;
 //!  * upload invariant inputs (fp weights, calibration batches, fp logits)
 //!    once as `PjRtBuffer`s; per-candidate marshalling is limited to the
-//!    quantized-layer buffers, which the proxy store also uploads only once
-//!    per (layer, bit-width) — so an *assembled candidate costs zero host→
-//!    device copies* (see coordinator::proxy);
+//!    quantized-layer buffers, which the proxy bank also uploads only once
+//!    per (method, layer, bit-width) — so an *assembled candidate costs zero
+//!    host→device copies* (see coordinator::proxy);
+//!  * `Runtime` is `Sync` (PJRT clients are thread-safe; every entry point
+//!    takes `&self`), so one runtime + one uploaded `DeviceBank` serve every
+//!    evaluation-pool shard — stats live behind a `Mutex`, not a `RefCell`;
 //!  * python never runs here.
 
 mod service;
@@ -20,9 +23,9 @@ use crate::data::Manifest;
 use crate::model::WeightStore;
 use crate::quant::QuantizedLinear;
 use crate::Result;
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// How each executable argument is sourced, precomputed from the manifest
@@ -106,7 +109,7 @@ pub struct Runtime {
     quant_plan: Vec<ArgSlot>,
     scores_plan: Vec<ArgSlot>,
     fp_param_bufs: HashMap<String, xla::PjRtBuffer>,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
@@ -141,7 +144,7 @@ impl Runtime {
             quant_plan,
             scores_plan,
             fp_param_bufs: HashMap::new(),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         };
         rt.upload_fp_params(weights)?;
         Ok(rt)
@@ -185,27 +188,27 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 
     pub fn reset_stats(&self) {
-        *self.stats.borrow_mut() = RuntimeStats::default();
+        *self.stats.lock().unwrap() = RuntimeStats::default();
     }
 
     // -- uploads ----------------------------------------------------------
 
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        self.stats.lock().unwrap().upload_bytes += (data.len() * 4) as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.stats.borrow_mut().upload_bytes += (data.len() * 4) as u64;
+        self.stats.lock().unwrap().upload_bytes += (data.len() * 4) as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
     pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.stats.borrow_mut().upload_bytes += data.len() as u64;
+        self.stats.lock().unwrap().upload_bytes += data.len() as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
@@ -274,7 +277,7 @@ impl Runtime {
         let out = self.fp_exec.execute_b(&args)?;
         let lit = out[0][0].to_literal_sync()?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.fp_calls += 1;
             s.fp_time += t0.elapsed();
         }
@@ -304,9 +307,28 @@ impl Runtime {
     /// Fused scorer: (mean JSD vs fp, mean CE) for an assembled candidate.
     /// `layers[i]` must follow manifest layer order.
     pub fn scores(&self, batch: &ScoreBatch, layers: &[&QuantLayerBufs]) -> Result<(f32, f32)> {
-        eyre::ensure!(layers.len() == self.manifest.layers.len());
+        Ok(self.scores_chunk(batch, &[layers])?[0])
+    }
+
+    /// Fused scorer over a *chunk* of assembled candidates on one batch —
+    /// the microbatch dispatch unit of the evaluation hot path.  The static
+    /// argument slots (tokens/mask/fp logits/fp params) are resolved once
+    /// per chunk; per-candidate marshalling is limited to patching the
+    /// quant-slot positions in place.  Results are per-candidate, in input
+    /// order, and bit-identical to calling [`Runtime::scores`] per candidate.
+    pub fn scores_chunk(
+        &self,
+        batch: &ScoreBatch,
+        candidates: &[&[&QuantLayerBufs]],
+    ) -> Result<Vec<(f32, f32)>> {
+        let mut out = Vec::with_capacity(candidates.len());
+        if candidates.is_empty() {
+            return Ok(out);
+        }
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.scores_plan.len());
-        for slot in &self.scores_plan {
+        // (argument position, layer index, 0=codes 1=scale 2=zero)
+        let mut quant_slots: Vec<(usize, usize, u8)> = Vec::new();
+        for (pos, slot) in self.scores_plan.iter().enumerate() {
             match slot {
                 ArgSlot::Tokens => args.push(&batch.tokens),
                 ArgSlot::Mask => args.push(&batch.mask),
@@ -317,25 +339,34 @@ impl Runtime {
                         .ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?,
                 ),
                 ArgSlot::Quant(li, part) => {
-                    let l = layers[*li];
-                    args.push(match part {
-                        0 => &l.codes,
-                        1 => &l.scale,
-                        _ => &l.zero,
-                    });
+                    quant_slots.push((pos, *li, *part));
+                    // placeholder, patched per candidate below
+                    args.push(&batch.tokens);
                 }
             }
         }
-        let t0 = Instant::now();
-        let out = self.scores_exec.execute_b(&args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.scores_calls += 1;
-            s.scores_time += t0.elapsed();
+        for layers in candidates {
+            eyre::ensure!(layers.len() == self.manifest.layers.len());
+            for &(pos, li, part) in &quant_slots {
+                let l = layers[li];
+                args[pos] = match part {
+                    0 => &l.codes,
+                    1 => &l.scale,
+                    _ => &l.zero,
+                };
+            }
+            let t0 = Instant::now();
+            let res = self.scores_exec.execute_b(&args)?;
+            let lit = res[0][0].to_literal_sync()?;
+            {
+                let mut s = self.stats.lock().unwrap();
+                s.scores_calls += 1;
+                s.scores_time += t0.elapsed();
+            }
+            let (jsd, ce) = lit.to_tuple2()?;
+            out.push((jsd.to_vec::<f32>()?[0], ce.to_vec::<f32>()?[0]));
         }
-        let (jsd, ce) = lit.to_tuple2()?;
-        Ok((jsd.to_vec::<f32>()?[0], ce.to_vec::<f32>()?[0]))
+        Ok(out)
     }
 
     /// Quantized-model logits (task evaluation path).
@@ -369,7 +400,7 @@ impl Runtime {
         let out = self.quant_exec.execute_b(&args)?;
         let lit = out[0][0].to_literal_sync()?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.quant_calls += 1;
             s.quant_time += t0.elapsed();
         }

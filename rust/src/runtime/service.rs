@@ -1,16 +1,17 @@
 //! EvalService — a sharded evaluation pool in the style of a serving
-//! router's batcher.  PJRT objects are not `Send`, so each runtime stack
-//! lives on one dedicated worker thread; callers (CLI, examples, the search
-//! loop) submit requests through a shared channel and receive results
-//! through per-request reply channels.
+//! router's batcher.  Callers (CLI, examples, the search loop) submit
+//! requests through a shared channel and receive results through
+//! per-request reply channels.
 //!
 //! Sharding model:
 //!  * N workers share a single FIFO request channel (work-sharing: whichever
 //!    shard is idle takes the next request, so a slow candidate never blocks
 //!    the queue behind one thread);
 //!  * each worker owns its own evaluation state, built *on the worker
-//!    thread* by the shard builder — this is how non-`Send` PJRT state is
-//!    confined per shard;
+//!    thread* by the shard builder — per-shard state can be anything from a
+//!    full non-`Send` runtime stack down to a couple of `Arc` handles onto
+//!    process-wide shared state (the search pool does the latter: one
+//!    `Sync` runtime + one shared device bank serve every shard);
 //!  * every request carries its own reply channel, and `call_batch` collects
 //!    replies in submission order — results are therefore deterministically
 //!    ordered and bit-identical regardless of worker count, **provided** the

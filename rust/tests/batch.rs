@@ -1,0 +1,192 @@
+//! Microbatched-scoring integration tests (no artifacts required): the
+//! dedup + `--score-batch` dispatch pipeline must change *dispatch counts
+//! only* — the search archive stays byte-identical across every
+//! `(workers, score-batch)` combination, and the shared device bank's
+//! bytes are counted once no matter how many shards reference it.
+
+use amq::coordinator::{
+    run_search, Archive, BankShareStats, Config, ConfigEvaluator, PooledEvaluator, ProxyBank,
+    SearchParams, SearchSpace,
+};
+use amq::quant::{MethodId, Quantizer};
+use amq::tensor::Mat;
+use amq::util::Rng;
+use std::sync::Arc;
+
+fn toy_space(n: usize) -> SearchSpace {
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n],
+        params: vec![128 * 128; n],
+        groups: vec![128; n],
+        group_size: 128,
+    }
+}
+
+/// Deterministic synthetic "true evaluation", seeded purely from the
+/// payload (the pool determinism contract).
+fn synth_jsd(cfg: &Config) -> f32 {
+    let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+    for &g in cfg {
+        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(g as u64);
+    }
+    let mut rng = Rng::new(seed);
+    let base: f32 = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| {
+            let w = if i % 5 == 0 { 1.0 } else { 0.04 };
+            w * ((4 - g) as f32).powi(2)
+        })
+        .sum();
+    base + rng.f32() * 1e-4
+}
+
+fn pooled(workers: usize, score_batch: usize) -> PooledEvaluator {
+    PooledEvaluator::spawn(workers, |_shard| {
+        |cfg: Config| -> amq::Result<f32> { Ok(synth_jsd(&cfg)) }
+    })
+    .with_score_batch(score_batch)
+}
+
+/// FNV-1a over the archive's full content — the reproducibility fingerprint.
+fn archive_hash(archive: &Archive) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01B3);
+    };
+    for s in &archive.samples {
+        for &g in &s.config {
+            mix(g as u64);
+        }
+        mix(s.jsd.to_bits() as u64);
+        mix(s.avg_bits.to_bits());
+    }
+    h
+}
+
+#[test]
+fn archive_identical_across_workers_and_score_batch() {
+    let space = toy_space(14);
+    let mut params = SearchParams::smoke();
+    params.seed = 29;
+
+    // sequential trait-default baseline
+    struct Seq(usize);
+    impl ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.0 += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.0
+        }
+    }
+    let baseline = run_search(&space, &mut Seq(0), &params).unwrap();
+    let expect = archive_hash(&baseline.archive);
+
+    for workers in [1usize, 4] {
+        for score_batch in [1usize, 8] {
+            let mut ev = pooled(workers, score_batch);
+            let res = run_search(&space, &mut ev, &params).unwrap();
+            assert_eq!(
+                archive_hash(&res.archive),
+                expect,
+                "archive diverged at workers={workers} score_batch={score_batch}"
+            );
+            assert_eq!(
+                res.true_evals, baseline.true_evals,
+                "eval count diverged at workers={workers} score_batch={score_batch}"
+            );
+            assert_eq!(res.predictor_queries, baseline.predictor_queries);
+        }
+    }
+}
+
+#[test]
+fn microbatching_cuts_dispatches_without_changing_results() {
+    let space = toy_space(10);
+    let mut params = SearchParams::smoke();
+    params.seed = 3;
+
+    let mut k1 = pooled(2, 1);
+    let a = run_search(&space, &mut k1, &params).unwrap();
+    let mut k8 = pooled(2, 8);
+    let b = run_search(&space, &mut k8, &params).unwrap();
+    assert_eq!(archive_hash(&a.archive), archive_hash(&b.archive));
+
+    let (s1, s8) = (k1.batch_stats().unwrap(), k8.batch_stats().unwrap());
+    assert_eq!(s1.evaluated, s8.evaluated, "same configs must reach the scorer");
+    assert_eq!(s1.evaluated as usize, a.true_evals);
+    assert_eq!(s1.dispatches, s1.evaluated, "k=1 is one dispatch per config");
+    assert!(
+        s8.dispatches < s8.evaluated,
+        "k=8 must pack chunks: {} dispatches for {} evals",
+        s8.dispatches,
+        s8.evaluated
+    );
+    // the acceptance direction: requested-per-dispatch must beat the
+    // k=1 pipeline (which already banks the dedup savings alone), and no
+    // chunk may carry more than k configs
+    assert!(
+        s8.dispatch_reduction() > s1.dispatch_reduction(),
+        "batching added nothing: k=8 {:.3} vs k=1 {:.3}",
+        s8.dispatch_reduction(),
+        s1.dispatch_reduction()
+    );
+    assert!(s8.dispatches >= (s8.evaluated as usize).div_ceil(8) as u64);
+    assert!(
+        s1.dispatch_reduction() >= 1.0 / (1.0 - s1.dedup_fraction()).max(1e-9) * 0.999,
+        "dedup savings not realized: {:.3} for dedup fraction {:.3}",
+        s1.dispatch_reduction(),
+        s1.dedup_fraction()
+    );
+}
+
+#[test]
+fn search_reuses_cache_across_generations() {
+    // the dedup counters must actually see cross-batch traffic: replaying
+    // the same candidate set twice costs zero extra dispatches
+    let mut ev = pooled(2, 4);
+    let configs: Vec<Config> = (0..12)
+        .map(|i| (0..6).map(|j| [2u16, 3, 4][(i + j) % 3]).collect())
+        .collect();
+    let first = ev.eval_jsd_batch(&configs).unwrap();
+    let d0 = ev.batch_stats().unwrap().dispatches;
+    let second = ev.eval_jsd_batch(&configs).unwrap();
+    let s = ev.batch_stats().unwrap();
+    assert_eq!(first, second);
+    assert_eq!(s.dispatches, d0, "cached batch must not dispatch");
+    assert_eq!(s.cache_hits, configs.len() as u64);
+}
+
+#[test]
+fn shared_device_bank_bytes_count_once() {
+    // a real (host-side) bank: 2 layers x 3 bits of quantized weights
+    let quantizer = MethodId::Hqq.build();
+    let pieces = vec![(0..2u64)
+        .map(|i| {
+            let mut rng = Rng::new(1 + i);
+            let mut w = Mat::zeros(8, 128);
+            for v in &mut w.data {
+                *v = rng.normal() * 0.1;
+            }
+            vec![
+                quantizer.quantize(&w, 2, 128, None),
+                quantizer.quantize(&w, 3, 128, None),
+                quantizer.quantize(&w, 4, 128, None),
+            ]
+        })
+        .collect()];
+    let bank =
+        Arc::new(ProxyBank::from_parts(vec![MethodId::Hqq], vec![2, 3, 4], pieces).unwrap());
+    let bytes = bank.memory_bytes();
+    assert!(bytes > 0);
+
+    // 4 pool shards all referencing the one Arc'd bank
+    let shards: Vec<Arc<ProxyBank>> = (0..4).map(|_| bank.clone()).collect();
+    let share = BankShareStats::from_shard_banks(&shards);
+    assert_eq!(share.shards, 4);
+    assert_eq!(share.resident_bytes, bytes, "shared bank must be counted once");
+    assert_eq!(share.referenced_bytes, 4 * bytes);
+}
