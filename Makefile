@@ -10,15 +10,20 @@ PYTHON ?= python3
 .PHONY: artifacts artifacts-smoke test clean-artifacts
 
 # Full build (AMQ_TRAIN_STEPS=2000 by default; ~minutes on a laptop CPU).
+# AMQ_SCORE_LANES sets the candidate-lane count of the stacked scorer
+# executable (scores_quant_lanes{L}.hlo.txt; default 8, 1 omits it — the
+# rust runtime then falls back to the per-candidate scorer).
 artifacts:
-	cd python && $(PYTHON) -m compile.aot --outdir ../artifacts
+	cd python && AMQ_SCORE_LANES=$${AMQ_SCORE_LANES:-8} \
+		$(PYTHON) -m compile.aot --outdir ../artifacts
 
-# Reduced-step build for CI smoke: same artifact geometry, faster training.
-# Quality-sensitive runtime assertions are not valid against this model;
-# the artifact-gated host-side tests (asset validation, proxy-bank build)
-# are.
+# Reduced-step build for CI smoke: same artifact geometry (including the
+# lane-stacked scorer), faster training.  Quality-sensitive runtime
+# assertions are not valid against this model; the artifact-gated host-side
+# tests (asset validation, proxy-bank build, lane-manifest checks) are.
 artifacts-smoke:
 	cd python && AMQ_TRAIN_STEPS=$${AMQ_TRAIN_STEPS:-300} \
+		AMQ_SCORE_LANES=$${AMQ_SCORE_LANES:-8} \
 		$(PYTHON) -m compile.aot --outdir ../artifacts --tasks-per-family 16
 
 test:

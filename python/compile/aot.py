@@ -11,6 +11,7 @@ coordinator needs to be self-contained:
   model_fp.hlo.txt                          (tokens, fp params) -> logits
   model_quant.hlo.txt                       (tokens, fp side, qparams) -> logits
   scores_quant.hlo.txt                      fused scorer -> (jsd, ce)
+  scores_quant_lanes{L}.hlo.txt             lane-stacked scorer -> (jsd[L], ce[L])
   train_log.json                            loss curve
   manifest.json                             shapes + argument orders
 
@@ -88,6 +89,13 @@ def quant_specs(cfg) -> dict[str, dict[str, jax.ShapeDtypeStruct]]:
     return out
 
 
+def quant_lane_specs(cfg, lanes: int) -> dict[str, dict[str, jax.ShapeDtypeStruct]]:
+    """quant_specs with a leading candidate axis on every leaf."""
+    return {name: {p: jax.ShapeDtypeStruct((lanes,) + tuple(s.shape), s.dtype)
+                   for p, s in parts.items()}
+            for name, parts in quant_specs(cfg).items()}
+
+
 def name_tree_like_quant(cfg):
     return {name: {p: f"{name}.{p}" for p in ("codes", "scale", "zero")}
             for name in C.layer_names(cfg)}
@@ -102,9 +110,11 @@ def name_tree_like_fp(cfg, names):
 # ---------------------------------------------------------------------------
 
 def build(outdir: str, steps: int | None, tasks_per_family: int,
-          reuse_weights: bool = False) -> None:
+          reuse_weights: bool = False, lanes: int | None = None) -> None:
     os.makedirs(outdir, exist_ok=True)
     cfg = C.MODEL
+    if lanes is None:
+        lanes = C.score_lanes()
     t0 = time.time()
 
     print("[aot] generating dataset ...", flush=True)
@@ -182,6 +192,31 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
         name_tree_like_fp(cfg, M.fp_side_names(cfg)),
         name_tree_like_quant(cfg))
 
+    # 4. lane-stacked fused scorer: the quant-parameter arguments carry a
+    # leading candidate axis of size L, so one dispatch scores L assembled
+    # candidates.  Per-lane numerics are bitwise identical to the
+    # single-candidate scorer (vmap batches only the candidate axis; every
+    # reduction stays per-lane), which is what lets the rust runtime swap
+    # dispatch strategies without perturbing search archives.  Skipped when
+    # lanes <= 1 (the rust side then falls back to the per-candidate loop).
+    lanes_exec = None
+    if lanes > 1:
+        def scores_lanes_fn(tokens, mask, fp_logits, fp_side, qlanes):
+            jsd, ce = M.scores_quant_lanes(fp_side, qlanes, tokens, mask,
+                                           fp_logits, cfg)
+            return (jsd, ce)
+
+        lanes_file = f"scores_quant_lanes{lanes}.hlo.txt"
+        low = jax.jit(scores_lanes_fn).lower(
+            tok_spec, mask_spec, logits_spec,
+            fp_side_specs(cfg), quant_lane_specs(cfg, lanes))
+        with open(os.path.join(outdir, lanes_file), "w") as f:
+            f.write(to_hlo_text(low))
+        # same flat argument names as the single-candidate scorer: a quant
+        # slot name now refers to the lane-stacked buffer of that layer
+        lanes_exec = {"file": lanes_file, "args": scores_args,
+                      "outputs": ["jsd", "ce"], "lanes": lanes}
+
     manifest = {
         "model": {
             "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
@@ -211,6 +246,7 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
             "scores_quant": {"file": "scores_quant.hlo.txt",
                              "args": scores_args, "outputs": ["jsd", "ce"]},
         },
+        "score_lanes": lanes if lanes_exec else 1,
         "files": {
             "weights": "weights.bin", "hessians": "hessians.bin",
             "calib": "calib.bin", "test_wiki": "test_wiki.bin",
@@ -220,6 +256,8 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
         "special_tokens": {"pad": C.TOK_PAD, "eos": C.TOK_EOS},
         "build_seconds": round(time.time() - t0, 1),
     }
+    if lanes_exec:
+        manifest["executables"]["scores_quant_lanes"] = lanes_exec
     with open(os.path.join(outdir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
     print(f"[aot] done in {time.time() - t0:.1f}s -> {outdir}", flush=True)
@@ -232,8 +270,12 @@ def main() -> None:
     ap.add_argument("--tasks-per-family", type=int, default=100)
     ap.add_argument("--reuse-weights", action="store_true",
                     help="skip training if weights.bin exists (HLO-only rebuild)")
+    ap.add_argument("--lanes", type=int, default=None,
+                    help="candidate lanes of the stacked scorer executable "
+                         "(default: AMQ_SCORE_LANES or 8; 1 disables it)")
     args = ap.parse_args()
-    build(args.outdir, args.steps, args.tasks_per_family, args.reuse_weights)
+    build(args.outdir, args.steps, args.tasks_per_family, args.reuse_weights,
+          args.lanes)
 
 
 if __name__ == "__main__":

@@ -112,6 +112,17 @@ def n_groups(in_features: int) -> int:
 EVAL_BATCH = 16    # sequences per PJRT call (single-core CPU testbed)
 EVAL_SEQ = MODEL.seq_len
 
+
+def score_lanes() -> int:
+    """Candidate lanes of the stacked scorer executable.
+
+    The AOT build emits a second fused scorer whose quant-parameter
+    arguments carry a leading candidate axis of this size, so one PJRT
+    dispatch scores up to ``score_lanes()`` assembled candidates.  Override
+    with ``AMQ_SCORE_LANES`` (1 disables the lane-stacked artifact).
+    """
+    return int(os.environ.get("AMQ_SCORE_LANES", "8"))
+
 # Dataset sizes (sequences of EVAL_SEQ tokens).
 N_CALIB = 128      # calibration set ("WikiText-2 train" analog)
 N_TEST_WIKI = 128  # in-distribution test split ("WikiText-2 test" analog)

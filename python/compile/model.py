@@ -227,6 +227,28 @@ def scores_quant(fp_params, qparams, tokens, mask, fp_logits,
     return jsd_mean, ce_mean
 
 
+def scores_quant_lanes(fp_params, qlanes, tokens, mask, fp_logits,
+                       cfg: ModelConfig = C.MODEL):
+    """Lane-stacked scorer: L independent candidates in one executable.
+
+    ``qlanes`` mirrors the ``scores_quant`` qparams pytree, but every leaf
+    carries a leading candidate axis of size L (codes ``[L,N,K]``,
+    scale/zero ``[L,N,G]``).  tokens / mask / fp reference logits / fp-side
+    parameters are shared across lanes.  Returns ``(jsd[L], ce[L])``.
+
+    Each lane is the *unchanged* single-candidate graph vmapped over the
+    candidate axis: every reduction (JSD/CE masked means, attention
+    softmax) runs over non-batched axes only, so per-lane results are
+    bitwise identical to ``scores_quant`` on that candidate — the identity
+    the rust runtime's lane-stacked dispatch path relies on (pinned by
+    ``test_model.test_scores_quant_lanes_bitwise_identical``).
+    """
+    def one(qparams):
+        return scores_quant(fp_params, qparams, tokens, mask, fp_logits, cfg)
+    jsd, ce = jax.vmap(one)(qlanes)
+    return jsd, ce
+
+
 def ce_fp(params, tokens, cfg: ModelConfig = C.MODEL):
     """Mean next-token CE of the fp model (training loss)."""
     logits = forward_fp(params, tokens, cfg)

@@ -15,10 +15,13 @@ from compile import model as M
 from compile import train as T
 
 
+LANES = 2  # small lane count keeps the fixture build fast; geometry is L-agnostic
+
+
 @pytest.fixture(scope="module")
 def built(tmp_path_factory):
     out = str(tmp_path_factory.mktemp("artifacts"))
-    aot.build(out, steps=3, tasks_per_family=3)
+    aot.build(out, steps=3, tasks_per_family=3, lanes=LANES)
     return out
 
 
@@ -37,6 +40,40 @@ def test_manifest_consistency(built):
     # manifest arg names must be unique and ordered-deterministic
     for exe in m["executables"].values():
         assert len(exe["args"]) == len(set(exe["args"]))
+
+
+def test_manifest_lane_scorer(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    assert m["score_lanes"] == LANES
+    lanes = m["executables"]["scores_quant_lanes"]
+    assert lanes["lanes"] == LANES
+    assert lanes["file"] == f"scores_quant_lanes{LANES}.hlo.txt"
+    # same flat argument names (and order) as the single-candidate scorer:
+    # the rust arg planner reuses its slot classification for both
+    assert lanes["args"] == m["executables"]["scores_quant"]["args"]
+    assert lanes["outputs"] == ["jsd", "ce"]
+
+
+def test_lane_scorer_hlo_carries_candidate_axis(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    exe = m["executables"]["scores_quant_lanes"]
+    text = open(os.path.join(built, exe["file"])).read()
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == len(exe["args"])
+    # a quant slot must be lane-stacked: codes of the first linear layer
+    n, k = C.linear_shape(C.MODEL, "q")
+    assert f"s8[{LANES},{n},{k}]" in entry
+    # outputs are per-lane vectors, not scalars
+    assert f"(f32[{LANES}]" in entry or f"f32[{LANES}]{{0}}" in entry
+
+
+def test_build_without_lanes_omits_artifact(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts_nolanes"))
+    aot.build(out, steps=2, tasks_per_family=2, lanes=1)
+    m = json.load(open(os.path.join(out, "manifest.json")))
+    assert m["score_lanes"] == 1
+    assert "scores_quant_lanes" not in m["executables"]
+    assert not [f for f in os.listdir(out) if f.startswith("scores_quant_lanes")]
 
 
 def test_hlo_entry_param_counts(built):

@@ -91,6 +91,71 @@ def test_scores_quant_positive_jsd_on_perturbation(params, tokens):
     assert float(jsd) > 1e-4
 
 
+def _random_qparams(rng, lanes=None):
+    """Random (not necessarily representable) qparams; optional lane axis."""
+    out = {}
+    for name in C.layer_names(C.MODEL):
+        kind = name.split(".")[1]
+        n, k = C.linear_shape(C.MODEL, kind)
+        g = C.n_groups(k)
+        lead = () if lanes is None else (lanes,)
+        out[name] = {
+            "codes": jnp.asarray(
+                rng.integers(0, 16, size=lead + (n, k)).astype(np.int8)),
+            "scale": jnp.asarray(
+                rng.uniform(0.01, 0.05, size=lead + (n, g)).astype(np.float32)),
+            "zero": jnp.asarray(
+                rng.uniform(0, 15, size=lead + (n, g)).astype(np.float32)),
+        }
+    return out
+
+
+def test_scores_quant_lanes_bitwise_identical(params, tokens):
+    """Per-lane results of the stacked scorer must be *bitwise* equal to the
+    single-candidate scorer on the same candidate — the identity contract
+    that lets the rust runtime switch dispatch strategies without changing
+    search archives."""
+    lanes = 3
+    fp2, _ = _exact_qparams(params)
+    fp_side = {k: fp2[k] for k in M.fp_side_names(C.MODEL)}
+    fp_logits = M.forward_fp(fp2, tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    qlanes = _random_qparams(np.random.default_rng(5), lanes=lanes)
+    jsd_l, ce_l = jax.jit(M.scores_quant_lanes)(
+        fp_side, qlanes, tokens, mask, fp_logits)
+    assert jsd_l.shape == (lanes,) and ce_l.shape == (lanes,)
+    single = jax.jit(M.scores_quant)
+    for lane in range(lanes):
+        qp = {name: {p: parts[p][lane] for p in parts}
+              for name, parts in qlanes.items()}
+        jsd_s, ce_s = single(fp_side, qp, tokens, mask, fp_logits)
+        assert np.asarray(jsd_l[lane]).tobytes() == \
+            np.asarray(jsd_s).tobytes(), lane
+        assert np.asarray(ce_l[lane]).tobytes() == \
+            np.asarray(ce_s).tobytes(), lane
+
+
+def test_scores_quant_lanes_are_independent(params, tokens):
+    """Corrupting one lane's candidate must not perturb the other lanes."""
+    lanes = 2
+    fp2, _ = _exact_qparams(params)
+    fp_side = {k: fp2[k] for k in M.fp_side_names(C.MODEL)}
+    fp_logits = M.forward_fp(fp2, tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    qlanes = _random_qparams(np.random.default_rng(6), lanes=lanes)
+    jsd_a, _ = jax.jit(M.scores_quant_lanes)(
+        fp_side, qlanes, tokens, mask, fp_logits)
+    # zero lane 1's codes of the first layer; lane 0 must be untouched
+    name = C.layer_names(C.MODEL)[0]
+    corrupted = dict(qlanes)
+    corrupted[name] = dict(corrupted[name])
+    corrupted[name]["codes"] = corrupted[name]["codes"].at[1].set(0)
+    jsd_b, _ = jax.jit(M.scores_quant_lanes)(
+        fp_side, corrupted, tokens, mask, fp_logits)
+    assert np.asarray(jsd_a[0]).tobytes() == np.asarray(jsd_b[0]).tobytes()
+    assert float(jsd_a[1]) != float(jsd_b[1])
+
+
 def test_mask_excludes_positions(params, tokens):
     fp2, qparams = _exact_qparams(params)
     fp_logits = M.forward_fp(fp2, tokens)

@@ -5,15 +5,16 @@ use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
 use amq::coordinator::space::{gene, SearchSpace};
 use amq::coordinator::{
-    run_search, Archive, BankShareStats, Config, ConfigEvaluator, PooledEvaluator, ProxyBank,
-    SearchParams,
+    run_search, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool, PooledEvaluator,
+    ProxyBank, SearchParams,
 };
 use amq::quant::{MethodId, Quantizer};
-use amq::runtime::EvalService;
+use amq::runtime::{lane_dispatch_count, lane_padding, lane_routed, EvalService};
 use amq::tensor::Mat;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -200,18 +201,22 @@ fn main() {
 
     // -- batched candidate scoring: the search hot path end to end --------
     // A full smoke search through the pooled evaluator at every
-    // (workers, score-batch) corner: archives must hash identically, and
-    // the dispatch counters quantify the dedup + microbatching win.  The
-    // numbers land in BENCH_search.json (same schema as `repro search`) so
-    // CI can track the perf trajectory as an artifact.
-    header("batched candidate scoring (smoke search, synthetic 0.2ms scorer)");
+    // (workers, score-batch, lanes) corner: archives must hash identically,
+    // and the dispatch counters quantify the dedup + microbatching +
+    // lane-stacking wins.  The simulated device cost model mirrors the
+    // lane-stacked scorer: every device dispatch pays a fixed submission
+    // overhead, plus a marginal cost per executed lane (padding included —
+    // padded lanes burn FLOPs too).  The numbers land in BENCH_search.json
+    // (same schema as `repro search`) so CI can track the perf trajectory
+    // as an artifact.
+    header("batched candidate scoring (smoke search, synthetic lane-aware scorer)");
+    const DISPATCH_US: u64 = 200; // per device call
+    const LANE_US: u64 = 30; // per executed lane
     let search_space = toy_space(16);
-    let synth = |cfg: Config| -> amq::Result<f32> {
-        // payload-seeded (the pool determinism contract) + a fixed delay
-        // standing in for a scorer device round trip
-        std::thread::sleep(Duration::from_micros(200));
+    let synth_score = |cfg: &Config| -> f32 {
+        // payload-seeded: the pool determinism contract
         let mut seed = 0x6A09_E667_F3BC_C908u64;
-        for &g in &cfg {
+        for &g in cfg {
             seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(g as u64);
         }
         let mut r = Rng::new(seed);
@@ -223,7 +228,7 @@ fn main() {
                 w * ((4 - g) as f32).powi(2)
             })
             .sum();
-        Ok(base + r.f32() * 1e-4)
+        base + r.f32() * 1e-4
     };
     let archive_hash = |a: &Archive| -> u64 {
         let mut h = 0xCBF2_9CE4_8422_2325u64;
@@ -244,24 +249,62 @@ fn main() {
     params.seed = 7;
     let mut rows = String::new();
     let mut hashes: Vec<u64> = Vec::new();
-    for (workers, score_batch) in [(1usize, 1usize), (1, 8), (4, 1), (4, 8)] {
-        let mut ev =
-            PooledEvaluator::spawn(workers, move |_shard| synth).with_score_batch(score_batch);
+    for (workers, score_batch, lanes) in [
+        (1usize, 1usize, 1usize),
+        (1, 8, 1),
+        (4, 1, 1),
+        (4, 8, 1),
+        (1, 8, 8),
+        (4, 8, 8),
+    ] {
+        let device_dispatches = Arc::new(AtomicU64::new(0));
+        let lane_candidates = Arc::new(AtomicU64::new(0));
+        let lanes_padded = Arc::new(AtomicU64::new(0));
+        let (dd, lc, lp) =
+            (device_dispatches.clone(), lane_candidates.clone(), lanes_padded.clone());
+        let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(workers, move |_shard| {
+            let (dd, lc, lp) = (dd.clone(), lc.clone(), lp.clone());
+            move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
+                // production routing (the shared `lane_routed` predicate):
+                // single-candidate chunks take the per-candidate path even
+                // when the lane executable exists
+                let routed = lane_routed(chunk.len(), lanes);
+                let d = if routed {
+                    lane_dispatch_count(chunk.len(), lanes) as u64
+                } else {
+                    chunk.len() as u64
+                };
+                let executed = if routed { d * lanes as u64 } else { chunk.len() as u64 };
+                let padded = if routed { lane_padding(chunk.len(), lanes) as u64 } else { 0 };
+                dd.fetch_add(d, Ordering::Relaxed);
+                lc.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                lp.fetch_add(padded, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_micros(d * DISPATCH_US + executed * LANE_US));
+                Ok(chunk.iter().map(synth_score).collect())
+            }
+        }));
+        let mut ev = PooledEvaluator::from_service(svc).with_score_batch(score_batch);
         let t0 = Instant::now();
         let res = run_search(&search_space, &mut ev, &params).unwrap();
         let wall = t0.elapsed();
         let stats = ev.batch_stats().unwrap();
         hashes.push(archive_hash(&res.archive));
         let cps = res.true_evals as f64 / wall.as_secs_f64().max(1e-9);
+        let devd = device_dispatches.load(Ordering::Relaxed);
+        let cand = lane_candidates.load(Ordering::Relaxed);
+        let padded = lanes_padded.load(Ordering::Relaxed);
+        let fill = if cand + padded == 0 { 0.0 } else { cand as f64 / (cand + padded) as f64 };
         println!(
-            "workers {workers} k {score_batch}: {:>8} wall, {:.0} cand/s, {} dispatches \
-             for {} requested ({} dedup hits, {:.2}x reduction)",
+            "workers {workers} k {score_batch} lanes {lanes}: {:>8} wall, {:.0} cand/s, \
+             {} chunk dispatches / {} device dispatches for {} requested \
+             ({} dedup hits, {:.0}% lane fill)",
             format!("{:.0?}", wall),
             cps,
             stats.dispatches,
+            devd,
             stats.requested,
             stats.cache_hits + stats.dup_hits,
-            stats.dispatch_reduction(),
+            fill * 100.0,
         );
         if !rows.is_empty() {
             rows.push_str(",\n");
@@ -269,13 +312,18 @@ fn main() {
         let _ = write!(
             rows,
             "    {{\"workers\": {workers}, \"score_batch\": {score_batch}, \
+             \"lanes\": {lanes}, \"scorer_variant\": \"{}\", \
              \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
-             \"scorer_dispatches\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
+             \"scorer_dispatches\": {}, \"device_dispatches\": {}, \
+             \"lane_fill_fraction\": {:.4}, \"requested_configs\": {}, \"dedup_hits\": {}, \
              \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
+            if lanes > 1 { "lane-stacked" } else { "per-candidate" },
             wall.as_secs_f64(),
             res.true_evals,
             cps,
             stats.dispatches,
+            devd,
+            fill,
             stats.requested,
             stats.cache_hits + stats.dup_hits,
             stats.dedup_fraction(),
@@ -283,8 +331,11 @@ fn main() {
         );
     }
     let identical = hashes.iter().all(|&h| h == hashes[0]);
-    assert!(identical, "archives diverged across (workers, score-batch) combos");
-    println!("archives identical across all (workers, score-batch) combos: {identical}");
+    assert!(
+        identical,
+        "archives diverged across (workers, score-batch, lanes) combos"
+    );
+    println!("archives identical across all (workers, score-batch, lanes) combos: {identical}");
 
     // shared-bank residency: 4 shards referencing one Arc'd bank count 1x
     let shard_refs: Vec<Arc<ProxyBank>> = {

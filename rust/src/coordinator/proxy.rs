@@ -23,8 +23,11 @@ use std::time::{Duration, Instant};
 /// of all `(layer, bits)` pieces of one method.
 #[derive(Clone, Debug)]
 pub struct MethodBuildStats {
+    /// The quantization method the pieces belong to.
     pub method: MethodId,
+    /// Wall-clock spent quantizing this method's pieces.
     pub build_time: Duration,
+    /// Resident bytes of this method's pieces (packed codes + metadata).
     pub memory_bytes: usize,
 }
 
@@ -37,6 +40,7 @@ pub struct MethodBuildStats {
 pub struct ProxyBank {
     /// Enabled methods, bank-slot order.
     pub methods: Vec<MethodId>,
+    /// Candidate bit-widths, manifest order.
     pub bit_choices: Vec<u8>,
     /// `pieces[slot][li][bi]` for methods[slot], bit_choices[bi].
     pieces: Vec<Vec<Vec<QuantizedLinear>>>,
@@ -191,6 +195,16 @@ impl ProxyBank {
 /// resident) its own private copy — N workers meant N uploads and N× device
 /// bytes; now uploads and residency are 1× regardless of pool width.
 ///
+/// Each uploaded piece also keeps host mirrors of its packed data
+/// ([`QuantLayerBufs`]; retained only when the runtime has a lane-stacked
+/// executable), which is what makes the pieces *stackable*: the
+/// lane-stacked scorer ([`Runtime::scores_chunk`]) re-packs a group of
+/// candidates' pieces into `[lanes, ...]` slabs and re-uploads the slab per
+/// dispatch — the per-candidate buffers stay the zero-copy assembly path
+/// for everything else.  Note the mirrors duplicate the host bank's pieces
+/// (~2× host bank bytes on lane-enabled runtimes) and sit outside
+/// `resident_bytes` accounting; see ROADMAP for the zero-copy lever.
+///
 /// Holds no runtime reference: a [`DeviceProxy`] pairs a shared bank with
 /// the runtime that executes against it.
 pub struct DeviceBank {
@@ -200,6 +214,7 @@ pub struct DeviceBank {
     bufs: Vec<Vec<Vec<QuantLayerBufs>>>,
     /// Per-method upload wall-clock, bank-slot order.
     pub upload_times: Vec<Duration>,
+    /// Total upload wall-clock across methods.
     pub upload_time: Duration,
 }
 
@@ -450,10 +465,13 @@ pub fn mean_jsd_batch(
 /// Batches are deduped and dispatched in `score_batch`-sized chunks, so
 /// sequential (non-pooled) runs get the same dispatch savings as the pool.
 pub struct ProxyEvaluator<'rt> {
+    /// The device proxy candidates are assembled through.
     pub proxy: &'rt DeviceProxy<'rt>,
+    /// Prepared calibration batches the scorer runs over.
     pub batches: &'rt [ScoreBatch],
     cache: HashMap<Config, f32>,
     evals: usize,
+    /// Wall-clock spent inside `eval_jsd_batch` (dispatch + reassembly).
     pub eval_time: Duration,
     score_batch: usize,
     stats: EvalBatchStats,
@@ -535,6 +553,7 @@ pub struct PooledEvaluator {
     svc: Arc<EvalPool>,
     cache: HashMap<Config, f32>,
     evals: usize,
+    /// Wall-clock spent inside `eval_jsd_batch` (dispatch + reassembly).
     pub eval_time: Duration,
     score_batch: usize,
     stats: EvalBatchStats,
@@ -579,10 +598,12 @@ impl PooledEvaluator {
         self
     }
 
+    /// Number of pool shards behind this evaluator.
     pub fn workers(&self) -> usize {
         self.svc.n_workers()
     }
 
+    /// Queue/latency statistics of the underlying pool.
     pub fn pool_stats(&self) -> ServiceStats {
         self.svc.stats()
     }

@@ -51,11 +51,21 @@ impl LayerSpec {
     }
 }
 
+/// One AOT-lowered HLO executable: file name, flat argument-name order
+/// (the contract [`crate::runtime`] plans argument slots from) and output
+/// names.
 #[derive(Clone, Debug)]
 pub struct ExecutableSpec {
+    /// HLO-text file name, relative to the artifacts directory.
     pub file: String,
+    /// Flat argument names in executable parameter order.
     pub args: Vec<String>,
+    /// Output names, tuple order.
     pub outputs: Vec<String>,
+    /// Candidate-lane count of a lane-stacked executable (the leading axis
+    /// its quant-slot arguments carry); `None` for single-candidate
+    /// executables.
+    pub lanes: Option<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -139,6 +149,10 @@ impl Manifest {
                         .iter()
                         .map(|a| Ok(a.as_str()?.to_string()))
                         .collect::<Result<Vec<_>>>()?,
+                    lanes: match e.opt("lanes") {
+                        Some(l) => Some(l.as_usize()?),
+                        None => None,
+                    },
                 },
             );
         }
@@ -209,6 +223,16 @@ impl Manifest {
         self.layers.iter().position(|l| l.name == name)
     }
 
+    /// Lane count of the lane-stacked scorer executable
+    /// (`scores_quant_lanes`), when the artifacts carry one.  `None` means
+    /// the runtime must score candidates one executable call at a time.
+    pub fn scorer_lanes(&self) -> Option<usize> {
+        self.executables
+            .get("scores_quant_lanes")
+            .and_then(|e| e.lanes)
+            .filter(|&l| l > 1)
+    }
+
     pub fn pad_token(&self) -> i32 {
         self.special_tokens.get("pad").copied().unwrap_or(0) as i32
     }
@@ -276,6 +300,37 @@ mod tests {
     fn methods_default_to_single_hqq() {
         let m = toy_manifest();
         assert_eq!(m.methods, vec!["hqq".to_string()]);
+    }
+
+    #[test]
+    fn scorer_lanes_absent_without_lane_executable() {
+        // legacy manifests (no scores_quant_lanes entry) -> per-candidate
+        let m = toy_manifest();
+        assert_eq!(m.scorer_lanes(), None);
+        assert_eq!(m.executable("model_fp").unwrap().lanes, None);
+    }
+
+    #[test]
+    fn scorer_lanes_parsed_from_lane_executable() {
+        let m = Manifest::from_json(
+            r#"{
+            "model": {"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                      "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                      "rope_theta": 10000.0, "rms_eps": 1e-5},
+            "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+            "layers": [{"name": "blk0.q", "out_features": 128, "in_features": 128}],
+            "fp_side_names": ["embed"],
+            "executables": {
+                "scores_quant_lanes": {"file": "scores_quant_lanes8.hlo.txt",
+                                       "args": ["tokens"], "outputs": ["jsd", "ce"],
+                                       "lanes": 8}
+            },
+            "files": {}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(m.scorer_lanes(), Some(8));
+        assert_eq!(m.executable("scores_quant_lanes").unwrap().lanes, Some(8));
     }
 
     #[test]

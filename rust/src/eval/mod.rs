@@ -27,12 +27,28 @@ pub enum ModelHandle<'a> {
 }
 
 impl Runtime {
-    /// Uniform logits entry point for evaluation.
+    /// Uniform logits entry point for evaluation (uploads `tokens`).
     pub fn logits(&self, handle: &ModelHandle, tokens: &[i32]) -> Result<Vec<f32>> {
         match handle {
             ModelHandle::Fp => self.fp_logits(tokens),
             ModelHandle::Override(ov) => self.fp_logits_with(tokens, ov),
             ModelHandle::Quant(layers) => self.quant_logits(tokens, layers),
+        }
+    }
+
+    /// Logits against a prepared batch, reusing its resident token buffer —
+    /// zero host→device copies per call (the token upload that
+    /// [`Runtime::logits`] pays on every invocation happens once here, in
+    /// [`Runtime::prepare_batch`]).
+    pub fn logits_for_batch(
+        &self,
+        handle: &ModelHandle,
+        batch: &crate::runtime::ScoreBatch,
+    ) -> Result<Vec<f32>> {
+        match handle {
+            ModelHandle::Fp => self.fp_logits_for_batch(batch, &HashMap::new()),
+            ModelHandle::Override(ov) => self.fp_logits_for_batch(batch, ov),
+            ModelHandle::Quant(layers) => self.quant_logits_for_batch(batch, layers),
         }
     }
 }
@@ -66,7 +82,7 @@ pub fn jsd_on_batches(
     let v = rt.vocab();
     let mut sum = 0.0f64;
     for b in batches {
-        let logits = rt.logits(handle, &b.host_tokens)?;
+        let logits = rt.logits_for_batch(handle, b)?;
         sum += jsd_mean(&b.host_fp_logits, &logits, v, &b.host_mask) as f64;
     }
     Ok((sum / batches.len().max(1) as f64) as f32)

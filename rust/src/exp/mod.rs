@@ -36,8 +36,9 @@ use crate::Result;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Number of calibration sequences used on the search hot path (1 PJRT
-/// call per candidate).  Final tables evaluate on the full splits.
+/// Number of calibration sequences used on the search hot path (one
+/// scorer dispatch per candidate chunk — or per lane group — per batch).
+/// Final tables evaluate on the full splits.
 pub const SEARCH_CALIB_SEQS: usize = 16;
 
 /// Prepared batches over the first [`SEARCH_CALIB_SEQS`] calibration
@@ -121,7 +122,7 @@ impl Ctx {
         preset: SearchParams,
         workers: usize,
     ) -> Result<Ctx> {
-        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None, DEFAULT_SCORE_BATCH)
+        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None, DEFAULT_SCORE_BATCH, 0)
     }
 
     /// Load with explicit options.  `workers <= 1` keeps every
@@ -130,7 +131,9 @@ impl Ctx {
     /// this context's runtime, proxy device bank and calibration batches.
     /// `registry` overrides the manifest's method enable list (CLI
     /// `--methods`); `score_batch` is the scoring microbatch size (CLI
-    /// `--score-batch`, clamped to >= 1).
+    /// `--score-batch`, clamped to >= 1); `lanes` is the scorer lane
+    /// request (CLI `--lanes`: 0 = auto, 1 = per-candidate, N = require an
+    /// N-lane artifact — see [`Runtime::load_with_lanes`]).
     pub fn load_with_opts(
         artifacts_dir: &Path,
         out_dir: &Path,
@@ -138,9 +141,10 @@ impl Ctx {
         workers: usize,
         registry: Option<MethodRegistry>,
         score_batch: usize,
+        lanes: usize,
     ) -> Result<Ctx> {
         let assets = Arc::new(ModelAssets::load(artifacts_dir)?);
-        let rt = Arc::new(Runtime::load(artifacts_dir, &assets.weights)?);
+        let rt = Arc::new(Runtime::load_with_lanes(artifacts_dir, &assets.weights, lanes)?);
         let calib = load_tokens(&assets.manifest.file("calib")?)?;
         let wiki = load_tokens(&assets.manifest.file("test_wiki")?)?;
         let c4 = load_tokens(&assets.manifest.file("test_c4")?)?;

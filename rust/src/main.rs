@@ -1,6 +1,7 @@
 //! `repro` — the AMQ reproduction CLI.
 //!
 //! Usage:
+//! ```text
 //!   repro list                       show all experiments
 //!   repro <exp> [flags]             run one experiment (fig1, table3, ...)
 //!   repro all [flags]               run everything
@@ -21,11 +22,18 @@
 //!                                   candidates are deduped per generation
 //!                                   and dispatched K per scorer call,
 //!                                   archives are identical for any K
+//!   --lanes N                       scorer lane request (default: 0 = auto
+//!                                   — use the lane-stacked artifact when
+//!                                   present; 1 forces the per-candidate
+//!                                   scorer; N > 1 requires an N-lane
+//!                                   artifact).  Archives are identical
+//!                                   for any setting
 //!   --methods LIST                  comma-separated quantization methods
 //!                                   the genome may assign per layer
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
 //!                                   manifest's list, normally just hqq)
 //!   --predictor rbf|mlp             quality predictor (default: rbf)
+//! ```
 
 use amq::coordinator::predictor::PredictorKind;
 use amq::coordinator::SearchParams;
@@ -42,6 +50,7 @@ struct Args {
     artifacts: Option<String>,
     workers: usize,
     score_batch: usize,
+    lanes: usize,
     methods: Option<String>,
     predictor: Option<String>,
 }
@@ -56,6 +65,7 @@ fn parse_args() -> Args {
         artifacts: None,
         workers: 1,
         score_batch: exp::DEFAULT_SCORE_BATCH,
+        lanes: 0,
         methods: None,
         predictor: None,
     };
@@ -87,6 +97,10 @@ fn parse_args() -> Args {
             "--score-batch" => {
                 i += 1;
                 args.score_batch = argv[i].parse().expect("--score-batch K");
+            }
+            "--lanes" => {
+                i += 1;
+                args.lanes = argv[i].parse().expect("--lanes N");
             }
             "--methods" => {
                 i += 1;
@@ -179,6 +193,17 @@ fn write_search_report(
     let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
     let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
     let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
+    let variant = ctx.rt.scorer_variant();
+    let rstats = ctx.rt.stats();
+    let _ = write!(
+        s,
+        "  \"scorer\": {{\"variant\": \"{}\", \"lanes\": {}, \
+         \"lane_dispatches\": {}, \"lane_fill_fraction\": {:.4}}},\n",
+        variant.name(),
+        variant.lanes(),
+        rstats.lane_dispatches,
+        rstats.lane_fill_fraction(),
+    );
     if let Some(es) = ctx.last_eval_stats() {
         let _ = write!(
             s,
@@ -277,9 +302,21 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         let _ = write!(s, "  \"dedup_fraction\": {:.4},\n", es.dedup_fraction());
         let _ = write!(s, "  \"dispatch_reduction\": {:.3},\n", es.dispatch_reduction());
     }
-    // Device-level truth: executes are still per (candidate, batch) on the
-    // fixed single-candidate HLO — chunking amortizes dispatch, not FLOPs.
-    let _ = write!(s, "  \"device_scorer_calls\": {},\n", ctx.rt.stats().scores_calls);
+    // Device-level truth: with the lane-stacked scorer, one device dispatch
+    // carries up to `lanes` candidates (lane_fill_fraction says how full the
+    // lanes ran); per-candidate dispatches are the fallback counter.
+    let variant = ctx.rt.scorer_variant();
+    let rstats = ctx.rt.stats();
+    let _ = write!(s, "  \"scorer_variant\": \"{}\",\n", variant.name());
+    let _ = write!(s, "  \"lanes\": {},\n", variant.lanes());
+    let _ = write!(s, "  \"lane_dispatches\": {},\n", rstats.lane_dispatches);
+    let _ = write!(s, "  \"lane_candidates\": {},\n", rstats.lane_candidates);
+    let _ = write!(
+        s,
+        "  \"lane_fill_fraction\": {:.4},\n",
+        rstats.lane_fill_fraction()
+    );
+    let _ = write!(s, "  \"device_scorer_calls\": {},\n", rstats.scores_calls);
     if let Some(pool) = ctx.pool_stats() {
         let _ = write!(
             s,
@@ -312,7 +349,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K]");
+        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K] [--lanes N]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -350,13 +387,17 @@ fn main() -> Result<()> {
         args.workers,
         registry,
         args.score_batch,
+        args.lanes,
     )?;
+    let variant = ctx.rt.scorer_variant();
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, methods: {}, predictor: {})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, scorer: {} x{}, methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
         ctx.workers,
         if ctx.workers == 1 { "" } else { "s" },
         ctx.score_batch,
+        variant.name(),
+        variant.lanes(),
         ctx.registry.names().join(","),
         ctx.preset.predictor.name(),
     );
@@ -481,6 +522,18 @@ fn main() -> Result<()> {
         stats.quant_calls, stats.quant_time.as_secs_f64(),
         stats.scores_calls, stats.scores_time.as_secs_f64(),
     );
+    if stats.lane_dispatches > 0 {
+        eprintln!(
+            "[scorer] lane-stacked x{}: {} dispatches carried {} candidates \
+             ({} padded lanes, {:.0}% lane fill) in {:.1}s",
+            ctx.rt.scorer_variant().lanes(),
+            stats.lane_dispatches,
+            stats.lane_candidates,
+            stats.lane_padded,
+            stats.lane_fill_fraction() * 100.0,
+            stats.lane_time.as_secs_f64(),
+        );
+    }
     if let Some(pool) = ctx.pool_stats() {
         let per_shard: Vec<String> = pool
             .per_shard

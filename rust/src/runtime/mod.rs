@@ -1,5 +1,5 @@
 //! PJRT runtime: loads the AOT HLO-text artifacts once, keeps all static
-//! inputs resident as device buffers, and exposes the three entry points the
+//! inputs resident as device buffers, and exposes the entry points the
 //! coordinator uses (fp logits / quant logits / fused scorer).
 //!
 //! This is the L3 hot path.  Design rules:
@@ -10,9 +10,16 @@
 //!    quantized-layer buffers, which the proxy bank also uploads only once
 //!    per (method, layer, bit-width) — so an *assembled candidate costs zero
 //!    host→device copies* (see coordinator::proxy);
+//!  * when the artifacts carry a **lane-stacked scorer**
+//!    (`scores_quant_lanes{L}.hlo.txt`), a chunk of up to `L` candidates is
+//!    packed into stacked quant-slot buffers and scored by **one** device
+//!    dispatch — per-lane results are bitwise identical to the
+//!    single-candidate scorer, so archives never depend on the dispatch
+//!    strategy (see [`ScorerVariant`]);
 //!  * `Runtime` is `Sync` (PJRT clients are thread-safe; every entry point
 //!    takes `&self`), so one runtime + one uploaded `DeviceBank` serve every
-//!    evaluation-pool shard — stats live behind a `Mutex`, not a `RefCell`;
+//!    evaluation-pool shard — stats live behind a `Mutex`, not a `RefCell`,
+//!    and the scoring hot loop takes that lock once per chunk;
 //!  * python never runs here.
 
 mod service;
@@ -69,52 +76,232 @@ fn idx(manifest: &Manifest, layer: &str) -> Result<usize> {
         .ok_or_else(|| eyre::anyhow!("arg references unknown layer {layer}"))
 }
 
-/// Uploaded buffers for one quantized layer (codes/scale/zero).
+// ---------------------------------------------------------------------------
+// Lane packing (pure host-side helpers, unit-testable without a device)
+// ---------------------------------------------------------------------------
+
+/// Which executable the fused scorer dispatches through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScorerVariant {
+    /// One execution of the single-candidate scorer per candidate — the
+    /// fallback when the artifacts carry no lane-stacked executable (or
+    /// lane stacking is disabled with `--lanes 1`).
+    PerCandidate,
+    /// One execution of the lane-stacked scorer per group of up to `lanes`
+    /// candidates; partial groups are padded with lane 0 and the padded
+    /// outputs discarded.
+    LaneStacked {
+        /// Candidate lanes per dispatch (the leading axis of the stacked
+        /// quant-slot arguments).
+        lanes: usize,
+    },
+}
+
+impl ScorerVariant {
+    /// Stable name for reports (`"per-candidate"` / `"lane-stacked"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScorerVariant::PerCandidate => "per-candidate",
+            ScorerVariant::LaneStacked { .. } => "lane-stacked",
+        }
+    }
+
+    /// Candidates one scorer dispatch can carry (1 for per-candidate).
+    pub fn lanes(&self) -> usize {
+        match self {
+            ScorerVariant::PerCandidate => 1,
+            ScorerVariant::LaneStacked { lanes } => *lanes,
+        }
+    }
+}
+
+/// Whether a chunk of `pending` candidates routes through the lane-stacked
+/// executable: it must exist (`lanes > 1`) and the chunk must have more
+/// than one candidate — a single candidate's resident per-candidate
+/// buffers are already on device, so slab packing would only add cost.
+/// The single routing predicate shared by [`Runtime::scores_chunk`] and
+/// the scheduler simulations in tests/benches.
+pub fn lane_routed(pending: usize, lanes: usize) -> bool {
+    lanes > 1 && pending > 1
+}
+
+/// Scorer dispatches needed for a chunk of `pending` candidates at this
+/// lane width: `ceil(pending / lanes)` when lane-stacked, one per
+/// candidate otherwise.
+pub fn lane_dispatch_count(pending: usize, lanes: usize) -> usize {
+    if lanes <= 1 {
+        pending
+    } else {
+        pending.div_ceil(lanes)
+    }
+}
+
+/// Idle (padded) lanes executed and discarded when dispatching `pending`
+/// candidates through a `lanes`-wide scorer.
+pub fn lane_padding(pending: usize, lanes: usize) -> usize {
+    if pending == 0 || lanes <= 1 {
+        0
+    } else {
+        lane_dispatch_count(pending, lanes) * lanes - pending
+    }
+}
+
+/// Stack per-candidate buffers into one `lanes`-wide slab (row-major,
+/// candidate axis leading).  A partial group (`rows.len() < lanes`) is
+/// padded by repeating lane 0, so the stacked executable always sees a full
+/// lane axis; callers discard the padded outputs.  All rows must have lane
+/// 0's length.
+pub fn pack_lane_slab<T: Copy>(rows: &[&[T]], lanes: usize) -> Result<Vec<T>> {
+    eyre::ensure!(!rows.is_empty(), "lane slab needs at least one candidate");
+    eyre::ensure!(
+        rows.len() <= lanes,
+        "lane slab overflow: {} candidates for {lanes} lanes",
+        rows.len()
+    );
+    let per = rows[0].len();
+    let mut out = Vec::with_capacity(lanes * per);
+    for lane in 0..lanes {
+        let row = rows.get(lane).copied().unwrap_or(rows[0]);
+        eyre::ensure!(
+            row.len() == per,
+            "lane {lane} has {} elements, lane 0 has {per}",
+            row.len()
+        );
+        out.extend_from_slice(row);
+    }
+    Ok(out)
+}
+
+/// Uploaded buffers for one quantized layer (codes/scale/zero), plus host
+/// mirrors of the packed data so the lane-stacked scorer can re-pack
+/// candidates into lane slabs without reaching back into the proxy bank.
 pub struct QuantLayerBufs {
+    /// Device-resident int8 codes, `[out_features, in_features]`.
     pub codes: xla::PjRtBuffer,
+    /// Device-resident per-group scales, `[out_features, n_groups]`.
     pub scale: xla::PjRtBuffer,
+    /// Device-resident per-group zero points, `[out_features, n_groups]`.
     pub zero: xla::PjRtBuffer,
+    /// Bit-width the codes were quantized at.
     pub bits: u8,
+    /// Host mirror of `codes` (lane-slab packing source).  Empty when the
+    /// uploading runtime has no lane-stacked executable — the per-candidate
+    /// path never reads the mirrors, so they are not retained.
+    pub host_codes: Vec<i8>,
+    /// Host mirror of `scale` (empty without a lane-stacked executable).
+    pub host_scale: Vec<f32>,
+    /// Host mirror of `zero` (empty without a lane-stacked executable).
+    pub host_zero: Vec<f32>,
+    /// `out_features`.
+    pub rows: usize,
+    /// `in_features`.
+    pub cols: usize,
+    /// `in_features / group_size`.
+    pub groups: usize,
 }
 
 /// A calibration/evaluation batch resident on device.
 pub struct ScoreBatch {
+    /// Uploaded token ids, `[eval_batch, seq_len]` i32.
     pub tokens: xla::PjRtBuffer,
+    /// Uploaded validity mask, `[eval_batch, seq_len]` f32.
     pub mask: xla::PjRtBuffer,
+    /// Uploaded fp reference logits, `[eval_batch, seq_len, vocab]` f32.
     pub fp_logits: xla::PjRtBuffer,
+    /// Host copy of the token ids (baseline evaluation paths).
     pub host_tokens: Vec<i32>,
+    /// Host copy of the mask.
     pub host_mask: Vec<f32>,
+    /// Host copy of the fp reference logits.
     pub host_fp_logits: Vec<f32>,
 }
 
 /// Wall-clock accounting per executable (perf reporting, Table 4 analog).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// fp-executable executions.
     pub fp_calls: u64,
+    /// Wall-clock spent in fp executions (incl. device→host transfer).
     pub fp_time: Duration,
+    /// Quant-executable executions (task evaluation path).
     pub quant_calls: u64,
+    /// Wall-clock spent in quant executions.
     pub quant_time: Duration,
+    /// Single-candidate scorer executions.
     pub scores_calls: u64,
+    /// Wall-clock spent in single-candidate scorer executions.
     pub scores_time: Duration,
+    /// Lane-stacked scorer executions (each carries up to `lanes`
+    /// candidates).
+    pub lane_dispatches: u64,
+    /// Candidates scored through the lane-stacked executable.
+    pub lane_candidates: u64,
+    /// Padding lanes executed and discarded (partial groups).
+    pub lane_padded: u64,
+    /// Wall-clock spent in lane-stacked scorer executions.
+    pub lane_time: Duration,
+    /// Host→device bytes uploaded through this runtime.
     pub upload_bytes: u64,
 }
 
+impl RuntimeStats {
+    /// Total scorer dispatches, both variants.
+    pub fn scorer_dispatches(&self) -> u64 {
+        self.scores_calls + self.lane_dispatches
+    }
+
+    /// Fraction of executed lanes that carried real candidates (1.0 = every
+    /// dispatch full; 0.0 when the lane path never ran).
+    pub fn lane_fill_fraction(&self) -> f64 {
+        let executed = self.lane_candidates + self.lane_padded;
+        if executed == 0 {
+            0.0
+        } else {
+            self.lane_candidates as f64 / executed as f64
+        }
+    }
+}
+
+/// The PJRT execution engine: compiled executables + resident static
+/// buffers + wall-clock stats.  One instance serves the whole process
+/// (`Sync`; see the module docs).
 pub struct Runtime {
+    /// The artifact manifest the executables were loaded from.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     fp_exec: xla::PjRtLoadedExecutable,
     quant_exec: xla::PjRtLoadedExecutable,
     scores_exec: xla::PjRtLoadedExecutable,
+    /// Lane-stacked scorer, when the artifacts carry one and it is enabled.
+    lanes_exec: Option<xla::PjRtLoadedExecutable>,
     fp_plan: Vec<ArgSlot>,
     quant_plan: Vec<ArgSlot>,
     scores_plan: Vec<ArgSlot>,
+    lanes_plan: Vec<ArgSlot>,
+    /// Lane width of `lanes_exec` (1 when per-candidate only).
+    lanes: usize,
     fp_param_bufs: HashMap<String, xla::PjRtBuffer>,
     stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
-    /// Load + compile everything from `artifacts/`.
+    /// Load + compile everything from `artifacts/`, using the lane-stacked
+    /// scorer automatically when the manifest carries one.
     pub fn load(artifacts_dir: &Path, weights: &WeightStore) -> Result<Runtime> {
+        Self::load_with_lanes(artifacts_dir, weights, 0)
+    }
+
+    /// Load with an explicit lane request (`--lanes`): `0` = auto (use the
+    /// lane-stacked artifact when present), `1` = force the per-candidate
+    /// scorer even if the artifact exists, `N > 1` = require the artifact
+    /// at exactly `N` lanes (error otherwise — the lane count is baked into
+    /// the HLO at AOT time; rebuild with `AMQ_SCORE_LANES=N make artifacts`
+    /// to change it).
+    pub fn load_with_lanes(
+        artifacts_dir: &Path,
+        weights: &WeightStore,
+        lanes_request: usize,
+    ) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
 
@@ -134,15 +321,27 @@ impl Runtime {
         let quant_plan = plan_args(&manifest, &manifest.executable("model_quant")?.args)?;
         let scores_plan = plan_args(&manifest, &manifest.executable("scores_quant")?.args)?;
 
+        let lanes = resolve_lanes(&manifest, lanes_request)?;
+        let (lanes_exec, lanes_plan) = match lanes {
+            Some(_) => (
+                Some(compile("scores_quant_lanes")?),
+                plan_args(&manifest, &manifest.executable("scores_quant_lanes")?.args)?,
+            ),
+            None => (None, Vec::new()),
+        };
+
         let mut rt = Runtime {
             manifest,
             client,
             fp_exec,
             quant_exec,
             scores_exec,
+            lanes_exec,
             fp_plan,
             quant_plan,
             scores_plan,
+            lanes_plan,
+            lanes: lanes.unwrap_or(1),
             fp_param_bufs: HashMap::new(),
             stats: Mutex::new(RuntimeStats::default()),
         };
@@ -158,6 +357,7 @@ impl Runtime {
             .iter()
             .chain(&self.quant_plan)
             .chain(&self.scores_plan)
+            .chain(&self.lanes_plan)
             .filter_map(|s| match s {
                 ArgSlot::FpParam(n) => Some(n.clone()),
                 _ => None,
@@ -175,38 +375,60 @@ impl Runtime {
         Ok(())
     }
 
+    /// Sequences per executable call (the fixed AOT batch shape).
     pub fn batch_size(&self) -> usize {
         self.manifest.eval_batch
     }
 
+    /// Tokens per sequence (the fixed AOT sequence length).
     pub fn seq_len(&self) -> usize {
         self.manifest.model.seq_len
     }
 
+    /// Vocabulary size of the subject model.
     pub fn vocab(&self) -> usize {
         self.manifest.model.vocab_size
     }
 
+    /// Which scorer executable `scores_chunk` dispatches *multi-candidate*
+    /// chunks through.  Single-candidate chunks always take the
+    /// per-candidate path (resident buffers, no slab packing), so a
+    /// lane-stacked runtime driven only by 1-candidate chunks (e.g.
+    /// `--score-batch 1`) reports this variant with `lane_dispatches = 0` —
+    /// the stats, not the variant, say what actually ran.
+    pub fn scorer_variant(&self) -> ScorerVariant {
+        if self.lanes_exec.is_some() {
+            ScorerVariant::LaneStacked { lanes: self.lanes }
+        } else {
+            ScorerVariant::PerCandidate
+        }
+    }
+
+    /// Snapshot of the wall-clock/dispatch counters.
     pub fn stats(&self) -> RuntimeStats {
         self.stats.lock().unwrap().clone()
     }
 
+    /// Zero all counters (bench harnesses).
     pub fn reset_stats(&self) {
         *self.stats.lock().unwrap() = RuntimeStats::default();
     }
 
     // -- uploads ----------------------------------------------------------
 
+    /// Upload an f32 host array as a device buffer.
     pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.stats.lock().unwrap().upload_bytes += (data.len() * 4) as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
+    /// Upload an i32 host array as a device buffer.
     pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.stats.lock().unwrap().upload_bytes += (data.len() * 4) as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
 
+    /// Upload an i8 host array as a device buffer.
     pub fn upload_i8(&self, data: &[i8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.stats.lock().unwrap().upload_bytes += data.len() as u64;
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
@@ -214,18 +436,27 @@ impl Runtime {
 
     /// Upload one quantized layer (codes as int8 + f32 scale/zero).
     /// The AOT kernel consumes s8 codes; grouped codes are <= 15 so the
-    /// u8 -> i8 conversion is lossless (asserted).
+    /// u8 -> i8 conversion is lossless (asserted).  Host mirrors are
+    /// retained only when this runtime has a lane-stacked executable to
+    /// feed them to — on the per-candidate path they would be dead weight.
     pub fn upload_quant_layer(&self, q: &QuantizedLinear) -> Result<QuantLayerBufs> {
         let n = q.out_features;
         let k = q.in_features;
         let g = q.n_groups();
         eyre::ensure!(q.bits <= 4, "AOT kernel path supports <= 4-bit codes");
         let codes_i8: Vec<i8> = q.codes.iter().map(|&c| c as i8).collect();
+        let mirrors = self.lanes_exec.is_some();
         Ok(QuantLayerBufs {
             codes: self.upload_i8(&codes_i8, &[n, k])?,
             scale: self.upload_f32(&q.scale, &[n, g])?,
             zero: self.upload_f32(&q.zero, &[n, g])?,
             bits: q.bits,
+            host_codes: if mirrors { codes_i8 } else { Vec::new() },
+            host_scale: if mirrors { q.scale.clone() } else { Vec::new() },
+            host_zero: if mirrors { q.zero.clone() } else { Vec::new() },
+            rows: n,
+            cols: k,
+            groups: g,
         })
     }
 
@@ -262,10 +493,29 @@ impl Runtime {
         let t = self.seq_len();
         eyre::ensure!(tokens.len() == b * t, "tokens must be [{b},{t}]");
         let tok_buf = self.upload_i32(tokens, &[b, t])?;
+        self.fp_logits_exec(&tok_buf, overrides)
+    }
+
+    /// Run the fp executable against a prepared batch's resident token
+    /// buffer — zero host→device copies (vs. [`Runtime::fp_logits`], which
+    /// re-uploads the tokens on every call).
+    pub fn fp_logits_for_batch(
+        &self,
+        batch: &ScoreBatch,
+        overrides: &HashMap<String, xla::PjRtBuffer>,
+    ) -> Result<Vec<f32>> {
+        self.fp_logits_exec(&batch.tokens, overrides)
+    }
+
+    fn fp_logits_exec(
+        &self,
+        tok_buf: &xla::PjRtBuffer,
+        overrides: &HashMap<String, xla::PjRtBuffer>,
+    ) -> Result<Vec<f32>> {
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.fp_plan.len());
         for slot in &self.fp_plan {
             match slot {
-                ArgSlot::Tokens => args.push(&tok_buf),
+                ArgSlot::Tokens => args.push(tok_buf),
                 ArgSlot::FpParam(name) => {
                     let buf = overrides.get(name).or_else(|| self.fp_param_bufs.get(name));
                     args.push(buf.ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?)
@@ -311,20 +561,44 @@ impl Runtime {
     }
 
     /// Fused scorer over a *chunk* of assembled candidates on one batch —
-    /// the microbatch dispatch unit of the evaluation hot path.  The static
-    /// argument slots (tokens/mask/fp logits/fp params) are resolved once
-    /// per chunk; per-candidate marshalling is limited to patching the
-    /// quant-slot positions in place.  Results are per-candidate, in input
-    /// order, and bit-identical to calling [`Runtime::scores`] per candidate.
+    /// the microbatch dispatch unit of the evaluation hot path.  Results
+    /// are per-candidate, in input order, and bit-identical to calling
+    /// [`Runtime::scores`] per candidate whichever [`ScorerVariant`] runs:
+    ///
+    ///  * **lane-stacked** (artifact present, chunk > 1 candidate): the
+    ///    chunk is split into groups of up to `lanes` candidates; each
+    ///    group's quant buffers are packed into `[lanes, ...]` slabs
+    ///    (partial groups padded with lane 0, padded outputs discarded)
+    ///    and scored by one device dispatch.
+    ///  * **per-candidate** (fallback): the static argument slots
+    ///    (tokens/mask/fp logits/fp params) are resolved once per chunk and
+    ///    per-candidate marshalling patches only the quant-slot positions.
+    ///
+    /// The stats lock is taken once per chunk, not once per candidate.
     pub fn scores_chunk(
         &self,
         batch: &ScoreBatch,
         candidates: &[&[&QuantLayerBufs]],
     ) -> Result<Vec<(f32, f32)>> {
-        let mut out = Vec::with_capacity(candidates.len());
         if candidates.is_empty() {
-            return Ok(out);
+            return Ok(Vec::new());
         }
+        for layers in candidates {
+            eyre::ensure!(layers.len() == self.manifest.layers.len());
+        }
+        if self.lanes_exec.is_some() && lane_routed(candidates.len(), self.lanes) {
+            self.scores_chunk_lanes(batch, candidates)
+        } else {
+            self.scores_chunk_per_candidate(batch, candidates)
+        }
+    }
+
+    fn scores_chunk_per_candidate(
+        &self,
+        batch: &ScoreBatch,
+        candidates: &[&[&QuantLayerBufs]],
+    ) -> Result<Vec<(f32, f32)>> {
+        let mut out = Vec::with_capacity(candidates.len());
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.scores_plan.len());
         // (argument position, layer index, 0=codes 1=scale 2=zero)
         let mut quant_slots: Vec<(usize, usize, u8)> = Vec::new();
@@ -345,8 +619,9 @@ impl Runtime {
                 }
             }
         }
+        let mut calls = 0u64;
+        let mut spent = Duration::ZERO;
         for layers in candidates {
-            eyre::ensure!(layers.len() == self.manifest.layers.len());
             for &(pos, li, part) in &quant_slots {
                 let l = layers[li];
                 args[pos] = match part {
@@ -358,28 +633,156 @@ impl Runtime {
             let t0 = Instant::now();
             let res = self.scores_exec.execute_b(&args)?;
             let lit = res[0][0].to_literal_sync()?;
-            {
-                let mut s = self.stats.lock().unwrap();
-                s.scores_calls += 1;
-                s.scores_time += t0.elapsed();
-            }
+            calls += 1;
+            spent += t0.elapsed();
             let (jsd, ce) = lit.to_tuple2()?;
             out.push((jsd.to_vec::<f32>()?[0], ce.to_vec::<f32>()?[0]));
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.scores_calls += calls;
+            s.scores_time += spent;
         }
         Ok(out)
     }
 
+    fn scores_chunk_lanes(
+        &self,
+        batch: &ScoreBatch,
+        candidates: &[&[&QuantLayerBufs]],
+    ) -> Result<Vec<(f32, f32)>> {
+        let exec = self.lanes_exec.as_ref().expect("lane path without lane exec");
+        let lanes = self.lanes;
+        // Pack each quant slot's group members into one [lanes, ...] slab;
+        // static slots reuse the resident buffers.  Two passes per group so
+        // the freshly uploaded slabs outlive the borrowed arg list.
+        enum Src<'a> {
+            Static(&'a xla::PjRtBuffer),
+            Slab(usize),
+        }
+        let mut out = Vec::with_capacity(candidates.len());
+        let mut dispatches = 0u64;
+        let mut spent = Duration::ZERO;
+        for group in candidates.chunks(lanes) {
+            let mut plan: Vec<Src> = Vec::with_capacity(self.lanes_plan.len());
+            let mut slabs: Vec<xla::PjRtBuffer> = Vec::new();
+            for slot in &self.lanes_plan {
+                match slot {
+                    ArgSlot::Tokens => plan.push(Src::Static(&batch.tokens)),
+                    ArgSlot::Mask => plan.push(Src::Static(&batch.mask)),
+                    ArgSlot::FpLogits => plan.push(Src::Static(&batch.fp_logits)),
+                    ArgSlot::FpParam(name) => plan.push(Src::Static(
+                        self.fp_param_bufs
+                            .get(name)
+                            .ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?,
+                    )),
+                    ArgSlot::Quant(li, part) => {
+                        plan.push(Src::Slab(slabs.len()));
+                        slabs.push(self.upload_lane_slab(group, *li, *part)?);
+                    }
+                }
+            }
+            let args: Vec<&xla::PjRtBuffer> = plan
+                .iter()
+                .map(|src| match src {
+                    Src::Static(b) => *b,
+                    Src::Slab(i) => &slabs[*i],
+                })
+                .collect();
+            let t0 = Instant::now();
+            let res = exec.execute_b(&args)?;
+            let lit = res[0][0].to_literal_sync()?;
+            dispatches += 1;
+            spent += t0.elapsed();
+            let (jsd, ce) = lit.to_tuple2()?;
+            let jsd = jsd.to_vec::<f32>()?;
+            let ce = ce.to_vec::<f32>()?;
+            eyre::ensure!(
+                jsd.len() == lanes && ce.len() == lanes,
+                "lane scorer returned {} lanes, expected {lanes}",
+                jsd.len()
+            );
+            // keep real lanes, discard the lane-0 padding copies
+            for (&j, &c) in jsd.iter().zip(&ce).take(group.len()) {
+                out.push((j, c));
+            }
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.lane_dispatches += dispatches;
+            s.lane_candidates += candidates.len() as u64;
+            s.lane_padded += lane_padding(candidates.len(), lanes) as u64;
+            s.lane_time += spent;
+        }
+        Ok(out)
+    }
+
+    /// Stack one quant slot of a candidate group into a `[lanes, ...]`
+    /// device buffer (lane-0 padding for partial groups).
+    fn upload_lane_slab(
+        &self,
+        group: &[&[&QuantLayerBufs]],
+        li: usize,
+        part: u8,
+    ) -> Result<xla::PjRtBuffer> {
+        let lead = group[0][li];
+        eyre::ensure!(
+            lead.host_codes.len() == lead.rows * lead.cols,
+            "lane-stacked dispatch needs host mirrors, but these buffers were \
+             uploaded without them (by a runtime without the lane executable?)"
+        );
+        match part {
+            0 => {
+                let rows: Vec<&[i8]> =
+                    group.iter().map(|layers| layers[li].host_codes.as_slice()).collect();
+                let slab = pack_lane_slab(&rows, self.lanes)?;
+                self.upload_i8(&slab, &[self.lanes, lead.rows, lead.cols])
+            }
+            1 => {
+                let rows: Vec<&[f32]> =
+                    group.iter().map(|layers| layers[li].host_scale.as_slice()).collect();
+                let slab = pack_lane_slab(&rows, self.lanes)?;
+                self.upload_f32(&slab, &[self.lanes, lead.rows, lead.groups])
+            }
+            _ => {
+                let rows: Vec<&[f32]> =
+                    group.iter().map(|layers| layers[li].host_zero.as_slice()).collect();
+                let slab = pack_lane_slab(&rows, self.lanes)?;
+                self.upload_f32(&slab, &[self.lanes, lead.rows, lead.groups])
+            }
+        }
+    }
+
     /// Quantized-model logits (task evaluation path).
     pub fn quant_logits(&self, tokens: &[i32], layers: &[&QuantLayerBufs]) -> Result<Vec<f32>> {
-        eyre::ensure!(layers.len() == self.manifest.layers.len());
         let b = self.batch_size();
         let t = self.seq_len();
         eyre::ensure!(tokens.len() == b * t);
         let tok_buf = self.upload_i32(tokens, &[b, t])?;
+        self.quant_logits_exec(&tok_buf, layers)
+    }
+
+    /// Quantized-model logits against a prepared batch's resident token
+    /// buffer — zero host→device copies (vs. [`Runtime::quant_logits`],
+    /// which re-uploads the tokens on every call).
+    pub fn quant_logits_for_batch(
+        &self,
+        batch: &ScoreBatch,
+        layers: &[&QuantLayerBufs],
+    ) -> Result<Vec<f32>> {
+        self.quant_logits_exec(&batch.tokens, layers)
+    }
+
+    fn quant_logits_exec(
+        &self,
+        tok_buf: &xla::PjRtBuffer,
+        layers: &[&QuantLayerBufs],
+    ) -> Result<Vec<f32>> {
+        eyre::ensure!(layers.len() == self.manifest.layers.len());
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.quant_plan.len());
         for slot in &self.quant_plan {
             match slot {
-                ArgSlot::Tokens => args.push(&tok_buf),
+                ArgSlot::Tokens => args.push(tok_buf),
                 ArgSlot::FpParam(name) => args.push(
                     self.fp_param_bufs
                         .get(name)
@@ -409,6 +812,41 @@ impl Runtime {
     }
 }
 
+/// The [`ScorerVariant`] a runtime loaded from `manifest` with this lane
+/// request would dispatch through — pure planning over the manifest, usable
+/// (and tested) without a PJRT device.  Request semantics as in
+/// [`Runtime::load_with_lanes`].
+pub fn planned_scorer_variant(
+    manifest: &Manifest,
+    lanes_request: usize,
+) -> Result<ScorerVariant> {
+    Ok(match resolve_lanes(manifest, lanes_request)? {
+        Some(lanes) => ScorerVariant::LaneStacked { lanes },
+        None => ScorerVariant::PerCandidate,
+    })
+}
+
+/// Resolve the effective lane width from the manifest and the CLI request
+/// (see [`Runtime::load_with_lanes`] for the request semantics).
+fn resolve_lanes(manifest: &Manifest, lanes_request: usize) -> Result<Option<usize>> {
+    let artifact = manifest.scorer_lanes();
+    match lanes_request {
+        0 => Ok(artifact),
+        1 => Ok(None),
+        n => match artifact {
+            Some(l) if l == n => Ok(Some(l)),
+            Some(l) => eyre::bail!(
+                "lane-stacked scorer artifact has {l} lanes but --lanes {n} was \
+                 requested; rebuild with `AMQ_SCORE_LANES={n} make artifacts`"
+            ),
+            None => eyre::bail!(
+                "--lanes {n} requested but the artifacts carry no lane-stacked \
+                 scorer; rebuild with `AMQ_SCORE_LANES={n} make artifacts`"
+            ),
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,6 +866,24 @@ mod tests {
         .unwrap()
     }
 
+    fn lanes_manifest(lanes: usize) -> Manifest {
+        crate::data::Manifest::from_json(&format!(
+            r#"{{
+            "model": {{"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                      "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                      "rope_theta": 10000.0, "rms_eps": 1e-5}},
+            "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+            "layers": [{{"name": "blk0.q", "out_features": 128, "in_features": 128}}],
+            "fp_side_names": ["embed"],
+            "executables": {{
+                "scores_quant_lanes": {{"file": "scores_quant_lanes{lanes}.hlo.txt",
+                                       "args": ["tokens"], "outputs": ["jsd", "ce"],
+                                       "lanes": {lanes}}}
+            }}, "files": {{}}
+        }}"#,
+        ))
+        .unwrap()
+    }
 
     #[test]
     fn plan_args_classifies_slots() {
@@ -453,5 +909,99 @@ mod tests {
     fn plan_args_rejects_unknown_layer() {
         let m = toy_manifest();
         assert!(plan_args(&m, &["blkX.q.codes".to_string()]).is_err());
+    }
+
+    #[test]
+    fn scorer_variant_reporting() {
+        let per = ScorerVariant::PerCandidate;
+        assert_eq!(per.name(), "per-candidate");
+        assert_eq!(per.lanes(), 1);
+        let ls = ScorerVariant::LaneStacked { lanes: 8 };
+        assert_eq!(ls.name(), "lane-stacked");
+        assert_eq!(ls.lanes(), 8);
+    }
+
+    #[test]
+    fn lane_routing_predicate() {
+        // lane path needs a lane executable AND a multi-candidate chunk
+        assert!(lane_routed(2, 8));
+        assert!(lane_routed(13, 8));
+        assert!(!lane_routed(1, 8), "single candidates stay per-candidate");
+        assert!(!lane_routed(0, 8));
+        assert!(!lane_routed(5, 1), "no lane executable");
+    }
+
+    #[test]
+    fn lane_dispatch_accounting() {
+        // per-candidate: one dispatch per config
+        assert_eq!(lane_dispatch_count(5, 1), 5);
+        assert_eq!(lane_padding(5, 1), 0);
+        // full chunks: K <= L is exactly one dispatch
+        assert_eq!(lane_dispatch_count(8, 8), 1);
+        assert_eq!(lane_dispatch_count(3, 8), 1);
+        assert_eq!(lane_padding(8, 8), 0);
+        assert_eq!(lane_padding(3, 8), 5);
+        // partial tail: pending % L != 0
+        assert_eq!(lane_dispatch_count(13, 8), 2);
+        assert_eq!(lane_padding(13, 8), 3);
+        assert_eq!(lane_dispatch_count(0, 8), 0);
+        assert_eq!(lane_padding(0, 8), 0);
+    }
+
+    #[test]
+    fn pack_lane_slab_pads_with_lane_zero() {
+        let a = [1i8, 2, 3];
+        let b = [4i8, 5, 6];
+        // full group: straight concatenation, candidate axis leading
+        let full = pack_lane_slab(&[&a, &b], 2).unwrap();
+        assert_eq!(full, vec![1, 2, 3, 4, 5, 6]);
+        // partial group: tail lanes repeat lane 0
+        let padded = pack_lane_slab(&[&a, &b], 4).unwrap();
+        assert_eq!(padded, vec![1, 2, 3, 4, 5, 6, 1, 2, 3, 1, 2, 3]);
+        // single candidate fills every lane with itself
+        let solo = pack_lane_slab(&[&a[..]], 2).unwrap();
+        assert_eq!(solo, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pack_lane_slab_rejects_bad_groups() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert!(pack_lane_slab::<f32>(&[], 4).is_err(), "empty group");
+        assert!(pack_lane_slab(&[&a[..], &b[..]], 4).is_err(), "ragged rows");
+        let c = [0.0f32; 2];
+        assert!(
+            pack_lane_slab(&[&a[..], &c[..], &c[..]], 2).is_err(),
+            "overflowing group"
+        );
+    }
+
+    #[test]
+    fn resolve_lanes_auto_and_overrides() {
+        let with = lanes_manifest(8);
+        let without = toy_manifest();
+        // auto: follow the artifact
+        assert_eq!(resolve_lanes(&with, 0).unwrap(), Some(8));
+        assert_eq!(resolve_lanes(&without, 0).unwrap(), None);
+        // --lanes 1 forces per-candidate even when the artifact exists
+        assert_eq!(resolve_lanes(&with, 1).unwrap(), None);
+        // explicit N must match the baked-in lane count
+        assert_eq!(resolve_lanes(&with, 8).unwrap(), Some(8));
+        assert!(resolve_lanes(&with, 4).is_err());
+        assert!(resolve_lanes(&without, 8).is_err());
+    }
+
+    #[test]
+    fn lane_fill_fraction_accounting() {
+        let mut s = RuntimeStats::default();
+        assert_eq!(s.lane_fill_fraction(), 0.0);
+        // 2 dispatches at 8 lanes carrying 13 candidates: 3 padded lanes
+        s.lane_dispatches = 2;
+        s.lane_candidates = 13;
+        s.lane_padded = 3;
+        assert!((s.lane_fill_fraction() - 13.0 / 16.0).abs() < 1e-12);
+        assert_eq!(s.scorer_dispatches(), 2);
+        s.scores_calls = 5;
+        assert_eq!(s.scorer_dispatches(), 7);
     }
 }

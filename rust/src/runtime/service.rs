@@ -29,21 +29,29 @@ use std::time::{Duration, Instant};
 /// spent serving them (busy time / wall time = utilization).
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
+    /// Requests this shard served.
     pub completed: u64,
+    /// Wall-clock this shard spent inside its evaluation closure.
     pub busy: Duration,
 }
 
 /// Queue/latency accounting, aggregated across shards.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
+    /// Requests submitted to the shared queue.
     pub submitted: u64,
+    /// Requests served (across all shards).
     pub completed: u64,
+    /// Summed queue wait (enqueue → a shard picked the request up).
     pub total_queue_wait: Duration,
+    /// Summed service time (inside the evaluation closures).
     pub total_service_time: Duration,
+    /// Per-shard breakdown, shard-index order.
     pub per_shard: Vec<ShardStats>,
 }
 
 impl ServiceStats {
+    /// Mean queue wait per completed request.
     pub fn mean_wait(&self) -> Duration {
         if self.completed == 0 {
             Duration::ZERO
@@ -52,6 +60,7 @@ impl ServiceStats {
         }
     }
 
+    /// Mean service time per completed request.
     pub fn mean_service(&self) -> Duration {
         if self.completed == 0 {
             Duration::ZERO
@@ -184,6 +193,7 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
         rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
     }
 
+    /// Snapshot of the queue/latency counters.
     pub fn stats(&self) -> ServiceStats {
         self.stats.lock().unwrap().clone()
     }

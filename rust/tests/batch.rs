@@ -1,16 +1,23 @@
 //! Microbatched-scoring integration tests (no artifacts required): the
-//! dedup + `--score-batch` dispatch pipeline must change *dispatch counts
-//! only* — the search archive stays byte-identical across every
-//! `(workers, score-batch)` combination, and the shared device bank's
-//! bytes are counted once no matter how many shards reference it.
+//! dedup + `--score-batch` dispatch pipeline and the lane-stacked scorer
+//! scheduler must change *dispatch counts only* — the search archive stays
+//! byte-identical across every `(workers, score-batch, lanes)` combination,
+//! and the shared device bank's bytes are counted once no matter how many
+//! shards reference it.
 
 use amq::coordinator::{
-    run_search, Archive, BankShareStats, Config, ConfigEvaluator, PooledEvaluator, ProxyBank,
-    SearchParams, SearchSpace,
+    run_search, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool, PooledEvaluator,
+    ProxyBank, SearchParams, SearchSpace,
 };
+use amq::data::Manifest;
 use amq::quant::{MethodId, Quantizer};
+use amq::runtime::{
+    lane_dispatch_count, lane_padding, lane_routed, planned_scorer_variant, EvalService,
+    ScorerVariant,
+};
 use amq::tensor::Mat;
 use amq::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 fn toy_space(n: usize) -> SearchSpace {
@@ -158,6 +165,175 @@ fn search_reuses_cache_across_generations() {
     assert_eq!(first, second);
     assert_eq!(s.dispatches, d0, "cached batch must not dispatch");
     assert_eq!(s.cache_hits, configs.len() as u64);
+}
+
+/// Device-dispatch accounting of a simulated lane-stacked scorer: the shard
+/// closure mirrors `Runtime::scores_chunk`'s lane scheduler — one "device
+/// dispatch" per group of up to `lanes` candidates, lane-0 padding on the
+/// tail — while producing exactly the per-candidate `synth_jsd` results.
+struct LaneCounters {
+    dispatches: AtomicU64,
+    padded: AtomicU64,
+}
+
+fn lane_pooled(
+    workers: usize,
+    score_batch: usize,
+    lanes: usize,
+) -> (PooledEvaluator, Arc<LaneCounters>) {
+    let counters = Arc::new(LaneCounters {
+        dispatches: AtomicU64::new(0),
+        padded: AtomicU64::new(0),
+    });
+    let shared = counters.clone();
+    let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(workers, move |_shard| {
+        let counters = shared.clone();
+        move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
+            // production routing (the shared `lane_routed` predicate):
+            // single-candidate chunks take the per-candidate path
+            // (1 dispatch, no lane padding) even when the lane executable
+            // is loaded
+            let (dispatches, padded) = if lane_routed(chunk.len(), lanes) {
+                (lane_dispatch_count(chunk.len(), lanes), lane_padding(chunk.len(), lanes))
+            } else {
+                (chunk.len(), 0)
+            };
+            counters.dispatches.fetch_add(dispatches as u64, Ordering::Relaxed);
+            counters.padded.fetch_add(padded as u64, Ordering::Relaxed);
+            Ok(chunk.iter().map(synth_jsd).collect())
+        }
+    }));
+    (
+        PooledEvaluator::from_service(svc).with_score_batch(score_batch),
+        counters,
+    )
+}
+
+#[test]
+fn archive_identical_across_lane_widths() {
+    // {lanes 1, lanes 8} x {workers 1, 4}: the scorer variant may only
+    // change device-dispatch counts, never the archive
+    let space = toy_space(12);
+    let mut params = SearchParams::smoke();
+    params.seed = 41;
+
+    struct Seq(usize);
+    impl ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.0 += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.0
+        }
+    }
+    let baseline = run_search(&space, &mut Seq(0), &params).unwrap();
+    let expect = archive_hash(&baseline.archive);
+
+    let mut dispatches_by_lanes = Vec::new();
+    for lanes in [1usize, 8] {
+        for workers in [1usize, 4] {
+            let (mut ev, counters) = lane_pooled(workers, 8, lanes);
+            let res = run_search(&space, &mut ev, &params).unwrap();
+            assert_eq!(
+                archive_hash(&res.archive),
+                expect,
+                "archive diverged at lanes={lanes} workers={workers}"
+            );
+            assert_eq!(res.true_evals, baseline.true_evals);
+            if workers == 1 {
+                dispatches_by_lanes.push(counters.dispatches.load(Ordering::Relaxed));
+            }
+        }
+    }
+    // at 8 lanes every full chunk collapses into one device dispatch
+    assert!(
+        dispatches_by_lanes[1] < dispatches_by_lanes[0],
+        "lane stacking saved no dispatches: x8 {} vs x1 {}",
+        dispatches_by_lanes[1],
+        dispatches_by_lanes[0]
+    );
+}
+
+#[test]
+fn partial_chunk_pads_with_lane_zero_and_discards() {
+    // 13 unique candidates through an 8-lane scorer on one shard: the lone
+    // 13-candidate chunk needs ceil(13/8) = 2 dispatches, the second one
+    // padded with 3 copies of lane 0 whose outputs never surface
+    let lanes = 8;
+    let (mut ev, counters) = lane_pooled(1, 16, lanes);
+    let configs: Vec<Config> = (0..13)
+        .map(|i| (0..6).map(|j| [2u16, 3, 4][(i + j) % 3]).collect())
+        .collect();
+    let got = ev.eval_jsd_batch(&configs).unwrap();
+    let want: Vec<f32> = configs.iter().map(synth_jsd).collect();
+    assert_eq!(got, want, "padding must be invisible in the results");
+    assert_eq!(counters.dispatches.load(Ordering::Relaxed), 2);
+    assert_eq!(counters.padded.load(Ordering::Relaxed), 3);
+    assert_eq!(lane_padding(13, lanes), 3);
+}
+
+#[test]
+fn chunk_within_lane_width_is_one_dispatch() {
+    // the acceptance pin: a chunk of K <= L candidates costs exactly one
+    // scorer dispatch — lane-stacked for K > 1, per-candidate (resident
+    // buffers, zero padding) for the K = 1 fast path
+    let lanes = 8;
+    for k in [1usize, 3, 8] {
+        let (mut ev, counters) = lane_pooled(1, 8, lanes);
+        let configs: Vec<Config> = (0..k)
+            .map(|i| (0..5).map(|j| [2u16, 3, 4][(i + 2 * j) % 3]).collect())
+            .collect();
+        ev.eval_jsd_batch(&configs).unwrap();
+        assert_eq!(
+            counters.dispatches.load(Ordering::Relaxed),
+            1,
+            "chunk of {k} <= {lanes} candidates must be a single dispatch"
+        );
+        let expect_padded = if k > 1 { (lanes - k) as u64 } else { 0 };
+        assert_eq!(counters.padded.load(Ordering::Relaxed), expect_padded);
+    }
+}
+
+#[test]
+fn manifest_without_lane_artifact_falls_back_per_candidate() {
+    let base = r#"{
+        "model": {"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                  "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                  "rope_theta": 10000.0, "rms_eps": 1e-5},
+        "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+        "layers": [{"name": "blk0.q", "out_features": 128, "in_features": 128}],
+        "fp_side_names": ["embed"],
+        "executables": {EXECS}, "files": {}
+    }"#;
+    // legacy manifest: no lane executable -> per-candidate loop, and the
+    // stats-facing variant says so
+    let legacy = Manifest::from_json(&base.replace("{EXECS}", "{}")).unwrap();
+    assert_eq!(legacy.scorer_lanes(), None);
+    let v = planned_scorer_variant(&legacy, 0).unwrap();
+    assert_eq!(v, ScorerVariant::PerCandidate);
+    assert_eq!(v.name(), "per-candidate");
+    assert_eq!(v.lanes(), 1);
+    // asking for lanes the artifacts cannot serve is a hard error, not a
+    // silent fallback
+    assert!(planned_scorer_variant(&legacy, 8).is_err());
+
+    // lane manifest: auto uses it, --lanes 1 opts out
+    let lanes_exec = r#"{
+        "scores_quant_lanes": {"file": "scores_quant_lanes8.hlo.txt",
+                               "args": ["tokens"], "outputs": ["jsd", "ce"],
+                               "lanes": 8}}"#;
+    let lane = Manifest::from_json(&base.replace("{EXECS}", lanes_exec)).unwrap();
+    assert_eq!(lane.scorer_lanes(), Some(8));
+    let v = planned_scorer_variant(&lane, 0).unwrap();
+    assert_eq!(v, ScorerVariant::LaneStacked { lanes: 8 });
+    assert_eq!(v.name(), "lane-stacked");
+    assert_eq!(v.lanes(), 8);
+    assert_eq!(
+        planned_scorer_variant(&lane, 1).unwrap(),
+        ScorerVariant::PerCandidate
+    );
+    assert!(planned_scorer_variant(&lane, 4).is_err());
 }
 
 #[test]

@@ -10,7 +10,7 @@ use amq::data::{load_tokens, Manifest};
 use amq::eval::{self, ModelHandle};
 use amq::model::ModelAssets;
 use amq::quant::{Hqq, MethodId, MethodRegistry, Quantizer, Rtn};
-use amq::runtime::Runtime;
+use amq::runtime::{planned_scorer_variant, Runtime, ScorerVariant};
 
 macro_rules! require_artifacts {
     () => {
@@ -82,6 +82,37 @@ fn proxy_bank_builds_from_artifacts() {
         single.piece(li, gene(MethodId::Hqq, 3)).codes,
         bank.piece(li, gene(MethodId::Hqq, 3)).codes
     );
+}
+
+#[test]
+fn lane_scorer_artifact_wired_through_manifest() {
+    // Host-side only: the AOT build ships a lane-stacked scorer whose
+    // manifest entry the runtime's lane planner resolves, and whose HLO
+    // file actually exists with the same flat argument names as the
+    // single-candidate scorer (the arg planner reuses one classification).
+    require_artifacts!();
+    let dir = amq::artifacts_dir();
+    let m = Manifest::load(&dir).unwrap();
+    let Some(lanes) = m.scorer_lanes() else {
+        eprintln!("[skip] artifacts built without a lane-stacked scorer (AMQ_SCORE_LANES=1)");
+        return;
+    };
+    assert!(lanes > 1);
+    let exe = m.executable("scores_quant_lanes").unwrap();
+    assert_eq!(exe.lanes, Some(lanes));
+    assert!(m.hlo_path("scores_quant_lanes").unwrap().exists());
+    assert_eq!(exe.args, m.executable("scores_quant").unwrap().args);
+    // lane planning: auto follows the artifact, --lanes 1 opts out,
+    // a mismatched explicit request is an error
+    assert_eq!(
+        planned_scorer_variant(&m, 0).unwrap(),
+        ScorerVariant::LaneStacked { lanes }
+    );
+    assert_eq!(
+        planned_scorer_variant(&m, 1).unwrap(),
+        ScorerVariant::PerCandidate
+    );
+    assert!(planned_scorer_variant(&m, lanes + 1).is_err());
 }
 
 #[test]
@@ -165,6 +196,31 @@ fn runtime_end_to_end() {
     let r4: Vec<&_> = q4.iter().collect();
     let (jsd2, _) = rt.scores(&batch, &r2).unwrap();
     let (jsd4, _) = rt.scores(&batch, &r4).unwrap();
+
+    // -- lane-stacked dispatch is invisible in the results ----------------
+    // A multi-candidate chunk routes through the lane-stacked executable
+    // when the artifact carries one; per-candidate `scores` calls above are
+    // the reference.  The contract is *bitwise* equality per candidate.
+    if let ScorerVariant::LaneStacked { lanes } = rt.scorer_variant() {
+        let before = rt.stats();
+        let chunk = rt
+            .scores_chunk(&batch, &[r2.as_slice(), refs.as_slice(), r4.as_slice()])
+            .unwrap();
+        let after = rt.stats();
+        assert_eq!(chunk[0].0.to_bits(), jsd2.to_bits(), "lane 0 jsd drifted");
+        assert_eq!(chunk[1].0.to_bits(), jsd_fused.to_bits(), "lane 1 jsd drifted");
+        assert_eq!(chunk[2].0.to_bits(), jsd4.to_bits(), "lane 2 jsd drifted");
+        assert_eq!(chunk[1].1.to_bits(), ce_fused.to_bits(), "lane 1 ce drifted");
+        // 3 candidates <= L lanes: exactly one lane dispatch, padded tail
+        assert!(lanes >= 3, "default artifact lane count should hold a 3-chunk");
+        assert_eq!(after.lane_dispatches - before.lane_dispatches, 1);
+        assert_eq!(after.lane_candidates - before.lane_candidates, 3);
+        assert_eq!(
+            after.lane_padded - before.lane_padded,
+            (lanes - 3) as u64
+        );
+        assert_eq!(after.scores_calls, before.scores_calls, "no per-candidate calls");
+    }
     assert!(
         jsd2 > jsd_fused && jsd_fused > jsd4,
         "JSD should be monotone in bits: 2b={jsd2} 3b={jsd_fused} 4b={jsd4}"
