@@ -5,11 +5,11 @@ use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
 use amq::coordinator::space::{gene, SearchSpace};
 use amq::coordinator::{
-    run_search, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool, PooledEvaluator,
-    ProxyBank, SearchParams,
+    run_search, slab_budget_bytes, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool,
+    PooledEvaluator, ProxyBank, SearchParams,
 };
 use amq::quant::{MethodId, Quantizer};
-use amq::runtime::{lane_dispatch_count, lane_padding, lane_routed, EvalService};
+use amq::runtime::{lane_routed, lane_slab_sig, EvalService, SlabCache};
 use amq::tensor::Mat;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
@@ -201,18 +201,25 @@ fn main() {
 
     // -- batched candidate scoring: the search hot path end to end --------
     // A full smoke search through the pooled evaluator at every
-    // (workers, score-batch, lanes) corner: archives must hash identically,
-    // and the dispatch counters quantify the dedup + microbatching +
-    // lane-stacking wins.  The simulated device cost model mirrors the
-    // lane-stacked scorer: every device dispatch pays a fixed submission
-    // overhead, plus a marginal cost per executed lane (padding included —
-    // padded lanes burn FLOPs too).  The numbers land in BENCH_search.json
-    // (same schema as `repro search`) so CI can track the perf trajectory
-    // as an artifact.
+    // (workers, score-batch, lanes, slab-cache) corner: archives must hash
+    // identically, and the dispatch counters quantify the dedup +
+    // microbatching + lane-stacking + slab-reuse wins.  The simulated
+    // device cost model mirrors the lane-stacked scorer: every device
+    // dispatch pays a fixed submission overhead, plus a marginal cost per
+    // executed lane (padding included — padded lanes burn FLOPs too),
+    // plus a slab pack+upload cost per cache *miss* (hits are free — the
+    // slab-reuse term).  Lane-path scores are reconstructed from the
+    // cached slab contents, so the archive-identity assertion also proves
+    // the cache transparent.  The numbers land in BENCH_search.json (same
+    // schema as `repro search`) so CI can track the perf trajectory as an
+    // artifact.
     header("batched candidate scoring (smoke search, synthetic lane-aware scorer)");
     const DISPATCH_US: u64 = 200; // per device call
     const LANE_US: u64 = 30; // per executed lane
-    let search_space = toy_space(16);
+    const SLAB_US: u64 = 60; // per slab pack+upload (cache miss)
+    const SLAB_BYTES: usize = 1 << 14; // nominal bytes per packed slab
+    const N_LAYERS: usize = 16;
+    let search_space = toy_space(N_LAYERS);
     let synth_score = |cfg: &Config| -> f32 {
         // payload-seeded: the pool determinism contract
         let mut seed = 0x6A09_E667_F3BC_C908u64;
@@ -249,38 +256,90 @@ fn main() {
     params.seed = 7;
     let mut rows = String::new();
     let mut hashes: Vec<u64> = Vec::new();
-    for (workers, score_batch, lanes) in [
-        (1usize, 1usize, 1usize),
-        (1, 8, 1),
-        (4, 1, 1),
-        (4, 8, 1),
-        (1, 8, 8),
-        (4, 8, 8),
+    for (workers, score_batch, lanes, slab_mb) in [
+        (1usize, 1usize, 1usize, 0usize),
+        (1, 8, 1, 0),
+        (4, 1, 1, 0),
+        (4, 8, 1, 0),
+        (1, 8, 8, 0),
+        (1, 8, 8, 64),
+        (4, 8, 8, 0),
+        (4, 8, 8, 64),
     ] {
         let device_dispatches = Arc::new(AtomicU64::new(0));
         let lane_candidates = Arc::new(AtomicU64::new(0));
         let lanes_padded = Arc::new(AtomicU64::new(0));
-        let (dd, lc, lp) =
-            (device_dispatches.clone(), lane_candidates.clone(), lanes_padded.clone());
+        let slab_lookups = Arc::new(AtomicU64::new(0));
+        let slab_uploads = Arc::new(AtomicU64::new(0));
+        // one slab cache per corner, shared by every shard (as in prod)
+        let slab_cache: Arc<SlabCache<Vec<u16>>> =
+            Arc::new(SlabCache::new(slab_budget_bytes(slab_mb)));
+        let (dd, lc, lp, sl, su, sc) = (
+            device_dispatches.clone(),
+            lane_candidates.clone(),
+            lanes_padded.clone(),
+            slab_lookups.clone(),
+            slab_uploads.clone(),
+            slab_cache.clone(),
+        );
         let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(workers, move |_shard| {
-            let (dd, lc, lp) = (dd.clone(), lc.clone(), lp.clone());
+            let (dd, lc, lp, sl, su, sc) =
+                (dd.clone(), lc.clone(), lp.clone(), sl.clone(), su.clone(), sc.clone());
             move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
                 // production routing (the shared `lane_routed` predicate):
                 // single-candidate chunks take the per-candidate path even
                 // when the lane executable exists
-                let routed = lane_routed(chunk.len(), lanes);
-                let d = if routed {
-                    lane_dispatch_count(chunk.len(), lanes) as u64
+                if lane_routed(chunk.len(), lanes) {
+                    // plan: resolve each group's per-layer slab through the
+                    // shared cache; misses pay the pack+upload cost
+                    let mut uploads_now = 0u64;
+                    let mut plan: Vec<(usize, Vec<Arc<Vec<u16>>>)> = Vec::new();
+                    for group in chunk.chunks(lanes) {
+                        let mut slabs = Vec::with_capacity(N_LAYERS);
+                        for li in 0..N_LAYERS {
+                            let sig = lane_slab_sig(group, li, lanes);
+                            let mut missed = false;
+                            let slab = sc.get_or_build((li, sig.clone()), || {
+                                missed = true;
+                                Ok((sig.clone(), SLAB_BYTES))
+                            })?;
+                            if missed {
+                                uploads_now += 1;
+                            }
+                            slabs.push(slab);
+                        }
+                        plan.push((group.len(), slabs));
+                    }
+                    let d = plan.len() as u64;
+                    let executed = d * lanes as u64;
+                    let padded = executed - chunk.len() as u64;
+                    sl.fetch_add(d * N_LAYERS as u64, Ordering::Relaxed);
+                    su.fetch_add(uploads_now, Ordering::Relaxed);
+                    dd.fetch_add(d, Ordering::Relaxed);
+                    lc.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                    lp.fetch_add(padded, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_micros(
+                        d * DISPATCH_US + executed * LANE_US + uploads_now * SLAB_US,
+                    ));
+                    // the device reads the slabs, not the candidates:
+                    // cache transparency is load-bearing for the archive
+                    let mut out = Vec::with_capacity(chunk.len());
+                    for (real, slabs) in &plan {
+                        for j in 0..*real {
+                            let cfg: Config =
+                                (0..N_LAYERS).map(|li| slabs[li][j]).collect();
+                            out.push(synth_score(&cfg));
+                        }
+                    }
+                    Ok(out)
                 } else {
-                    chunk.len() as u64
-                };
-                let executed = if routed { d * lanes as u64 } else { chunk.len() as u64 };
-                let padded = if routed { lane_padding(chunk.len(), lanes) as u64 } else { 0 };
-                dd.fetch_add(d, Ordering::Relaxed);
-                lc.fetch_add(chunk.len() as u64, Ordering::Relaxed);
-                lp.fetch_add(padded, Ordering::Relaxed);
-                std::thread::sleep(Duration::from_micros(d * DISPATCH_US + executed * LANE_US));
-                Ok(chunk.iter().map(synth_score).collect())
+                    let d = chunk.len() as u64;
+                    dd.fetch_add(d, Ordering::Relaxed);
+                    std::thread::sleep(Duration::from_micros(
+                        d * DISPATCH_US + d * LANE_US,
+                    ));
+                    Ok(chunk.iter().map(synth_score).collect())
+                }
             }
         }));
         let mut ev = PooledEvaluator::from_service(svc).with_score_batch(score_batch);
@@ -294,10 +353,17 @@ fn main() {
         let cand = lane_candidates.load(Ordering::Relaxed);
         let padded = lanes_padded.load(Ordering::Relaxed);
         let fill = if cand + padded == 0 { 0.0 } else { cand as f64 / (cand + padded) as f64 };
+        let lookups = slab_lookups.load(Ordering::Relaxed);
+        let uploads = slab_uploads.load(Ordering::Relaxed);
+        let slab_hit = if lookups == 0 {
+            0.0
+        } else {
+            (lookups - uploads) as f64 / lookups as f64
+        };
         println!(
-            "workers {workers} k {score_batch} lanes {lanes}: {:>8} wall, {:.0} cand/s, \
-             {} chunk dispatches / {} device dispatches for {} requested \
-             ({} dedup hits, {:.0}% lane fill)",
+            "workers {workers} k {score_batch} lanes {lanes} slab {slab_mb}MB: {:>8} wall, \
+             {:.0} cand/s, {} chunk dispatches / {} device dispatches for {} requested \
+             ({} dedup hits, {:.0}% lane fill, {} slab uploads / {} lookups = {:.0}% hit)",
             format!("{:.0?}", wall),
             cps,
             stats.dispatches,
@@ -305,6 +371,9 @@ fn main() {
             stats.requested,
             stats.cache_hits + stats.dup_hits,
             fill * 100.0,
+            uploads,
+            lookups,
+            slab_hit * 100.0,
         );
         if !rows.is_empty() {
             rows.push_str(",\n");
@@ -312,10 +381,12 @@ fn main() {
         let _ = write!(
             rows,
             "    {{\"workers\": {workers}, \"score_batch\": {score_batch}, \
-             \"lanes\": {lanes}, \"scorer_variant\": \"{}\", \
+             \"lanes\": {lanes}, \"slab_cache_mb\": {slab_mb}, \"scorer_variant\": \"{}\", \
              \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
              \"scorer_dispatches\": {}, \"device_dispatches\": {}, \
-             \"lane_fill_fraction\": {:.4}, \"requested_configs\": {}, \"dedup_hits\": {}, \
+             \"lane_fill_fraction\": {:.4}, \"slab_lookups\": {lookups}, \
+             \"slab_uploads\": {uploads}, \"slab_hit_fraction\": {slab_hit:.4}, \
+             \"slab_resident_bytes\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
              \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
             if lanes > 1 { "lane-stacked" } else { "per-candidate" },
             wall.as_secs_f64(),
@@ -324,6 +395,7 @@ fn main() {
             stats.dispatches,
             devd,
             fill,
+            slab_cache.stats().resident_bytes,
             stats.requested,
             stats.cache_hits + stats.dup_hits,
             stats.dedup_fraction(),
@@ -333,9 +405,12 @@ fn main() {
     let identical = hashes.iter().all(|&h| h == hashes[0]);
     assert!(
         identical,
-        "archives diverged across (workers, score-batch, lanes) combos"
+        "archives diverged across (workers, score-batch, lanes, slab-cache) combos"
     );
-    println!("archives identical across all (workers, score-batch, lanes) combos: {identical}");
+    println!(
+        "archives identical across all (workers, score-batch, lanes, slab-cache) combos: \
+         {identical}"
+    );
 
     // shared-bank residency: 4 shards referencing one Arc'd bank count 1x
     let shard_refs: Vec<Arc<ProxyBank>> = {

@@ -27,8 +27,9 @@ pub mod space;
 
 pub use archive::{Archive, Sample};
 pub use proxy::{
-    BankShareStats, ConfigEvaluator, DeviceBank, DeviceProxy, EvalBatchStats, EvalPool,
-    MethodBuildStats, PooledEvaluator, ProxyBank, ProxyEvaluator,
+    slab_budget_bytes, BankShareStats, ConfigEvaluator, DeviceBank, DeviceProxy,
+    EvalBatchStats, EvalPool, MethodBuildStats, PooledEvaluator, ProxyBank, ProxyEvaluator,
+    DEFAULT_SLAB_CACHE_MB,
 };
 pub use search::{run_search, SearchParams, SearchResult};
 pub use space::{gene, gene_bits, gene_method, Config, Gene, SearchSpace};

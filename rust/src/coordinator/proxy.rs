@@ -13,7 +13,10 @@ use super::space::{gene_bits, gene_method, Config, Gene};
 use crate::data::Manifest;
 use crate::model::{HessianStore, WeightStore};
 use crate::quant::{MethodId, MethodRegistry, QuantizedLinear, Quantizer};
-use crate::runtime::{EvalService, QuantLayerBufs, Runtime, ScoreBatch, ServiceStats};
+use crate::runtime::{
+    lane_routed, EvalService, LaneChunkPlan, LaneGroup, LaneSlabCache, QuantLayerBufs, Runtime,
+    ScoreBatch, ServiceStats,
+};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -189,21 +192,36 @@ impl ProxyBank {
     }
 }
 
+/// Default lane-slab cache budget in MB (`--slab-cache-mb`).  Archives
+/// are byte-identical for any budget — the cache only changes how many
+/// slab uploads the lane path pays.
+pub const DEFAULT_SLAB_CACHE_MB: usize = 64;
+
+/// The MB→bytes conversion every `--slab-cache-mb` value goes through on
+/// its way to a [`LaneSlabCache`] budget (decimal MB, matching the MB
+/// figures in the reports) — one definition so the CLI and library
+/// defaults can never diverge.
+pub const fn slab_budget_bytes(mb: usize) -> usize {
+    mb * 1_000_000
+}
+
+/// [`DEFAULT_SLAB_CACHE_MB`] in bytes — the budget
+/// [`DeviceBank::upload`] uses when no explicit budget is given.
+pub const DEFAULT_SLAB_CACHE_BYTES: usize = slab_budget_bytes(DEFAULT_SLAB_CACHE_MB);
+
 /// The process-wide device-side bank: every `(method, layer, bits)` piece
 /// uploaded **exactly once**, then `Arc`-shared by the main thread and every
 /// evaluation-pool shard.  Before this split each shard uploaded (and kept
 /// resident) its own private copy — N workers meant N uploads and N× device
 /// bytes; now uploads and residency are 1× regardless of pool width.
 ///
-/// Each uploaded piece also keeps host mirrors of its packed data
-/// ([`QuantLayerBufs`]; retained only when the runtime has a lane-stacked
-/// executable), which is what makes the pieces *stackable*: the
-/// lane-stacked scorer ([`Runtime::scores_chunk`]) re-packs a group of
-/// candidates' pieces into `[lanes, ...]` slabs and re-uploads the slab per
-/// dispatch — the per-candidate buffers stay the zero-copy assembly path
-/// for everything else.  Note the mirrors duplicate the host bank's pieces
-/// (~2× host bank bytes on lane-enabled runtimes) and sit outside
-/// `resident_bytes` accounting; see ROADMAP for the zero-copy lever.
+/// The host bank is resident exactly once, too: lane-slab packing
+/// **borrows** its rows straight from the bank's host pieces
+/// ([`Runtime::upload_lane_slab`]) — the uploaded [`QuantLayerBufs`] carry
+/// no host mirrors — and the packed slabs land in this bank's
+/// [`LaneSlabCache`], staying device-resident across calibration batches
+/// and across search generations under the `--slab-cache-mb` budget
+/// (exact byte accounting via [`BankShareStats`]).
 ///
 /// Holds no runtime reference: a [`DeviceProxy`] pairs a shared bank with
 /// the runtime that executes against it.
@@ -212,6 +230,9 @@ pub struct DeviceBank {
     pub bank: Arc<ProxyBank>,
     /// `bufs[slot][li][bi]`, mirroring the bank's piece layout.
     bufs: Vec<Vec<Vec<QuantLayerBufs>>>,
+    /// Device-resident packed lane slabs, keyed by `(layer, lane
+    /// signature)`; shared by every shard that scores through this bank.
+    pub slab_cache: LaneSlabCache,
     /// Per-method upload wall-clock, bank-slot order.
     pub upload_times: Vec<Duration>,
     /// Total upload wall-clock across methods.
@@ -219,9 +240,21 @@ pub struct DeviceBank {
 }
 
 impl DeviceBank {
-    /// Upload every piece of a host bank.  Called once per process; sharing
-    /// is the caller's job (wrap in `Arc`, clone the handle per shard).
+    /// Upload every piece of a host bank with the default slab-cache
+    /// budget.  Called once per process; sharing is the caller's job (wrap
+    /// in `Arc`, clone the handle per shard).
     pub fn upload(rt: &Runtime, bank: Arc<ProxyBank>) -> Result<DeviceBank> {
+        Self::upload_with_slab_budget(rt, bank, DEFAULT_SLAB_CACHE_BYTES)
+    }
+
+    /// Upload with an explicit slab-cache byte budget (`--slab-cache-mb`;
+    /// 0 disables slab retention — lane groups re-pack and re-upload per
+    /// plan, the pre-cache behaviour).
+    pub fn upload_with_slab_budget(
+        rt: &Runtime,
+        bank: Arc<ProxyBank>,
+        slab_budget_bytes: usize,
+    ) -> Result<DeviceBank> {
         let t0 = Instant::now();
         let mut bufs = Vec::with_capacity(bank.pieces.len());
         let mut upload_times = Vec::with_capacity(bank.pieces.len());
@@ -238,7 +271,13 @@ impl DeviceBank {
             bufs.push(slot);
             upload_times.push(t_m.elapsed());
         }
-        Ok(DeviceBank { bank, bufs, upload_times, upload_time: t0.elapsed() })
+        Ok(DeviceBank {
+            bank,
+            bufs,
+            slab_cache: LaneSlabCache::new(slab_budget_bytes),
+            upload_times,
+            upload_time: t0.elapsed(),
+        })
     }
 
     /// Number of uploaded pieces (= methods × layers × bit choices).
@@ -265,7 +304,12 @@ impl DeviceBank {
 
 /// Device-bank residency accounting across pool shards: every distinct bank
 /// is counted **once**, no matter how many shards reference it through an
-/// `Arc` — the "shared vs private" memory story in one struct.
+/// `Arc` — the "shared vs private" memory story in one struct.  Slab-cache
+/// bytes fold in through [`BankShareStats::with_slab_cache_bytes`], so the
+/// lane path's extra residency is on the books next to the bank's
+/// packed-bytes figure (the device copies of the pieces mirror that figure
+/// 1×; the old host mirrors that silently doubled host bank bytes are
+/// gone).
 #[derive(Clone, Debug, Default)]
 pub struct BankShareStats {
     /// Bank references registered (one per initialized shard).
@@ -274,6 +318,10 @@ pub struct BankShareStats {
     pub referenced_bytes: usize,
     /// Bytes actually resident (each distinct bank counted once).
     pub resident_bytes: usize,
+    /// Device bytes of the packed lane slabs currently resident in the
+    /// shared [`LaneSlabCache`] (0 when the lane path never ran or the
+    /// cache is disabled).
+    pub slab_cache_bytes: usize,
 }
 
 impl BankShareStats {
@@ -293,6 +341,21 @@ impl BankShareStats {
             }
         }
         stats
+    }
+
+    /// Fold in the live slab-cache bytes (exact, recomputed from the live
+    /// entries — see [`crate::runtime::SlabCacheStats`]).
+    pub fn with_slab_cache_bytes(mut self, bytes: usize) -> BankShareStats {
+        self.slab_cache_bytes = bytes;
+        self
+    }
+
+    /// Distinct bank pieces (packed-bytes accounting, counted once) plus
+    /// the resident packed lane slabs — the search path's residency
+    /// figure.  Device copies of the bank pieces track `resident_bytes`
+    /// 1:1, so this is also the right order for device-memory sizing.
+    pub fn total_resident_bytes(&self) -> usize {
+        self.resident_bytes + self.slab_cache_bytes
     }
 }
 
@@ -326,6 +389,46 @@ impl<'rt> DeviceProxy<'rt> {
     /// Zero-copy assembly of a configuration into buffer references.
     pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
         self.dev.assemble(config)
+    }
+
+    /// Resolve a chunk's lane-dispatch plan: group the configs `lanes` at a
+    /// time and, per group and layer, fetch the packed slab from the shared
+    /// [`LaneSlabCache`] — on a miss the slab is packed from rows
+    /// **borrowed** from the bank's host pieces and uploaded once.  The
+    /// returned plan pins its slabs (`Arc`) for its lifetime, so scoring it
+    /// against every calibration batch costs zero further uploads even if
+    /// the cache evicts under a tiny `--slab-cache-mb` budget.
+    ///
+    /// Callers route here only when [`lane_routed`] says so (done by
+    /// [`mean_jsd_batch`]); the per-candidate path needs no plan.
+    pub fn plan_lane_chunk(&self, configs: &[Config]) -> Result<LaneChunkPlan> {
+        let lanes = self.rt.scorer_variant().lanes();
+        eyre::ensure!(lanes > 1, "lane plan on a per-candidate runtime");
+        let n_layers = self.bank.n_layers();
+        for c in configs {
+            eyre::ensure!(
+                c.len() == n_layers,
+                "config has {} genes, bank has {n_layers} layers",
+                c.len()
+            );
+        }
+        let mut groups = Vec::with_capacity(configs.len().div_ceil(lanes));
+        for group in configs.chunks(lanes) {
+            let mut slabs = Vec::with_capacity(n_layers);
+            for li in 0..n_layers {
+                let sig = crate::runtime::lane_slab_sig(group, li, lanes);
+                let slab = self.dev.slab_cache.get_or_build((li, sig), || {
+                    let pieces: Vec<&QuantizedLinear> =
+                        group.iter().map(|c| self.bank.piece(li, c[li])).collect();
+                    let bufs = self.rt.upload_lane_slab(&pieces)?;
+                    let bytes = bufs.bytes;
+                    Ok((bufs, bytes))
+                })?;
+                slabs.push(slab);
+            }
+            groups.push(LaneGroup { real: group.len(), slabs });
+        }
+        LaneChunkPlan::new(groups)
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -432,11 +535,24 @@ pub fn mean_jsd(proxy: &DeviceProxy, batches: &[ScoreBatch], config: &Config) ->
 }
 
 /// Mean fused-scorer JSD of a *chunk* of configurations, in input order.
-/// Candidates are assembled once, then each calibration batch is scored for
-/// the whole chunk through [`Runtime::scores_chunk`] (static scorer args
-/// resolved once per batch per chunk).  The per-candidate accumulation
-/// order matches the single-candidate path, so results are bit-identical
-/// to calling [`mean_jsd`] per config.
+///
+/// The chunk's dispatch resources are resolved **once, above the
+/// calibration-batch loop**, then reused for every batch:
+///
+///  * *lane-stacked* (lane artifact present, chunk > 1 candidate — the
+///    shared [`lane_routed`] predicate): [`DeviceProxy::plan_lane_chunk`]
+///    resolves each group's slabs through the bank's [`LaneSlabCache`]
+///    (packed from borrowed bank pieces on a miss), and every batch
+///    dispatches the same pinned plan ([`Runtime::scores_lane_chunk`]) —
+///    slab uploads scale with *distinct slabs per search*, never with
+///    batches, even under a tiny cache budget;
+///  * *per-candidate*: candidates are assembled once (pointer-chasing into
+///    the resident bank) and each batch is scored through
+///    [`Runtime::scores_chunk`] (static scorer args resolved once per
+///    batch per chunk) — zero uploads as before.
+///
+/// The per-candidate accumulation order matches the single-candidate path,
+/// so results are bit-identical to calling [`mean_jsd`] per config.
 pub fn mean_jsd_batch(
     proxy: &DeviceProxy,
     batches: &[ScoreBatch],
@@ -445,15 +561,26 @@ pub fn mean_jsd_batch(
     if configs.is_empty() {
         return Ok(Vec::new());
     }
-    let assembled: Vec<Vec<&QuantLayerBufs>> =
-        configs.iter().map(|c| proxy.assemble(c)).collect();
-    let candidates: Vec<&[&QuantLayerBufs]> =
-        assembled.iter().map(|v| v.as_slice()).collect();
+    let rt = proxy.runtime();
     let mut sums = vec![0.0f64; configs.len()];
-    for b in batches {
-        let scored = proxy.runtime().scores_chunk(b, &candidates)?;
-        for (sum, (jsd, _ce)) in sums.iter_mut().zip(scored) {
-            *sum += jsd as f64;
+    if lane_routed(configs.len(), rt.scorer_variant().lanes()) {
+        let plan = proxy.plan_lane_chunk(configs)?;
+        for b in batches {
+            let scored = rt.scores_lane_chunk(b, &plan)?;
+            for (sum, (jsd, _ce)) in sums.iter_mut().zip(scored) {
+                *sum += jsd as f64;
+            }
+        }
+    } else {
+        let assembled: Vec<Vec<&QuantLayerBufs>> =
+            configs.iter().map(|c| proxy.assemble(c)).collect();
+        let candidates: Vec<&[&QuantLayerBufs]> =
+            assembled.iter().map(|v| v.as_slice()).collect();
+        for b in batches {
+            let scored = rt.scores_chunk(b, &candidates)?;
+            for (sum, (jsd, _ce)) in sums.iter_mut().zip(scored) {
+                *sum += jsd as f64;
+            }
         }
     }
     let n = batches.len().max(1) as f64;
@@ -907,5 +1034,21 @@ mod tests {
         let s = BankShareStats::from_shard_banks(&mixed);
         assert_eq!(s.resident_bytes, bytes + other.memory_bytes());
         assert_eq!(s.referenced_bytes, 2 * bytes + other.memory_bytes());
+    }
+
+    #[test]
+    fn bank_share_stats_fold_in_slab_cache_bytes() {
+        // the residency report must cover every live buffer the scoring
+        // path holds: bank pieces once + the resident packed lane slabs
+        let bank = Arc::new(toy_bank(&[MethodId::Hqq]));
+        let bytes = bank.memory_bytes();
+        let shards: Vec<Arc<ProxyBank>> = (0..2).map(|_| bank.clone()).collect();
+        let s = BankShareStats::from_shard_banks(&shards);
+        assert_eq!(s.slab_cache_bytes, 0, "nothing folded in by default");
+        assert_eq!(s.total_resident_bytes(), bytes);
+        let s = s.with_slab_cache_bytes(1234);
+        assert_eq!(s.slab_cache_bytes, 1234);
+        assert_eq!(s.resident_bytes, bytes, "bank residency unchanged");
+        assert_eq!(s.total_resident_bytes(), bytes + 1234);
     }
 }

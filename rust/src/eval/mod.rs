@@ -1,6 +1,13 @@
 //! Model-quality evaluation: JSD (the search signal), perplexity (paper
 //! tables), and the zero-/few-shot task suite — all driven through the PJRT
 //! runtime with a uniform [`ModelHandle`].
+//!
+//! Batch-loop reuse rules: anything resolved per *evaluation* is hoisted
+//! above the per-batch loop.  [`jsd_on_batches`] reuses each prepared
+//! batch's resident buffers (zero uploads per batch); the search hot path's
+//! equivalent, `coordinator::proxy::mean_jsd_batch`, additionally resolves
+//! a candidate chunk's lane-slab plan once — through the device bank's
+//! slab cache — and replays it across every calibration batch.
 
 pub mod jsd;
 pub mod ppl;
@@ -73,7 +80,11 @@ pub fn perplexity_on(rt: &Runtime, handle: &ModelHandle, split: &TokenSplit) -> 
     Ok(perplexity((ce_sum / n_batches as f64) as f32))
 }
 
-/// Mean JSD of a model vs. prepared fp batches (baseline path: raw logits).
+/// Mean JSD of a model vs. prepared fp batches (baseline path: raw
+/// logits).  Every per-batch iteration runs against the batch's resident
+/// token buffer — zero host→device copies inside the loop; the handle's
+/// own buffers (overrides, quant layers) are whatever the caller uploaded
+/// once before the loop.
 pub fn jsd_on_batches(
     rt: &Runtime,
     handle: &ModelHandle,

@@ -111,6 +111,7 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
     let registry = ctx.registry.clone();
     let cell = ctx.device_bank.clone();
     let shard_banks = ctx.shard_banks.clone();
+    let slab_budget = crate::coordinator::slab_budget_bytes(ctx.slab_cache_mb);
     EvalService::spawn_sharded(ctx.workers, move |_shard| {
         let rt = rt.clone();
         let batches = batches.clone();
@@ -125,7 +126,7 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
                     .get_or_init(|| {
                         let bank = build_proxy_bank(&assets, &registry)
                             .map_err(|e| format!("{e}"))?;
-                        DeviceBank::upload(&rt, Arc::new(bank))
+                        DeviceBank::upload_with_slab_budget(&rt, Arc::new(bank), slab_budget)
                             .map(Arc::new)
                             .map_err(|e| format!("{e}"))
                     })

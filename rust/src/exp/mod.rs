@@ -61,6 +61,8 @@ pub fn prepare_search_batches(rt: &Runtime, calib: &TokenSplit) -> Result<Vec<Sc
 /// Results are identical for any value; only dispatch granularity changes.
 pub const DEFAULT_SCORE_BATCH: usize = 8;
 
+pub use crate::coordinator::DEFAULT_SLAB_CACHE_MB;
+
 /// Headline numbers of the most recent (non-cached) search run, stashed for
 /// the machine-readable bench report.
 #[derive(Clone, Debug, Default)]
@@ -92,6 +94,8 @@ pub struct Ctx {
     pub workers: usize,
     /// Scoring microbatch size (`--score-batch K`).
     pub score_batch: usize,
+    /// Lane-slab cache budget in MB (`--slab-cache-mb`; 0 = off).
+    pub slab_cache_mb: usize,
     /// Enabled quantization methods (`--methods`, default: the manifest's
     /// list, which defaults to single-method HQQ — the legacy genome).
     pub registry: MethodRegistry,
@@ -122,7 +126,16 @@ impl Ctx {
         preset: SearchParams,
         workers: usize,
     ) -> Result<Ctx> {
-        Self::load_with_opts(artifacts_dir, out_dir, preset, workers, None, DEFAULT_SCORE_BATCH, 0)
+        Self::load_with_opts(
+            artifacts_dir,
+            out_dir,
+            preset,
+            workers,
+            None,
+            DEFAULT_SCORE_BATCH,
+            0,
+            DEFAULT_SLAB_CACHE_MB,
+        )
     }
 
     /// Load with explicit options.  `workers <= 1` keeps every
@@ -133,7 +146,10 @@ impl Ctx {
     /// `--methods`); `score_batch` is the scoring microbatch size (CLI
     /// `--score-batch`, clamped to >= 1); `lanes` is the scorer lane
     /// request (CLI `--lanes`: 0 = auto, 1 = per-candidate, N = require an
-    /// N-lane artifact — see [`Runtime::load_with_lanes`]).
+    /// N-lane artifact — see [`Runtime::load_with_lanes`]);
+    /// `slab_cache_mb` is the lane-slab cache budget (CLI
+    /// `--slab-cache-mb`, 0 = off — archives identical either way).
+    #[allow(clippy::too_many_arguments)]
     pub fn load_with_opts(
         artifacts_dir: &Path,
         out_dir: &Path,
@@ -142,6 +158,7 @@ impl Ctx {
         registry: Option<MethodRegistry>,
         score_batch: usize,
         lanes: usize,
+        slab_cache_mb: usize,
     ) -> Result<Ctx> {
         let assets = Arc::new(ModelAssets::load(artifacts_dir)?);
         let rt = Arc::new(Runtime::load_with_lanes(artifacts_dir, &assets.weights, lanes)?);
@@ -168,6 +185,7 @@ impl Ctx {
             artifacts: artifacts_dir.to_path_buf(),
             workers: workers.max(1),
             score_batch: score_batch.max(1),
+            slab_cache_mb,
             registry,
             pool: OnceLock::new(),
             device_bank: Arc::new(OnceLock::new()),
@@ -185,12 +203,25 @@ impl Ctx {
             .get_or_init(|| {
                 let bank = common::build_proxy_bank(&self.assets, &self.registry)
                     .map_err(|e| format!("{e}"))?;
-                DeviceBank::upload(&self.rt, Arc::new(bank))
-                    .map(Arc::new)
-                    .map_err(|e| format!("{e}"))
+                DeviceBank::upload_with_slab_budget(
+                    &self.rt,
+                    Arc::new(bank),
+                    crate::coordinator::slab_budget_bytes(self.slab_cache_mb),
+                )
+                .map(Arc::new)
+                .map_err(|e| format!("{e}"))
             })
             .clone()
             .map_err(|e| eyre::anyhow!("device bank unavailable: {e}"))
+    }
+
+    /// Slab-cache counters of the process-wide device bank, if it was ever
+    /// uploaded (does not force an upload).
+    pub fn slab_cache_stats(&self) -> Option<crate::runtime::SlabCacheStats> {
+        match self.device_bank.get() {
+            Some(Ok(dev)) => Some(dev.slab_cache.stats()),
+            _ => None,
+        }
     }
 
     /// The shared evaluation pool, spawned on first use (None when running
@@ -213,13 +244,17 @@ impl Ctx {
     }
 
     /// Device-bank residency across the shards that actually initialized:
-    /// the shared bank is counted once, however many shards reference it.
+    /// the shared bank is counted once, however many shards reference it,
+    /// and the live slab-cache bytes fold in so the report covers every
+    /// buffer the scoring path holds.
     pub fn bank_share_stats(&self) -> Option<BankShareStats> {
         let banks = self.shard_banks.lock().unwrap();
         if banks.is_empty() {
             None
         } else {
-            Some(BankShareStats::from_shard_banks(&banks))
+            let slab_bytes =
+                self.slab_cache_stats().map(|s| s.resident_bytes).unwrap_or(0);
+            Some(BankShareStats::from_shard_banks(&banks).with_slab_cache_bytes(slab_bytes))
         }
     }
 

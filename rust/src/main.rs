@@ -28,6 +28,11 @@
 //!                                   scorer; N > 1 requires an N-lane
 //!                                   artifact).  Archives are identical
 //!                                   for any setting
+//!   --slab-cache-mb N               lane-slab cache budget (default: 64;
+//!                                   0 disables retention).  Packed lane
+//!                                   slabs stay device-resident across
+//!                                   calibration batches and generations;
+//!                                   archives are identical for any budget
 //!   --methods LIST                  comma-separated quantization methods
 //!                                   the genome may assign per layer
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
@@ -51,6 +56,7 @@ struct Args {
     workers: usize,
     score_batch: usize,
     lanes: usize,
+    slab_cache_mb: usize,
     methods: Option<String>,
     predictor: Option<String>,
 }
@@ -66,6 +72,7 @@ fn parse_args() -> Args {
         workers: 1,
         score_batch: exp::DEFAULT_SCORE_BATCH,
         lanes: 0,
+        slab_cache_mb: exp::DEFAULT_SLAB_CACHE_MB,
         methods: None,
         predictor: None,
     };
@@ -101,6 +108,10 @@ fn parse_args() -> Args {
             "--lanes" => {
                 i += 1;
                 args.lanes = argv[i].parse().expect("--lanes N");
+            }
+            "--slab-cache-mb" => {
+                i += 1;
+                args.slab_cache_mb = argv[i].parse().expect("--slab-cache-mb N");
             }
             "--methods" => {
                 i += 1;
@@ -204,6 +215,21 @@ fn write_search_report(
         rstats.lane_dispatches,
         rstats.lane_fill_fraction(),
     );
+    if let Some(ss) = ctx.slab_cache_stats() {
+        let _ = write!(
+            s,
+            "  \"slab_cache\": {{\"budget_mb\": {}, \"hits\": {}, \"misses\": {}, \
+             \"hit_fraction\": {:.4}, \"resident_slabs\": {}, \"resident_mb\": {:.3}, \
+             \"evictions\": {}}},\n",
+            ctx.slab_cache_mb,
+            ss.hits,
+            ss.misses,
+            ss.hit_fraction(),
+            ss.resident_slabs,
+            ss.resident_bytes as f64 / 1e6,
+            ss.evictions,
+        );
+    }
     if let Some(es) = ctx.last_eval_stats() {
         let _ = write!(
             s,
@@ -223,10 +249,13 @@ fn write_search_report(
         let _ = write!(
             s,
             "  \"bank_sharing\": {{\"shards\": {}, \"resident_mb\": {:.3}, \
-             \"unshared_mb\": {:.3}}},\n",
+             \"unshared_mb\": {:.3}, \"slab_cache_mb_resident\": {:.3}, \
+             \"total_resident_mb\": {:.3}}},\n",
             bs.shards,
             bs.resident_bytes as f64 / 1e6,
             bs.referenced_bytes as f64 / 1e6,
+            bs.slab_cache_bytes as f64 / 1e6,
+            bs.total_resident_bytes() as f64 / 1e6,
         );
     }
     let _ = write!(s, "  \"log10_space_size\": {:.3},\n", pipe.space.log10_size());
@@ -317,6 +346,24 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         rstats.lane_fill_fraction()
     );
     let _ = write!(s, "  \"device_scorer_calls\": {},\n", rstats.scores_calls);
+    // Slab-cache truth: lane dispatches re-upload nothing on a hit, so the
+    // hit fraction is the share of slab traffic the cache absorbed.
+    if let Some(ss) = ctx.slab_cache_stats() {
+        let _ = write!(
+            s,
+            "  \"slab_cache\": {{\"budget_mb\": {}, \"hits\": {}, \"misses\": {}, \
+             \"hit_fraction\": {:.4}, \"built_bytes\": {}, \"resident_bytes\": {}, \
+             \"resident_slabs\": {}, \"evictions\": {}}},\n",
+            ctx.slab_cache_mb,
+            ss.hits,
+            ss.misses,
+            ss.hit_fraction(),
+            ss.built_bytes,
+            ss.resident_bytes,
+            ss.resident_slabs,
+            ss.evictions,
+        );
+    }
     if let Some(pool) = ctx.pool_stats() {
         let _ = write!(
             s,
@@ -328,17 +375,25 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         );
     }
     let bank_bytes = pipe.proxy.bank.memory_bytes();
+    let slab_bytes = ctx.slab_cache_stats().map(|s| s.resident_bytes).unwrap_or(0);
     if let Some(bs) = ctx.bank_share_stats() {
         let _ = write!(
             s,
-            "  \"bank\": {{\"resident_bytes\": {}, \"unshared_bytes\": {}, \"shards\": {}}}\n",
-            bs.resident_bytes, bs.referenced_bytes, bs.shards,
+            "  \"bank\": {{\"resident_bytes\": {}, \"unshared_bytes\": {}, \
+             \"slab_cache_bytes\": {}, \"total_resident_bytes\": {}, \"shards\": {}}}\n",
+            bs.resident_bytes,
+            bs.referenced_bytes,
+            bs.slab_cache_bytes,
+            bs.total_resident_bytes(),
+            bs.shards,
         );
     } else {
         let _ = write!(
             s,
             "  \"bank\": {{\"resident_bytes\": {bank_bytes}, \"unshared_bytes\": {bank_bytes}, \
+             \"slab_cache_bytes\": {slab_bytes}, \"total_resident_bytes\": {}, \
              \"shards\": 1}}\n",
+            bank_bytes + slab_bytes,
         );
     }
     s.push_str("}\n");
@@ -349,7 +404,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K] [--lanes N]");
+        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K] [--lanes N] [--slab-cache-mb N]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -388,16 +443,18 @@ fn main() -> Result<()> {
         registry,
         args.score_batch,
         args.lanes,
+        args.slab_cache_mb,
     )?;
     let variant = ctx.rt.scorer_variant();
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, scorer: {} x{}, methods: {}, predictor: {})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
         ctx.workers,
         if ctx.workers == 1 { "" } else { "s" },
         ctx.score_batch,
         variant.name(),
         variant.lanes(),
+        ctx.slab_cache_mb,
         ctx.registry.names().join(","),
         ctx.preset.predictor.name(),
     );
@@ -534,6 +591,21 @@ fn main() -> Result<()> {
             stats.lane_time.as_secs_f64(),
         );
     }
+    if let Some(ss) = ctx.slab_cache_stats() {
+        if ss.hits + ss.misses > 0 {
+            eprintln!(
+                "[scorer] slab cache ({} MB budget): {} hits / {} misses \
+                 ({:.0}% hit), {} slabs resident ({:.1} MB), {} evictions",
+                ctx.slab_cache_mb,
+                ss.hits,
+                ss.misses,
+                ss.hit_fraction() * 100.0,
+                ss.resident_slabs,
+                ss.resident_bytes as f64 / 1e6,
+                ss.evictions,
+            );
+        }
+    }
     if let Some(pool) = ctx.pool_stats() {
         let per_shard: Vec<String> = pool
             .per_shard
@@ -551,8 +623,10 @@ fn main() -> Result<()> {
     }
     if let Some(bs) = ctx.bank_share_stats() {
         eprintln!(
-            "[bank] {:.1} MB resident, shared by {} shard{} (private copies would hold {:.1} MB)",
+            "[bank] {:.1} MB resident + {:.1} MB slab cache, shared by {} shard{} \
+             (private copies would hold {:.1} MB)",
             bs.resident_bytes as f64 / 1e6,
+            bs.slab_cache_bytes as f64 / 1e6,
             bs.shards,
             if bs.shards == 1 { "" } else { "s" },
             bs.referenced_bytes as f64 / 1e6,

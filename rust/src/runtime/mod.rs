@@ -12,10 +12,14 @@
 //!    host→device copies* (see coordinator::proxy);
 //!  * when the artifacts carry a **lane-stacked scorer**
 //!    (`scores_quant_lanes{L}.hlo.txt`), a chunk of up to `L` candidates is
-//!    packed into stacked quant-slot buffers and scored by **one** device
+//!    packed into stacked quant-slot slabs and scored by **one** device
 //!    dispatch — per-lane results are bitwise identical to the
 //!    single-candidate scorer, so archives never depend on the dispatch
-//!    strategy (see [`ScorerVariant`]);
+//!    strategy (see [`ScorerVariant`]).  Slab packing **borrows** its rows
+//!    straight from the proxy bank's host pieces (no host mirrors, 1× host
+//!    bank bytes), and packed slabs stay device-resident in a [`SlabCache`]
+//!    so repeat candidate groups — across calibration batches and across
+//!    search generations — cost zero re-uploads (see [`LaneChunkPlan`]);
 //!  * `Runtime` is `Sync` (PJRT clients are thread-safe; every entry point
 //!    takes `&self`), so one runtime + one uploaded `DeviceBank` serve every
 //!    evaluation-pool shard — stats live behind a `Mutex`, not a `RefCell`,
@@ -32,7 +36,7 @@ use crate::quant::QuantizedLinear;
 use crate::Result;
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How each executable argument is sourced, precomputed from the manifest
@@ -172,9 +176,255 @@ pub fn pack_lane_slab<T: Copy>(rows: &[&[T]], lanes: usize) -> Result<Vec<T>> {
     Ok(out)
 }
 
-/// Uploaded buffers for one quantized layer (codes/scale/zero), plus host
-/// mirrors of the packed data so the lane-stacked scorer can re-pack
-/// candidates into lane slabs without reaching back into the proxy bank.
+// ---------------------------------------------------------------------------
+// Slab cache (device-resident lane slabs, LRU under a byte budget)
+// ---------------------------------------------------------------------------
+
+/// Cache key of one packed lane slab: `(layer index, per-lane gene
+/// signature)`.  The signature is the *padded* lane column — each lane's
+/// `(method, bits)` gene at that layer, with partial groups extended by
+/// repeating lane 0 — so two groups that pack to identical slab bytes share
+/// one entry (e.g. `[a, b]` and `[a, b, a]` at 4 lanes both key as
+/// `[a, b, a, a]`).
+pub type SlabKey = (usize, Vec<u16>);
+
+/// Canonical slab signature of one layer of a candidate group: the
+/// per-lane gene column padded to `lanes` by repeating lane 0 — exactly
+/// mirroring the padded slab bytes ([`pack_lane_slab`]), so any two groups
+/// that pack identical slabs share one [`SlabKey`].  The single definition
+/// used by the production planner and the scheduler simulations in
+/// tests/benches.
+///
+/// Panics if `group` is empty or `li` is out of range (caller bugs).
+pub fn lane_slab_sig(group: &[Vec<u16>], li: usize, lanes: usize) -> Vec<u16> {
+    let mut sig: Vec<u16> = group.iter().map(|c| c[li]).collect();
+    sig.resize(lanes, group[0][li]);
+    sig
+}
+
+/// Snapshot of a [`SlabCache`]'s hit/residency counters.  `resident_bytes`
+/// is recomputed from the live entries on every snapshot, so it is exact by
+/// construction (asserted by unit + property tests).
+#[derive(Clone, Debug, Default)]
+pub struct SlabCacheStats {
+    /// Lookups served from a resident slab (zero pack + upload work).
+    pub hits: u64,
+    /// Lookups that had to pack + upload (includes budget-0 bypasses).
+    pub misses: u64,
+    /// Entries dropped to make room under the byte budget.
+    pub evictions: u64,
+    /// Total bytes built through misses (the upload traffic the cache
+    /// could not avoid).
+    pub built_bytes: u64,
+    /// Bytes of the currently resident slabs (sum of live entry sizes).
+    pub resident_bytes: usize,
+    /// Number of currently resident slabs.
+    pub resident_slabs: usize,
+    /// The configured byte budget (`--slab-cache-mb`; 0 = caching off).
+    pub budget_bytes: usize,
+}
+
+impl SlabCacheStats {
+    /// Fraction of lookups served without packing/uploading.
+    pub fn hit_fraction(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct SlabEntry<T> {
+    payload: Arc<T>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct SlabCacheInner<T> {
+    entries: HashMap<SlabKey, SlabEntry<T>>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    built_bytes: u64,
+}
+
+/// An LRU cache of packed lane slabs keyed by [`SlabKey`], bounded by a
+/// byte budget.  The production instance ([`LaneSlabCache`] on the device
+/// bank) stores uploaded [`LaneSlabBufs`], keeping slabs device-resident
+/// across calibration batches and across search generations; the generic
+/// payload keeps the eviction/accounting logic testable without a PJRT
+/// device.
+///
+/// Semantics:
+///  * budget `0` disables retention entirely — every lookup builds (and
+///    returns) a fresh slab that is dropped when its last `Arc` goes away;
+///  * a miss whose slab alone exceeds the budget is returned unstored;
+///  * otherwise least-recently-used entries are evicted until the new slab
+///    fits.  Returned `Arc`s pin their slab for as long as the caller holds
+///    them, so eviction can never invalidate an in-flight dispatch plan.
+///
+/// The cache is a correctness no-op by design: contents are a pure
+/// function of the key, so hit/miss/eviction patterns can change upload
+/// counts but never scores (property-tested in `rust/tests/proptests.rs`).
+pub struct SlabCache<T> {
+    inner: Mutex<SlabCacheInner<T>>,
+    budget_bytes: usize,
+}
+
+impl<T> SlabCache<T> {
+    /// An empty cache with the given byte budget (0 = caching off).
+    pub fn new(budget_bytes: usize) -> SlabCache<T> {
+        SlabCache {
+            inner: Mutex::new(SlabCacheInner {
+                entries: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                built_bytes: 0,
+            }),
+            budget_bytes,
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Look up `key`, building (pack + upload) on a miss.  `build` returns
+    /// the payload and its resident byte size.  The lock is held across the
+    /// build so concurrent shards resolving the same key upload it once —
+    /// the cost is that *distinct*-key misses also serialize, which only
+    /// matters on a cold cache (misses are rare once it warms; a per-key
+    /// latch is the refinement if cold-start packing ever bottlenecks —
+    /// see ROADMAP).
+    pub fn get_or_build<F>(&self, key: SlabKey, build: F) -> Result<Arc<T>>
+    where
+        F: FnOnce() -> Result<(T, usize)>,
+    {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let now = inner.clock;
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.last_used = now;
+            let payload = e.payload.clone();
+            inner.hits += 1;
+            return Ok(payload);
+        }
+        let (payload, bytes) = build()?;
+        inner.misses += 1;
+        inner.built_bytes += bytes as u64;
+        let payload = Arc::new(payload);
+        if self.budget_bytes > 0 && bytes <= self.budget_bytes {
+            // LRU eviction until the new slab fits the budget
+            let mut resident: usize = inner.entries.values().map(|e| e.bytes).sum();
+            while resident + bytes > self.budget_bytes {
+                let oldest = inner
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                    .expect("resident > 0 implies a resident entry");
+                let evicted = inner.entries.remove(&oldest).unwrap();
+                resident -= evicted.bytes;
+                inner.evictions += 1;
+            }
+            inner.entries.insert(
+                key,
+                SlabEntry { payload: payload.clone(), bytes, last_used: now },
+            );
+        }
+        Ok(payload)
+    }
+
+    /// Counter + residency snapshot (`resident_bytes` recomputed from the
+    /// live entries — exact accounting, never a drifting counter).
+    pub fn stats(&self) -> SlabCacheStats {
+        let inner = self.inner.lock().unwrap();
+        SlabCacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            built_bytes: inner.built_bytes,
+            resident_bytes: inner.entries.values().map(|e| e.bytes).sum(),
+            resident_slabs: inner.entries.len(),
+            budget_bytes: self.budget_bytes,
+        }
+    }
+}
+
+/// One uploaded lane slab: the three stacked quant-slot buffers of a
+/// candidate group at one layer (`codes s8[L,N,K]`, `scale f32[L,N,G]`,
+/// `zero f32[L,N,G]`).
+pub struct LaneSlabBufs {
+    /// Stacked codes, `[lanes, out_features, in_features]`.
+    pub codes: xla::PjRtBuffer,
+    /// Stacked scales, `[lanes, out_features, n_groups]`.
+    pub scale: xla::PjRtBuffer,
+    /// Stacked zero points, `[lanes, out_features, n_groups]`.
+    pub zero: xla::PjRtBuffer,
+    /// Device bytes of the three buffers together.
+    pub bytes: usize,
+}
+
+/// The production slab cache: uploaded lane slabs, one per
+/// `(layer, lane signature)` ([`SlabKey`]), owned by the shared device bank.
+pub type LaneSlabCache = SlabCache<LaneSlabBufs>;
+
+/// One lane group of a resolved [`LaneChunkPlan`]: up to `lanes` real
+/// candidates plus the pinned per-layer slabs feeding the dispatch.
+pub struct LaneGroup {
+    /// Real (non-padding) candidates in this group.
+    pub real: usize,
+    /// Per-layer slab buffers, manifest layer order.  `Arc`s pin the slabs
+    /// against cache eviction for the plan's lifetime.
+    pub slabs: Vec<Arc<LaneSlabBufs>>,
+}
+
+/// A chunk's lane-dispatch plan: candidates grouped `lanes` at a time, each
+/// group's quant slabs resolved (packed from borrowed bank pieces, or
+/// reused from the [`SlabCache`]) exactly once.  Build it once per chunk —
+/// [`DeviceProxy::plan_lane_chunk`] — then dispatch it against every
+/// calibration batch ([`Runtime::scores_lane_chunk`]): slab uploads scale
+/// with *distinct slabs*, never with `slabs × batches`.
+///
+/// [`DeviceProxy::plan_lane_chunk`]: crate::coordinator::proxy::DeviceProxy::plan_lane_chunk
+pub struct LaneChunkPlan {
+    groups: Vec<LaneGroup>,
+    n_candidates: usize,
+}
+
+impl LaneChunkPlan {
+    /// Assemble a plan from resolved groups (validated at dispatch time
+    /// against the runtime's lane width and layer count).
+    pub fn new(groups: Vec<LaneGroup>) -> Result<LaneChunkPlan> {
+        eyre::ensure!(!groups.is_empty(), "lane plan needs at least one group");
+        let n_candidates = groups.iter().map(|g| g.real).sum();
+        for g in &groups {
+            eyre::ensure!(g.real > 0, "lane group with zero real candidates");
+        }
+        Ok(LaneChunkPlan { groups, n_candidates })
+    }
+
+    /// Total real candidates across all groups.
+    pub fn n_candidates(&self) -> usize {
+        self.n_candidates
+    }
+
+    /// Device dispatches this plan costs (one per group).
+    pub fn n_dispatches(&self) -> usize {
+        self.groups.len()
+    }
+}
+
+/// Uploaded buffers for one quantized layer (codes/scale/zero).  Holds no
+/// host copies: the lane-stacked scorer packs its slabs straight from the
+/// proxy bank's host pieces ([`Runtime::upload_lane_slab`]), so uploading a
+/// layer costs device bytes only.
 pub struct QuantLayerBufs {
     /// Device-resident int8 codes, `[out_features, in_features]`.
     pub codes: xla::PjRtBuffer,
@@ -184,14 +434,6 @@ pub struct QuantLayerBufs {
     pub zero: xla::PjRtBuffer,
     /// Bit-width the codes were quantized at.
     pub bits: u8,
-    /// Host mirror of `codes` (lane-slab packing source).  Empty when the
-    /// uploading runtime has no lane-stacked executable — the per-candidate
-    /// path never reads the mirrors, so they are not retained.
-    pub host_codes: Vec<i8>,
-    /// Host mirror of `scale` (empty without a lane-stacked executable).
-    pub host_scale: Vec<f32>,
-    /// Host mirror of `zero` (empty without a lane-stacked executable).
-    pub host_zero: Vec<f32>,
     /// `out_features`.
     pub rows: usize,
     /// `in_features`.
@@ -390,12 +632,13 @@ impl Runtime {
         self.manifest.model.vocab_size
     }
 
-    /// Which scorer executable `scores_chunk` dispatches *multi-candidate*
-    /// chunks through.  Single-candidate chunks always take the
-    /// per-candidate path (resident buffers, no slab packing), so a
-    /// lane-stacked runtime driven only by 1-candidate chunks (e.g.
-    /// `--score-batch 1`) reports this variant with `lane_dispatches = 0` —
-    /// the stats, not the variant, say what actually ran.
+    /// Which scorer executable *multi-candidate* chunks dispatch through
+    /// (the evaluator routes on the shared [`lane_routed`] predicate).
+    /// Single-candidate chunks always take the per-candidate path
+    /// (resident buffers, no slab packing), so a lane-stacked runtime
+    /// driven only by 1-candidate chunks (e.g. `--score-batch 1`) reports
+    /// this variant with `lane_dispatches = 0` — the stats, not the
+    /// variant, say what actually ran.
     pub fn scorer_variant(&self) -> ScorerVariant {
         if self.lanes_exec.is_some() {
             ScorerVariant::LaneStacked { lanes: self.lanes }
@@ -436,27 +679,63 @@ impl Runtime {
 
     /// Upload one quantized layer (codes as int8 + f32 scale/zero).
     /// The AOT kernel consumes s8 codes; grouped codes are <= 15 so the
-    /// u8 -> i8 conversion is lossless (asserted).  Host mirrors are
-    /// retained only when this runtime has a lane-stacked executable to
-    /// feed them to — on the per-candidate path they would be dead weight.
+    /// u8 -> i8 conversion is lossless (asserted).  No host copies are
+    /// retained: lane-slab packing borrows rows from the proxy bank's host
+    /// pieces instead ([`Runtime::upload_lane_slab`]), so the host bank is
+    /// resident exactly once whatever scorer variant runs.
     pub fn upload_quant_layer(&self, q: &QuantizedLinear) -> Result<QuantLayerBufs> {
         let n = q.out_features;
         let k = q.in_features;
         let g = q.n_groups();
         eyre::ensure!(q.bits <= 4, "AOT kernel path supports <= 4-bit codes");
         let codes_i8: Vec<i8> = q.codes.iter().map(|&c| c as i8).collect();
-        let mirrors = self.lanes_exec.is_some();
         Ok(QuantLayerBufs {
             codes: self.upload_i8(&codes_i8, &[n, k])?,
             scale: self.upload_f32(&q.scale, &[n, g])?,
             zero: self.upload_f32(&q.zero, &[n, g])?,
             bits: q.bits,
-            host_codes: if mirrors { codes_i8 } else { Vec::new() },
-            host_scale: if mirrors { q.scale.clone() } else { Vec::new() },
-            host_zero: if mirrors { q.zero.clone() } else { Vec::new() },
             rows: n,
             cols: k,
             groups: g,
+        })
+    }
+
+    /// Pack one candidate group's pieces at one layer into a `[lanes, ...]`
+    /// slab set and upload it.  `pieces` are **borrowed** straight from the
+    /// proxy bank (or any host-side [`QuantizedLinear`]s) — zero host
+    /// copies beyond the transient packed slab itself; partial groups are
+    /// padded by repeating lane 0 ([`pack_lane_slab`]).  Requires the
+    /// lane-stacked executable; all pieces must share lane 0's geometry.
+    pub fn upload_lane_slab(&self, pieces: &[&QuantizedLinear]) -> Result<LaneSlabBufs> {
+        eyre::ensure!(
+            self.lanes_exec.is_some(),
+            "lane-slab upload without a lane-stacked executable"
+        );
+        let lanes = self.lanes;
+        let lead = pieces
+            .first()
+            .ok_or_else(|| eyre::anyhow!("lane slab needs at least one piece"))?;
+        let (n, k, g) = (lead.out_features, lead.in_features, lead.n_groups());
+        for p in pieces {
+            eyre::ensure!(p.bits <= 4, "AOT kernel path supports <= 4-bit codes");
+            eyre::ensure!(
+                p.out_features == n && p.in_features == k && p.n_groups() == g,
+                "lane slab pieces must share lane 0's geometry"
+            );
+        }
+        let code_rows: Vec<&[u8]> = pieces.iter().map(|p| p.codes.as_slice()).collect();
+        let codes: Vec<i8> =
+            pack_lane_slab(&code_rows, lanes)?.iter().map(|&c| c as i8).collect();
+        let scale_rows: Vec<&[f32]> = pieces.iter().map(|p| p.scale.as_slice()).collect();
+        let scale = pack_lane_slab(&scale_rows, lanes)?;
+        let zero_rows: Vec<&[f32]> = pieces.iter().map(|p| p.zero.as_slice()).collect();
+        let zero = pack_lane_slab(&zero_rows, lanes)?;
+        let bytes = codes.len() + (scale.len() + zero.len()) * 4;
+        Ok(LaneSlabBufs {
+            codes: self.upload_i8(&codes, &[lanes, n, k])?,
+            scale: self.upload_f32(&scale, &[lanes, n, g])?,
+            zero: self.upload_f32(&zero, &[lanes, n, g])?,
+            bytes,
         })
     }
 
@@ -561,18 +840,17 @@ impl Runtime {
     }
 
     /// Fused scorer over a *chunk* of assembled candidates on one batch —
-    /// the microbatch dispatch unit of the evaluation hot path.  Results
-    /// are per-candidate, in input order, and bit-identical to calling
-    /// [`Runtime::scores`] per candidate whichever [`ScorerVariant`] runs:
+    /// the **per-candidate** microbatch dispatch unit: static argument
+    /// slots (tokens/mask/fp logits/fp params) are resolved once per chunk
+    /// and per-candidate marshalling patches only the quant-slot positions
+    /// to the resident bank buffers — zero uploads, one device call per
+    /// candidate.  Results are per-candidate, in input order.
     ///
-    ///  * **lane-stacked** (artifact present, chunk > 1 candidate): the
-    ///    chunk is split into groups of up to `lanes` candidates; each
-    ///    group's quant buffers are packed into `[lanes, ...]` slabs
-    ///    (partial groups padded with lane 0, padded outputs discarded)
-    ///    and scored by one device dispatch.
-    ///  * **per-candidate** (fallback): the static argument slots
-    ///    (tokens/mask/fp logits/fp params) are resolved once per chunk and
-    ///    per-candidate marshalling patches only the quant-slot positions.
+    /// Multi-candidate chunks on a lane-stacked runtime go through
+    /// [`Runtime::scores_lane_chunk`] instead (the packing sources live on
+    /// the proxy bank, so the routing decision belongs to the caller — see
+    /// `coordinator::proxy::mean_jsd_batch` and the shared [`lane_routed`]
+    /// predicate); both paths are bit-identical per candidate.
     ///
     /// The stats lock is taken once per chunk, not once per candidate.
     pub fn scores_chunk(
@@ -586,11 +864,7 @@ impl Runtime {
         for layers in candidates {
             eyre::ensure!(layers.len() == self.manifest.layers.len());
         }
-        if self.lanes_exec.is_some() && lane_routed(candidates.len(), self.lanes) {
-            self.scores_chunk_lanes(batch, candidates)
-        } else {
-            self.scores_chunk_per_candidate(batch, candidates)
-        }
+        self.scores_chunk_per_candidate(batch, candidates)
     }
 
     fn scores_chunk_per_candidate(
@@ -646,53 +920,69 @@ impl Runtime {
         Ok(out)
     }
 
-    fn scores_chunk_lanes(
+    /// Fused scorer over a resolved [`LaneChunkPlan`] on one batch: one
+    /// device dispatch per lane group, static slots fed from the resident
+    /// batch/param buffers and quant slots from the plan's pinned slabs —
+    /// **zero uploads per call** (all upload work happened when the plan
+    /// was built, typically amortized away by the [`SlabCache`]).  Padded
+    /// lanes' outputs are discarded; per-lane results are bitwise identical
+    /// to [`Runtime::scores`] on the same candidate.
+    ///
+    /// Call the plan against every calibration batch: that is what makes
+    /// multi-batch lane scoring cost one upload per *distinct slab* per
+    /// search instead of per `(slab, batch)` pair.
+    pub fn scores_lane_chunk(
         &self,
         batch: &ScoreBatch,
-        candidates: &[&[&QuantLayerBufs]],
+        plan: &LaneChunkPlan,
     ) -> Result<Vec<(f32, f32)>> {
-        let exec = self.lanes_exec.as_ref().expect("lane path without lane exec");
+        let exec = self
+            .lanes_exec
+            .as_ref()
+            .ok_or_else(|| eyre::anyhow!("lane dispatch without a lane-stacked executable"))?;
         let lanes = self.lanes;
-        // Pack each quant slot's group members into one [lanes, ...] slab;
-        // static slots reuse the resident buffers.  Two passes per group so
-        // the freshly uploaded slabs outlive the borrowed arg list.
-        enum Src<'a> {
-            Static(&'a xla::PjRtBuffer),
-            Slab(usize),
-        }
-        let mut out = Vec::with_capacity(candidates.len());
+        let mut out = Vec::with_capacity(plan.n_candidates);
         let mut dispatches = 0u64;
+        let mut padded = 0u64;
         let mut spent = Duration::ZERO;
-        for group in candidates.chunks(lanes) {
-            let mut plan: Vec<Src> = Vec::with_capacity(self.lanes_plan.len());
-            let mut slabs: Vec<xla::PjRtBuffer> = Vec::new();
+        for group in &plan.groups {
+            eyre::ensure!(
+                group.slabs.len() == self.manifest.layers.len(),
+                "lane group resolved {} layer slabs, manifest has {}",
+                group.slabs.len(),
+                self.manifest.layers.len()
+            );
+            eyre::ensure!(
+                group.real <= lanes,
+                "lane group carries {} candidates for {lanes} lanes",
+                group.real
+            );
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.lanes_plan.len());
             for slot in &self.lanes_plan {
                 match slot {
-                    ArgSlot::Tokens => plan.push(Src::Static(&batch.tokens)),
-                    ArgSlot::Mask => plan.push(Src::Static(&batch.mask)),
-                    ArgSlot::FpLogits => plan.push(Src::Static(&batch.fp_logits)),
-                    ArgSlot::FpParam(name) => plan.push(Src::Static(
+                    ArgSlot::Tokens => args.push(&batch.tokens),
+                    ArgSlot::Mask => args.push(&batch.mask),
+                    ArgSlot::FpLogits => args.push(&batch.fp_logits),
+                    ArgSlot::FpParam(name) => args.push(
                         self.fp_param_bufs
                             .get(name)
                             .ok_or_else(|| eyre::anyhow!("missing fp param {name}"))?,
-                    )),
+                    ),
                     ArgSlot::Quant(li, part) => {
-                        plan.push(Src::Slab(slabs.len()));
-                        slabs.push(self.upload_lane_slab(group, *li, *part)?);
+                        let slab = &group.slabs[*li];
+                        args.push(match part {
+                            0 => &slab.codes,
+                            1 => &slab.scale,
+                            _ => &slab.zero,
+                        });
                     }
                 }
             }
-            let args: Vec<&xla::PjRtBuffer> = plan
-                .iter()
-                .map(|src| match src {
-                    Src::Static(b) => *b,
-                    Src::Slab(i) => &slabs[*i],
-                })
-                .collect();
             let t0 = Instant::now();
             let res = exec.execute_b(&args)?;
             let lit = res[0][0].to_literal_sync()?;
             dispatches += 1;
+            padded += (lanes - group.real) as u64;
             spent += t0.elapsed();
             let (jsd, ce) = lit.to_tuple2()?;
             let jsd = jsd.to_vec::<f32>()?;
@@ -703,54 +993,18 @@ impl Runtime {
                 jsd.len()
             );
             // keep real lanes, discard the lane-0 padding copies
-            for (&j, &c) in jsd.iter().zip(&ce).take(group.len()) {
+            for (&j, &c) in jsd.iter().zip(&ce).take(group.real) {
                 out.push((j, c));
             }
         }
         {
             let mut s = self.stats.lock().unwrap();
             s.lane_dispatches += dispatches;
-            s.lane_candidates += candidates.len() as u64;
-            s.lane_padded += lane_padding(candidates.len(), lanes) as u64;
+            s.lane_candidates += plan.n_candidates as u64;
+            s.lane_padded += padded;
             s.lane_time += spent;
         }
         Ok(out)
-    }
-
-    /// Stack one quant slot of a candidate group into a `[lanes, ...]`
-    /// device buffer (lane-0 padding for partial groups).
-    fn upload_lane_slab(
-        &self,
-        group: &[&[&QuantLayerBufs]],
-        li: usize,
-        part: u8,
-    ) -> Result<xla::PjRtBuffer> {
-        let lead = group[0][li];
-        eyre::ensure!(
-            lead.host_codes.len() == lead.rows * lead.cols,
-            "lane-stacked dispatch needs host mirrors, but these buffers were \
-             uploaded without them (by a runtime without the lane executable?)"
-        );
-        match part {
-            0 => {
-                let rows: Vec<&[i8]> =
-                    group.iter().map(|layers| layers[li].host_codes.as_slice()).collect();
-                let slab = pack_lane_slab(&rows, self.lanes)?;
-                self.upload_i8(&slab, &[self.lanes, lead.rows, lead.cols])
-            }
-            1 => {
-                let rows: Vec<&[f32]> =
-                    group.iter().map(|layers| layers[li].host_scale.as_slice()).collect();
-                let slab = pack_lane_slab(&rows, self.lanes)?;
-                self.upload_f32(&slab, &[self.lanes, lead.rows, lead.groups])
-            }
-            _ => {
-                let rows: Vec<&[f32]> =
-                    group.iter().map(|layers| layers[li].host_zero.as_slice()).collect();
-                let slab = pack_lane_slab(&rows, self.lanes)?;
-                self.upload_f32(&slab, &[self.lanes, lead.rows, lead.groups])
-            }
-        }
     }
 
     /// Quantized-model logits (task evaluation path).
@@ -1003,5 +1257,122 @@ mod tests {
         assert_eq!(s.scorer_dispatches(), 2);
         s.scores_calls = 5;
         assert_eq!(s.scorer_dispatches(), 7);
+    }
+
+    #[test]
+    fn lane_slab_sig_is_padded_and_canonical() {
+        let a = vec![2u16, 7];
+        let b = vec![3u16, 8];
+        // padded with lane 0's gene, per layer
+        assert_eq!(lane_slab_sig(&[a.clone(), b.clone()], 0, 4), vec![2, 3, 2, 2]);
+        assert_eq!(lane_slab_sig(&[a.clone(), b.clone()], 1, 4), vec![7, 8, 7, 7]);
+        // a group whose explicit tail repeats lane 0 keys identically —
+        // same packed bytes, same slab-cache entry
+        assert_eq!(
+            lane_slab_sig(&[a.clone(), b, a.clone()], 0, 4),
+            lane_slab_sig(&[a.clone(), vec![3, 8]], 0, 4)
+        );
+        // full group: no padding
+        assert_eq!(lane_slab_sig(&[a.clone(), a], 0, 2), vec![2, 2]);
+    }
+
+    // -- slab cache (host-testable generic payload) ----------------------
+
+    fn key(li: usize, sig: &[u16]) -> SlabKey {
+        (li, sig.to_vec())
+    }
+
+    /// Build closure standing in for pack+upload: payload = the key echoed
+    /// back, so a stale/wrong entry is detectable by the caller.
+    fn build(li: usize, sig: &[u16], bytes: usize) -> Result<((usize, Vec<u16>), usize)> {
+        Ok(((li, sig.to_vec()), bytes))
+    }
+
+    #[test]
+    fn slab_cache_hits_and_exact_residency() {
+        let cache: SlabCache<(usize, Vec<u16>)> = SlabCache::new(1000);
+        let a = cache.get_or_build(key(0, &[2, 3]), || build(0, &[2, 3], 300)).unwrap();
+        assert_eq!(*a, (0, vec![2, 3]));
+        let b = cache.get_or_build(key(1, &[2, 3]), || build(1, &[2, 3], 400)).unwrap();
+        assert_eq!(*b, (1, vec![2, 3]));
+        // same key again: a hit returning the same Arc, no rebuild
+        let a2 = cache
+            .get_or_build(key(0, &[2, 3]), || panic!("hit must not rebuild"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &a2));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        // exact accounting: reported bytes == sum of live entry sizes
+        assert_eq!(s.resident_bytes, 300 + 400);
+        assert_eq!(s.resident_slabs, 2);
+        assert_eq!(s.built_bytes, 700);
+        assert!((s.hit_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.budget_bytes, 1000);
+    }
+
+    #[test]
+    fn slab_cache_evicts_least_recently_used() {
+        let cache: SlabCache<(usize, Vec<u16>)> = SlabCache::new(1000);
+        cache.get_or_build(key(0, &[2]), || build(0, &[2], 400)).unwrap();
+        cache.get_or_build(key(1, &[2]), || build(1, &[2], 400)).unwrap();
+        // touch key 0 so key 1 becomes the LRU victim
+        cache.get_or_build(key(0, &[2]), || panic!("hit")).unwrap();
+        cache.get_or_build(key(2, &[2]), || build(2, &[2], 400)).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_bytes, 800);
+        // key 0 survived (it was touched), key 1 was evicted
+        cache.get_or_build(key(0, &[2]), || panic!("0 must be resident")).unwrap();
+        let mut rebuilt = false;
+        cache
+            .get_or_build(key(1, &[2]), || {
+                rebuilt = true;
+                build(1, &[2], 400)
+            })
+            .unwrap();
+        assert!(rebuilt, "evicted key must rebuild");
+    }
+
+    #[test]
+    fn slab_cache_budget_zero_bypasses_retention() {
+        let cache: SlabCache<(usize, Vec<u16>)> = SlabCache::new(0);
+        for _ in 0..3 {
+            let v = cache.get_or_build(key(0, &[2]), || build(0, &[2], 100)).unwrap();
+            assert_eq!(*v, (0, vec![2]), "bypass still returns correct content");
+        }
+        let s = cache.stats();
+        assert_eq!(s.hits, 0, "budget 0 never retains, so never hits");
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.resident_slabs, 0);
+    }
+
+    #[test]
+    fn slab_cache_oversized_entry_returned_unstored() {
+        let cache: SlabCache<(usize, Vec<u16>)> = SlabCache::new(100);
+        cache.get_or_build(key(0, &[2]), || build(0, &[2], 80)).unwrap();
+        // a slab bigger than the whole budget must not wipe the cache
+        let big = cache.get_or_build(key(9, &[4]), || build(9, &[4], 500)).unwrap();
+        assert_eq!(*big, (9, vec![4]));
+        let s = cache.stats();
+        assert_eq!(s.evictions, 0, "oversized entries evict nothing");
+        assert_eq!(s.resident_bytes, 80, "prior resident entry survives");
+        cache.get_or_build(key(0, &[2]), || panic!("must still be resident")).unwrap();
+    }
+
+    #[test]
+    fn lane_chunk_plan_validates_groups() {
+        assert!(LaneChunkPlan::new(Vec::new()).is_err(), "empty plan");
+        assert!(
+            LaneChunkPlan::new(vec![LaneGroup { real: 0, slabs: Vec::new() }]).is_err(),
+            "zero-real group"
+        );
+        let plan = LaneChunkPlan::new(vec![
+            LaneGroup { real: 8, slabs: Vec::new() },
+            LaneGroup { real: 5, slabs: Vec::new() },
+        ])
+        .unwrap();
+        assert_eq!(plan.n_candidates(), 13);
+        assert_eq!(plan.n_dispatches(), 2);
     }
 }

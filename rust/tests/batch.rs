@@ -1,24 +1,26 @@
 //! Microbatched-scoring integration tests (no artifacts required): the
-//! dedup + `--score-batch` dispatch pipeline and the lane-stacked scorer
-//! scheduler must change *dispatch counts only* — the search archive stays
-//! byte-identical across every `(workers, score-batch, lanes)` combination,
-//! and the shared device bank's bytes are counted once no matter how many
-//! shards reference it.
+//! dedup + `--score-batch` dispatch pipeline, the lane-stacked scorer
+//! scheduler and the slab cache must change *dispatch/upload counts only*
+//! — the search archive stays byte-identical across every
+//! `(workers, score-batch, lanes, slab-cache)` combination, and the shared
+//! device bank's bytes (pieces + resident slabs) are counted once no
+//! matter how many shards reference them.
 
 use amq::coordinator::{
-    run_search, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool, PooledEvaluator,
-    ProxyBank, SearchParams, SearchSpace,
+    run_search, slab_budget_bytes, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool,
+    PooledEvaluator, ProxyBank, SearchParams, SearchSpace,
 };
 use amq::data::Manifest;
 use amq::quant::{MethodId, Quantizer};
 use amq::runtime::{
-    lane_dispatch_count, lane_padding, lane_routed, planned_scorer_variant, EvalService,
-    ScorerVariant,
+    lane_dispatch_count, lane_padding, lane_routed, lane_slab_sig, planned_scorer_variant,
+    EvalService, ScorerVariant, SlabCache,
 };
 use amq::tensor::Mat;
 use amq::util::Rng;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 fn toy_space(n: usize) -> SearchSpace {
     SearchSpace {
@@ -334,6 +336,227 @@ fn manifest_without_lane_artifact_falls_back_per_candidate() {
         ScorerVariant::PerCandidate
     );
     assert!(planned_scorer_variant(&lane, 4).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Slab-cache matrix: archive identity, upload accounting, eviction safety
+// ---------------------------------------------------------------------------
+
+/// Simulated slab byte size (one size fits the toy geometry).
+const SLAB_BYTES: usize = 1 << 14;
+
+struct SlabCounters {
+    /// Slab lookups issued by plan building (hits + misses).
+    resolutions: AtomicU64,
+    /// Slab pack+upload events (cache misses).
+    uploads: AtomicU64,
+    /// Distinct slab keys ever resolved.
+    distinct: Mutex<HashSet<(usize, Vec<u16>)>>,
+    /// Device dispatches (lane groups × batches on the lane path).
+    dispatches: AtomicU64,
+}
+
+/// Pool whose shard closure simulates the production lane scheduler
+/// *through the slabs*: per chunk, a plan resolves each group's per-layer
+/// slab via the shared [`SlabCache`] (payload = the padded lane signature,
+/// exactly what the packed bytes encode) and is then replayed across
+/// `batches` calibration batches.  Candidate scores are reconstructed from
+/// the **slab contents**, so a stale or miskeyed cache entry corrupts the
+/// archive — cache transparency is load-bearing, not asserted on the side.
+fn slab_pooled(
+    workers: usize,
+    score_batch: usize,
+    lanes: usize,
+    slab_budget: usize,
+    batches: usize,
+    n_layers: usize,
+) -> (PooledEvaluator, Arc<SlabCounters>) {
+    let counters = Arc::new(SlabCounters {
+        resolutions: AtomicU64::new(0),
+        uploads: AtomicU64::new(0),
+        distinct: Mutex::new(HashSet::new()),
+        dispatches: AtomicU64::new(0),
+    });
+    let cache: Arc<SlabCache<Vec<u16>>> = Arc::new(SlabCache::new(slab_budget));
+    let shared = counters.clone();
+    let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(workers, move |_shard| {
+        let counters = shared.clone();
+        let cache = cache.clone();
+        move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
+            if lane_routed(chunk.len(), lanes) {
+                // plan once per chunk: resolve every group's layer slabs
+                let mut plan: Vec<(usize, Vec<Arc<Vec<u16>>>)> = Vec::new();
+                for group in chunk.chunks(lanes) {
+                    let mut slabs = Vec::with_capacity(n_layers);
+                    for li in 0..n_layers {
+                        let sig = lane_slab_sig(group, li, lanes);
+                        let key = (li, sig.clone());
+                        counters.resolutions.fetch_add(1, Ordering::Relaxed);
+                        let slab = cache.get_or_build(key.clone(), || {
+                            counters.uploads.fetch_add(1, Ordering::Relaxed);
+                            counters.distinct.lock().unwrap().insert(key.clone());
+                            Ok((sig.clone(), SLAB_BYTES))
+                        })?;
+                        slabs.push(slab);
+                    }
+                    plan.push((group.len(), slabs));
+                }
+                // replay the pinned plan across every calibration batch:
+                // zero uploads inside this loop, by construction
+                let mut sums = vec![0.0f64; chunk.len()];
+                for _ in 0..batches {
+                    let mut idx = 0;
+                    for (real, slabs) in &plan {
+                        counters.dispatches.fetch_add(1, Ordering::Relaxed);
+                        for j in 0..*real {
+                            // the device reads the slab, not the candidate
+                            let cfg: Config =
+                                (0..n_layers).map(|li| slabs[li][j]).collect();
+                            sums[idx] += synth_jsd(&cfg) as f64;
+                            idx += 1;
+                        }
+                    }
+                }
+                Ok(sums.into_iter().map(|s| (s / batches as f64) as f32).collect())
+            } else {
+                // per-candidate path: resident buffers, no slabs
+                let mut out = Vec::with_capacity(chunk.len());
+                for cfg in &chunk {
+                    counters.dispatches.fetch_add(batches as u64, Ordering::Relaxed);
+                    let mut sum = 0.0f64;
+                    for _ in 0..batches {
+                        sum += synth_jsd(cfg) as f64;
+                    }
+                    out.push((sum / batches as f64) as f32);
+                }
+                Ok(out)
+            }
+        }
+    }));
+    (
+        PooledEvaluator::from_service(svc).with_score_batch(score_batch),
+        counters,
+    )
+}
+
+#[test]
+fn archive_identical_across_slab_cache_budgets() {
+    // {slab-cache 0, 64 MB} x {lanes 1, 8}: the cache may only change
+    // upload counts, never the archive — and because the simulated scores
+    // flow *through* the cached slabs, a correctness bug here shows up as
+    // an archive hash mismatch, not just a counter drift
+    let n_layers = 12;
+    let space = toy_space(n_layers);
+    let mut params = SearchParams::smoke();
+    params.seed = 53;
+
+    struct Seq(usize);
+    impl ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.0 += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.0
+        }
+    }
+    let baseline = run_search(&space, &mut Seq(0), &params).unwrap();
+    let expect = archive_hash(&baseline.archive);
+
+    for lanes in [1usize, 8] {
+        for budget_mb in [0usize, 64] {
+            let (mut ev, counters) =
+                slab_pooled(2, 8, lanes, slab_budget_bytes(budget_mb), 1, n_layers);
+            let res = run_search(&space, &mut ev, &params).unwrap();
+            assert_eq!(
+                archive_hash(&res.archive),
+                expect,
+                "archive diverged at lanes={lanes} slab_cache={budget_mb}MB"
+            );
+            assert_eq!(res.true_evals, baseline.true_evals);
+            let uploads = counters.uploads.load(Ordering::Relaxed);
+            let distinct = counters.distinct.lock().unwrap().len() as u64;
+            let resolutions = counters.resolutions.load(Ordering::Relaxed);
+            if lanes == 1 {
+                assert_eq!(uploads, 0, "per-candidate path must not pack slabs");
+                assert_eq!(resolutions, 0);
+            } else if budget_mb > 0 {
+                // ample budget: exactly one upload per distinct slab
+                assert_eq!(uploads, distinct, "cached run re-uploaded a resident slab");
+            } else {
+                // cache off: every lookup re-packs and re-uploads
+                assert_eq!(uploads, resolutions, "budget 0 must re-pack per lookup");
+                assert!(resolutions >= distinct);
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_batch_uploads_count_distinct_slabs_not_batches() {
+    // the acceptance pin: with B calibration batches, slab uploads scale
+    // with *distinct slabs*, never with slabs × batches — the plan is
+    // resolved once per chunk and replayed, and the cache carries slabs
+    // across chunks and generations
+    let n_layers = 10;
+    let configs: Vec<Config> = (0..24)
+        .map(|i| (0..n_layers).map(|j| [2u16, 3, 4][(i + j) % 3]).collect())
+        .collect();
+    let mut counts = Vec::new();
+    for batches in [1usize, 3] {
+        let (mut ev, counters) = slab_pooled(1, 8, 8, slab_budget_bytes(64), batches, n_layers);
+        // two identical generations: the second is pure cache traffic at
+        // the evaluator level, so no new slab work at all
+        let first = ev.eval_jsd_batch(&configs).unwrap();
+        let second = ev.eval_jsd_batch(&configs).unwrap();
+        assert_eq!(first, second);
+        let uploads = counters.uploads.load(Ordering::Relaxed);
+        let distinct = counters.distinct.lock().unwrap().len() as u64;
+        assert_eq!(
+            uploads, distinct,
+            "uploads must equal distinct slabs at {batches} batches"
+        );
+        // dispatches do scale with batches (that is the scoring work)...
+        let groups: u64 = configs
+            .chunks(8)
+            .map(|c| lane_dispatch_count(c.len(), 8) as u64)
+            .sum();
+        assert_eq!(
+            counters.dispatches.load(Ordering::Relaxed),
+            groups * batches as u64
+        );
+        counts.push(uploads);
+    }
+    // ...but uploads are batch-count invariant
+    assert_eq!(counts[0], counts[1], "slab uploads scaled with batches");
+}
+
+#[test]
+fn eviction_under_tiny_budget_still_scores_correctly() {
+    // a budget holding exactly one slab churns constantly; scores must
+    // stay identical to the uncached baseline, and uploads must still not
+    // scale with the calibration-batch count (plans pin their slabs)
+    let n_layers = 6;
+    let configs: Vec<Config> = (0..16)
+        .map(|i| (0..n_layers).map(|j| [2u16, 3, 4][(i + 2 * j) % 3]).collect())
+        .collect();
+    let want: Vec<f32> = configs.iter().map(synth_jsd).collect();
+    let mut uploads_by_batches = Vec::new();
+    for batches in [1usize, 3] {
+        let (mut ev, counters) = slab_pooled(1, 8, 8, SLAB_BYTES, batches, n_layers);
+        let got = ev.eval_jsd_batch(&configs).unwrap();
+        assert_eq!(got, want, "eviction changed scores at {batches} batches");
+        uploads_by_batches.push(counters.uploads.load(Ordering::Relaxed));
+        let distinct = counters.distinct.lock().unwrap().len() as u64;
+        assert!(
+            counters.uploads.load(Ordering::Relaxed) >= distinct,
+            "thrashing cache cannot beat one upload per distinct slab"
+        );
+    }
+    assert_eq!(
+        uploads_by_batches[0], uploads_by_batches[1],
+        "pinned plans must keep uploads batch-invariant even while evicting"
+    );
 }
 
 #[test]

@@ -158,13 +158,16 @@ fn runtime_end_to_end() {
     let mask = vec![1.0f32; b * t];
     let batch = rt.prepare_batch(toks, &mask).unwrap();
 
-    // quantize every layer at 3 bits with HQQ (the proxy quantizer)
+    // quantize every layer at 3 bits with HQQ (the proxy quantizer); keep
+    // the host pieces — they are the borrowed pack source of the lane path
     let hqq = Hqq::default();
+    let mut p3 = Vec::new();
     let mut qlayers = Vec::new();
     for l in &m.layers {
         let w = assets.weights.linear(&l.name).unwrap();
         let q = hqq.quantize(&w, 3, m.group_size, None);
         qlayers.push(rt.upload_quant_layer(&q).unwrap());
+        p3.push(q);
     }
     let refs: Vec<&_> = qlayers.iter().collect();
     let (jsd_fused, ce_fused) = rt.scores(&batch, &refs).unwrap();
@@ -185,12 +188,18 @@ fn runtime_end_to_end() {
     );
 
     // -- monotonicity: 2-bit hurts more than 4-bit --------------------------
+    let mut p2 = Vec::new();
+    let mut p4 = Vec::new();
     let mut q2 = Vec::new();
     let mut q4 = Vec::new();
     for l in &m.layers {
         let w = assets.weights.linear(&l.name).unwrap();
-        q2.push(rt.upload_quant_layer(&hqq.quantize(&w, 2, m.group_size, None)).unwrap());
-        q4.push(rt.upload_quant_layer(&hqq.quantize(&w, 4, m.group_size, None)).unwrap());
+        let a = hqq.quantize(&w, 2, m.group_size, None);
+        let b = hqq.quantize(&w, 4, m.group_size, None);
+        q2.push(rt.upload_quant_layer(&a).unwrap());
+        q4.push(rt.upload_quant_layer(&b).unwrap());
+        p2.push(a);
+        p4.push(b);
     }
     let r2: Vec<&_> = q2.iter().collect();
     let r4: Vec<&_> = q4.iter().collect();
@@ -198,26 +207,66 @@ fn runtime_end_to_end() {
     let (jsd4, _) = rt.scores(&batch, &r4).unwrap();
 
     // -- lane-stacked dispatch is invisible in the results ----------------
-    // A multi-candidate chunk routes through the lane-stacked executable
-    // when the artifact carries one; per-candidate `scores` calls above are
-    // the reference.  The contract is *bitwise* equality per candidate.
+    // A multi-candidate chunk dispatches through a LaneChunkPlan whose
+    // slabs are packed from rows borrowed straight from the host pieces
+    // and held in a SlabCache; per-candidate `scores` calls above are the
+    // reference.  The contract is *bitwise* equality per candidate.
     if let ScorerVariant::LaneStacked { lanes } = rt.scorer_variant() {
+        use amq::coordinator::slab_budget_bytes;
+        use amq::runtime::{lane_slab_sig, LaneChunkPlan, LaneGroup, LaneSlabCache};
+        assert!(lanes >= 3, "default artifact lane count should hold a 3-chunk");
+        let n_layers = m.layers.len();
+        let cache = LaneSlabCache::new(slab_budget_bytes(64));
+        let group: Vec<Vec<u16>> = [2u16, 3, 4]
+            .iter()
+            .map(|&b| vec![b; n_layers])
+            .collect();
+        let resolve = |cache: &LaneSlabCache| -> LaneChunkPlan {
+            let mut slabs = Vec::with_capacity(n_layers);
+            for li in 0..n_layers {
+                let sig = lane_slab_sig(&group, li, lanes);
+                let slab = cache
+                    .get_or_build((li, sig), || {
+                        let pieces = [&p2[li], &p3[li], &p4[li]];
+                        let bufs = rt.upload_lane_slab(&pieces)?;
+                        let bytes = bufs.bytes;
+                        Ok((bufs, bytes))
+                    })
+                    .unwrap();
+                slabs.push(slab);
+            }
+            LaneChunkPlan::new(vec![LaneGroup { real: 3, slabs }]).unwrap()
+        };
+        let plan = resolve(&cache);
+        assert_eq!(cache.stats().misses, n_layers as u64);
         let before = rt.stats();
-        let chunk = rt
-            .scores_chunk(&batch, &[r2.as_slice(), refs.as_slice(), r4.as_slice()])
-            .unwrap();
-        let after = rt.stats();
+        let chunk = rt.scores_lane_chunk(&batch, &plan).unwrap();
         assert_eq!(chunk[0].0.to_bits(), jsd2.to_bits(), "lane 0 jsd drifted");
         assert_eq!(chunk[1].0.to_bits(), jsd_fused.to_bits(), "lane 1 jsd drifted");
         assert_eq!(chunk[2].0.to_bits(), jsd4.to_bits(), "lane 2 jsd drifted");
         assert_eq!(chunk[1].1.to_bits(), ce_fused.to_bits(), "lane 1 ce drifted");
-        // 3 candidates <= L lanes: exactly one lane dispatch, padded tail
-        assert!(lanes >= 3, "default artifact lane count should hold a 3-chunk");
-        assert_eq!(after.lane_dispatches - before.lane_dispatches, 1);
-        assert_eq!(after.lane_candidates - before.lane_candidates, 3);
+        // replaying the pinned plan (the multi-calibration-batch shape)
+        // costs zero further uploads and reproduces the results bitwise
+        let upload_mark = rt.stats().upload_bytes;
+        let chunk2 = rt.scores_lane_chunk(&batch, &plan).unwrap();
+        assert_eq!(rt.stats().upload_bytes, upload_mark, "plan replay uploaded");
+        for (a, b) in chunk.iter().zip(&chunk2) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        // re-resolving the same candidate group is pure cache hits
+        let _plan2 = resolve(&cache);
+        let cs = cache.stats();
+        assert_eq!(cs.misses, n_layers as u64, "re-resolve must not re-pack");
+        assert_eq!(cs.hits, n_layers as u64);
+        assert!(cs.resident_bytes > 0);
+        let after = rt.stats();
+        // 3 candidates <= L lanes: one lane dispatch per replay, padded tail
+        assert_eq!(after.lane_dispatches - before.lane_dispatches, 2);
+        assert_eq!(after.lane_candidates - before.lane_candidates, 6);
         assert_eq!(
             after.lane_padded - before.lane_padded,
-            (lanes - 3) as u64
+            2 * (lanes - 3) as u64
         );
         assert_eq!(after.scores_calls, before.scores_calls, "no per-candidate calls");
     }

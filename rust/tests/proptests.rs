@@ -9,8 +9,10 @@ use amq::coordinator::nsga2::{self, dominates, Individual};
 use amq::coordinator::space::SearchSpace;
 use amq::coordinator::{gene, gene_bits, Archive, Config, Gene, ProxyBank};
 use amq::quant::{frob_error, pack, Hqq, MethodId, Quantizer, Rtn};
+use amq::runtime::{lane_routed, lane_slab_sig, pack_lane_slab, SlabCache};
 use amq::tensor::Mat;
 use amq::util::Rng;
+use std::sync::Arc;
 
 const TRIALS: usize = 60;
 
@@ -416,5 +418,143 @@ fn prop_group_metadata_overhead_accounting() {
         let q = Rtn.quantize(&w, bits, gs, None);
         let want = bits as f64 + 32.0 / gs as f64;
         assert!((q.bits_per_weight() - want).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-slab packing / slab-cache invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pack_lane_slab_roundtrip() {
+    // any (lanes, rows, row length): non-padded lanes are bit-equal to
+    // their inputs, and the padded region is exactly lane 0's bytes
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(14_000 + seed);
+        let lanes = rng.range(1, 9);
+        let n_rows = rng.range(1, lanes + 1);
+        let per = rng.range(1, 200);
+        // u8 payload (the codes path)
+        let rows_u8: Vec<Vec<u8>> = (0..n_rows)
+            .map(|_| (0..per).map(|_| rng.below(16) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = rows_u8.iter().map(|r| r.as_slice()).collect();
+        let slab = pack_lane_slab(&refs, lanes).unwrap();
+        assert_eq!(slab.len(), lanes * per, "seed {seed}");
+        for lane in 0..lanes {
+            let got = &slab[lane * per..(lane + 1) * per];
+            let want: &[u8] = if lane < n_rows { &rows_u8[lane] } else { &rows_u8[0] };
+            assert_eq!(got, want, "seed {seed} lane {lane}");
+        }
+        // f32 payload (the scale/zero path): bit-level equality
+        let rows_f: Vec<Vec<f32>> = (0..n_rows)
+            .map(|_| (0..per).map(|_| rng.normal() * 0.3).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows_f.iter().map(|r| r.as_slice()).collect();
+        let slab = pack_lane_slab(&refs, lanes).unwrap();
+        for lane in 0..lanes {
+            let want: &[f32] = if lane < n_rows { &rows_f[lane] } else { &rows_f[0] };
+            for (a, b) in slab[lane * per..(lane + 1) * per].iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed {seed} lane {lane}");
+            }
+        }
+    }
+}
+
+/// Deterministic synthetic score, seeded purely from the config.
+fn slab_synth(cfg: &Config) -> f32 {
+    let mut seed = 0x9E37_79B9_7F4A_7C15u64;
+    for &g in cfg {
+        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(g as u64);
+    }
+    Rng::new(seed).f32()
+}
+
+/// Score a stream of candidate chunks through a simulated lane scheduler
+/// whose scores are reconstructed **from the slab contents** (payload =
+/// the padded signature, exactly what the packed bytes encode), so any
+/// stale or miskeyed cache entry corrupts the output.  Mirrors the
+/// production shape: the plan is resolved once per chunk, then replayed
+/// across `batches` calibration batches.
+fn score_stream(
+    chunks: &[Vec<Config>],
+    n_layers: usize,
+    lanes: usize,
+    budget: usize,
+    batches: usize,
+) -> Vec<f32> {
+    let cache: SlabCache<Vec<u16>> = SlabCache::new(budget);
+    let mut out = Vec::new();
+    for chunk in chunks {
+        if lane_routed(chunk.len(), lanes) {
+            let mut plan: Vec<(usize, Vec<Arc<Vec<u16>>>)> = Vec::new();
+            for group in chunk.chunks(lanes) {
+                let mut slabs = Vec::with_capacity(n_layers);
+                for li in 0..n_layers {
+                    let sig = lane_slab_sig(group, li, lanes);
+                    let bytes = 64 + 8 * li; // deterministic per-key size
+                    let slab = cache
+                        .get_or_build((li, sig.clone()), || Ok((sig.clone(), bytes)))
+                        .unwrap();
+                    slabs.push(slab);
+                }
+                plan.push((group.len(), slabs));
+            }
+            let mut sums = vec![0.0f64; chunk.len()];
+            for _ in 0..batches {
+                let mut idx = 0;
+                for (real, slabs) in &plan {
+                    for j in 0..*real {
+                        let cfg: Config = (0..n_layers).map(|li| slabs[li][j]).collect();
+                        sums[idx] += slab_synth(&cfg) as f64;
+                        idx += 1;
+                    }
+                }
+            }
+            out.extend(sums.into_iter().map(|s| (s / batches as f64) as f32));
+        } else {
+            for cfg in chunk {
+                let mut sum = 0.0f64;
+                for _ in 0..batches {
+                    sum += slab_synth(cfg) as f64;
+                }
+                out.push((sum / batches as f64) as f32);
+            }
+        }
+        // accounting invariant on every step: the cache never exceeds its
+        // budget, and budget 0 retains nothing
+        let s = cache.stats();
+        assert!(s.resident_bytes <= budget, "cache exceeded budget");
+        if budget == 0 {
+            assert_eq!(s.resident_slabs, 0);
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_slab_cache_never_changes_scores() {
+    // random candidate streams: cache off (budget 0), tiny (constant
+    // eviction) and ample budgets must produce bit-identical scores — the
+    // cache may only change how often slabs are packed
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(15_000 + seed);
+        let n_layers = rng.range(1, 6);
+        let lanes = [2usize, 4, 8][rng.below(3)];
+        let batches = rng.range(1, 4);
+        let n_chunks = rng.range(2, 10);
+        let chunks: Vec<Vec<Config>> = (0..n_chunks)
+            .map(|_| {
+                (0..rng.range(1, 11))
+                    .map(|_| (0..n_layers).map(|_| [2u16, 3, 4][rng.below(3)]).collect())
+                    .collect()
+            })
+            .collect();
+        let off = score_stream(&chunks, n_layers, lanes, 0, batches);
+        let tiny = score_stream(&chunks, n_layers, lanes, 80, batches);
+        let ample = score_stream(&chunks, n_layers, lanes, 1 << 20, batches);
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&off), bits(&tiny), "seed {seed}: tiny budget changed scores");
+        assert_eq!(bits(&off), bits(&ample), "seed {seed}: ample budget changed scores");
     }
 }
