@@ -188,7 +188,7 @@ fn main() {
             &format!("pool with {workers} worker(s)"),
             Duration::from_secs(2),
             || {
-                std::hint::black_box(svc.call_batch((0..32).collect()));
+                std::hint::black_box(svc.call_batch((0..32).collect()).unwrap());
             },
         );
         res.print();
@@ -382,6 +382,7 @@ fn main() {
             rows,
             "    {{\"workers\": {workers}, \"score_batch\": {score_batch}, \
              \"lanes\": {lanes}, \"slab_cache_mb\": {slab_mb}, \"scorer_variant\": \"{}\", \
+             \"topology\": \"in-process\", \"remote_shards\": 0, \"requeued_chunks\": {}, \
              \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
              \"scorer_dispatches\": {}, \"device_dispatches\": {}, \
              \"lane_fill_fraction\": {:.4}, \"slab_lookups\": {lookups}, \
@@ -389,6 +390,7 @@ fn main() {
              \"slab_resident_bytes\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
              \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
             if lanes > 1 { "lane-stacked" } else { "per-candidate" },
+            ev.pool_stats().requeued,
             wall.as_secs_f64(),
             res.true_evals,
             cps,

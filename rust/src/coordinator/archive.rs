@@ -62,6 +62,33 @@ impl Archive {
             .filter(|s| s.avg_bits <= budget_bits + tol)
             .min_by(|a, b| a.jsd.partial_cmp(&b.jsd).unwrap())
     }
+
+    /// FNV-1a digest of the archive contents in insertion order — genes,
+    /// jsd bits and avg-bits bits all fold in, so two archives hash equal
+    /// iff they hold bit-identical samples in the same order.  This is the
+    /// byte-identity oracle for the topology matrix: {sequential, threaded,
+    /// remote shards, mixed} runs of a fixed-seed search must all produce
+    /// the same digest.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut mix = |x: u64| {
+            // fold each byte, FNV-1a
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01B3);
+            }
+        };
+        mix(self.samples.len() as u64);
+        for s in &self.samples {
+            mix(s.config.len() as u64);
+            for &g in &s.config {
+                mix(g as u64);
+            }
+            mix(s.jsd.to_bits() as u64);
+            mix(s.avg_bits.to_bits());
+        }
+        h
+    }
 }
 
 /// Non-dominated indices for 2-objective minimization.
@@ -118,6 +145,28 @@ mod tests {
         let best = a.best_under(3.25, 0.005).unwrap();
         assert_eq!(best.config, vec![3, 3]);
         assert!(a.best_under(2.0, 0.005).is_none());
+    }
+
+    #[test]
+    fn content_hash_is_order_and_bit_sensitive() {
+        let mut a = Archive::new();
+        a.insert(vec![2, 3], 0.5, 2.75);
+        a.insert(vec![4, 4], 0.05, 4.25);
+        let mut b = Archive::new();
+        b.insert(vec![2, 3], 0.5, 2.75);
+        b.insert(vec![4, 4], 0.05, 4.25);
+        assert_eq!(a.content_hash(), b.content_hash());
+        // order matters
+        let mut c = Archive::new();
+        c.insert(vec![4, 4], 0.05, 4.25);
+        c.insert(vec![2, 3], 0.5, 2.75);
+        assert_ne!(a.content_hash(), c.content_hash());
+        // a single-ulp score change matters
+        let mut d = Archive::new();
+        d.insert(vec![2, 3], f32::from_bits(0.5f32.to_bits() + 1), 2.75);
+        d.insert(vec![4, 4], 0.05, 4.25);
+        assert_ne!(a.content_hash(), d.content_hash());
+        assert_ne!(Archive::new().content_hash(), a.content_hash());
     }
 
     #[test]

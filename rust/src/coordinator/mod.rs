@@ -12,7 +12,9 @@
 //! * [`nsga2`] — the multi-objective genetic engine;
 //! * [`search`] — the iterative search-and-update loop (§3.5);
 //! * [`oneshot`], [`greedy`] — the Appendix G discrete-search baselines;
-//! * [`archive`] — evaluated samples, Pareto front, budget selection.
+//! * [`archive`] — evaluated samples, Pareto front, budget selection;
+//! * [`synth`] — the deterministic synthetic workload the topology-matrix
+//!   CI and the remote-shard tests score cross-process.
 
 pub mod archive;
 pub mod greedy;
@@ -24,6 +26,7 @@ pub mod proxy;
 pub mod search;
 pub mod sensitivity;
 pub mod space;
+pub mod synth;
 
 pub use archive::{Archive, Sample};
 pub use proxy::{

@@ -725,9 +725,14 @@ impl PooledEvaluator {
         self
     }
 
-    /// Number of pool shards behind this evaluator.
+    /// Number of pool shards behind this evaluator (including retired).
     pub fn workers(&self) -> usize {
         self.svc.n_workers()
+    }
+
+    /// Shards still serving (spawned minus retired).
+    pub fn live_workers(&self) -> usize {
+        self.svc.live_workers()
     }
 
     /// Queue/latency statistics of the underlying pool.
@@ -758,9 +763,16 @@ impl ConfigEvaluator for PooledEvaluator {
         let chunks: Vec<&[Config]> = pending.chunks(k).collect();
         let replies: Vec<_> = chunks.iter().map(|c| self.svc.submit(c.to_vec())).collect();
         for (chunk, rx) in chunks.iter().zip(replies) {
-            let jsds = rx
-                .recv()
-                .map_err(|_| eyre::anyhow!("evaluation pool worker died"))??;
+            // A shard that dies mid-chunk requeues its in-flight request
+            // onto the surviving shards, so this recv only fails once the
+            // *whole* pool has retired (transport loss to every remote,
+            // or every local closure panicked).
+            let jsds = rx.recv().map_err(|_| {
+                eyre::anyhow!(
+                    "evaluation pool request dropped: all {} shard(s) retired",
+                    self.svc.n_workers()
+                )
+            })??;
             self.stats.dispatches += 1;
             eyre::ensure!(
                 jsds.len() == chunk.len(),

@@ -1,0 +1,86 @@
+//! Deterministic synthetic search workload, shared by tests, the remote
+//! topology suite and the CI `pool-smoke` command.
+//!
+//! The point of living in the library (rather than a test helper) is
+//! cross-*process* agreement: `repro shard-serve --synthetic` and the
+//! coordinator it serves must compute bit-identical scores from the same
+//! genes, or the topology matrix ({in-process, multi-process} archives
+//! byte-identical for a fixed seed) could never hold.  Everything here is a
+//! pure function of its inputs — all randomness is seeded from the
+//! candidate genes.
+
+use super::space::{Config, SearchSpace};
+use crate::util::Rng;
+
+/// Deterministic synthetic "true evaluation": a heterogeneous quadratic bit
+/// penalty plus a small perturbation from a per-candidate seeded RNG (the
+/// pool's determinism contract: all randomness derives from the payload).
+pub fn synth_jsd(cfg: &[u16]) -> f32 {
+    let mut seed = 0xCBF2_9CE4_8422_2325u64;
+    for &b in cfg {
+        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(b as u64);
+    }
+    let mut rng = Rng::new(seed);
+    let base: f32 = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| {
+            let w = if i % 4 == 0 { 1.0 } else { 0.05 };
+            w * ((4 - b) as f32).powi(2)
+        })
+        .sum();
+    base + rng.f32() * 1e-4
+}
+
+/// Chunk-shaped synthetic evaluator — the exact closure signature the eval
+/// pool and the shard server both consume.
+pub fn synth_chunk(chunk: &[Config]) -> crate::Result<Vec<f32>> {
+    Ok(chunk.iter().map(|c| synth_jsd(c)).collect())
+}
+
+/// The bits-only toy space the synthetic workload searches over (mirrors
+/// the test fixtures: choices {2,3,4} bits, 128×128 params per layer).
+pub fn synth_space(n_layers: usize) -> SearchSpace {
+    SearchSpace {
+        choices: vec![vec![2, 3, 4]; n_layers],
+        params: vec![128 * 128; n_layers],
+        groups: vec![128; n_layers],
+        group_size: 128,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_jsd_is_pure_and_bit_stable() {
+        let a = synth_jsd(&[2, 3, 4, 2]);
+        let b = synth_jsd(&[2, 3, 4, 2]);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_ne!(a.to_bits(), synth_jsd(&[2, 3, 4, 3]).to_bits());
+    }
+
+    #[test]
+    fn synth_jsd_prefers_more_bits() {
+        assert!(synth_jsd(&[4; 8]) < synth_jsd(&[2; 8]));
+    }
+
+    #[test]
+    fn synth_chunk_matches_per_candidate() {
+        let chunk: Vec<Config> = vec![vec![2, 3], vec![4, 4], vec![3, 2]];
+        let scores = synth_chunk(&chunk).unwrap();
+        assert_eq!(scores.len(), 3);
+        for (c, s) in chunk.iter().zip(&scores) {
+            assert_eq!(s.to_bits(), synth_jsd(c).to_bits());
+        }
+    }
+
+    #[test]
+    fn synth_space_shape() {
+        let s = synth_space(12);
+        assert_eq!(s.n_layers(), 12);
+        assert_eq!(s.choices[0], vec![2, 3, 4]);
+        assert_eq!(s.group_size, 128);
+    }
+}

@@ -1,8 +1,14 @@
-//! Minimal JSON parser — substrate for manifest/tasks/bundle headers.
+//! Minimal JSON parser + serializer — substrate for manifest/tasks/bundle
+//! headers and the evaluation pool's wire frames ([`crate::runtime::wire`]).
 //!
 //! The offline build has no serde, so we parse the (entirely under our
 //! control) artifact JSON with a small recursive-descent parser.  Supports
 //! the full JSON grammar; numbers are f64 (all our integers fit exactly).
+//!
+//! Serialization ([`Value::render`]) is deterministic by construction:
+//! objects are `BTreeMap`s, so keys always render in sorted order and the
+//! same `Value` renders to the same bytes on every host — the property the
+//! wire format's cross-version layout guard pins.
 
 use crate::Result;
 use std::collections::BTreeMap;
@@ -69,6 +75,18 @@ impl Value {
         Ok(f as i32)
     }
 
+    /// Exact non-negative integer accessor.  Only integers up to 2^53 are
+    /// representable exactly in a JSON number; larger values are rejected
+    /// rather than silently rounded (wire ids / bit patterns stay exact).
+    pub fn as_u64(&self) -> Result<u64> {
+        let f = self.as_f64()?;
+        eyre::ensure!(
+            f >= 0.0 && f.fract() == 0.0 && f <= 9_007_199_254_740_992.0,
+            "not an exact u64: {f}"
+        );
+        Ok(f as u64)
+    }
+
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(v) => Ok(v),
@@ -82,6 +100,81 @@ impl Value {
             _ => eyre::bail!("not an object"),
         }
     }
+
+    /// Serialize to compact JSON (no whitespace).  Deterministic: object
+    /// keys render in `BTreeMap` order, integers that fit f64 exactly print
+    /// without a fractional part, and non-finite numbers (which JSON cannot
+    /// carry) render as `null`.  `parse(render(v))` round-trips every value
+    /// the parser can produce.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() <= 9_007_199_254_740_992.0 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    // f64 Display is shortest-roundtrip in Rust, so the
+                    // rendered text parses back to the identical f64.
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Value::Str(s) => render_str(s, out),
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Escape + quote a string, the exact inverse of the parser's unescaping.
+fn render_str(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -297,5 +390,66 @@ mod tests {
         assert_eq!(v.get("n").unwrap().as_usize().unwrap(), 128);
         assert!(v.get("x").unwrap().as_usize().is_err());
         assert_eq!(v.get("n").unwrap().as_i32().unwrap(), 128);
+    }
+
+    #[test]
+    fn u64_accessor_is_exact() {
+        assert_eq!(Value::Num(0.0).as_u64().unwrap(), 0);
+        assert_eq!(Value::Num(4294967295.0).as_u64().unwrap(), u32::MAX as u64);
+        assert!(Value::Num(-1.0).as_u64().is_err());
+        assert!(Value::Num(1.5).as_u64().is_err());
+        assert!(Value::Num(1e300).as_u64().is_err(), "beyond exact range");
+        assert!(Value::Str("7".into()).as_u64().is_err());
+    }
+
+    #[test]
+    fn render_scalars() {
+        assert_eq!(Value::Null.render(), "null");
+        assert_eq!(Value::Bool(true).render(), "true");
+        assert_eq!(Value::Num(42.0).render(), "42");
+        assert_eq!(Value::Num(-150.0).render(), "-150");
+        assert_eq!(Value::Num(1.5).render(), "1.5");
+        assert_eq!(Value::Num(f64::NAN).render(), "null");
+        assert_eq!(Value::Str("a\nb\"c\\d".into()).render(), r#""a\nb\"c\\d""#);
+        assert_eq!(Value::Str("\u{0001}".into()).render(), r#""\u0001""#);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_sorted() {
+        // insertion order differs from key order; render must sort
+        let mut m = BTreeMap::new();
+        m.insert("zebra".to_string(), Value::Num(1.0));
+        m.insert("alpha".to_string(), Value::Arr(vec![Value::Num(2.0), Value::Null]));
+        let v = Value::Obj(m);
+        assert_eq!(v.render(), r#"{"alpha":[2,null],"zebra":1}"#);
+        assert_eq!(v.render(), v.render());
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let texts = [
+            r#"{"a": [1, 2, {"b": "x"}], "c": {}, "d": -1.5e2, "e": "héllo"}"#,
+            r#"[[], [null, true, false], "é", 9007199254740992]"#,
+            "0.125",
+        ];
+        for t in texts {
+            let v = Value::parse(t).unwrap();
+            let rendered = v.render();
+            let back = Value::parse(&rendered).unwrap();
+            assert_eq!(v, back, "round trip changed value for {t}");
+            // a second render of the reparsed value is byte-identical
+            assert_eq!(rendered, back.render());
+        }
+    }
+
+    #[test]
+    fn render_f32_bits_survive_via_u32() {
+        // the wire format carries f32 scores as their u32 bit patterns;
+        // every u32 is exact in f64, so render->parse is lossless
+        for bits in [0u32, 1, 0x7F80_0000, 0xFFC0_0001, u32::MAX, 0x3F80_0000] {
+            let v = Value::Num(bits as f64);
+            let back = Value::parse(&v.render()).unwrap().as_u64().unwrap();
+            assert_eq!(back as u32, bits);
+        }
     }
 }

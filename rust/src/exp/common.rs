@@ -94,13 +94,18 @@ impl<'rt> Pipeline<'rt> {
 // Sharded evaluation pool (--workers N)
 // ---------------------------------------------------------------------------
 
-/// Spawn the evaluation pool for `ctx.workers` shards.  The shards share
-/// *everything heavy* with the main thread — the `Sync` PJRT runtime, the
-/// process-wide uploaded [`DeviceBank`] and the prepared calibration
-/// batches — so per-shard scoring state is nothing but a few `Arc` handles,
-/// resolved lazily on the shard's first request (an unused pool costs
-/// nothing, and the first toucher — main thread or any shard — pays the
-/// one-time quantize + upload for everyone).
+/// Spawn the evaluation pool: `ctx.local_workers()` in-process shards plus
+/// one feeder shard per `--shards` address, all sharing one FIFO (a chunk
+/// goes to whichever shard — local closure or remote socket — is idle
+/// first).  Local shards share *everything heavy* with the main thread —
+/// the `Sync` PJRT runtime, the process-wide uploaded [`DeviceBank`] and
+/// the prepared calibration batches — so per-shard scoring state is nothing
+/// but a few `Arc` handles, resolved lazily on the shard's first request
+/// (an unused pool costs nothing, and the first toucher — main thread or
+/// any shard — pays the one-time quantize + upload for everyone).  Remote
+/// feeders speak the `runtime::wire` frame protocol; one dying beyond its
+/// retry budget retires (its in-flight chunk requeues onto the survivors)
+/// rather than failing the search.
 ///
 /// The wire unit is a *microbatch* of candidates: one request = one scorer
 /// dispatch of up to `--score-batch` configs on whichever shard is idle.
@@ -112,7 +117,21 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
     let cell = ctx.device_bank.clone();
     let shard_banks = ctx.shard_banks.clone();
     let slab_budget = crate::coordinator::slab_budget_bytes(ctx.slab_cache_mb);
-    EvalService::spawn_sharded(ctx.workers, move |_shard| {
+    let local = ctx.local_workers();
+    let remotes = ctx.shards.clone();
+    let labels: Vec<String> = (0..local)
+        .map(|i| format!("local#{i}"))
+        .chain(remotes.iter().cloned())
+        .collect();
+    EvalService::spawn_flow(labels, move |shard| {
+        if shard >= local {
+            // Remote feeder: forward chunks over TCP, retire on transport
+            // death (the pool requeues the in-flight chunk).
+            return crate::runtime::remote::remote_eval_flow(
+                remotes[shard - local].clone(),
+                crate::runtime::remote::RetryPolicy::default(),
+            );
+        }
         let rt = rt.clone();
         let batches = batches.clone();
         let assets = assets.clone();
@@ -120,7 +139,7 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
         let cell = cell.clone();
         let shard_banks = shard_banks.clone();
         let mut dev: Option<Arc<DeviceBank>> = None;
-        move |chunk: Vec<Config>| -> Result<Vec<f32>> {
+        let mut eval = move |chunk: Vec<Config>| -> Result<Vec<f32>> {
             if dev.is_none() {
                 let resolved = cell
                     .get_or_init(|| {
@@ -141,7 +160,8 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
             // [`ProxyEvaluator`] calls, over the same shared batches, so
             // pooled and sequential searches agree bit-for-bit.
             crate::coordinator::proxy::mean_jsd_batch(&proxy, &batches, &chunk)
-        }
+        };
+        Box::new(move |chunk: Vec<Config>| crate::runtime::ShardFlow::Reply(eval(chunk)))
     })
 }
 

@@ -92,6 +92,11 @@ pub struct Ctx {
     pub artifacts: PathBuf,
     /// Evaluation-pool width (`--workers N`); 1 = in-thread evaluation.
     pub workers: usize,
+    /// Remote shard-server addresses (`--shards a:p,b:p`).  Each address
+    /// becomes one feeder shard on the same FIFO as the local workers, so
+    /// in-process and remote shards mix freely (see
+    /// [`common::spawn_search_pool`]).
+    pub shards: Vec<String>,
     /// Scoring microbatch size (`--score-batch K`).
     pub score_batch: usize,
     /// Lane-slab cache budget in MB (`--slab-cache-mb`; 0 = off).
@@ -184,6 +189,7 @@ impl Ctx {
             preset,
             artifacts: artifacts_dir.to_path_buf(),
             workers: workers.max(1),
+            shards: Vec::new(),
             score_batch: score_batch.max(1),
             slab_cache_mb,
             registry,
@@ -224,11 +230,30 @@ impl Ctx {
         }
     }
 
+    /// Point the evaluation pool at remote shard servers (`--shards`).
+    /// Must be called before the pool first spawns; the addresses become
+    /// feeder shards sharing the local workers' FIFO.
+    pub fn set_shards(&mut self, shards: Vec<String>) {
+        debug_assert!(self.pool.get().is_none(), "set_shards after pool spawn");
+        self.shards = shards;
+    }
+
+    /// Local (in-process) shard count for the pool topology: with no remote
+    /// shards this is `--workers`; with `--shards` alone evaluation is pure
+    /// remote (0 local); `--workers N --shards ...` (N > 1) mixes both.
+    pub fn local_workers(&self) -> usize {
+        if self.shards.is_empty() || self.workers > 1 {
+            self.workers
+        } else {
+            0
+        }
+    }
+
     /// The shared evaluation pool, spawned on first use (None when running
-    /// single-worker).  Shards initialize lazily on their first request, so
-    /// spawning the pool is cheap.
+    /// single-worker with no remote shards).  Shards initialize lazily on
+    /// their first request, so spawning the pool is cheap.
     pub fn eval_pool(&self) -> Option<Arc<EvalPool>> {
-        if self.workers <= 1 {
+        if self.workers <= 1 && self.shards.is_empty() {
             return None;
         }
         Some(

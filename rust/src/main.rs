@@ -8,6 +8,15 @@
 //!   repro search [flags]            run the main AMQ search and print the
 //!                                   Pareto frontier
 //!   repro check                     validate artifacts + runtime golden
+//!   repro shard-serve --listen ADDR serve candidate-chunk frames over TCP
+//!                                   (own runtime + device bank; --synthetic
+//!                                   serves the deterministic toy workload
+//!                                   with no artifacts, for CI)
+//!   repro pool-smoke --shards LIST  seeded synthetic search across the
+//!                                   topology matrix (sequential / threaded /
+//!                                   remote / mixed), asserting identical
+//!                                   archive hashes; writes
+//!                                   BENCH_pool_smoke.json
 //!
 //! Flags:
 //!   --preset smoke|repro|paper      search budget preset (default: repro)
@@ -38,6 +47,13 @@
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
 //!                                   manifest's list, normally just hqq)
 //!   --predictor rbf|mlp             quality predictor (default: rbf)
+//!   --shards a:p,b:p                remote shard servers to feed (each
+//!                                   address becomes one pool shard on the
+//!                                   same FIFO as the local workers;
+//!                                   archives identical for any topology)
+//!   --listen ADDR                   (shard-serve) bind address
+//!   --synthetic                     (shard-serve) serve the deterministic
+//!                                   synthetic workload, no artifacts needed
 //! ```
 
 use amq::coordinator::predictor::PredictorKind;
@@ -59,6 +75,9 @@ struct Args {
     slab_cache_mb: usize,
     methods: Option<String>,
     predictor: Option<String>,
+    shards: Vec<String>,
+    listen: Option<String>,
+    synthetic: bool,
 }
 
 fn parse_args() -> Args {
@@ -75,6 +94,9 @@ fn parse_args() -> Args {
         slab_cache_mb: exp::DEFAULT_SLAB_CACHE_MB,
         methods: None,
         predictor: None,
+        shards: Vec::new(),
+        listen: None,
+        synthetic: false,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -121,6 +143,20 @@ fn parse_args() -> Args {
                 i += 1;
                 args.predictor = Some(argv[i].clone());
             }
+            "--shards" => {
+                i += 1;
+                args.shards = argv[i]
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(String::from)
+                    .collect();
+            }
+            "--listen" => {
+                i += 1;
+                args.listen = Some(argv[i].clone());
+            }
+            "--synthetic" => args.synthetic = true,
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -164,6 +200,226 @@ fn preset(name: &str, seed: Option<u64>, predictor: Option<&str>) -> SearchParam
     p
 }
 
+/// The pool topology a context runs: all-local, all-remote, or both kinds
+/// of shard on one FIFO.
+fn topology_of(ctx: &Ctx) -> &'static str {
+    if ctx.shards.is_empty() {
+        "in-process"
+    } else if ctx.local_workers() > 0 {
+        "mixed"
+    } else {
+        "remote"
+    }
+}
+
+/// `repro shard-serve --listen ADDR [--synthetic]`: serve candidate-chunk
+/// frames over TCP.  With `--synthetic` the shard scores the deterministic
+/// toy workload (no artifacts, genome length unconstrained — the CI
+/// topology job uses this); otherwise it loads artifacts and builds its own
+/// runtime + device bank, exactly like a local `--workers` shard would.
+fn run_shard_serve(args: &Args) -> Result<()> {
+    let listen = args
+        .listen
+        .as_deref()
+        .ok_or_else(|| eyre::anyhow!("shard-serve requires --listen ADDR"))?;
+    let listener = std::net::TcpListener::bind(listen)?;
+    eprintln!("[shard] listening on {}", listener.local_addr()?);
+    if args.synthetic {
+        eprintln!("[shard] serving the synthetic workload (no artifacts)");
+        return amq::runtime::remote::serve_shard(
+            listener,
+            0,
+            None,
+            amq::coordinator::synth::synth_chunk,
+        );
+    }
+    let artifacts = args
+        .artifacts
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(amq::artifacts_dir);
+    eyre::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts not found at {} — run `make artifacts` (or use --synthetic)",
+        artifacts.display()
+    );
+    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let registry = match args.methods.as_deref() {
+        Some(list) => Some(MethodRegistry::parse(list)?),
+        None => None,
+    };
+    let ctx = Ctx::load_with_opts(
+        &artifacts,
+        std::path::Path::new(&args.out),
+        params,
+        1,
+        registry,
+        args.score_batch,
+        args.lanes,
+        args.slab_cache_mb,
+    )?;
+    let dev = ctx.device_bank()?;
+    let proxy = amq::coordinator::DeviceProxy::from_device_bank(&ctx.rt, dev);
+    let batches = ctx.search_batches.clone();
+    let n_layers = ctx.assets.manifest.layers.len() as u64;
+    eprintln!(
+        "[shard] runtime + device bank ready ({n_layers}-layer genome, scorer {})",
+        ctx.rt.scorer_variant().name()
+    );
+    amq::runtime::remote::serve_shard(listener, n_layers, None, move |genes| {
+        amq::coordinator::proxy::mean_jsd_batch(&proxy, &batches, genes)
+    })
+}
+
+/// `repro pool-smoke --shards a:p,b:p [--seed N] [--out DIR]`: the
+/// cross-process half of the topology matrix.  Runs the same seeded
+/// synthetic search sequentially, across local threads, against the remote
+/// shards, and mixed — then bails unless every archive hashes identically.
+/// Writes `BENCH_pool_smoke.json` (perf artifact) and a small
+/// `search_report.json` (pool-debug artifact) under `--out`.
+fn run_pool_smoke(args: &Args) -> Result<()> {
+    use amq::coordinator::synth::{synth_chunk, synth_space};
+    use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator};
+    use amq::runtime::remote::{remote_eval_flow, RetryPolicy};
+    use amq::runtime::{EvalService, ShardFlow};
+    use std::fmt::Write as _;
+    use std::sync::Arc;
+
+    eyre::ensure!(
+        !args.shards.is_empty(),
+        "pool-smoke requires --shards addr1,addr2,..."
+    );
+    let space = synth_space(12);
+    let mut params = SearchParams::smoke();
+    params.seed = args.seed.unwrap_or(17);
+    let remotes = args.shards.clone();
+
+    let local_pool = |workers: usize| -> Arc<EvalPool> {
+        Arc::new(EvalService::spawn_sharded(workers, |_shard| {
+            |chunk: Vec<Config>| -> Result<Vec<f32>> { synth_chunk(&chunk) }
+        }))
+    };
+    let remote_pool = |local: usize| -> Arc<EvalPool> {
+        let remotes = remotes.clone();
+        let labels: Vec<String> = (0..local)
+            .map(|i| format!("local#{i}"))
+            .chain(remotes.iter().cloned())
+            .collect();
+        Arc::new(EvalService::spawn_flow(labels, move |shard| {
+            if shard < local {
+                Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)))
+            } else {
+                remote_eval_flow(remotes[shard - local].clone(), RetryPolicy::default())
+            }
+        }))
+    };
+
+    struct Run {
+        topology: &'static str,
+        workers: usize,
+        remote_shards: usize,
+        svc: Arc<EvalPool>,
+    }
+    let runs = [
+        Run { topology: "sequential", workers: 1, remote_shards: 0, svc: local_pool(1) },
+        Run { topology: "in-process", workers: 4, remote_shards: 0, svc: local_pool(4) },
+        Run {
+            topology: "remote",
+            workers: remotes.len(),
+            remote_shards: remotes.len(),
+            svc: remote_pool(0),
+        },
+        Run {
+            topology: "mixed",
+            workers: 2 + remotes.len(),
+            remote_shards: remotes.len(),
+            svc: remote_pool(2),
+        },
+    ];
+
+    std::fs::create_dir_all(&args.out)?;
+    let mut rows = String::new();
+    let mut report = String::new();
+    let mut hashes: Vec<u64> = Vec::new();
+    for run in &runs {
+        let mut ev = PooledEvaluator::from_service(run.svc.clone()).with_score_batch(8);
+        let t0 = std::time::Instant::now();
+        let res = run_search(&space, &mut ev, &params)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let hash = res.archive.content_hash();
+        let pool = ev.pool_stats();
+        hashes.push(hash);
+        println!(
+            "[smoke] {:<10} workers {} (remote {}): archive {:016x}, {} samples, \
+             {} requeued, {:.2}s",
+            run.topology,
+            run.workers,
+            run.remote_shards,
+            hash,
+            res.archive.len(),
+            pool.requeued,
+            wall
+        );
+        if !rows.is_empty() {
+            rows.push_str(",\n");
+            report.push_str(",\n");
+        }
+        let _ = write!(
+            rows,
+            "    {{\"topology\": \"{}\", \"workers\": {}, \"remote_shards\": {}, \
+             \"requeued_chunks\": {}, \"archive_hash\": \"{hash:016x}\", \
+             \"archive_len\": {}, \"true_evals\": {}, \"wall_seconds\": {wall:.4}}}",
+            run.topology,
+            run.workers,
+            run.remote_shards,
+            pool.requeued,
+            res.archive.len(),
+            res.true_evals,
+        );
+        let shard_rows: Vec<String> = pool
+            .per_shard
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"label\": \"{}\", \"completed\": {}, \"retired\": {}}}",
+                    s.label, s.completed, s.retired
+                )
+            })
+            .collect();
+        let _ = write!(
+            report,
+            "    {{\"topology\": \"{}\", \"archive_hash\": \"{hash:016x}\", \
+             \"shards\": [{}]}}",
+            run.topology,
+            shard_rows.join(", ")
+        );
+    }
+    let identical = hashes.iter().all(|&h| h == hashes[0]);
+    let bench = format!(
+        "{{\n  \"bench\": \"pool_smoke\",\n  \"seed\": {},\n  \"identical_archives\": \
+         {identical},\n  \"runs\": [\n{rows}\n  ]\n}}\n",
+        params.seed
+    );
+    let bench_path = std::path::Path::new(&args.out).join("BENCH_pool_smoke.json");
+    std::fs::write(&bench_path, bench)?;
+    eprintln!("[report] wrote {}", bench_path.display());
+    let report_json = format!(
+        "{{\n  \"report\": \"pool_smoke_topologies\",\n  \"seed\": {},\n  \
+         \"identical_archives\": {identical},\n  \"topologies\": [\n{report}\n  ]\n}}\n",
+        params.seed
+    );
+    let report_path = std::path::Path::new(&args.out).join("search_report.json");
+    std::fs::write(&report_path, report_json)?;
+    eprintln!("[report] wrote {}", report_path.display());
+    eyre::ensure!(
+        identical,
+        "archives diverged across topologies: {:?}",
+        hashes.iter().map(|h| format!("{h:016x}")).collect::<Vec<_>>()
+    );
+    println!("[smoke] archives identical across all {} topologies", runs.len());
+    Ok(())
+}
+
 /// Per-method gene counts of a config, e.g. `"hqq:20 rtn:8"`.
 fn method_mix(config: &[amq::coordinator::Gene]) -> String {
     let mut counts: Vec<(&'static str, usize)> = Vec::new();
@@ -203,6 +459,8 @@ fn write_search_report(
     );
     let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
     let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
+    let _ = write!(s, "  \"topology\": \"{}\",\n", topology_of(ctx));
+    let _ = write!(s, "  \"remote_shards\": {},\n", ctx.shards.len());
     let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
     let variant = ctx.rt.scorer_variant();
     let rstats = ctx.rt.stats();
@@ -311,6 +569,13 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
     let mut s = String::from("{\n");
     let _ = write!(s, "  \"bench\": \"repro_search\",\n");
     let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
+    let _ = write!(s, "  \"topology\": \"{}\",\n", topology_of(ctx));
+    let _ = write!(s, "  \"remote_shards\": {},\n", ctx.shards.len());
+    let _ = write!(
+        s,
+        "  \"requeued_chunks\": {},\n",
+        ctx.pool_stats().map(|p| p.requeued).unwrap_or(0)
+    );
     let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
     let _ = write!(s, "  \"methods\": \"{}\",\n", ctx.registry.names().join(","));
     let _ = write!(s, "  \"cached\": {},\n", ctx.last_search_stats().is_none());
@@ -367,9 +632,11 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
     if let Some(pool) = ctx.pool_stats() {
         let _ = write!(
             s,
-            "  \"pool\": {{\"dispatches\": {}, \"mean_wait_ms\": {:.3}, \
-             \"mean_service_ms\": {:.3}}},\n",
+            "  \"pool\": {{\"dispatches\": {}, \"requeued\": {}, \"retired_shards\": {}, \
+             \"mean_wait_ms\": {:.3}, \"mean_service_ms\": {:.3}}},\n",
             pool.completed,
+            pool.requeued,
+            pool.retired_shards(),
             pool.mean_wait().as_secs_f64() * 1e3,
             pool.mean_service().as_secs_f64() * 1e3,
         );
@@ -404,7 +671,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--score-batch K] [--lanes N] [--slab-cache-mb N]");
+        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -416,6 +683,15 @@ fn main() -> Result<()> {
             println!("{name:8} {desc}");
         }
         return Ok(());
+    }
+    // The two distributed-topology commands run before the artifacts gate:
+    // shard-serve handles its own artifacts (or none, with --synthetic) and
+    // pool-smoke is artifact-free by design.
+    if args.cmd == "shard-serve" {
+        return run_shard_serve(&args);
+    }
+    if args.cmd == "pool-smoke" {
+        return run_pool_smoke(&args);
     }
 
     let artifacts = args
@@ -435,7 +711,7 @@ fn main() -> Result<()> {
         None => None,
     };
     let t0 = std::time::Instant::now();
-    let ctx = Ctx::load_with_opts(
+    let mut ctx = Ctx::load_with_opts(
         &artifacts,
         std::path::Path::new(&args.out),
         params,
@@ -445,12 +721,16 @@ fn main() -> Result<()> {
         args.lanes,
         args.slab_cache_mb,
     )?;
+    ctx.set_shards(args.shards.clone());
+    let ctx = ctx;
     let variant = ctx.rt.scorer_variant();
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, methods: {}, predictor: {})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, {} remote shard{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
-        ctx.workers,
-        if ctx.workers == 1 { "" } else { "s" },
+        ctx.local_workers(),
+        if ctx.local_workers() == 1 { "" } else { "s" },
+        ctx.shards.len(),
+        if ctx.shards.len() == 1 { "" } else { "s" },
         ctx.score_batch,
         variant.name(),
         variant.lanes(),
@@ -610,12 +890,20 @@ fn main() -> Result<()> {
         let per_shard: Vec<String> = pool
             .per_shard
             .iter()
-            .enumerate()
-            .map(|(i, s)| format!("#{i}:{} ({:.1}s busy)", s.completed, s.busy.as_secs_f64()))
+            .map(|s| {
+                format!(
+                    "{}:{} ({:.1}s busy{})",
+                    s.label,
+                    s.completed,
+                    s.busy.as_secs_f64(),
+                    if s.retired { ", retired" } else { "" },
+                )
+            })
             .collect();
         eprintln!(
-            "[pool] {} dispatches | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
+            "[pool] {} dispatches ({} requeued) | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
             pool.completed,
+            pool.requeued,
             pool.mean_wait().as_secs_f64() * 1e3,
             pool.mean_service().as_secs_f64() * 1e3,
             per_shard.join(" "),

@@ -26,9 +26,11 @@
 //!    and the scoring hot loop takes that lock once per chunk;
 //!  * python never runs here.
 
+pub mod remote;
 mod service;
+pub mod wire;
 
-pub use service::{EvalService, ServiceStats, ShardStats};
+pub use service::{EvalService, ServiceStats, ShardFlow, ShardStats};
 
 use crate::data::Manifest;
 use crate::model::WeightStore;
@@ -36,7 +38,7 @@ use crate::quant::QuantizedLinear;
 use crate::Result;
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// How each executable argument is sourced, precomputed from the manifest
@@ -242,8 +244,44 @@ struct SlabEntry<T> {
     last_used: u64,
 }
 
+/// Per-key build latch: the first shard to miss a key registers one, builds
+/// *outside* the cache lock, then publishes the result here; concurrent
+/// same-key lookups wait on the condvar instead of rebuilding (and instead
+/// of blocking every *other* key behind the build, which is the bug this
+/// replaces).  Build errors are broadcast as the error text so waiters fail
+/// with the same cause.
+struct BuildLatch<T> {
+    done: Mutex<Option<std::result::Result<Arc<T>, String>>>,
+    cv: Condvar,
+}
+
+impl<T> BuildLatch<T> {
+    fn new() -> Self {
+        BuildLatch { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn fill(&self, result: std::result::Result<Arc<T>, String>) {
+        *self.done.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> std::result::Result<Arc<T>, String> {
+        let mut done = self.done.lock().unwrap();
+        while done.is_none() {
+            done = self.cv.wait(done).unwrap();
+        }
+        done.clone().expect("loop exits only once filled")
+    }
+}
+
+/// A cache slot is either a finished slab or a build in flight.
+enum Slot<T> {
+    Ready(SlabEntry<T>),
+    Building(Arc<BuildLatch<T>>),
+}
+
 struct SlabCacheInner<T> {
-    entries: HashMap<SlabKey, SlabEntry<T>>,
+    entries: HashMap<SlabKey, Slot<T>>,
     clock: u64,
     hits: u64,
     misses: u64,
@@ -296,62 +334,130 @@ impl<T> SlabCache<T> {
     }
 
     /// Look up `key`, building (pack + upload) on a miss.  `build` returns
-    /// the payload and its resident byte size.  The lock is held across the
-    /// build so concurrent shards resolving the same key upload it once —
-    /// the cost is that *distinct*-key misses also serialize, which only
-    /// matters on a cold cache (misses are rare once it warms; a per-key
-    /// latch is the refinement if cold-start packing ever bottlenecks —
-    /// see ROADMAP).
+    /// the payload and its resident byte size.
+    ///
+    /// Locking discipline: the cache lock covers only bookkeeping — the
+    /// build itself runs *outside* it behind a per-key [`BuildLatch`].
+    /// Concurrent shards resolving the *same* key share one build (upload
+    /// counts stay exact: waiters count as hits, exactly as they did when
+    /// they queued on the cache mutex), while misses on *distinct* keys
+    /// pack + upload fully in parallel (pinned by the two-key
+    /// concurrent-miss test below).
     pub fn get_or_build<F>(&self, key: SlabKey, build: F) -> Result<Arc<T>>
     where
         F: FnOnce() -> Result<(T, usize)>,
     {
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let now = inner.clock;
-        if let Some(e) = inner.entries.get_mut(&key) {
-            e.last_used = now;
-            let payload = e.payload.clone();
-            inner.hits += 1;
-            return Ok(payload);
+        enum Action<T> {
+            Hit(Arc<T>),
+            Wait(Arc<BuildLatch<T>>),
+            Build(Arc<BuildLatch<T>>),
         }
-        let (payload, bytes) = build()?;
-        inner.misses += 1;
-        inner.built_bytes += bytes as u64;
-        let payload = Arc::new(payload);
-        if self.budget_bytes > 0 && bytes <= self.budget_bytes {
-            // LRU eviction until the new slab fits the budget
-            let mut resident: usize = inner.entries.values().map(|e| e.bytes).sum();
-            while resident + bytes > self.budget_bytes {
-                let oldest = inner
-                    .entries
-                    .iter()
-                    .min_by_key(|(_, e)| e.last_used)
-                    .map(|(k, _)| k.clone())
-                    .expect("resident > 0 implies a resident entry");
-                let evicted = inner.entries.remove(&oldest).unwrap();
-                resident -= evicted.bytes;
-                inner.evictions += 1;
+        let action = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let now = inner.clock;
+            let action = match inner.entries.get_mut(&key) {
+                Some(Slot::Ready(e)) => {
+                    e.last_used = now;
+                    Action::Hit(e.payload.clone())
+                }
+                Some(Slot::Building(latch)) => Action::Wait(latch.clone()),
+                None => {
+                    let latch = Arc::new(BuildLatch::new());
+                    inner.entries.insert(key.clone(), Slot::Building(latch.clone()));
+                    Action::Build(latch)
+                }
+            };
+            match &action {
+                Action::Hit(_) | Action::Wait(_) => inner.hits += 1,
+                Action::Build(_) => inner.misses += 1,
             }
-            inner.entries.insert(
-                key,
-                SlabEntry { payload: payload.clone(), bytes, last_used: now },
-            );
+            action
+        };
+        match action {
+            Action::Hit(payload) => Ok(payload),
+            Action::Wait(latch) => latch.wait().map_err(|msg| {
+                eyre::anyhow!("shared slab build for {key:?} failed: {msg}")
+            }),
+            Action::Build(latch) => match build() {
+                Ok((payload, bytes)) => {
+                    let payload = Arc::new(payload);
+                    {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.built_bytes += bytes as u64;
+                        inner.entries.remove(&key);
+                        if self.budget_bytes > 0 && bytes <= self.budget_bytes {
+                            // LRU eviction (over finished slabs; in-flight
+                            // builds own no resident bytes yet) until the new
+                            // slab fits the budget
+                            let mut resident: usize = inner
+                                .entries
+                                .values()
+                                .filter_map(|s| match s {
+                                    Slot::Ready(e) => Some(e.bytes),
+                                    Slot::Building(_) => None,
+                                })
+                                .sum();
+                            while resident + bytes > self.budget_bytes {
+                                let oldest = inner
+                                    .entries
+                                    .iter()
+                                    .filter_map(|(k, s)| match s {
+                                        Slot::Ready(e) => {
+                                            Some((k.clone(), e.last_used, e.bytes))
+                                        }
+                                        Slot::Building(_) => None,
+                                    })
+                                    .min_by_key(|(_, last_used, _)| *last_used);
+                                let Some((oldest, _, evicted_bytes)) = oldest else {
+                                    break;
+                                };
+                                inner.entries.remove(&oldest);
+                                resident -= evicted_bytes;
+                                inner.evictions += 1;
+                            }
+                            let now = inner.clock;
+                            inner.entries.insert(
+                                key,
+                                Slot::Ready(SlabEntry {
+                                    payload: payload.clone(),
+                                    bytes,
+                                    last_used: now,
+                                }),
+                            );
+                        }
+                    }
+                    latch.fill(Ok(payload.clone()));
+                    Ok(payload)
+                }
+                Err(e) => {
+                    {
+                        let mut inner = self.inner.lock().unwrap();
+                        inner.entries.remove(&key);
+                    }
+                    latch.fill(Err(e.to_string()));
+                    Err(e)
+                }
+            },
         }
-        Ok(payload)
     }
 
     /// Counter + residency snapshot (`resident_bytes` recomputed from the
-    /// live entries — exact accounting, never a drifting counter).
+    /// live entries — exact accounting, never a drifting counter).  Slots
+    /// with a build still in flight are not resident yet.
     pub fn stats(&self) -> SlabCacheStats {
         let inner = self.inner.lock().unwrap();
+        let ready = |s: &Slot<T>| match s {
+            Slot::Ready(e) => Some(e.bytes),
+            Slot::Building(_) => None,
+        };
         SlabCacheStats {
             hits: inner.hits,
             misses: inner.misses,
             evictions: inner.evictions,
             built_bytes: inner.built_bytes,
-            resident_bytes: inner.entries.values().map(|e| e.bytes).sum(),
-            resident_slabs: inner.entries.len(),
+            resident_bytes: inner.entries.values().filter_map(&ready).sum(),
+            resident_slabs: inner.entries.values().filter_map(&ready).count(),
             budget_bytes: self.budget_bytes,
         }
     }
@@ -1358,6 +1464,104 @@ mod tests {
         assert_eq!(s.evictions, 0, "oversized entries evict nothing");
         assert_eq!(s.resident_bytes, 80, "prior resident entry survives");
         cache.get_or_build(key(0, &[2]), || panic!("must still be resident")).unwrap();
+    }
+
+    #[test]
+    fn slab_cache_distinct_key_misses_build_concurrently() {
+        // The latch regression test: two shards cold-missing *different*
+        // keys must overlap their builds.  Each build closure waits on a
+        // shared barrier, so the test deadlocks (and times out) if the
+        // cache still serializes distinct-key builds under one lock.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        let cache: Arc<SlabCache<(usize, Vec<u16>)>> = Arc::new(SlabCache::new(10_000));
+        let rendezvous = Arc::new(Barrier::new(2));
+        let builds = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..2)
+            .map(|li| {
+                let cache = cache.clone();
+                let rendezvous = rendezvous.clone();
+                let builds = builds.clone();
+                std::thread::spawn(move || {
+                    cache
+                        .get_or_build(key(li, &[2]), || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // both builds must be in flight at once
+                            rendezvous.wait();
+                            build(li, &[2], 100)
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        for (li, t) in threads.into_iter().enumerate() {
+            assert_eq!(*t.join().unwrap(), (li, vec![2]));
+        }
+        // upload counts stay exact: one build per key, no duplicates
+        assert_eq!(builds.load(Ordering::SeqCst), 2);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+        assert_eq!(s.resident_slabs, 2);
+        // and both entries are genuinely resident afterwards
+        for li in 0..2 {
+            cache.get_or_build(key(li, &[2]), || panic!("must hit")).unwrap();
+        }
+        assert_eq!(cache.stats().hits, 2);
+    }
+
+    #[test]
+    fn slab_cache_same_key_concurrent_miss_builds_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cache: Arc<SlabCache<(usize, Vec<u16>)>> = Arc::new(SlabCache::new(10_000));
+        let builds = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let cache = cache.clone();
+                let builds = builds.clone();
+                std::thread::spawn(move || {
+                    cache
+                        .get_or_build(key(0, &[7]), || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // stretch the build window so the other threads
+                            // arrive while it is in flight
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            build(0, &[7], 100)
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        for r in &results {
+            assert_eq!(**r, (0, vec![7]));
+        }
+        // exactly one pack+upload no matter how many waiters piled on
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 3, "latch waiters count as hits");
+        assert_eq!(s.built_bytes, 100);
+    }
+
+    #[test]
+    fn slab_cache_failed_build_propagates_to_waiters_and_retries() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let cache: SlabCache<(usize, Vec<u16>)> = SlabCache::new(1000);
+        let attempts = AtomicUsize::new(0);
+        let err = cache
+            .get_or_build(key(0, &[2]), || -> Result<((usize, Vec<u16>), usize)> {
+                attempts.fetch_add(1, Ordering::SeqCst);
+                Err(eyre::anyhow!("upload failed"))
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("upload failed"));
+        // a failed build leaves no slot behind: the next lookup retries
+        let v = cache.get_or_build(key(0, &[2]), || build(0, &[2], 100)).unwrap();
+        assert_eq!(*v, (0, vec![2]));
+        assert_eq!(attempts.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.resident_slabs, 1);
     }
 
     #[test]

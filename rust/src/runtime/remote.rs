@@ -1,0 +1,424 @@
+//! TCP transport for the eval pool: shard *clients* the coordinator feeds
+//! chunks through, and the shard *server* loop behind
+//! `repro shard-serve --listen ADDR`.
+//!
+//! Protocol (see [`crate::runtime::wire`] for the frame layout): the server
+//! greets each connection with `Hello { n_layers }`, then answers every
+//! `Chunk { id, genes }` with either `Scores { id, scores }` (bit-exact
+//! per-candidate f32s, input order) or `Error { id, message }` for a
+//! *deterministic* evaluation failure (the connection stays usable).
+//! Transport failures are a different axis entirely: the client reconnects
+//! with bounded backoff and — because evaluations are pure functions of the
+//! genes — simply resends the in-flight chunk.  A connection that stays dead
+//! beyond the retry budget retires the feeder shard
+//! ([`crate::runtime::ShardFlow::Retire`]); the pool requeues the chunk onto
+//! its surviving shards.
+
+use std::io::{self, Read};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use super::wire::{read_frame, write_frame, WireMsg};
+use super::ShardFlow;
+use crate::coordinator::Config;
+
+/// Bounded-backoff reconnect policy for a remote shard.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Connection attempts per (re)connect, minimum 1.
+    pub attempts: u32,
+    /// Delay before the second attempt; doubles per attempt thereafter.
+    pub base_delay: Duration,
+    /// Ceiling on the per-attempt delay.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before attempt `i` (0-based; attempt 0 is immediate).
+    fn delay(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            Duration::ZERO
+        } else {
+            let factor = 1u32 << (attempt - 1).min(16);
+            self.base_delay.saturating_mul(factor).min(self.max_delay)
+        }
+    }
+}
+
+/// Client half of one coordinator→shard connection.  Owns the stream and
+/// the chunk-id counter; reconnects (and resends the in-flight chunk — safe
+/// because evaluations are pure) on transport errors.
+pub struct RemoteShard {
+    addr: String,
+    policy: RetryPolicy,
+    stream: Option<TcpStream>,
+    next_id: u64,
+}
+
+impl RemoteShard {
+    pub fn new(addr: impl Into<String>, policy: RetryPolicy) -> Self {
+        RemoteShard { addr: addr.into(), policy, stream: None, next_id: 0 }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Connect (with backoff) and consume the server's `Hello`.  No-op when
+    /// already connected.
+    fn ensure_connected(&mut self) -> io::Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let mut last_err = None;
+        for attempt in 0..self.policy.attempts.max(1) {
+            let delay = self.policy.delay(attempt);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    let mut stream = stream;
+                    match read_hello(&mut stream) {
+                        Ok(_n_layers) => {
+                            self.stream = Some(stream);
+                            return Ok(());
+                        }
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::Other, "no connection attempts made")
+        }))
+    }
+
+    /// Score one chunk of gene vectors on the remote shard.
+    ///
+    /// The outer `io::Result` is the *transport* axis (connection dead
+    /// beyond the retry budget — the caller should retire this shard).  The
+    /// inner `Result<Vec<f32>, String>` is the *evaluation* axis: the
+    /// remote's deterministic error text comes back as `Err(message)` with
+    /// the connection still healthy.
+    pub fn call(
+        &mut self,
+        genes: &[Vec<u16>],
+    ) -> io::Result<std::result::Result<Vec<f32>, String>> {
+        // One reconnect-and-resend cycle beyond the current connection:
+        // either the existing stream works, or we rebuild it once (with the
+        // policy's full backoff schedule) and resend the identical chunk.
+        let mut retried = false;
+        loop {
+            self.ensure_connected()?;
+            let id = self.next_id;
+            match self.exchange(id, genes) {
+                Ok(reply) => {
+                    self.next_id += 1;
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    self.stream = None;
+                    if retried {
+                        return Err(e);
+                    }
+                    retried = true;
+                }
+            }
+        }
+    }
+
+    fn exchange(
+        &mut self,
+        id: u64,
+        genes: &[Vec<u16>],
+    ) -> io::Result<std::result::Result<Vec<f32>, String>> {
+        let stream = self
+            .stream
+            .as_mut()
+            .expect("exchange called without a connection");
+        let msg = WireMsg::Chunk { id, genes: genes.to_vec() };
+        write_frame(stream, &msg)?;
+        let reply = read_frame(stream)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "shard closed the connection mid-call",
+                )
+            })?;
+        match reply {
+            WireMsg::Scores { id: rid, scores } => {
+                if rid != id {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("reply id {rid} does not match request id {id}"),
+                    ));
+                }
+                if scores.len() != genes.len() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "shard returned {} scores for {} candidates",
+                            scores.len(),
+                            genes.len()
+                        ),
+                    ));
+                }
+                Ok(Ok(scores))
+            }
+            WireMsg::Error { id: rid, message } => {
+                if rid != id {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("error reply id {rid} does not match request id {id}"),
+                    ));
+                }
+                Ok(Err(message))
+            }
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected reply op {other:?}"),
+            )),
+        }
+    }
+}
+
+fn read_hello<R: Read>(r: &mut R) -> io::Result<u64> {
+    let msg = read_frame(r)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed before hello")
+        })?;
+    match msg {
+        WireMsg::Hello { n_layers } => Ok(n_layers),
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("expected hello, got {other:?}"),
+        )),
+    }
+}
+
+/// Build the per-shard feeder closure the pool runs for one remote shard:
+/// chunks go out as frames, scores come back as the pool's normal
+/// `Result<Vec<f32>>` reply.  Evaluation errors from the remote are
+/// *deterministic* and reported as `Reply(Err(..))` (requeueing them would
+/// just fail again elsewhere — the search surfaces them like any local
+/// eval error); transport death beyond the retry budget retires the shard,
+/// so the pool requeues the in-flight chunk onto its surviving shards.
+pub fn remote_eval_flow(
+    addr: String,
+    policy: RetryPolicy,
+) -> Box<dyn FnMut(Vec<Config>) -> ShardFlow<crate::Result<Vec<f32>>>> {
+    let mut shard = RemoteShard::new(addr, policy);
+    Box::new(move |chunk: Vec<Config>| match shard.call(&chunk) {
+        Ok(Ok(scores)) => ShardFlow::Reply(Ok(scores)),
+        Ok(Err(message)) => ShardFlow::Reply(Err(eyre::anyhow!(
+            "remote shard {} eval error: {message}",
+            shard.addr()
+        ))),
+        Err(e) => ShardFlow::Retire {
+            reason: format!("transport to {}: {e}", shard.addr()),
+        },
+    })
+}
+
+/// Serve chunk frames on `listener`, one connection at a time, until
+/// `max_conns` connections have come and gone (`None` = forever).  `eval`
+/// scores a chunk of gene vectors; its error text is sent back verbatim as
+/// an `Error` frame.  This is the loop behind `repro shard-serve`.
+pub fn serve_shard<F>(
+    listener: TcpListener,
+    n_layers: u64,
+    max_conns: Option<usize>,
+    mut eval: F,
+) -> crate::Result<()>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
+{
+    let mut served = 0usize;
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[shard] accept failed: {e}");
+                continue;
+            }
+        };
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".into());
+        eprintln!("[shard] connection from {peer}");
+        if let Err(e) = serve_conn(stream, n_layers, &mut eval) {
+            eprintln!("[shard] connection {peer} ended with error: {e}");
+        } else {
+            eprintln!("[shard] connection {peer} closed");
+        }
+        served += 1;
+        if let Some(max) = max_conns {
+            if served >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn serve_conn<F>(stream: TcpStream, n_layers: u64, eval: &mut F) -> crate::Result<()>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
+{
+    let _ = stream.set_nodelay(true);
+    let mut stream = stream;
+    write_frame(&mut stream, &WireMsg::Hello { n_layers })?;
+    loop {
+        let msg = match read_frame(&mut stream)? {
+            None => return Ok(()), // clean EOF: coordinator hung up
+            Some(m) => m,
+        };
+        let reply = match msg {
+            WireMsg::Chunk { id, genes } => match eval(&genes) {
+                Ok(scores) => {
+                    if scores.len() != genes.len() {
+                        WireMsg::Error {
+                            id,
+                            message: format!(
+                                "evaluator returned {} scores for {} candidates",
+                                scores.len(),
+                                genes.len()
+                            ),
+                        }
+                    } else {
+                        WireMsg::Scores { id, scores }
+                    }
+                }
+                Err(e) => WireMsg::Error { id, message: e.to_string() },
+            },
+            other => {
+                eyre::bail!("unexpected client frame {other:?}");
+            }
+        };
+        write_frame(&mut stream, &reply)?;
+    }
+}
+
+/// Spawn a shard server for tests: binds a loopback port, serves `eval` on
+/// a background thread, returns the bound address.  The thread exits after
+/// `max_conns` connections (or runs until process exit for `None` —
+/// listener threads are detached, matching how CI kills the server
+/// processes).
+pub fn spawn_test_server<F>(
+    n_layers: u64,
+    max_conns: Option<usize>,
+    eval: F,
+) -> crate::Result<String>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send + 'static,
+{
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        if let Err(e) = serve_shard(listener, n_layers, max_conns, eval) {
+            eprintln!("[shard] server loop failed: {e}");
+        }
+    });
+    Ok(addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn double(genes: &[Vec<u16>]) -> crate::Result<Vec<f32>> {
+        Ok(genes.iter().map(|g| g.iter().map(|&x| x as f32).sum::<f32>() * 2.0).collect())
+    }
+
+    #[test]
+    fn client_server_round_trip() {
+        let addr = spawn_test_server(0, Some(1), double).unwrap();
+        let mut shard = RemoteShard::new(addr, RetryPolicy::default());
+        let chunk = vec![vec![1u16, 2, 3], vec![10, 20]];
+        let scores = shard.call(&chunk).unwrap().unwrap();
+        assert_eq!(scores, vec![12.0, 60.0]);
+        // second call reuses the connection; ids advance server-side too
+        let scores = shard.call(&[vec![5u16]]).unwrap().unwrap();
+        assert_eq!(scores, vec![10.0]);
+    }
+
+    #[test]
+    fn eval_error_comes_back_as_message_not_transport_failure() {
+        let addr = spawn_test_server(0, Some(1), |genes: &[Vec<u16>]| {
+            eyre::ensure!(genes.len() != 2, "no pairs allowed");
+            double(genes)
+        })
+        .unwrap();
+        let mut shard = RemoteShard::new(addr, RetryPolicy::default());
+        let err = shard.call(&[vec![1u16], vec![2]]).unwrap().unwrap_err();
+        assert!(err.contains("no pairs allowed"), "got: {err}");
+        // connection survives the eval error
+        let ok = shard.call(&[vec![3u16]]).unwrap().unwrap();
+        assert_eq!(ok, vec![6.0]);
+    }
+
+    #[test]
+    fn dead_address_errors_after_bounded_retries() {
+        // A listener bound then dropped: the port refuses connections.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let fast = RetryPolicy {
+            attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+        };
+        let mut shard = RemoteShard::new(addr, fast);
+        assert!(shard.call(&[vec![1u16]]).is_err());
+    }
+
+    #[test]
+    fn reconnects_across_server_restarts() {
+        // Server accepts exactly one connection; the client's second call
+        // hits a dead stream, reconnects (the listener queues a second
+        // conn? no — max_conns(2) serves sequentially) and resends.
+        let addr = spawn_test_server(0, Some(2), double).unwrap();
+        let mut shard = RemoteShard::new(addr.clone(), RetryPolicy::default());
+        assert_eq!(shard.call(&[vec![2u16]]).unwrap().unwrap(), vec![4.0]);
+        // Drop our stream so the server moves on to the next connection.
+        shard.stream = None;
+        assert_eq!(shard.call(&[vec![4u16]]).unwrap().unwrap(), vec![8.0]);
+    }
+
+    #[test]
+    fn flow_retires_on_dead_transport() {
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let fast = RetryPolicy {
+            attempts: 1,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(1),
+        };
+        let mut flow = remote_eval_flow(addr, fast);
+        match flow(vec![vec![1u16]]) {
+            ShardFlow::Retire { reason } => {
+                assert!(reason.contains("transport"), "got: {reason}");
+            }
+            ShardFlow::Reply(_) => panic!("expected retire on dead transport"),
+        }
+    }
+}

@@ -10,17 +10,28 @@
 //!  * each worker owns its own evaluation state, built *on the worker
 //!    thread* by the shard builder — per-shard state can be anything from a
 //!    full non-`Send` runtime stack down to a couple of `Arc` handles onto
-//!    process-wide shared state (the search pool does the latter: one
-//!    `Sync` runtime + one shared device bank serve every shard);
+//!    process-wide shared state, or (via [`EvalService::spawn_flow`]) a TCP
+//!    connection to a remote shard server speaking the
+//!    [`crate::runtime::wire`] protocol;
 //!  * every request carries its own reply channel, and `call_batch` collects
 //!    replies in submission order — results are therefore deterministically
 //!    ordered and bit-identical regardless of worker count, **provided** the
 //!    evaluation closure is a pure function of the payload (seed any
 //!    randomness per-candidate from the payload, never from shard state).
 //!
+//! Failure model: a shard whose closure panics, or that asks to retire
+//! ([`ShardFlow::Retire`] — remote transports do this when a connection
+//! dies beyond retry), leaves the pool **without poisoning it**.  Its
+//! in-flight request is requeued onto the shared FIFO (evaluations are pure
+//! functions of the payload, so a re-run on another shard returns the
+//! identical answer) and the pool degrades to fewer workers.  Only when the
+//! *last* shard retires do pending requests fail — surfaced as `Err` from
+//! [`EvalService::call`] / [`EvalService::call_batch`], never a panic.
+//!
 //! Generic over request/response so tests can exercise the queueing logic
 //! without PJRT.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -29,10 +40,14 @@ use std::time::{Duration, Instant};
 /// spent serving them (busy time / wall time = utilization).
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
+    /// Human-readable shard label (`local#N`, or the remote address).
+    pub label: String,
     /// Requests this shard served.
     pub completed: u64,
     /// Wall-clock this shard spent inside its evaluation closure.
     pub busy: Duration,
+    /// True once the shard has left the pool (panic or [`ShardFlow::Retire`]).
+    pub retired: bool,
 }
 
 /// Queue/latency accounting, aggregated across shards.
@@ -42,6 +57,8 @@ pub struct ServiceStats {
     pub submitted: u64,
     /// Requests served (across all shards).
     pub completed: u64,
+    /// Requests put back on the queue after their shard retired mid-flight.
+    pub requeued: u64,
     /// Summed queue wait (enqueue → a shard picked the request up).
     pub total_queue_wait: Duration,
     /// Summed service time (inside the evaluation closures).
@@ -77,6 +94,23 @@ impl ServiceStats {
             .map(|s| s.busy.as_secs_f64() / w)
             .collect()
     }
+
+    /// Shards that have retired (panicked closures / dead transports).
+    pub fn retired_shards(&self) -> usize {
+        self.per_shard.iter().filter(|s| s.retired).count()
+    }
+}
+
+/// What a shard's evaluation closure did with one request: answer it, or
+/// take the shard out of the pool (the request is requeued for the
+/// surviving shards — pure evaluations make the re-run identical).
+pub enum ShardFlow<A> {
+    /// The request was served; send this answer back.
+    Reply(A),
+    /// The shard is no longer usable (e.g. its remote connection died
+    /// beyond retry).  The in-flight request goes back on the shared FIFO
+    /// and the shard leaves the pool.
+    Retire { reason: String },
 }
 
 struct Request<Q, A> {
@@ -85,11 +119,18 @@ struct Request<Q, A> {
     reply: mpsc::Sender<A>,
 }
 
+/// Sender half shared with the workers so a retiring shard can requeue its
+/// in-flight request.  `Drop` clears it (alongside the caller-side sender)
+/// so the channel actually closes at shutdown.
+type SharedTx<Q, A> = Arc<Mutex<Option<mpsc::Sender<Request<Q, A>>>>>;
+
 /// Handle to the worker pool.  Dropping it shuts every worker down (after
 /// the queue drains).
 pub struct EvalService<Q: Send + 'static, A: Send + 'static> {
     tx: mpsc::Sender<Request<Q, A>>,
+    shared_tx: SharedTx<Q, A>,
     stats: Arc<Mutex<ServiceStats>>,
+    alive: Arc<AtomicUsize>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -99,6 +140,7 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
     /// API; see [`EvalService::spawn_sharded`]).
     pub fn spawn<B, F>(builder: B) -> Self
     where
+        Q: Clone,
         B: FnOnce() -> F + Send + 'static,
         F: FnMut(Q) -> A + 'static,
     {
@@ -118,22 +160,56 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
     /// (confining non-`Send` runtime state to its shard).
     pub fn spawn_sharded<B, F>(workers: usize, builder: B) -> Self
     where
+        Q: Clone,
         B: Fn(usize) -> F + Send + Sync + 'static,
         F: FnMut(Q) -> A + 'static,
     {
         let n = workers.max(1);
+        let labels = (0..n).map(|i| format!("local#{i}")).collect();
+        Self::spawn_flow(labels, move |shard| {
+            let mut eval = builder(shard);
+            Box::new(move |q: Q| ShardFlow::Reply(eval(q)))
+        })
+    }
+
+    /// Spawn one shard per label.  The most general constructor: each
+    /// shard's closure decides per request whether to [`ShardFlow::Reply`]
+    /// or to [`ShardFlow::Retire`] from the pool, which lets heterogeneous
+    /// shards (local device closures and remote TCP feeders) share one
+    /// FIFO.  A closure that panics is treated as retiring.
+    ///
+    /// `Q: Clone` because the worker snapshots each payload before
+    /// evaluating it, so a retiring shard can requeue the request intact.
+    pub fn spawn_flow<B>(labels: Vec<String>, builder: B) -> Self
+    where
+        Q: Clone,
+        B: Fn(usize) -> Box<dyn FnMut(Q) -> ShardFlow<A>> + Send + Sync + 'static,
+    {
+        let n = labels.len().max(1);
+        let labels: Vec<String> = if labels.is_empty() {
+            vec!["local#0".to_string()]
+        } else {
+            labels
+        };
         let (tx, rx) = mpsc::channel::<Request<Q, A>>();
         let rx = Arc::new(Mutex::new(rx));
+        let shared_tx: SharedTx<Q, A> = Arc::new(Mutex::new(Some(tx.clone())));
         let stats = Arc::new(Mutex::new(ServiceStats {
-            per_shard: vec![ShardStats::default(); n],
+            per_shard: labels
+                .iter()
+                .map(|l| ShardStats { label: l.clone(), ..ShardStats::default() })
+                .collect(),
             ..ServiceStats::default()
         }));
+        let alive = Arc::new(AtomicUsize::new(n));
         let builder = Arc::new(builder);
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
             let rx = rx.clone();
             let stats = stats.clone();
             let builder = builder.clone();
+            let shared_tx = shared_tx.clone();
+            let alive = alive.clone();
             handles.push(std::thread::spawn(move || {
                 let mut eval = (*builder)(shard);
                 loop {
@@ -151,29 +227,106 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
                     let Ok(req) = req else { break };
                     let started = Instant::now();
                     let wait = started - req.enqueued;
-                    let answer = eval(req.payload);
+                    // Snapshot the payload so a retiring shard can requeue
+                    // the request intact (evaluations are pure, so a re-run
+                    // on another shard gives the identical answer).
+                    let backup = req.payload.clone();
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || eval(req.payload),
+                    ));
                     let service = started.elapsed();
-                    {
-                        let mut s = stats.lock().unwrap();
-                        s.completed += 1;
-                        s.total_queue_wait += wait;
-                        s.total_service_time += service;
-                        s.per_shard[shard].completed += 1;
-                        s.per_shard[shard].busy += service;
+                    match outcome {
+                        Ok(ShardFlow::Reply(answer)) => {
+                            {
+                                let mut s = stats.lock().unwrap();
+                                s.completed += 1;
+                                s.total_queue_wait += wait;
+                                s.total_service_time += service;
+                                s.per_shard[shard].completed += 1;
+                                s.per_shard[shard].busy += service;
+                            }
+                            let _ = req.reply.send(answer);
+                        }
+                        other => {
+                            // Retire path: explicit ShardFlow::Retire or a
+                            // panicked closure — both take the shard out of
+                            // the pool without poisoning the queue.
+                            let reason = match other {
+                                Ok(ShardFlow::Retire { reason }) => reason,
+                                Err(panic) => {
+                                    let msg = panic
+                                        .downcast_ref::<String>()
+                                        .map(|s| s.as_str())
+                                        .or_else(|| {
+                                            panic.downcast_ref::<&str>().copied()
+                                        })
+                                        .unwrap_or("panic");
+                                    format!("evaluation panicked: {msg}")
+                                }
+                                Ok(ShardFlow::Reply(_)) => unreachable!(),
+                            };
+                            let remaining = alive.fetch_sub(1, Ordering::SeqCst) - 1;
+                            let label = {
+                                let mut s = stats.lock().unwrap();
+                                s.per_shard[shard].retired = true;
+                                s.per_shard[shard].busy += service;
+                                if remaining > 0 {
+                                    s.requeued += 1;
+                                }
+                                s.per_shard[shard].label.clone()
+                            };
+                            eprintln!(
+                                "[pool] shard {label} retired ({reason}); \
+                                 {remaining} shard(s) remain"
+                            );
+                            if remaining > 0 {
+                                // Put the in-flight request back on the FIFO
+                                // (fresh enqueue time; the original reply
+                                // channel rides along, so the caller never
+                                // notices beyond added latency).
+                                let requeue = Request {
+                                    payload: backup,
+                                    enqueued: Instant::now(),
+                                    reply: req.reply,
+                                };
+                                if let Some(tx) = shared_tx.lock().unwrap().as_ref() {
+                                    let _ = tx.send(requeue);
+                                }
+                                // (If the service is mid-shutdown the cell is
+                                // empty and the request drops: the caller gets
+                                // a recv error, same as any shutdown.)
+                            } else {
+                                // Last shard out: drop the request (its reply
+                                // sender drops with it, so the caller gets an
+                                // immediate error instead of a hang) and drain
+                                // the queue until shutdown closes the channel,
+                                // failing queued requests the same way.
+                                drop(req.reply);
+                                if let Ok(guard) = rx.lock() {
+                                    while guard.recv().is_ok() {}
+                                }
+                            }
+                            break;
+                        }
                     }
-                    let _ = req.reply.send(answer);
                 }
             }));
         }
-        EvalService { tx, stats, workers: handles }
+        EvalService { tx, shared_tx, stats, alive, workers: handles }
     }
 
-    /// Number of worker shards.
+    /// Number of worker shards spawned (including retired ones).
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
 
-    /// Submit a request; returns a receiver for the answer.
+    /// Shards still serving (spawned minus retired).
+    pub fn live_workers(&self) -> usize {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Submit a request; returns a receiver for the answer.  If every shard
+    /// has retired, the receiver's `recv()` fails instead of hanging.
     pub fn submit(&self, payload: Q) -> mpsc::Receiver<A> {
         let (rtx, rrx) = mpsc::channel();
         self.stats.lock().unwrap().submitted += 1;
@@ -181,16 +334,30 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
         rrx
     }
 
-    /// Submit and block for the answer.
-    pub fn call(&self, payload: Q) -> A {
-        self.submit(payload).recv().expect("worker died")
+    /// Submit and block for the answer.  Errors (instead of panicking) when
+    /// the request was dropped because every shard retired.
+    pub fn call(&self, payload: Q) -> crate::Result<A> {
+        self.submit(payload).recv().map_err(|_| self.dead_pool_error())
     }
 
     /// Submit a whole batch, then collect replies in submission order —
     /// the deterministic-reassembly primitive the search loop relies on.
-    pub fn call_batch(&self, payloads: Vec<Q>) -> Vec<A> {
+    /// A single retired shard is invisible here (its in-flight chunk is
+    /// requeued); only a fully-retired pool surfaces as `Err`.
+    pub fn call_batch(&self, payloads: Vec<Q>) -> crate::Result<Vec<A>> {
         let rxs: Vec<_> = payloads.into_iter().map(|p| self.submit(p)).collect();
-        rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| self.dead_pool_error()))
+            .collect()
+    }
+
+    fn dead_pool_error(&self) -> eyre::Report {
+        let retired = self.stats.lock().unwrap().retired_shards();
+        eyre::anyhow!(
+            "evaluation pool request dropped: {retired} of {} shard(s) retired, \
+             no live shard remains to serve it",
+            self.n_workers()
+        )
     }
 
     /// Snapshot of the queue/latency counters.
@@ -202,6 +369,9 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
 impl<Q: Send + 'static, A: Send + 'static> Drop for EvalService<Q, A> {
     fn drop(&mut self) {
         // Closing the channel stops the worker loops once the queue drains.
+        // Both sender halves must go: the caller-side `tx` and the workers'
+        // shared requeue sender.
+        self.shared_tx.lock().unwrap().take();
         let (dead_tx, _) = mpsc::channel();
         drop(std::mem::replace(&mut self.tx, dead_tx));
         for w in self.workers.drain(..) {
@@ -213,21 +383,25 @@ impl<Q: Send + 'static, A: Send + 'static> Drop for EvalService<Q, A> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicBool;
 
     #[test]
     fn roundtrip_single() {
         let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x * 2);
-        assert_eq!(svc.call(21), 42);
+        assert_eq!(svc.call(21).unwrap(), 42);
         let s = svc.stats();
         assert_eq!(s.submitted, 1);
         assert_eq!(s.completed, 1);
+        assert_eq!(s.requeued, 0);
         assert_eq!(s.per_shard.len(), 1);
+        assert_eq!(s.per_shard[0].label, "local#0");
+        assert!(!s.per_shard[0].retired);
     }
 
     #[test]
     fn batch_preserves_order() {
         let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x + 1);
-        let out = svc.call_batch((0..100).collect());
+        let out = svc.call_batch((0..100).collect()).unwrap();
         assert_eq!(out, (1..101).collect::<Vec<_>>());
     }
 
@@ -241,14 +415,14 @@ mod tests {
                 count
             }
         });
-        assert_eq!(svc.call(()), 1);
-        assert_eq!(svc.call(()), 2);
+        assert_eq!(svc.call(()).unwrap(), 1);
+        assert_eq!(svc.call(()).unwrap(), 2);
     }
 
     #[test]
     fn shutdown_joins_worker() {
         let svc: EvalService<u32, u32> = EvalService::spawn(|| |x: u32| x);
-        svc.call(1);
+        svc.call(1).unwrap();
         drop(svc); // must not hang
     }
 
@@ -262,7 +436,7 @@ mod tests {
                 x + 1
             }
         });
-        let out = svc.call_batch((0..200).collect());
+        let out = svc.call_batch((0..200).collect()).unwrap();
         assert_eq!(out, (1..201).collect::<Vec<_>>());
     }
 
@@ -272,19 +446,23 @@ mod tests {
         let one: EvalService<u32, u32> = EvalService::spawn_sharded(1, move |_| eval);
         let four: EvalService<u32, u32> = EvalService::spawn_sharded(4, move |_| eval);
         let inputs: Vec<u32> = (0..64).collect();
-        assert_eq!(one.call_batch(inputs.clone()), four.call_batch(inputs));
+        assert_eq!(
+            one.call_batch(inputs.clone()).unwrap(),
+            four.call_batch(inputs).unwrap()
+        );
     }
 
     #[test]
     fn sharded_stats_aggregate() {
         let svc: EvalService<u32, u32> = EvalService::spawn_sharded(3, |_s| |x: u32| x);
-        let _ = svc.call_batch((0..30).collect());
+        let _ = svc.call_batch((0..30).collect()).unwrap();
         let s = svc.stats();
         assert_eq!(s.submitted, 30);
         assert_eq!(s.completed, 30);
         assert_eq!(s.per_shard.len(), 3);
         assert_eq!(s.per_shard.iter().map(|p| p.completed).sum::<u64>(), 30);
         assert_eq!(s.shard_utilization(Duration::from_secs(1)).len(), 3);
+        assert_eq!(s.retired_shards(), 0);
     }
 
     #[test]
@@ -297,7 +475,7 @@ mod tests {
                 x
             }
         });
-        let _ = svc.call_batch((0..16).collect());
+        let _ = svc.call_batch((0..16).collect()).unwrap();
         let s = svc.stats();
         let active = s.per_shard.iter().filter(|p| p.completed > 0).count();
         assert!(active >= 2, "expected >=2 active shards, got {active}");
@@ -307,13 +485,91 @@ mod tests {
     fn shard_builder_sees_its_index() {
         let svc: EvalService<(), usize> =
             EvalService::spawn_sharded(1, |shard| move |_| shard);
-        assert_eq!(svc.call(()), 0);
+        assert_eq!(svc.call(()).unwrap(), 0);
     }
 
     #[test]
     fn zero_workers_clamps_to_one() {
         let svc: EvalService<u32, u32> = EvalService::spawn_sharded(0, |_s| |x: u32| x);
         assert_eq!(svc.n_workers(), 1);
-        assert_eq!(svc.call(7), 7);
+        assert_eq!(svc.call(7).unwrap(), 7);
+    }
+
+    #[test]
+    fn crashed_shard_requeues_and_pool_degrades() {
+        // Whichever shard picks up the poison payload first panics (exactly
+        // once, via the shared trip flag), retires and requeues the request;
+        // the surviving shard then serves it.  The batch result is complete
+        // and correct — one crashed shard means fewer workers, not a failed
+        // search.
+        let tripped = Arc::new(AtomicBool::new(false));
+        let svc: EvalService<u32, u32> = EvalService::spawn_flow(
+            vec!["a".into(), "b".into()],
+            move |_shard| {
+                let tripped = tripped.clone();
+                Box::new(move |x: u32| {
+                    if x == 999 && !tripped.swap(true, Ordering::SeqCst) {
+                        panic!("injected shard crash");
+                    }
+                    ShardFlow::Reply(x * 2)
+                })
+            },
+        );
+        let payloads: Vec<u32> = (0..32).map(|i| if i == 7 { 999 } else { i }).collect();
+        let out = svc.call_batch(payloads.clone()).unwrap();
+        for (p, o) in payloads.iter().zip(&out) {
+            assert_eq!(*o, p * 2, "requeued request must return the pure answer");
+        }
+        let s = svc.stats();
+        assert_eq!(s.requeued, 1, "the poisoned chunk must be requeued once");
+        assert_eq!(s.retired_shards(), 1);
+        assert_eq!(svc.live_workers(), 1);
+        assert_eq!(svc.n_workers(), 2);
+        // the degraded pool keeps serving
+        assert_eq!(svc.call(5).unwrap(), 10);
+    }
+
+    #[test]
+    fn fully_retired_pool_errors_instead_of_hanging() {
+        let svc: EvalService<u32, u32> = EvalService::spawn_flow(
+            vec!["solo".into()],
+            |_shard| {
+                Box::new(|_x: u32| ShardFlow::Retire { reason: "transport gone".into() })
+            },
+        );
+        assert!(svc.call(1).is_err(), "dead pool must error, not panic/hang");
+        // queued requests after full retirement drain with errors too
+        assert!(svc.call(2).is_err());
+        let res = svc.call_batch(vec![3, 4, 5]);
+        assert!(res.is_err());
+        let s = svc.stats();
+        assert_eq!(s.retired_shards(), 1);
+        assert_eq!(s.requeued, 0, "nothing left to requeue onto");
+        assert_eq!(svc.live_workers(), 0);
+        drop(svc); // must not hang
+    }
+
+    #[test]
+    fn explicit_retire_requeues_like_a_crash() {
+        // Same discipline as the panic path, via the ShardFlow::Retire arm
+        // (what a remote feeder returns when its connection dies).
+        let tripped = Arc::new(AtomicBool::new(false));
+        let svc: EvalService<u32, u32> = EvalService::spawn_flow(
+            vec!["good".into(), "flaky".into()],
+            move |_shard| {
+                let tripped = tripped.clone();
+                Box::new(move |x: u32| {
+                    if x == 42 && !tripped.swap(true, Ordering::SeqCst) {
+                        return ShardFlow::Retire { reason: "connection reset".into() };
+                    }
+                    ShardFlow::Reply(x + 1)
+                })
+            },
+        );
+        let out = svc.call_batch((40..50).collect()).unwrap();
+        assert_eq!(out, (41..51).collect::<Vec<_>>());
+        let s = svc.stats();
+        assert_eq!(s.requeued, 1);
+        assert_eq!(s.retired_shards(), 1);
     }
 }

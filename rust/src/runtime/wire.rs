@@ -1,0 +1,363 @@
+//! The evaluation pool's wire format: the serialized form of one pool
+//! request (a chunk of candidate configurations) and its reply (per-
+//! candidate scores, or an error string).
+//!
+//! Framing is length-prefixed and self-describing:
+//!
+//! ```text
+//!   offset  size  field
+//!   0       4     magic  b"AMQW"
+//!   4       1     version (WIRE_VERSION)
+//!   5       4     payload length, u32 little-endian
+//!   9       len   payload: compact JSON (data::json::Value::render)
+//! ```
+//!
+//! The payload reuses the in-tree [`crate::data::json`] value type — the
+//! offline build has no serde — and is deterministic: `Value` objects are
+//! `BTreeMap`s, so a given message always encodes to the same bytes (the
+//! cross-version layout test in `rust/tests/remote.rs` pins them).
+//!
+//! Exactness rules:
+//!  * genes are `u16` integers (exact in JSON);
+//!  * chunk ids are sequential `u64` counters, carried as JSON integers
+//!    (exact below 2^53 — ids are per-connection counters and never get
+//!    anywhere near that);
+//!  * **scores are carried as `f32::to_bits()` u32 integers**, never as
+//!    decimal floats, so a score crosses the wire bit-exactly and remote
+//!    archives stay byte-identical to in-process ones.
+//!
+//! Decoding never panics: bad magic, unsupported version, truncated input,
+//! oversized frames and malformed payloads all surface as errors.
+
+use crate::data::json::Value;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+/// Frame magic — `b"AMQW"`.
+pub const WIRE_MAGIC: [u8; 4] = *b"AMQW";
+
+/// Wire protocol version.  Bump on any layout change; peers reject
+/// mismatches instead of misparsing.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame header size: magic + version + u32 payload length.
+pub const HEADER_LEN: usize = 9;
+
+/// Hard cap on payload size.  A chunk is at most `score_batch` configs of
+/// `n_layers` genes — a few KB in practice; 32 MiB is far above any real
+/// frame and small enough that a corrupted length prefix fails fast instead
+/// of attempting a multi-gigabyte allocation.
+pub const MAX_FRAME_LEN: usize = 32 * 1024 * 1024;
+
+/// One message of the shard protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    /// Server greeting, sent once per connection before any chunk.
+    /// `n_layers` is the genome length the shard can score (0 = any — the
+    /// synthetic CI shards score arbitrary-length configs).
+    Hello { n_layers: u64 },
+    /// A chunk of candidate configurations to score (the pool's request
+    /// unit: one chunk = one scorer dispatch on the serving shard).
+    Chunk { id: u64, genes: Vec<Vec<u16>> },
+    /// Per-candidate scores for chunk `id`, input order, bit-exact.
+    Scores { id: u64, scores: Vec<f32> },
+    /// Deterministic evaluation failure for chunk `id` (the remote's error
+    /// text; *not* a transport failure — the connection stays usable).
+    Error { id: u64, message: String },
+}
+
+fn obj(entries: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in entries {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+impl WireMsg {
+    /// The JSON payload of this message (no framing).
+    pub fn to_value(&self) -> Value {
+        match self {
+            WireMsg::Hello { n_layers } => obj(vec![
+                ("n_layers", Value::Num(*n_layers as f64)),
+                ("op", Value::Str("hello".into())),
+            ]),
+            WireMsg::Chunk { id, genes } => obj(vec![
+                (
+                    "genes",
+                    Value::Arr(
+                        genes
+                            .iter()
+                            .map(|c| {
+                                Value::Arr(
+                                    c.iter().map(|&g| Value::Num(g as f64)).collect(),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("chunk".into())),
+            ]),
+            WireMsg::Scores { id, scores } => obj(vec![
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("scores".into())),
+                (
+                    "scores",
+                    Value::Arr(
+                        scores
+                            .iter()
+                            .map(|&s| Value::Num(s.to_bits() as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            WireMsg::Error { id, message } => obj(vec![
+                ("id", Value::Num(*id as f64)),
+                ("message", Value::Str(message.clone())),
+                ("op", Value::Str("error".into())),
+            ]),
+        }
+    }
+
+    /// Parse a message from its JSON payload.
+    pub fn from_value(v: &Value) -> Result<WireMsg> {
+        let op = v.get("op")?.as_str()?;
+        match op {
+            "hello" => Ok(WireMsg::Hello { n_layers: v.get("n_layers")?.as_u64()? }),
+            "chunk" => {
+                let id = v.get("id")?.as_u64()?;
+                let mut genes = Vec::new();
+                for row in v.get("genes")?.as_arr()? {
+                    let mut cfg = Vec::new();
+                    for g in row.as_arr()? {
+                        let g = g.as_u64()?;
+                        eyre::ensure!(g <= u16::MAX as u64, "gene {g} exceeds u16");
+                        cfg.push(g as u16);
+                    }
+                    genes.push(cfg);
+                }
+                Ok(WireMsg::Chunk { id, genes })
+            }
+            "scores" => {
+                let id = v.get("id")?.as_u64()?;
+                let mut scores = Vec::new();
+                for s in v.get("scores")?.as_arr()? {
+                    let bits = s.as_u64()?;
+                    eyre::ensure!(bits <= u32::MAX as u64, "score bits {bits} exceed u32");
+                    scores.push(f32::from_bits(bits as u32));
+                }
+                Ok(WireMsg::Scores { id, scores })
+            }
+            "error" => Ok(WireMsg::Error {
+                id: v.get("id")?.as_u64()?,
+                message: v.get("message")?.as_str()?.to_string(),
+            }),
+            other => eyre::bail!("unknown wire op `{other}`"),
+        }
+    }
+}
+
+/// Encode a message into one complete frame (header + payload).
+pub fn encode_frame(msg: &WireMsg) -> Vec<u8> {
+    let payload = msg.to_value().render().into_bytes();
+    debug_assert!(payload.len() <= MAX_FRAME_LEN);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.push(WIRE_VERSION);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode exactly one frame from a byte slice (the whole slice must be one
+/// frame — trailing bytes are an error).  Never panics on malformed input.
+pub fn decode_frame(bytes: &[u8]) -> Result<WireMsg> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    let msg = read_frame(&mut cursor)?
+        .ok_or_else(|| eyre::anyhow!("empty input, expected a frame"))?;
+    eyre::ensure!(
+        cursor.position() as usize == bytes.len(),
+        "trailing bytes after frame ({} of {})",
+        cursor.position(),
+        bytes.len()
+    );
+    Ok(msg)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> std::io::Result<()> {
+    w.write_all(&encode_frame(msg))?;
+    w.flush()
+}
+
+/// Read one frame from a stream.  Returns `Ok(None)` on clean EOF at a
+/// frame boundary (the peer closed the connection); mid-frame EOF,
+/// bad magic/version, oversized lengths and malformed payloads are errors.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<WireMsg>> {
+    let mut magic = [0u8; 4];
+    match r.read(&mut magic)? {
+        0 => return Ok(None),
+        n => r.read_exact(&mut magic[n..])?,
+    }
+    eyre::ensure!(
+        magic == WIRE_MAGIC,
+        "bad frame magic {:02x?} (expected {:02x?})",
+        magic,
+        WIRE_MAGIC
+    );
+    let mut version = [0u8; 1];
+    r.read_exact(&mut version)?;
+    eyre::ensure!(
+        version[0] == WIRE_VERSION,
+        "wire version {} unsupported (speaking {})",
+        version[0],
+        WIRE_VERSION
+    );
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    eyre::ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds {MAX_FRAME_LEN}");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|_| eyre::anyhow!("frame payload is not UTF-8"))?;
+    let value = Value::parse(text)?;
+    Ok(Some(WireMsg::from_value(&value)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_ops() {
+        let msgs = [
+            WireMsg::Hello { n_layers: 28 },
+            WireMsg::Hello { n_layers: 0 },
+            WireMsg::Chunk { id: 0, genes: vec![] },
+            WireMsg::Chunk { id: 7, genes: vec![vec![2, 3, 4], vec![0x0104, 2]] },
+            WireMsg::Scores { id: 7, scores: vec![0.5, -1.25e-3, f32::NAN] },
+            WireMsg::Error { id: 9, message: "bank has 28 layers, got 3".into() },
+        ];
+        for m in msgs {
+            let bytes = encode_frame(&m);
+            let back = decode_frame(&bytes).unwrap();
+            match (&m, &back) {
+                // NaN != NaN under PartialEq; compare scores bitwise
+                (WireMsg::Scores { id: a, scores: sa }, WireMsg::Scores { id: b, scores: sb }) => {
+                    assert_eq!(a, b);
+                    let ba: Vec<u32> = sa.iter().map(|s| s.to_bits()).collect();
+                    let bb: Vec<u32> = sb.iter().map(|s| s.to_bits()).collect();
+                    assert_eq!(ba, bb);
+                }
+                _ => assert_eq!(m, back),
+            }
+        }
+    }
+
+    #[test]
+    fn stream_carries_multiple_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &WireMsg::Hello { n_layers: 4 }).unwrap();
+        write_frame(&mut buf, &WireMsg::Chunk { id: 1, genes: vec![vec![2]] }).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), Some(WireMsg::Hello { n_layers: 4 }));
+        assert_eq!(
+            read_frame(&mut cursor).unwrap(),
+            Some(WireMsg::Chunk { id: 1, genes: vec![vec![2]] })
+        );
+        assert_eq!(read_frame(&mut cursor).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn malformed_frames_error_cleanly() {
+        // truncated header
+        assert!(decode_frame(b"AM").is_err());
+        // bad magic
+        assert!(decode_frame(b"XXXX\x01\x02\x00\x00\x00{}").is_err());
+        // unsupported version
+        assert!(decode_frame(b"AMQW\x63\x02\x00\x00\x00{}").is_err());
+        // truncated payload (length says 100, 2 bytes present)
+        assert!(decode_frame(b"AMQW\x01\x64\x00\x00\x00{}").is_err());
+        // garbage JSON payload
+        assert!(decode_frame(b"AMQW\x01\x03\x00\x00\x00{,}").is_err());
+        // valid JSON, unknown op
+        let bad = {
+            let mut f = Vec::new();
+            let payload = br#"{"op":"nope"}"#;
+            f.extend_from_slice(b"AMQW\x01");
+            f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            f.extend_from_slice(payload);
+            f
+        };
+        assert!(decode_frame(&bad).is_err());
+        // valid JSON, missing fields
+        let bad = {
+            let mut f = Vec::new();
+            let payload = br#"{"op":"chunk"}"#;
+            f.extend_from_slice(b"AMQW\x01");
+            f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            f.extend_from_slice(payload);
+            f
+        };
+        assert!(decode_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        let mut f = Vec::new();
+        f.extend_from_slice(b"AMQW\x01");
+        f.extend_from_slice(&(u32::MAX).to_le_bytes());
+        f.extend_from_slice(b"{}");
+        assert!(decode_frame(&f).is_err());
+    }
+
+    #[test]
+    fn frame_layout_bytes_are_pinned() {
+        // Cross-version guard: these exact bytes are the protocol.  If this
+        // test fails, WIRE_VERSION must be bumped and both ends updated.
+        let frame = encode_frame(&WireMsg::Chunk { id: 7, genes: vec![vec![2, 3], vec![4, 2]] });
+        let payload = br#"{"genes":[[2,3],[4,2]],"id":7,"op":"chunk"}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]); // "AMQW" v1
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        let frame = encode_frame(&WireMsg::Scores { id: 7, scores: vec![1.0, -2.5] });
+        // 1.0f32 = 0x3F800000 = 1065353216; -2.5f32 = 0xC0200000 = 3222274048
+        let payload = br#"{"id":7,"op":"scores","scores":[1065353216,3222274048]}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+    }
+
+    #[test]
+    fn scores_cross_bit_exactly() {
+        let patterns: Vec<f32> = [
+            0x0000_0000u32, // +0.0
+            0x8000_0000,    // -0.0
+            0x7F80_0000,    // +inf
+            0xFF80_0000,    // -inf
+            0x7FC0_0001,    // NaN with payload
+            0x0000_0001,    // smallest subnormal
+            0x3F80_0000,    // 1.0
+        ]
+        .iter()
+        .map(|&b| f32::from_bits(b))
+        .collect();
+        let bytes = encode_frame(&WireMsg::Scores { id: 1, scores: patterns.clone() });
+        match decode_frame(&bytes).unwrap() {
+            WireMsg::Scores { scores, .. } => {
+                for (a, b) in patterns.iter().zip(&scores) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "score bits changed on the wire");
+                }
+            }
+            other => panic!("expected scores, got {other:?}"),
+        }
+    }
+}

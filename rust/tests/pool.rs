@@ -3,40 +3,16 @@
 //! bit of the search result — `--workers 1` and `--workers 4` archives are
 //! identical for a fixed seed.
 
-use amq::coordinator::{
-    run_search, ConfigEvaluator, Config, PooledEvaluator, SearchParams, SearchSpace,
-};
+use amq::coordinator::synth::{synth_jsd, synth_space};
+use amq::coordinator::{run_search, Config, ConfigEvaluator, PooledEvaluator, SearchParams, SearchSpace};
 use amq::runtime::EvalService;
-use amq::util::Rng;
 use std::time::{Duration, Instant};
 
+/// The shared deterministic workload (`coordinator::synth`) — the same
+/// functions the remote-shard suite and the CI `pool-smoke` command score,
+/// so this file pins the in-process half of the topology contract.
 fn toy_space(n: usize) -> SearchSpace {
-    SearchSpace {
-        choices: vec![vec![2, 3, 4]; n],
-        params: vec![128 * 128; n],
-        groups: vec![128; n],
-        group_size: 128,
-    }
-}
-
-/// Deterministic synthetic "true evaluation": a heterogeneous quadratic bit
-/// penalty plus a small perturbation from a per-candidate seeded RNG (the
-/// pool's determinism contract: all randomness derives from the payload).
-fn synth_jsd(cfg: &Config) -> f32 {
-    let mut seed = 0xCBF2_9CE4_8422_2325u64;
-    for &b in cfg {
-        seed = seed.wrapping_mul(0x1000_0000_01B3).wrapping_add(b as u64);
-    }
-    let mut rng = Rng::new(seed);
-    let base: f32 = cfg
-        .iter()
-        .enumerate()
-        .map(|(i, &b)| {
-            let w = if i % 4 == 0 { 1.0 } else { 0.05 };
-            w * ((4 - b) as f32).powi(2)
-        })
-        .sum();
-    base + rng.f32() * 1e-4
+    synth_space(n)
 }
 
 fn pooled(workers: usize) -> PooledEvaluator {
@@ -111,7 +87,7 @@ fn pool_throughput_scales_on_queue_bound_workload() {
             }
         });
         let t0 = Instant::now();
-        let out = svc.call_batch((0..BATCH).collect());
+        let out = svc.call_batch((0..BATCH).collect()).unwrap();
         let elapsed = t0.elapsed();
         assert_eq!(out, (0..BATCH).collect::<Vec<_>>());
         elapsed
@@ -139,7 +115,7 @@ fn pool_reports_per_shard_stats() {
             x * 2
         }
     });
-    let _ = svc.call_batch((0..20).collect());
+    let _ = svc.call_batch((0..20).collect()).unwrap();
     let stats = svc.stats();
     assert_eq!(stats.completed, 20);
     assert_eq!(stats.per_shard.len(), 4);

@@ -1,0 +1,153 @@
+//! Cross-process topology contract: the archive a seeded search produces
+//! must be byte-identical whether candidates were scored in-process,
+//! across loopback TCP shards, or both at once — and a shard dying
+//! mid-search must degrade throughput, never results.
+//!
+//! CI runs this suite single-threaded (`--test-threads=1`) so loopback
+//! servers never contend for ports or CPU with sibling tests.
+
+use amq::coordinator::synth::{synth_chunk, synth_space};
+use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator, SearchParams};
+use amq::runtime::remote::{remote_eval_flow, spawn_test_server, RetryPolicy};
+use amq::runtime::{EvalService, ServiceStats, ShardFlow};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn seeded_params() -> SearchParams {
+    let mut p = SearchParams::smoke();
+    p.seed = 17;
+    p
+}
+
+/// Reconnect quickly so the killed-shard test converges in milliseconds
+/// instead of the production backoff schedule.
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 2,
+        base_delay: Duration::from_millis(1),
+        max_delay: Duration::from_millis(5),
+    }
+}
+
+/// Run the seeded synthetic search against `svc` and report the archive
+/// content hash plus the pool's view of how the work went.
+fn search_hash(svc: Arc<EvalPool>) -> (u64, ServiceStats) {
+    let space = synth_space(12);
+    let mut ev = PooledEvaluator::from_service(svc).with_score_batch(8);
+    let res = run_search(&space, &mut ev, &seeded_params()).unwrap();
+    (res.archive.content_hash(), ev.pool_stats())
+}
+
+fn local_pool(workers: usize) -> Arc<EvalPool> {
+    Arc::new(EvalService::spawn_sharded(workers, |_shard| {
+        |chunk: Vec<Config>| -> amq::Result<Vec<f32>> { synth_chunk(&chunk) }
+    }))
+}
+
+/// `local` in-process shards plus one feeder per remote address, all
+/// work-sharing the same FIFO — the same wiring `repro search --shards`
+/// builds.
+fn mixed_pool(local: usize, remotes: Vec<String>, policy: RetryPolicy) -> Arc<EvalPool> {
+    let labels: Vec<String> = (0..local)
+        .map(|i| format!("local#{i}"))
+        .chain(remotes.iter().cloned())
+        .collect();
+    Arc::new(EvalService::spawn_flow(labels, move |shard| {
+        if shard < local {
+            Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)))
+        } else {
+            remote_eval_flow(remotes[shard - local].clone(), policy)
+        }
+    }))
+}
+
+fn synth_server() -> String {
+    spawn_test_server(0, None, synth_chunk).unwrap()
+}
+
+#[test]
+fn archives_byte_identical_across_topologies() {
+    // The four topologies of the CI matrix: sequential, threaded,
+    // remote-only over two loopback shards, and mixed local+remote.
+    let (sequential, _) = search_hash(local_pool(1));
+    let (threaded, _) = search_hash(local_pool(4));
+
+    let remotes = vec![synth_server(), synth_server()];
+    let (remote, rstats) = search_hash(mixed_pool(0, remotes.clone(), RetryPolicy::default()));
+    let (mixed, mstats) = search_hash(mixed_pool(2, remotes, RetryPolicy::default()));
+
+    assert_eq!(
+        sequential, threaded,
+        "threaded archive diverged from sequential"
+    );
+    assert_eq!(
+        sequential, remote,
+        "remote-shard archive diverged from sequential"
+    );
+    assert_eq!(sequential, mixed, "mixed archive diverged from sequential");
+
+    // Sanity on the pool's own accounting: nothing retired, nothing
+    // requeued, and the remote run really did flow through remote shards.
+    assert_eq!(rstats.retired_shards(), 0);
+    assert_eq!(rstats.requeued, 0);
+    assert_eq!(mstats.retired_shards(), 0);
+    assert!(
+        rstats.per_shard.iter().any(|s| s.completed > 0),
+        "remote shards served no chunks"
+    );
+}
+
+#[test]
+fn killed_shard_mid_search_converges_to_identical_archive() {
+    let (baseline, _) = search_hash(local_pool(1));
+
+    // Shard B's process "dies" after three chunks: the eval panics, which
+    // kills the detached server thread, drops its listener, and resets the
+    // in-flight connection.  The client must retire that feeder, requeue
+    // the chunk it was carrying, and finish on the surviving shard.
+    let healthy = synth_server();
+    let served = Arc::new(AtomicUsize::new(0));
+    let served_by_victim = served.clone();
+    let victim = spawn_test_server(0, None, move |genes: &[Vec<u16>]| {
+        if served_by_victim.fetch_add(1, Ordering::SeqCst) >= 3 {
+            panic!("injected shard death");
+        }
+        synth_chunk(genes)
+    })
+    .unwrap();
+
+    let (hash, stats) = search_hash(mixed_pool(0, vec![healthy, victim], fast_retry()));
+    assert_eq!(
+        baseline, hash,
+        "archive diverged after a shard died mid-search"
+    );
+    assert_eq!(stats.retired_shards(), 1, "exactly the victim should retire");
+    assert!(
+        stats.requeued >= 1,
+        "the in-flight chunk must be requeued, not lost"
+    );
+    let victim_stats = stats.per_shard.iter().find(|s| s.retired).unwrap();
+    assert!(victim_stats.completed >= 1, "victim served before dying");
+}
+
+#[test]
+fn all_shards_dead_is_an_error_not_a_hang() {
+    // Both feeders point at nothing: bind-then-drop reserves addresses
+    // that refuse connections.  Every call must error out (bounded
+    // retries), never block forever or panic.
+    let dead_addr = || {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let svc = mixed_pool(0, vec![dead_addr(), dead_addr()], fast_retry());
+    let err = svc
+        .call_batch(vec![vec![vec![2u16; 12]], vec![vec![4u16; 12]]])
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("retired"),
+        "error should name the retired shards, got: {msg}"
+    );
+    assert_eq!(svc.live_workers(), 0);
+}
