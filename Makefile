@@ -13,17 +13,24 @@ PYTHON ?= python3
 # AMQ_SCORE_LANES sets the candidate-lane count of the stacked scorer
 # executable (scores_quant_lanes{L}.hlo.txt; default 8, 1 omits it — the
 # rust runtime then falls back to the per-candidate scorer).
+# AMQ_SLAB_GATHER gates the per-shape-family gather executables
+# (gather_lanes{L}_{N}x{K}.hlo.txt; default 1 = emit them so slab-cache
+# misses become device-side gathers; AMQ_SLAB_GATHER=0 builds a
+# legacy-style manifest — the runtime then host-packs and uploads slabs).
 artifacts:
 	cd python && AMQ_SCORE_LANES=$${AMQ_SCORE_LANES:-8} \
+		AMQ_SLAB_GATHER=$${AMQ_SLAB_GATHER:-1} \
 		$(PYTHON) -m compile.aot --outdir ../artifacts
 
 # Reduced-step build for CI smoke: same artifact geometry (including the
-# lane-stacked scorer), faster training.  Quality-sensitive runtime
-# assertions are not valid against this model; the artifact-gated host-side
-# tests (asset validation, proxy-bank build, lane-manifest checks) are.
+# lane-stacked scorer and the gather executables), faster training.
+# Quality-sensitive runtime assertions are not valid against this model;
+# the artifact-gated host-side tests (asset validation, proxy-bank build,
+# lane-manifest checks) are.
 artifacts-smoke:
 	cd python && AMQ_TRAIN_STEPS=$${AMQ_TRAIN_STEPS:-300} \
 		AMQ_SCORE_LANES=$${AMQ_SCORE_LANES:-8} \
+		AMQ_SLAB_GATHER=$${AMQ_SLAB_GATHER:-1} \
 		$(PYTHON) -m compile.aot --outdir ../artifacts --tasks-per-family 16
 
 test:

@@ -12,6 +12,8 @@ coordinator needs to be self-contained:
   model_quant.hlo.txt                       (tokens, fp side, qparams) -> logits
   scores_quant.hlo.txt                      fused scorer -> (jsd, ce)
   scores_quant_lanes{L}.hlo.txt             lane-stacked scorer -> (jsd[L], ce[L])
+  gather_lanes{L}_{N}x{K}.hlo.txt           device-side slab gather, one per
+                                            quant-slot shape family
   train_log.json                            loss curve
   manifest.json                             shapes + argument orders
 
@@ -110,11 +112,14 @@ def name_tree_like_fp(cfg, names):
 # ---------------------------------------------------------------------------
 
 def build(outdir: str, steps: int | None, tasks_per_family: int,
-          reuse_weights: bool = False, lanes: int | None = None) -> None:
+          reuse_weights: bool = False, lanes: int | None = None,
+          gather: bool | None = None) -> None:
     os.makedirs(outdir, exist_ok=True)
     cfg = C.MODEL
     if lanes is None:
         lanes = C.score_lanes()
+    if gather is None:
+        gather = C.slab_gather()
     t0 = time.time()
 
     print("[aot] generating dataset ...", flush=True)
@@ -217,6 +222,38 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
         lanes_exec = {"file": lanes_file, "args": scores_args,
                       "outputs": ["jsd", "ce"], "lanes": lanes}
 
+    # 5. device-side slab gather: one tiny executable per quant-slot shape
+    # family that stacks L resident per-candidate buffers into the [L, ...]
+    # slab triple the lane scorer consumes.  With it, a SlabCache miss is a
+    # device dispatch over already-resident bank pieces instead of a host
+    # pack + O(slab bytes) upload.  Padding is the caller's job (it repeats
+    # lane 0's buffers), so the output is bitwise identical to the host
+    # pack_lane_slab path.  Only useful alongside the lane scorer; skipped
+    # when lanes <= 1 or AMQ_SLAB_GATHER=0 (the rust runtime then falls
+    # back to the host pack path — legacy manifests keep working).
+    gather_execs = {}
+    if lanes_exec and gather:
+        families = sorted({parts["codes"]
+                           for parts in M.quant_param_shapes(cfg).values()})
+        gather_names = [{p: f"lane{i}.{p}" for p in ("codes", "scale", "zero")}
+                        for i in range(lanes)]
+        gather_args = flat_arg_names(gather_names)
+        for n, k in families:
+            g = C.n_groups(k)
+            part_specs = {
+                "codes": jax.ShapeDtypeStruct((n, k), jnp.int8),
+                "scale": jax.ShapeDtypeStruct((n, g), jnp.float32),
+                "zero": jax.ShapeDtypeStruct((n, g), jnp.float32),
+            }
+            low = jax.jit(M.gather_lane_slab).lower(
+                [dict(part_specs) for _ in range(lanes)])
+            gfile = f"gather_lanes{lanes}_{n}x{k}.hlo.txt"
+            with open(os.path.join(outdir, gfile), "w") as f:
+                f.write(to_hlo_text(low))
+            gather_execs[f"gather_lanes_{n}x{k}"] = {
+                "file": gfile, "args": gather_args,
+                "outputs": ["codes", "scale", "zero"], "lanes": lanes}
+
     manifest = {
         "model": {
             "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
@@ -258,6 +295,7 @@ def build(outdir: str, steps: int | None, tasks_per_family: int,
     }
     if lanes_exec:
         manifest["executables"]["scores_quant_lanes"] = lanes_exec
+    manifest["executables"].update(gather_execs)
     with open(os.path.join(outdir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
     print(f"[aot] done in {time.time() - t0:.1f}s -> {outdir}", flush=True)
@@ -273,9 +311,14 @@ def main() -> None:
     ap.add_argument("--lanes", type=int, default=None,
                     help="candidate lanes of the stacked scorer executable "
                          "(default: AMQ_SCORE_LANES or 8; 1 disables it)")
+    ap.add_argument("--slab-gather", type=int, default=None, choices=(0, 1),
+                    help="emit device-side slab-gather executables, one per "
+                         "quant shape family (default: AMQ_SLAB_GATHER or 1; "
+                         "0 disables them; requires lanes > 1)")
     args = ap.parse_args()
     build(args.outdir, args.steps, args.tasks_per_family, args.reuse_weights,
-          args.lanes)
+          args.lanes,
+          None if args.slab_gather is None else bool(args.slab_gather))
 
 
 if __name__ == "__main__":

@@ -123,6 +123,19 @@ def score_lanes() -> int:
     """
     return int(os.environ.get("AMQ_SCORE_LANES", "8"))
 
+
+def slab_gather() -> bool:
+    """Whether the AOT build emits the device-side slab-gather executables.
+
+    One ``gather_lanes{L}_{N}x{K}.hlo.txt`` per quant-slot shape family:
+    a lane-slab cache miss then becomes a device dispatch over the bank's
+    resident buffers instead of a host pack + upload.  Only meaningful when
+    the lane-stacked scorer is built (``score_lanes() > 1``).  Override
+    with ``AMQ_SLAB_GATHER`` (0 disables the gather artifacts; the rust
+    runtime then falls back to the host pack path).
+    """
+    return os.environ.get("AMQ_SLAB_GATHER", "1") not in ("0", "")
+
 # Dataset sizes (sequences of EVAL_SEQ tokens).
 N_CALIB = 128      # calibration set ("WikiText-2 train" analog)
 N_TEST_WIKI = 128  # in-distribution test split ("WikiText-2 test" analog)

@@ -249,6 +249,28 @@ def scores_quant_lanes(fp_params, qlanes, tokens, mask, fp_logits,
     return jsd, ce
 
 
+def gather_lane_slab(lane_parts):
+    """Device-side slab gather: stack L resident candidate pieces into slabs.
+
+    ``lane_parts`` is a list of L ``{codes, scale, zero}`` dicts of one
+    quant-slot shape family (identical ``(N, K, G)`` on every lane); the
+    runtime passes the device bank's resident buffers, repeating lane 0's
+    piece for the padded tail of a partial group.  Returns the lane-stacked
+    slab triple ``(codes [L,N,K], scale [L,N,G], zero [L,N,G])`` — element
+    for element the layout the rust host path produces with
+    ``pack_lane_slab`` + ``upload_lane_slab``, so a cache miss served by
+    this executable is bitwise indistinguishable from a host pack.
+
+    ``jnp.stack`` lowers to broadcasts feeding one ``concatenate`` per
+    output; because the inputs are already device-resident, the whole miss
+    costs one fused kernel instead of O(slab bytes) over the host link.
+    """
+    codes = jnp.stack([p["codes"] for p in lane_parts])
+    scale = jnp.stack([p["scale"] for p in lane_parts])
+    zero = jnp.stack([p["zero"] for p in lane_parts])
+    return codes, scale, zero
+
+
 def ce_fp(params, tokens, cfg: ModelConfig = C.MODEL):
     """Mean next-token CE of the fp model (training loss)."""
     logits = forward_fp(params, tokens, cfg)

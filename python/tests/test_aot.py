@@ -67,6 +67,68 @@ def test_lane_scorer_hlo_carries_candidate_axis(built):
     assert f"(f32[{LANES}]" in entry or f"f32[{LANES}]{{0}}" in entry
 
 
+def quant_shape_families():
+    """Distinct (out_features, in_features) of the searchable linears."""
+    return sorted({C.linear_shape(C.MODEL, k) for k in C.LINEAR_KINDS})
+
+
+def test_manifest_gather_entries(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    families = quant_shape_families()
+    keys = [k for k in m["executables"] if k.startswith("gather_lanes_")]
+    assert sorted(keys) == [f"gather_lanes_{n}x{k}" for n, k in families]
+    want_args = [f"lane{i}.{p}" for i in range(LANES)
+                 for p in ("codes", "scale", "zero")]
+    for n, k in families:
+        exe = m["executables"][f"gather_lanes_{n}x{k}"]
+        assert exe["lanes"] == LANES
+        assert exe["file"] == f"gather_lanes{LANES}_{n}x{k}.hlo.txt"
+        assert os.path.exists(os.path.join(built, exe["file"]))
+        # lane-major (codes, scale, zero) triples: the arg order the rust
+        # runtime feeds resident bank buffers in (lane 0 repeated for the
+        # padded tail of a partial group)
+        assert exe["args"] == want_args
+        assert exe["outputs"] == ["codes", "scale", "zero"]
+
+
+def test_gather_hlo_carries_lane_axis(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    n, k = C.linear_shape(C.MODEL, "q")
+    g = C.n_groups(k)
+    exe = m["executables"][f"gather_lanes_{n}x{k}"]
+    text = open(os.path.join(built, exe["file"])).read()
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == len(exe["args"])
+    # inputs are per-lane pieces; outputs are lane-stacked slabs
+    assert f"s8[{n},{k}]" in entry
+    assert f"s8[{LANES},{n},{k}]" in entry
+    assert f"f32[{LANES},{n},{g}]" in entry
+
+
+def test_gather_matches_numpy_stack():
+    # The gather fn's contract: its output is elementwise the host
+    # pack_lane_slab layout — a plain stack of the lane pieces, with the
+    # caller repeating lane 0 for the padded tail.
+    from compile import model as M2
+    rng = np.random.default_rng(5)
+    n, k = C.linear_shape(C.MODEL, "q")
+    g = C.n_groups(k)
+    pieces = [{
+        "codes": rng.integers(-8, 8, size=(n, k)).astype(np.int8),
+        "scale": rng.standard_normal((n, g)).astype(np.float32),
+        "zero": rng.standard_normal((n, g)).astype(np.float32),
+    } for _ in range(2)]
+    padded = pieces + [pieces[0], pieces[0]]  # 2 real lanes padded to 4
+    codes, scale, zero = M2.gather_lane_slab(padded)
+    np.testing.assert_array_equal(
+        np.asarray(codes), np.stack([p["codes"] for p in padded]))
+    np.testing.assert_array_equal(
+        np.asarray(scale), np.stack([p["scale"] for p in padded]))
+    np.testing.assert_array_equal(
+        np.asarray(zero), np.stack([p["zero"] for p in padded]))
+    np.testing.assert_array_equal(np.asarray(codes)[2], pieces[0]["codes"])
+
+
 def test_build_without_lanes_omits_artifact(tmp_path_factory):
     out = str(tmp_path_factory.mktemp("artifacts_nolanes"))
     aot.build(out, steps=2, tasks_per_family=2, lanes=1)
@@ -74,6 +136,20 @@ def test_build_without_lanes_omits_artifact(tmp_path_factory):
     assert m["score_lanes"] == 1
     assert "scores_quant_lanes" not in m["executables"]
     assert not [f for f in os.listdir(out) if f.startswith("scores_quant_lanes")]
+    # no lane scorer -> no gather executables either, even though the
+    # gather default is on: gathering is only meaningful for lane slabs
+    assert not [k for k in m["executables"] if k.startswith("gather_lanes_")]
+    assert not [f for f in os.listdir(out) if f.startswith("gather_lanes")]
+
+
+def test_build_without_gather_keeps_lane_scorer(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts_nogather"))
+    aot.build(out, steps=2, tasks_per_family=2, lanes=LANES, gather=False)
+    m = json.load(open(os.path.join(out, "manifest.json")))
+    assert m["score_lanes"] == LANES
+    assert "scores_quant_lanes" in m["executables"]
+    assert not [k for k in m["executables"] if k.startswith("gather_lanes_")]
+    assert not [f for f in os.listdir(out) if f.startswith("gather_lanes")]
 
 
 def test_hlo_entry_param_counts(built):

@@ -216,7 +216,8 @@ fn main() {
     header("batched candidate scoring (smoke search, synthetic lane-aware scorer)");
     const DISPATCH_US: u64 = 200; // per device call
     const LANE_US: u64 = 30; // per executed lane
-    const SLAB_US: u64 = 60; // per slab pack+upload (cache miss)
+    const SLAB_US: u64 = 60; // per host slab pack+upload (cache miss, host route)
+    const GATHER_US: u64 = 15; // per device-side gather dispatch (cache miss, gather route)
     const SLAB_BYTES: usize = 1 << 14; // nominal bytes per packed slab
     const N_LAYERS: usize = 16;
     let search_space = toy_space(N_LAYERS);
@@ -256,43 +257,62 @@ fn main() {
     params.seed = 7;
     let mut rows = String::new();
     let mut hashes: Vec<u64> = Vec::new();
-    for (workers, score_batch, lanes, slab_mb) in [
-        (1usize, 1usize, 1usize, 0usize),
-        (1, 8, 1, 0),
-        (4, 1, 1, 0),
-        (4, 8, 1, 0),
-        (1, 8, 8, 0),
-        (1, 8, 8, 64),
-        (4, 8, 8, 0),
-        (4, 8, 8, 64),
+    // `gather` swaps the per-miss cost from a host pack+upload (SLAB_US)
+    // to a device-side gather dispatch over resident bank pieces
+    // (GATHER_US) — the miss count is identical, only who pays changes,
+    // so the archive-identity assertion below also covers the gather
+    // route's transparency.
+    for (workers, score_batch, lanes, slab_mb, gather) in [
+        (1usize, 1usize, 1usize, 0usize, false),
+        (1, 8, 1, 0, false),
+        (4, 1, 1, 0, false),
+        (4, 8, 1, 0, false),
+        (1, 8, 8, 0, false),
+        (1, 8, 8, 64, false),
+        (4, 8, 8, 0, false),
+        (4, 8, 8, 64, false),
+        (1, 8, 8, 64, true),
+        (4, 8, 8, 0, true),
+        (4, 8, 8, 64, true),
     ] {
         let device_dispatches = Arc::new(AtomicU64::new(0));
         let lane_candidates = Arc::new(AtomicU64::new(0));
         let lanes_padded = Arc::new(AtomicU64::new(0));
         let slab_lookups = Arc::new(AtomicU64::new(0));
         let slab_uploads = Arc::new(AtomicU64::new(0));
+        let slab_gathers = Arc::new(AtomicU64::new(0));
         // one slab cache per corner, shared by every shard (as in prod)
         let slab_cache: Arc<SlabCache<Vec<u16>>> =
             Arc::new(SlabCache::new(slab_budget_bytes(slab_mb)));
-        let (dd, lc, lp, sl, su, sc) = (
+        let (dd, lc, lp, sl, su, sg, sc) = (
             device_dispatches.clone(),
             lane_candidates.clone(),
             lanes_padded.clone(),
             slab_lookups.clone(),
             slab_uploads.clone(),
+            slab_gathers.clone(),
             slab_cache.clone(),
         );
         let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(workers, move |_shard| {
-            let (dd, lc, lp, sl, su, sc) =
-                (dd.clone(), lc.clone(), lp.clone(), sl.clone(), su.clone(), sc.clone());
+            let (dd, lc, lp, sl, su, sg, sc) = (
+                dd.clone(),
+                lc.clone(),
+                lp.clone(),
+                sl.clone(),
+                su.clone(),
+                sg.clone(),
+                sc.clone(),
+            );
             move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
                 // production routing (the shared `lane_routed` predicate):
                 // single-candidate chunks take the per-candidate path even
                 // when the lane executable exists
                 if lane_routed(chunk.len(), lanes) {
                     // plan: resolve each group's per-layer slab through the
-                    // shared cache; misses pay the pack+upload cost
+                    // shared cache; misses pay the host pack+upload cost, or
+                    // the (cheaper) device gather dispatch on the gather route
                     let mut uploads_now = 0u64;
+                    let mut gathers_now = 0u64;
                     let mut plan: Vec<(usize, Vec<Arc<Vec<u16>>>)> = Vec::new();
                     for group in chunk.chunks(lanes) {
                         let mut slabs = Vec::with_capacity(N_LAYERS);
@@ -304,7 +324,11 @@ fn main() {
                                 Ok((sig.clone(), SLAB_BYTES))
                             })?;
                             if missed {
-                                uploads_now += 1;
+                                if gather {
+                                    gathers_now += 1;
+                                } else {
+                                    uploads_now += 1;
+                                }
                             }
                             slabs.push(slab);
                         }
@@ -315,11 +339,15 @@ fn main() {
                     let padded = executed - chunk.len() as u64;
                     sl.fetch_add(d * N_LAYERS as u64, Ordering::Relaxed);
                     su.fetch_add(uploads_now, Ordering::Relaxed);
+                    sg.fetch_add(gathers_now, Ordering::Relaxed);
                     dd.fetch_add(d, Ordering::Relaxed);
                     lc.fetch_add(chunk.len() as u64, Ordering::Relaxed);
                     lp.fetch_add(padded, Ordering::Relaxed);
                     std::thread::sleep(Duration::from_micros(
-                        d * DISPATCH_US + executed * LANE_US + uploads_now * SLAB_US,
+                        d * DISPATCH_US
+                            + executed * LANE_US
+                            + uploads_now * SLAB_US
+                            + gathers_now * GATHER_US,
                     ));
                     // the device reads the slabs, not the candidates:
                     // cache transparency is load-bearing for the archive
@@ -355,15 +383,20 @@ fn main() {
         let fill = if cand + padded == 0 { 0.0 } else { cand as f64 / (cand + padded) as f64 };
         let lookups = slab_lookups.load(Ordering::Relaxed);
         let uploads = slab_uploads.load(Ordering::Relaxed);
+        let gathers = slab_gathers.load(Ordering::Relaxed);
+        let bytes_avoided = gathers * SLAB_BYTES as u64;
+        let misses = uploads + gathers;
         let slab_hit = if lookups == 0 {
             0.0
         } else {
-            (lookups - uploads) as f64 / lookups as f64
+            (lookups - misses) as f64 / lookups as f64
         };
         println!(
-            "workers {workers} k {score_batch} lanes {lanes} slab {slab_mb}MB: {:>8} wall, \
-             {:.0} cand/s, {} chunk dispatches / {} device dispatches for {} requested \
-             ({} dedup hits, {:.0}% lane fill, {} slab uploads / {} lookups = {:.0}% hit)",
+            "workers {workers} k {score_batch} lanes {lanes} slab {slab_mb}MB gather {}: \
+             {:>8} wall, {:.0} cand/s, {} chunk dispatches / {} device dispatches for {} \
+             requested ({} dedup hits, {:.0}% lane fill, {} slab uploads + {} gathers / {} \
+             lookups = {:.0}% hit)",
+            if gather { "on" } else { "off" },
             format!("{:.0?}", wall),
             cps,
             stats.dispatches,
@@ -372,6 +405,7 @@ fn main() {
             stats.cache_hits + stats.dup_hits,
             fill * 100.0,
             uploads,
+            gathers,
             lookups,
             slab_hit * 100.0,
         );
@@ -386,7 +420,10 @@ fn main() {
              \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
              \"scorer_dispatches\": {}, \"device_dispatches\": {}, \
              \"lane_fill_fraction\": {:.4}, \"slab_lookups\": {lookups}, \
-             \"slab_uploads\": {uploads}, \"slab_hit_fraction\": {slab_hit:.4}, \
+             \"slab_uploads\": {uploads}, \"slab_gather\": {gather}, \
+             \"gather_dispatches\": {gathers}, \
+             \"slab_upload_bytes_avoided\": {bytes_avoided}, \
+             \"slab_hit_fraction\": {slab_hit:.4}, \
              \"slab_resident_bytes\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
              \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
             if lanes > 1 { "lane-stacked" } else { "per-candidate" },
@@ -407,11 +444,11 @@ fn main() {
     let identical = hashes.iter().all(|&h| h == hashes[0]);
     assert!(
         identical,
-        "archives diverged across (workers, score-batch, lanes, slab-cache) combos"
+        "archives diverged across (workers, score-batch, lanes, slab-cache, gather) combos"
     );
     println!(
-        "archives identical across all (workers, score-batch, lanes, slab-cache) combos: \
-         {identical}"
+        "archives identical across all (workers, score-batch, lanes, slab-cache, gather) \
+         combos: {identical}"
     );
 
     // shared-bank residency: 4 shards referencing one Arc'd bank count 1x

@@ -215,13 +215,15 @@ pub const DEFAULT_SLAB_CACHE_BYTES: usize = slab_budget_bytes(DEFAULT_SLAB_CACHE
 /// resident) its own private copy — N workers meant N uploads and N× device
 /// bytes; now uploads and residency are 1× regardless of pool width.
 ///
-/// The host bank is resident exactly once, too: lane-slab packing
-/// **borrows** its rows straight from the bank's host pieces
-/// ([`Runtime::upload_lane_slab`]) — the uploaded [`QuantLayerBufs`] carry
-/// no host mirrors — and the packed slabs land in this bank's
-/// [`LaneSlabCache`], staying device-resident across calibration batches
-/// and across search generations under the `--slab-cache-mb` budget
-/// (exact byte accounting via [`BankShareStats`]).
+/// The host bank is resident exactly once, too: when misses host-pack,
+/// lane-slab packing **borrows** its rows straight from the bank's host
+/// pieces ([`Runtime::upload_lane_slab`]) — the uploaded [`QuantLayerBufs`]
+/// carry no host mirrors — and with the gather artifacts present, misses
+/// never touch the host at all ([`Runtime::gather_lane_slab`] assembles
+/// slabs on device from these resident buffers).  Either way the slabs
+/// land in this bank's [`LaneSlabCache`], staying device-resident across
+/// calibration batches and across search generations under the
+/// `--slab-cache-mb` budget (exact byte accounting via [`BankShareStats`]).
 ///
 /// Holds no runtime reference: a [`DeviceProxy`] pairs a shared bank with
 /// the runtime that executes against it.
@@ -393,8 +395,19 @@ impl<'rt> DeviceProxy<'rt> {
 
     /// Resolve a chunk's lane-dispatch plan: group the configs `lanes` at a
     /// time and, per group and layer, fetch the packed slab from the shared
-    /// [`LaneSlabCache`] — on a miss the slab is packed from rows
-    /// **borrowed** from the bank's host pieces and uploaded once.  The
+    /// [`LaneSlabCache`].  A miss is resolved one of two ways:
+    ///
+    ///  * *device gather* (gather executables loaded —
+    ///    [`Runtime::slab_gather_enabled`]): one dispatch of the family's
+    ///    gather executable reads the group's **already-resident** bank
+    ///    buffers and writes the padded slab on device — zero host→device
+    ///    bytes ([`Runtime::gather_lane_slab`]);
+    ///  * *host pack* (legacy artifacts or `--slab-gather off`): the slab
+    ///    is packed from rows **borrowed** from the bank's host pieces and
+    ///    uploaded once ([`Runtime::upload_lane_slab`]).
+    ///
+    /// Both produce bitwise-identical slab bytes, so the cache key, the
+    /// scorer results, and the archives never depend on the route.  The
     /// returned plan pins its slabs (`Arc`) for its lifetime, so scoring it
     /// against every calibration batch costs zero further uploads even if
     /// the cache evicts under a tiny `--slab-cache-mb` budget.
@@ -412,17 +425,26 @@ impl<'rt> DeviceProxy<'rt> {
                 c.len()
             );
         }
+        let gather = self.rt.slab_gather_enabled();
         let mut groups = Vec::with_capacity(configs.len().div_ceil(lanes));
         for group in configs.chunks(lanes) {
             let mut slabs = Vec::with_capacity(n_layers);
             for li in 0..n_layers {
                 let sig = crate::runtime::lane_slab_sig(group, li, lanes);
                 let slab = self.dev.slab_cache.get_or_build((li, sig), || {
-                    let pieces: Vec<&QuantizedLinear> =
-                        group.iter().map(|c| self.bank.piece(li, c[li])).collect();
-                    let bufs = self.rt.upload_lane_slab(&pieces)?;
-                    let bytes = bufs.bytes;
-                    Ok((bufs, bytes))
+                    if gather {
+                        let pieces: Vec<&QuantLayerBufs> =
+                            group.iter().map(|c| self.dev.piece(li, c[li])).collect();
+                        let bufs = self.rt.gather_lane_slab(&pieces)?;
+                        let bytes = bufs.bytes;
+                        Ok((bufs, bytes))
+                    } else {
+                        let pieces: Vec<&QuantizedLinear> =
+                            group.iter().map(|c| self.bank.piece(li, c[li])).collect();
+                        let bufs = self.rt.upload_lane_slab(&pieces)?;
+                        let bytes = bufs.bytes;
+                        Ok((bufs, bytes))
+                    }
                 })?;
                 slabs.push(slab);
             }

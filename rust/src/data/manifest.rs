@@ -233,6 +233,51 @@ impl Manifest {
             .filter(|&l| l > 1)
     }
 
+    /// Manifest key of the slab-gather executable for a quant-slot shape
+    /// family (`out_features` x `in_features`).
+    pub fn gather_key(n: usize, k: usize) -> String {
+        format!("gather_lanes_{n}x{k}")
+    }
+
+    /// Lane count of the device-side slab-gather executables
+    /// (`gather_lanes_{n}x{k}`), when the artifacts carry them.  All
+    /// families must agree on the lane count; `None` means lane-slab
+    /// cache misses must take the host pack + upload path.
+    pub fn gather_lanes(&self) -> Option<usize> {
+        let mut lanes = None;
+        for (key, e) in &self.executables {
+            if !key.starts_with("gather_lanes_") {
+                continue;
+            }
+            let l = e.lanes.filter(|&l| l > 1)?;
+            match lanes {
+                None => lanes = Some(l),
+                Some(prev) if prev != l => return None,
+                Some(_) => {}
+            }
+        }
+        lanes
+    }
+
+    /// The slab-gather executable for one shape family, if present.
+    pub fn gather_executable(&self, n: usize, k: usize) -> Option<&ExecutableSpec> {
+        self.executables.get(&Self::gather_key(n, k))
+    }
+
+    /// Distinct quant-slot shape families `(out_features, in_features)`
+    /// across the searchable layers, sorted.  One slab-gather executable
+    /// exists per family (static HLO shapes).
+    pub fn shape_families(&self) -> Vec<(usize, usize)> {
+        let mut fams: Vec<_> = self
+            .layers
+            .iter()
+            .map(|l| (l.out_features, l.in_features))
+            .collect();
+        fams.sort_unstable();
+        fams.dedup();
+        fams
+    }
+
     pub fn pad_token(&self) -> i32 {
         self.special_tokens.get("pad").copied().unwrap_or(0) as i32
     }
@@ -291,6 +336,7 @@ mod tests {
         assert_eq!(m.layer("blk0.q").unwrap().kind(), "q");
         assert_eq!(m.layer("blk1.down").unwrap().block(), 1);
         assert_eq!(m.layer_index("blk0.down"), Some(1));
+        assert_eq!(m.shape_families(), vec![(128, 128), (128, 256)]);
         assert!(m.layer("nope").is_err());
         assert_eq!(m.total_linear_params(), 2 * (128 * 128 + 128 * 256));
         assert_eq!(m.pad_token(), 396);
@@ -331,6 +377,50 @@ mod tests {
         .unwrap();
         assert_eq!(m.scorer_lanes(), Some(8));
         assert_eq!(m.executable("scores_quant_lanes").unwrap().lanes, Some(8));
+    }
+
+    #[test]
+    fn gather_lanes_absent_without_gather_executables() {
+        let m = toy_manifest();
+        assert_eq!(m.gather_lanes(), None);
+        assert!(m.gather_executable(128, 128).is_none());
+    }
+
+    #[test]
+    fn gather_lanes_parsed_and_validated() {
+        let base = r#"{
+            "model": {"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                      "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                      "rope_theta": 10000.0, "rms_eps": 1e-5},
+            "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+            "layers": [{"name": "blk0.q", "out_features": 128, "in_features": 128}],
+            "fp_side_names": ["embed"],
+            "executables": {EXECS},
+            "files": {}
+        }"#;
+        let gather = |n: usize, k: usize, lanes: usize| {
+            format!(
+                r#""gather_lanes_{n}x{k}": {{
+                    "file": "gather_lanes{lanes}_{n}x{k}.hlo.txt",
+                    "args": ["lane0.codes", "lane0.scale", "lane0.zero"],
+                    "outputs": ["codes", "scale", "zero"], "lanes": {lanes}}}"#
+            )
+        };
+        // two families, agreeing lane counts
+        let execs = format!("{{{}, {}}}", gather(128, 128, 8), gather(128, 256, 8));
+        let m = Manifest::from_json(&base.replace("{EXECS}", &execs)).unwrap();
+        assert_eq!(m.gather_lanes(), Some(8));
+        assert_eq!(Manifest::gather_key(128, 256), "gather_lanes_128x256");
+        assert!(m.gather_executable(128, 128).is_some());
+        assert!(m.gather_executable(256, 128).is_none());
+        // disagreeing lane counts -> treated as no usable gather artifact
+        let execs = format!("{{{}, {}}}", gather(128, 128, 8), gather(128, 256, 4));
+        let m = Manifest::from_json(&base.replace("{EXECS}", &execs)).unwrap();
+        assert_eq!(m.gather_lanes(), None);
+        // lanes <= 1 -> not a lane-stacked gather
+        let execs = format!("{{{}}}", gather(128, 128, 1));
+        let m = Manifest::from_json(&base.replace("{EXECS}", &execs)).unwrap();
+        assert_eq!(m.gather_lanes(), None);
     }
 
     #[test]

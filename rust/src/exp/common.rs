@@ -214,6 +214,15 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
                 s.dispatch_reduction(),
             );
         }
+        if ctx.rt.slab_gather_enabled() {
+            let rs = ctx.rt.stats();
+            eprintln!(
+                "[search] slab gather: {} device dispatch(es), \
+                 {:.2} MB of host slab uploads avoided",
+                rs.gather_dispatches,
+                rs.slab_upload_bytes_avoided as f64 / 1e6,
+            );
+        }
         ctx.note_eval_stats(evaluator.batch_stats());
         ctx.note_search_stats(SearchRunStats {
             true_evals: res.true_evals,

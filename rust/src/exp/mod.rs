@@ -31,7 +31,7 @@ use crate::coordinator::{
 use crate::data::{load_tasks, load_tokens, TaskInstance, TokenSplit};
 use crate::model::ModelAssets;
 use crate::quant::MethodRegistry;
-use crate::runtime::{Runtime, ScoreBatch, ServiceStats};
+use crate::runtime::{Runtime, ScoreBatch, ServiceStats, SlabGatherMode};
 use crate::Result;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -101,6 +101,9 @@ pub struct Ctx {
     pub score_batch: usize,
     /// Lane-slab cache budget in MB (`--slab-cache-mb`; 0 = off).
     pub slab_cache_mb: usize,
+    /// Requested slab-gather mode (`--slab-gather`); whether misses
+    /// actually gather on device is [`Runtime::slab_gather_enabled`].
+    pub slab_gather: SlabGatherMode,
     /// Enabled quantization methods (`--methods`, default: the manifest's
     /// list, which defaults to single-method HQQ — the legacy genome).
     pub registry: MethodRegistry,
@@ -140,6 +143,7 @@ impl Ctx {
             DEFAULT_SCORE_BATCH,
             0,
             DEFAULT_SLAB_CACHE_MB,
+            SlabGatherMode::Auto,
         )
     }
 
@@ -153,7 +157,11 @@ impl Ctx {
     /// request (CLI `--lanes`: 0 = auto, 1 = per-candidate, N = require an
     /// N-lane artifact — see [`Runtime::load_with_lanes`]);
     /// `slab_cache_mb` is the lane-slab cache budget (CLI
-    /// `--slab-cache-mb`, 0 = off — archives identical either way).
+    /// `--slab-cache-mb`, 0 = off — archives identical either way);
+    /// `slab_gather` routes lane-slab cache misses (CLI `--slab-gather`:
+    /// auto = gather on device when the artifacts allow, off = always
+    /// host-pack + upload, require = error without the gather artifacts —
+    /// archives identical for any mode, see [`SlabGatherMode`]).
     #[allow(clippy::too_many_arguments)]
     pub fn load_with_opts(
         artifacts_dir: &Path,
@@ -164,9 +172,15 @@ impl Ctx {
         score_batch: usize,
         lanes: usize,
         slab_cache_mb: usize,
+        slab_gather: SlabGatherMode,
     ) -> Result<Ctx> {
         let assets = Arc::new(ModelAssets::load(artifacts_dir)?);
-        let rt = Arc::new(Runtime::load_with_lanes(artifacts_dir, &assets.weights, lanes)?);
+        let rt = Arc::new(Runtime::load_with_opts(
+            artifacts_dir,
+            &assets.weights,
+            lanes,
+            slab_gather,
+        )?);
         let calib = load_tokens(&assets.manifest.file("calib")?)?;
         let wiki = load_tokens(&assets.manifest.file("test_wiki")?)?;
         let c4 = load_tokens(&assets.manifest.file("test_c4")?)?;
@@ -192,6 +206,7 @@ impl Ctx {
             shards: Vec::new(),
             score_batch: score_batch.max(1),
             slab_cache_mb,
+            slab_gather,
             registry,
             pool: OnceLock::new(),
             device_bank: Arc::new(OnceLock::new()),
@@ -266,6 +281,15 @@ impl Ctx {
     /// Pool statistics, if a pool was ever spawned (does not spawn one).
     pub fn pool_stats(&self) -> Option<ServiceStats> {
         self.pool.get().map(|p| p.stats())
+    }
+
+    /// Shut the evaluation pool down, joining the shard threads and closing
+    /// any remote feeder connections.  Sequential shard servers can then
+    /// accept follow-up connections — the post-search stats probe relies on
+    /// this.  Best-effort (a still-cloned pool handle defers the join to
+    /// its own drop); no-op when no pool was ever spawned.
+    pub fn shutdown_pool(&mut self) {
+        drop(self.pool.take());
     }
 
     /// Device-bank residency across the shards that actually initialized:

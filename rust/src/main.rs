@@ -42,6 +42,14 @@
 //!                                   slabs stay device-resident across
 //!                                   calibration batches and generations;
 //!                                   archives are identical for any budget
+//!   --slab-gather auto|off|require  on-device lane-slab assembly (default:
+//!                                   auto — on a slab-cache miss, gather the
+//!                                   slab on-device from resident bank
+//!                                   pieces when the manifest ships gather
+//!                                   executables, else pack on the host;
+//!                                   off forces the host path; require
+//!                                   errors without the artifact).  Archives
+//!                                   are identical for any setting
 //!   --methods LIST                  comma-separated quantization methods
 //!                                   the genome may assign per layer
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
@@ -60,6 +68,7 @@ use amq::coordinator::predictor::PredictorKind;
 use amq::coordinator::SearchParams;
 use amq::exp::{self, Ctx};
 use amq::quant::MethodRegistry;
+use amq::runtime::SlabGatherMode;
 use amq::Result;
 
 struct Args {
@@ -73,6 +82,7 @@ struct Args {
     score_batch: usize,
     lanes: usize,
     slab_cache_mb: usize,
+    slab_gather: SlabGatherMode,
     methods: Option<String>,
     predictor: Option<String>,
     shards: Vec<String>,
@@ -92,6 +102,7 @@ fn parse_args() -> Args {
         score_batch: exp::DEFAULT_SCORE_BATCH,
         lanes: 0,
         slab_cache_mb: exp::DEFAULT_SLAB_CACHE_MB,
+        slab_gather: SlabGatherMode::Auto,
         methods: None,
         predictor: None,
         shards: Vec::new(),
@@ -134,6 +145,16 @@ fn parse_args() -> Args {
             "--slab-cache-mb" => {
                 i += 1;
                 args.slab_cache_mb = argv[i].parse().expect("--slab-cache-mb N");
+            }
+            "--slab-gather" => {
+                i += 1;
+                args.slab_gather = match SlabGatherMode::parse(&argv[i]) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        std::process::exit(2);
+                    }
+                };
             }
             "--methods" => {
                 i += 1;
@@ -257,6 +278,7 @@ fn run_shard_serve(args: &Args) -> Result<()> {
         args.score_batch,
         args.lanes,
         args.slab_cache_mb,
+        args.slab_gather,
     )?;
     let dev = ctx.device_bank()?;
     let proxy = amq::coordinator::DeviceProxy::from_device_bank(&ctx.rt, dev);
@@ -280,7 +302,7 @@ fn run_shard_serve(args: &Args) -> Result<()> {
 fn run_pool_smoke(args: &Args) -> Result<()> {
     use amq::coordinator::synth::{synth_chunk, synth_space};
     use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator};
-    use amq::runtime::remote::{remote_eval_flow, RetryPolicy};
+    use amq::runtime::remote::{fetch_shard_stats, remote_eval_flow, RetryPolicy};
     use amq::runtime::{EvalService, ShardFlow};
     use std::fmt::Write as _;
     use std::sync::Arc;
@@ -394,6 +416,37 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
             shard_rows.join(", ")
         );
     }
+    // Server-side truth from the shard processes: drop the run services
+    // first — that joins the feeder threads and closes their connections,
+    // so the sequential shard servers can accept the dedicated stats-probe
+    // connections.  The client-side per-shard counters above only see the
+    // wire; these counters come from inside the server's eval loop.
+    drop(runs);
+    let mut server_rows: Vec<String> = Vec::new();
+    for addr in &remotes {
+        match fetch_shard_stats(addr, std::time::Duration::from_secs(10)) {
+            Ok(st) => {
+                println!(
+                    "[pool] shard {addr}: server-side {} chunk(s) completed, \
+                     {:.2}s busy in eval, {} connection(s) served",
+                    st.completed,
+                    st.busy_us as f64 / 1e6,
+                    st.conns
+                );
+                server_rows.push(format!(
+                    "    {{\"addr\": \"{addr}\", \"completed\": {}, \
+                     \"busy_us\": {}, \"conns\": {}}}",
+                    st.completed, st.busy_us, st.conns
+                ));
+            }
+            Err(e) => {
+                eprintln!("[pool] shard {addr}: server-side stats unavailable ({e})");
+                server_rows.push(format!(
+                    "    {{\"addr\": \"{addr}\", \"error\": \"unavailable\"}}"
+                ));
+            }
+        }
+    }
     let identical = hashes.iter().all(|&h| h == hashes[0]);
     let bench = format!(
         "{{\n  \"bench\": \"pool_smoke\",\n  \"seed\": {},\n  \"identical_archives\": \
@@ -405,8 +458,10 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
     eprintln!("[report] wrote {}", bench_path.display());
     let report_json = format!(
         "{{\n  \"report\": \"pool_smoke_topologies\",\n  \"seed\": {},\n  \
-         \"identical_archives\": {identical},\n  \"topologies\": [\n{report}\n  ]\n}}\n",
-        params.seed
+         \"identical_archives\": {identical},\n  \"shard_servers\": [\n{}\n  ],\n  \
+         \"topologies\": [\n{report}\n  ]\n}}\n",
+        params.seed,
+        server_rows.join(",\n")
     );
     let report_path = std::path::Path::new(&args.out).join("search_report.json");
     std::fs::write(&report_path, report_json)?;
@@ -416,7 +471,7 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
         "archives diverged across topologies: {:?}",
         hashes.iter().map(|h| format!("{h:016x}")).collect::<Vec<_>>()
     );
-    println!("[smoke] archives identical across all {} topologies", runs.len());
+    println!("[smoke] archives identical across all {} topologies", hashes.len());
     Ok(())
 }
 
@@ -472,6 +527,17 @@ fn write_search_report(
         variant.lanes(),
         rstats.lane_dispatches,
         rstats.lane_fill_fraction(),
+    );
+    let _ = write!(
+        s,
+        "  \"slab_gather\": {{\"mode\": \"{}\", \"enabled\": {}, \
+         \"gather_dispatches\": {}, \"gather_seconds\": {:.4}, \
+         \"slab_upload_bytes_avoided\": {}}},\n",
+        ctx.slab_gather.name(),
+        ctx.rt.slab_gather_enabled(),
+        rstats.gather_dispatches,
+        rstats.gather_time.as_secs_f64(),
+        rstats.slab_upload_bytes_avoided,
     );
     if let Some(ss) = ctx.slab_cache_stats() {
         let _ = write!(
@@ -611,6 +677,16 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         rstats.lane_fill_fraction()
     );
     let _ = write!(s, "  \"device_scorer_calls\": {},\n", rstats.scores_calls);
+    // Slab-gather truth: with the gather artifact, a slab-cache miss is a
+    // device dispatch over resident bank pieces instead of a host upload —
+    // bytes_avoided is exactly what the host path would have re-uploaded.
+    let _ = write!(s, "  \"slab_gather\": \"{}\",\n", ctx.slab_gather.name());
+    let _ = write!(s, "  \"gather_dispatches\": {},\n", rstats.gather_dispatches);
+    let _ = write!(
+        s,
+        "  \"slab_upload_bytes_avoided\": {},\n",
+        rstats.slab_upload_bytes_avoided
+    );
     // Slab-cache truth: lane dispatches re-upload nothing on a hit, so the
     // hit fraction is the share of slab traffic the cache absorbed.
     if let Some(ss) = ctx.slab_cache_stats() {
@@ -671,7 +747,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N]");
+        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -720,12 +796,12 @@ fn main() -> Result<()> {
         args.score_batch,
         args.lanes,
         args.slab_cache_mb,
+        args.slab_gather,
     )?;
     ctx.set_shards(args.shards.clone());
-    let ctx = ctx;
     let variant = ctx.rt.scorer_variant();
     eprintln!(
-        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, {} remote shard{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, methods: {}, predictor: {})",
+        "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, {} remote shard{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, slab-gather {} ({}), methods: {}, predictor: {})",
         t0.elapsed().as_secs_f64(),
         ctx.local_workers(),
         if ctx.local_workers() == 1 { "" } else { "s" },
@@ -735,6 +811,8 @@ fn main() -> Result<()> {
         variant.name(),
         variant.lanes(),
         ctx.slab_cache_mb,
+        ctx.slab_gather.name(),
+        if ctx.rt.slab_gather_enabled() { "device" } else { "host-pack" },
         ctx.registry.names().join(","),
         ctx.preset.predictor.name(),
     );
@@ -871,6 +949,15 @@ fn main() -> Result<()> {
             stats.lane_time.as_secs_f64(),
         );
     }
+    if ctx.rt.slab_gather_enabled() {
+        eprintln!(
+            "[scorer] slab gather ({}): {} device dispatch(es) in {:.2}s \
+             assembled lane slabs from resident bank pieces",
+            ctx.slab_gather.name(),
+            stats.gather_dispatches,
+            stats.gather_time.as_secs_f64(),
+        );
+    }
     if let Some(ss) = ctx.slab_cache_stats() {
         if ss.hits + ss.misses > 0 {
             eprintln!(
@@ -919,6 +1006,39 @@ fn main() -> Result<()> {
             if bs.shards == 1 { "" } else { "s" },
             bs.referenced_bytes as f64 / 1e6,
         );
+    }
+    if stats.slab_upload_bytes_avoided > 0 {
+        eprintln!(
+            "[bank] device-side gather kept {:.1} MB of lane slabs off the \
+             host upload path",
+            stats.slab_upload_bytes_avoided as f64 / 1e6,
+        );
+    }
+    if !ctx.shards.is_empty() {
+        // Server-side truth for the remote shards: shut the pool down first
+        // so the feeder connections close and the sequential shard servers
+        // can accept the dedicated stats-probe connections.  pipe borrows
+        // ctx; release it before the mutable shutdown.
+        drop(pipe);
+        let shards = ctx.shards.clone();
+        ctx.shutdown_pool();
+        for addr in &shards {
+            match amq::runtime::remote::fetch_shard_stats(
+                addr,
+                std::time::Duration::from_secs(5),
+            ) {
+                Ok(st) => eprintln!(
+                    "[pool] shard {addr}: server-side {} chunk(s) completed, \
+                     {:.2}s busy in eval, {} connection(s) served",
+                    st.completed,
+                    st.busy_us as f64 / 1e6,
+                    st.conns,
+                ),
+                Err(e) => eprintln!(
+                    "[pool] shard {addr}: server-side stats unavailable ({e})"
+                ),
+            }
+        }
     }
     Ok(())
 }

@@ -121,6 +121,45 @@ impl ScorerVariant {
     }
 }
 
+/// How lane-slab cache misses are assembled (`--slab-gather`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SlabGatherMode {
+    /// Use the device-side gather executables when the artifacts carry
+    /// them (and the lane-stacked scorer is active); otherwise fall back
+    /// to the host pack + upload path.  Legacy manifests keep working.
+    #[default]
+    Auto,
+    /// Always host-pack + upload, even when gather artifacts exist
+    /// (baseline / bisection switch).
+    Off,
+    /// Error at load time unless the gather executables are present —
+    /// guards perf runs against silently re-entering the upload path.
+    Require,
+}
+
+impl SlabGatherMode {
+    /// Parse a `--slab-gather` CLI value.
+    pub fn parse(s: &str) -> Result<SlabGatherMode> {
+        Ok(match s {
+            "auto" => SlabGatherMode::Auto,
+            "off" => SlabGatherMode::Off,
+            "require" => SlabGatherMode::Require,
+            other => eyre::bail!(
+                "--slab-gather must be auto|off|require, got `{other}`"
+            ),
+        })
+    }
+
+    /// Stable name for reports (`"auto"` / `"off"` / `"require"`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlabGatherMode::Auto => "auto",
+            SlabGatherMode::Off => "off",
+            SlabGatherMode::Require => "require",
+        }
+    }
+}
+
 /// Whether a chunk of `pending` candidates routes through the lane-stacked
 /// executable: it must exist (`lanes > 1`) and the chunk must have more
 /// than one candidate — a single candidate's resident per-candidate
@@ -590,6 +629,15 @@ pub struct RuntimeStats {
     pub lane_time: Duration,
     /// Host→device bytes uploaded through this runtime.
     pub upload_bytes: u64,
+    /// Device-side slab-gather dispatches (one per lane-slab cache miss
+    /// routed through the gather executable instead of a host upload).
+    pub gather_dispatches: u64,
+    /// Wall-clock spent in slab-gather dispatches.
+    pub gather_time: Duration,
+    /// Host→device slab bytes the gather path avoided uploading (what
+    /// [`Runtime::upload_lane_slab`] would have pushed for the same slabs;
+    /// never added to `upload_bytes`).
+    pub slab_upload_bytes_avoided: u64,
 }
 
 impl RuntimeStats {
@@ -622,6 +670,9 @@ pub struct Runtime {
     scores_exec: xla::PjRtLoadedExecutable,
     /// Lane-stacked scorer, when the artifacts carry one and it is enabled.
     lanes_exec: Option<xla::PjRtLoadedExecutable>,
+    /// Slab-gather executables by shape family `(out_features,
+    /// in_features)`; empty when misses take the host pack + upload path.
+    gather_execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
     fp_plan: Vec<ArgSlot>,
     quant_plan: Vec<ArgSlot>,
     scores_plan: Vec<ArgSlot>,
@@ -649,6 +700,18 @@ impl Runtime {
         artifacts_dir: &Path,
         weights: &WeightStore,
         lanes_request: usize,
+    ) -> Result<Runtime> {
+        Self::load_with_opts(artifacts_dir, weights, lanes_request, SlabGatherMode::Auto)
+    }
+
+    /// Load with explicit lane *and* slab-gather requests
+    /// (`--lanes` / `--slab-gather`; see [`Runtime::load_with_lanes`] and
+    /// [`SlabGatherMode`] for the request semantics).
+    pub fn load_with_opts(
+        artifacts_dir: &Path,
+        weights: &WeightStore,
+        lanes_request: usize,
+        gather_mode: SlabGatherMode,
     ) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu()?;
@@ -678,6 +741,16 @@ impl Runtime {
             None => (None, Vec::new()),
         };
 
+        // Slab-gather executables: one per shape family, compiled once.
+        // `resolve_gather` already validated completeness/consistency, so
+        // this only compiles what the manifest promises.
+        let mut gather_execs = HashMap::new();
+        if resolve_gather(&manifest, lanes, gather_mode)? {
+            for (n, k) in manifest.shape_families() {
+                gather_execs.insert((n, k), compile(&Manifest::gather_key(n, k))?);
+            }
+        }
+
         let mut rt = Runtime {
             manifest,
             client,
@@ -685,6 +758,7 @@ impl Runtime {
             quant_exec,
             scores_exec,
             lanes_exec,
+            gather_execs,
             fp_plan,
             quant_plan,
             scores_plan,
@@ -841,6 +915,82 @@ impl Runtime {
             codes: self.upload_i8(&codes, &[lanes, n, k])?,
             scale: self.upload_f32(&scale, &[lanes, n, g])?,
             zero: self.upload_f32(&zero, &[lanes, n, g])?,
+            bytes,
+        })
+    }
+
+    /// Whether lane-slab cache misses route through the device-side gather
+    /// executables (vs. host pack + upload).  Decided once at load time
+    /// from the artifacts and the `--slab-gather` mode.
+    pub fn slab_gather_enabled(&self) -> bool {
+        !self.gather_execs.is_empty()
+    }
+
+    /// Assemble one candidate group's lane slab **on device**: one gather
+    /// dispatch reading the already-resident bank buffers, producing the
+    /// same padded `[lanes, ...]` slab set [`Runtime::upload_lane_slab`]
+    /// would build on the host — lane-0 padding semantics identical to
+    /// [`pack_lane_slab`], zero host→device bytes.  All pieces must share
+    /// lane 0's geometry; the group's shape family must have a gather
+    /// executable (guaranteed complete by load-time validation).
+    pub fn gather_lane_slab(&self, pieces: &[&QuantLayerBufs]) -> Result<LaneSlabBufs> {
+        let lanes = self.lanes;
+        let lead = pieces
+            .first()
+            .ok_or_else(|| eyre::anyhow!("lane slab needs at least one piece"))?;
+        let (n, k, g) = (lead.rows, lead.cols, lead.groups);
+        eyre::ensure!(
+            pieces.len() <= lanes,
+            "lane slab overflow: {} pieces for {lanes} lanes",
+            pieces.len()
+        );
+        for p in pieces {
+            eyre::ensure!(p.bits <= 4, "AOT kernel path supports <= 4-bit codes");
+            eyre::ensure!(
+                p.rows == n && p.cols == k && p.groups == g,
+                "lane slab pieces must share lane 0's geometry"
+            );
+        }
+        let exec = self.gather_execs.get(&(n, k)).ok_or_else(|| {
+            eyre::anyhow!(
+                "no slab-gather executable for shape family {n}x{k} \
+                 (slab gather disabled or artifacts incomplete)"
+            )
+        })?;
+        // Lane-major (codes, scale, zero) triples, partial groups padded by
+        // repeating lane 0 — the manifest `args` contract of the gather
+        // executables, mirroring pack_lane_slab's padded layout.
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(3 * lanes);
+        for lane in 0..lanes {
+            let p = pieces.get(lane).copied().unwrap_or(pieces[0]);
+            args.push(&p.codes);
+            args.push(&p.scale);
+            args.push(&p.zero);
+        }
+        let t0 = Instant::now();
+        let mut res = exec.execute_b(&args)?;
+        eyre::ensure!(!res.is_empty(), "gather executable returned no device results");
+        let outs = res.swap_remove(0);
+        eyre::ensure!(
+            outs.len() == 3,
+            "gather executable returned {} output buffers, expected 3 \
+             (codes, scale, zero)",
+            outs.len()
+        );
+        // What upload_lane_slab would have pushed over the host→device
+        // link for the same slab set (i8 codes + f32 scale/zero).
+        let bytes = lanes * (n * k + 2 * n * g * 4);
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.gather_dispatches += 1;
+            s.gather_time += t0.elapsed();
+            s.slab_upload_bytes_avoided += bytes as u64;
+        }
+        let mut outs = outs.into_iter();
+        Ok(LaneSlabBufs {
+            codes: outs.next().expect("len checked"),
+            scale: outs.next().expect("len checked"),
+            zero: outs.next().expect("len checked"),
             bytes,
         })
     }
@@ -1207,6 +1357,100 @@ fn resolve_lanes(manifest: &Manifest, lanes_request: usize) -> Result<Option<usi
     }
 }
 
+/// Whether a runtime loaded from `manifest` with this lane request and
+/// gather mode would route lane-slab misses through the device-side gather
+/// executables — pure planning over the manifest, usable (and tested)
+/// without a PJRT device.
+pub fn planned_slab_gather(
+    manifest: &Manifest,
+    lanes_request: usize,
+    gather_mode: SlabGatherMode,
+) -> Result<bool> {
+    let lanes = resolve_lanes(manifest, lanes_request)?;
+    resolve_gather(manifest, lanes, gather_mode)
+}
+
+/// The manifest `args` contract of a slab-gather executable: lane-major
+/// `(codes, scale, zero)` triples.
+fn gather_args(lanes: usize) -> Vec<String> {
+    (0..lanes)
+        .flat_map(|i| {
+            ["codes", "scale", "zero"].iter().map(move |p| format!("lane{i}.{p}"))
+        })
+        .collect()
+}
+
+/// Resolve whether slab gather is active, given the already-resolved lane
+/// width.  Semantics:
+///  * `Off` → never;
+///  * no lane-stacked scorer → never (`Require` errors: slabs only exist
+///    at `lanes > 1`);
+///  * no gather entries in the manifest → legacy fallback to host packing
+///    (`Require` errors with a rebuild hint);
+///  * entries present → they must be complete (every shape family) and
+///    consistent (lane count matches the scorer, canonical args/outputs),
+///    else the artifacts are corrupt and loading fails loudly in every
+///    mode rather than silently re-entering the upload path.
+fn resolve_gather(
+    manifest: &Manifest,
+    lanes: Option<usize>,
+    mode: SlabGatherMode,
+) -> Result<bool> {
+    if mode == SlabGatherMode::Off {
+        return Ok(false);
+    }
+    let Some(lanes) = lanes else {
+        eyre::ensure!(
+            mode != SlabGatherMode::Require,
+            "--slab-gather require needs the lane-stacked scorer: lane slabs \
+             only exist at lanes > 1 (check --lanes and the artifacts)"
+        );
+        return Ok(false);
+    };
+    let families = manifest.shape_families();
+    let present = families
+        .iter()
+        .filter(|&&(n, k)| manifest.gather_executable(n, k).is_some())
+        .count();
+    if present == 0 {
+        eyre::ensure!(
+            mode != SlabGatherMode::Require,
+            "--slab-gather require, but the artifacts carry no slab-gather \
+             executables; rebuild with `AMQ_SLAB_GATHER=1 make artifacts`"
+        );
+        return Ok(false);
+    }
+    let want_args = gather_args(lanes);
+    for &(n, k) in &families {
+        let key = Manifest::gather_key(n, k);
+        let e = manifest.gather_executable(n, k).ok_or_else(|| {
+            eyre::anyhow!(
+                "slab-gather artifacts incomplete: missing `{key}` \
+                 ({present} of {} shape families present); rebuild with \
+                 `make artifacts`",
+                families.len()
+            )
+        })?;
+        eyre::ensure!(
+            e.lanes == Some(lanes),
+            "`{key}` was built for {:?} lanes but the scorer runs {lanes}; \
+             rebuild with `AMQ_SCORE_LANES={lanes} make artifacts`",
+            e.lanes
+        );
+        eyre::ensure!(
+            e.args == want_args,
+            "`{key}` argument order differs from the lane-major \
+             (codes, scale, zero) contract; rebuild with `make artifacts`"
+        );
+        eyre::ensure!(
+            e.outputs == ["codes", "scale", "zero"],
+            "`{key}` outputs differ from (codes, scale, zero); rebuild \
+             with `make artifacts`"
+        );
+    }
+    Ok(true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1241,6 +1485,52 @@ mod tests {
                                        "lanes": {lanes}}}
             }}, "files": {{}}
         }}"#,
+        ))
+        .unwrap()
+    }
+
+    /// Lane-scorer manifest over two shape families (128x128, 128x256),
+    /// with gather entries for `gather_fams` built at `gather_lanes` lanes.
+    fn gather_manifest(
+        lanes: usize,
+        gather_fams: &[(usize, usize)],
+        gather_lanes: usize,
+    ) -> Manifest {
+        let mut execs = vec![format!(
+            r#""scores_quant_lanes": {{"file": "scores_quant_lanes{lanes}.hlo.txt",
+                "args": ["tokens"], "outputs": ["jsd", "ce"], "lanes": {lanes}}}"#
+        )];
+        for &(n, k) in gather_fams {
+            let args: Vec<String> = (0..gather_lanes)
+                .flat_map(|i| {
+                    ["codes", "scale", "zero"]
+                        .iter()
+                        .map(move |p| format!(r#""lane{i}.{p}""#))
+                })
+                .collect();
+            execs.push(format!(
+                r#""gather_lanes_{n}x{k}": {{
+                    "file": "gather_lanes{gather_lanes}_{n}x{k}.hlo.txt",
+                    "args": [{}],
+                    "outputs": ["codes", "scale", "zero"],
+                    "lanes": {gather_lanes}}}"#,
+                args.join(", ")
+            ));
+        }
+        crate::data::Manifest::from_json(&format!(
+            r#"{{
+            "model": {{"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                      "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                      "rope_theta": 10000.0, "rms_eps": 1e-5}},
+            "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+            "layers": [
+                {{"name": "blk0.q", "out_features": 128, "in_features": 128}},
+                {{"name": "blk0.down", "out_features": 128, "in_features": 256}}
+            ],
+            "fp_side_names": ["embed"],
+            "executables": {{{}}}, "files": {{}}
+        }}"#,
+            execs.join(",\n")
         ))
         .unwrap()
     }
@@ -1349,6 +1639,77 @@ mod tests {
         assert_eq!(resolve_lanes(&with, 8).unwrap(), Some(8));
         assert!(resolve_lanes(&with, 4).is_err());
         assert!(resolve_lanes(&without, 8).is_err());
+    }
+
+    #[test]
+    fn slab_gather_mode_parse_and_name() {
+        assert_eq!(SlabGatherMode::parse("auto").unwrap(), SlabGatherMode::Auto);
+        assert_eq!(SlabGatherMode::parse("off").unwrap(), SlabGatherMode::Off);
+        assert_eq!(
+            SlabGatherMode::parse("require").unwrap(),
+            SlabGatherMode::Require
+        );
+        assert!(SlabGatherMode::parse("on").is_err());
+        assert_eq!(SlabGatherMode::default(), SlabGatherMode::Auto);
+        assert_eq!(SlabGatherMode::Auto.name(), "auto");
+        assert_eq!(SlabGatherMode::Off.name(), "off");
+        assert_eq!(SlabGatherMode::Require.name(), "require");
+    }
+
+    #[test]
+    fn gather_args_are_lane_major_triples() {
+        assert_eq!(
+            gather_args(2),
+            vec![
+                "lane0.codes",
+                "lane0.scale",
+                "lane0.zero",
+                "lane1.codes",
+                "lane1.scale",
+                "lane1.zero"
+            ]
+        );
+    }
+
+    #[test]
+    fn planned_slab_gather_legacy_manifests_fall_back() {
+        use SlabGatherMode::*;
+        // no lane scorer at all: slabs never exist
+        let legacy = toy_manifest();
+        assert!(!planned_slab_gather(&legacy, 0, Auto).unwrap());
+        assert!(planned_slab_gather(&legacy, 0, Require).is_err());
+        // lane scorer but no gather entries (PR-6-era artifacts): host pack
+        let lanes_only = lanes_manifest(8);
+        assert!(!planned_slab_gather(&lanes_only, 0, Auto).unwrap());
+        assert!(!planned_slab_gather(&lanes_only, 0, Off).unwrap());
+        let err = planned_slab_gather(&lanes_only, 0, Require).unwrap_err();
+        assert!(err.to_string().contains("AMQ_SLAB_GATHER=1"), "{err}");
+    }
+
+    #[test]
+    fn planned_slab_gather_routes_when_artifacts_complete() {
+        use SlabGatherMode::*;
+        let fams = [(128, 128), (128, 256)];
+        let m = gather_manifest(8, &fams, 8);
+        assert!(planned_slab_gather(&m, 0, Auto).unwrap());
+        assert!(planned_slab_gather(&m, 8, Require).unwrap());
+        // off always wins
+        assert!(!planned_slab_gather(&m, 0, Off).unwrap());
+        // forcing per-candidate scoring disables gather too (no slabs)
+        assert!(!planned_slab_gather(&m, 1, Auto).unwrap());
+        assert!(planned_slab_gather(&m, 1, Require).is_err());
+    }
+
+    #[test]
+    fn planned_slab_gather_rejects_corrupt_artifacts() {
+        use SlabGatherMode::*;
+        // incomplete: only one of two shape families present
+        let partial = gather_manifest(8, &[(128, 128)], 8);
+        let err = planned_slab_gather(&partial, 0, Auto).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        // lane count disagrees with the scorer
+        let mismatched = gather_manifest(8, &[(128, 128), (128, 256)], 4);
+        assert!(planned_slab_gather(&mismatched, 0, Auto).is_err());
     }
 
     #[test]

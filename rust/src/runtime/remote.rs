@@ -16,7 +16,7 @@
 
 use std::io::{self, Read};
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::wire::{read_frame, write_frame, WireMsg};
 use super::ShardFlow;
@@ -196,6 +196,74 @@ impl RemoteShard {
     }
 }
 
+/// Server-side lifetime counters for one `serve_shard` loop, accumulated
+/// across all accepted connections (stats-probe connections included).
+/// `busy` is wall time spent inside the eval closure only — transport and
+/// queueing are excluded, which is exactly the gap the coordinator's
+/// client-side estimate cannot see.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Chunks answered with `Scores` (eval errors are not counted).
+    pub completed: u64,
+    /// Cumulative wall time inside the eval closure.
+    pub busy: Duration,
+    /// Connections accepted, stats probes included.
+    pub conns: u64,
+}
+
+/// Server-side counters as reported by a shard over a
+/// [`WireMsg::Stats`] frame — the decoded form of [`ServeStats`].
+#[derive(Clone, Copy, Debug)]
+pub struct ShardServerStats {
+    /// Chunks the server answered with `Scores`.
+    pub completed: u64,
+    /// Microseconds the server spent inside its eval closure.
+    pub busy_us: u64,
+    /// Connections the server has accepted (this probe included).
+    pub conns: u64,
+}
+
+/// Probe `addr` for server-side stats on a dedicated, freshly opened
+/// connection, then drop it.
+///
+/// Probe only when the shard is expected to be idle — after the search's
+/// feeder connections have closed.  The server answers connections
+/// sequentially, so a probe racing an open search stream just waits until
+/// `timeout` and reports the shard as unavailable rather than hanging.
+/// Pre-stats servers reject the probe frame and drop the connection, which
+/// also surfaces here as an error — callers should degrade to "server-side
+/// stats unavailable", not treat it as a shard failure.
+pub fn fetch_shard_stats(addr: &str, timeout: Duration) -> io::Result<ShardServerStats> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut stream = stream;
+    read_hello(&mut stream)?;
+    write_frame(&mut stream, &WireMsg::StatsReq { id: 0 })?;
+    let reply = read_frame(&mut stream)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "shard closed the connection on stats probe (pre-stats server?)",
+            )
+        })?;
+    match reply {
+        WireMsg::Stats { id: 0, completed, busy_us, conns } => {
+            Ok(ShardServerStats { completed, busy_us, conns })
+        }
+        WireMsg::Stats { id, .. } => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("stats reply id {id} does not match request id 0"),
+        )),
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unexpected stats reply op {other:?}"),
+        )),
+    }
+}
+
 fn read_hello<R: Read>(r: &mut R) -> io::Result<u64> {
     let msg = read_frame(r)
         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
@@ -249,6 +317,7 @@ where
     F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
 {
     let mut served = 0usize;
+    let mut stats = ServeStats::default();
     for conn in listener.incoming() {
         let stream = match conn {
             Ok(s) => s,
@@ -262,7 +331,8 @@ where
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown>".into());
         eprintln!("[shard] connection from {peer}");
-        if let Err(e) = serve_conn(stream, n_layers, &mut eval) {
+        stats.conns += 1;
+        if let Err(e) = serve_conn(stream, n_layers, &mut eval, &mut stats) {
             eprintln!("[shard] connection {peer} ended with error: {e}");
         } else {
             eprintln!("[shard] connection {peer} closed");
@@ -277,7 +347,12 @@ where
     Ok(())
 }
 
-fn serve_conn<F>(stream: TcpStream, n_layers: u64, eval: &mut F) -> crate::Result<()>
+fn serve_conn<F>(
+    stream: TcpStream,
+    n_layers: u64,
+    eval: &mut F,
+    stats: &mut ServeStats,
+) -> crate::Result<()>
 where
     F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
 {
@@ -290,22 +365,34 @@ where
             Some(m) => m,
         };
         let reply = match msg {
-            WireMsg::Chunk { id, genes } => match eval(&genes) {
-                Ok(scores) => {
-                    if scores.len() != genes.len() {
-                        WireMsg::Error {
-                            id,
-                            message: format!(
-                                "evaluator returned {} scores for {} candidates",
-                                scores.len(),
-                                genes.len()
-                            ),
+            WireMsg::Chunk { id, genes } => {
+                let t0 = Instant::now();
+                let res = eval(&genes);
+                stats.busy += t0.elapsed();
+                match res {
+                    Ok(scores) => {
+                        if scores.len() != genes.len() {
+                            WireMsg::Error {
+                                id,
+                                message: format!(
+                                    "evaluator returned {} scores for {} candidates",
+                                    scores.len(),
+                                    genes.len()
+                                ),
+                            }
+                        } else {
+                            stats.completed += 1;
+                            WireMsg::Scores { id, scores }
                         }
-                    } else {
-                        WireMsg::Scores { id, scores }
                     }
+                    Err(e) => WireMsg::Error { id, message: e.to_string() },
                 }
-                Err(e) => WireMsg::Error { id, message: e.to_string() },
+            }
+            WireMsg::StatsReq { id } => WireMsg::Stats {
+                id,
+                completed: stats.completed,
+                busy_us: stats.busy.as_micros() as u64,
+                conns: stats.conns,
             },
             other => {
                 eyre::bail!("unexpected client frame {other:?}");
@@ -400,6 +487,33 @@ mod tests {
         // Drop our stream so the server moves on to the next connection.
         shard.stream = None;
         assert_eq!(shard.call(&[vec![4u16]]).unwrap().unwrap(), vec![8.0]);
+    }
+
+    #[test]
+    fn stats_probe_reports_server_side_counters() {
+        let addr = spawn_test_server(0, Some(2), |genes: &[Vec<u16>]| {
+            // a measurable floor on busy time, so the probe's lower-bound
+            // assertion below cannot flake
+            std::thread::sleep(Duration::from_millis(2));
+            eyre::ensure!(genes[0][0] != 99, "poison gene");
+            double(genes)
+        })
+        .unwrap();
+        let mut shard = RemoteShard::new(addr.clone(), RetryPolicy::default());
+        assert_eq!(shard.call(&[vec![2u16]]).unwrap().unwrap(), vec![4.0]);
+        // eval errors burn busy time but do not count as completed
+        assert!(shard.call(&[vec![99u16]]).unwrap().is_err());
+        // close the search connection so the sequential server can accept
+        // the dedicated probe connection
+        drop(shard);
+        let stats = fetch_shard_stats(&addr, Duration::from_secs(5)).unwrap();
+        assert_eq!(stats.completed, 1, "only the Scores reply counts");
+        assert_eq!(stats.conns, 2, "the probe connection itself is counted");
+        assert!(
+            stats.busy_us >= 4_000,
+            "two >=2ms evals should report >=4000us busy, got {}",
+            stats.busy_us
+        );
     }
 
     #[test]

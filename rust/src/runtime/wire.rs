@@ -65,6 +65,18 @@ pub enum WireMsg {
     /// Deterministic evaluation failure for chunk `id` (the remote's error
     /// text; *not* a transport failure — the connection stays usable).
     Error { id: u64, message: String },
+    /// Client request for the server's lifetime counters.  Answered with a
+    /// [`WireMsg::Stats`] echoing `id`.  Servers predating this op reject
+    /// the frame as an unknown op (connection-fatal on the server side), so
+    /// clients only probe on *dedicated* connections — never mid-search on
+    /// a scoring connection.
+    StatsReq { id: u64 },
+    /// Server-side lifetime counters (across every connection the server
+    /// has accepted): chunks completed, busy wall-clock in µs (time inside
+    /// the evaluation closure), and connections accepted.  These are the
+    /// server's own measurements — unlike the client-side `ShardStats`
+    /// estimates, they exclude transport and queueing time.
+    Stats { id: u64, completed: u64, busy_us: u64, conns: u64 },
 }
 
 fn obj(entries: Vec<(&str, Value)>) -> Value {
@@ -118,6 +130,17 @@ impl WireMsg {
                 ("message", Value::Str(message.clone())),
                 ("op", Value::Str("error".into())),
             ]),
+            WireMsg::StatsReq { id } => obj(vec![
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("stats_req".into())),
+            ]),
+            WireMsg::Stats { id, completed, busy_us, conns } => obj(vec![
+                ("busy_us", Value::Num(*busy_us as f64)),
+                ("completed", Value::Num(*completed as f64)),
+                ("conns", Value::Num(*conns as f64)),
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("stats".into())),
+            ]),
         }
     }
 
@@ -153,6 +176,13 @@ impl WireMsg {
             "error" => Ok(WireMsg::Error {
                 id: v.get("id")?.as_u64()?,
                 message: v.get("message")?.as_str()?.to_string(),
+            }),
+            "stats_req" => Ok(WireMsg::StatsReq { id: v.get("id")?.as_u64()? }),
+            "stats" => Ok(WireMsg::Stats {
+                id: v.get("id")?.as_u64()?,
+                completed: v.get("completed")?.as_u64()?,
+                busy_us: v.get("busy_us")?.as_u64()?,
+                conns: v.get("conns")?.as_u64()?,
             }),
             other => eyre::bail!("unknown wire op `{other}`"),
         }
@@ -240,6 +270,8 @@ mod tests {
             WireMsg::Chunk { id: 7, genes: vec![vec![2, 3, 4], vec![0x0104, 2]] },
             WireMsg::Scores { id: 7, scores: vec![0.5, -1.25e-3, f32::NAN] },
             WireMsg::Error { id: 9, message: "bank has 28 layers, got 3".into() },
+            WireMsg::StatsReq { id: 11 },
+            WireMsg::Stats { id: 11, completed: 420, busy_us: 1_234_567, conns: 3 },
         ];
         for m in msgs {
             let bytes = encode_frame(&m);
@@ -303,6 +335,16 @@ mod tests {
             f
         };
         assert!(decode_frame(&bad).is_err());
+        // stats frame missing its counters
+        let bad = {
+            let mut f = Vec::new();
+            let payload = br#"{"id":3,"op":"stats"}"#;
+            f.extend_from_slice(b"AMQW\x01");
+            f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            f.extend_from_slice(payload);
+            f
+        };
+        assert!(decode_frame(&bad).is_err());
     }
 
     #[test]
@@ -329,6 +371,30 @@ mod tests {
         let frame = encode_frame(&WireMsg::Scores { id: 7, scores: vec![1.0, -2.5] });
         // 1.0f32 = 0x3F800000 = 1065353216; -2.5f32 = 0xC0200000 = 3222274048
         let payload = br#"{"id":7,"op":"scores","scores":[1065353216,3222274048]}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        // stats ops: new in the same version (old servers reject them as an
+        // unknown op instead of misparsing — additive, no layout change)
+        let frame = encode_frame(&WireMsg::StatsReq { id: 3 });
+        let payload = br#"{"id":3,"op":"stats_req"}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        let frame = encode_frame(&WireMsg::Stats {
+            id: 3,
+            completed: 42,
+            busy_us: 1_500_000,
+            conns: 2,
+        });
+        let payload =
+            br#"{"busy_us":1500000,"completed":42,"conns":2,"id":3,"op":"stats"}"#;
         let mut expect = Vec::new();
         expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
         expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());

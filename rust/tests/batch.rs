@@ -14,7 +14,7 @@ use amq::data::Manifest;
 use amq::quant::{MethodId, Quantizer};
 use amq::runtime::{
     lane_dispatch_count, lane_padding, lane_routed, lane_slab_sig, planned_scorer_variant,
-    EvalService, ScorerVariant, SlabCache,
+    planned_slab_gather, EvalService, ScorerVariant, SlabCache, SlabGatherMode,
 };
 use amq::tensor::Mat;
 use amq::util::Rng;
@@ -348,8 +348,12 @@ const SLAB_BYTES: usize = 1 << 14;
 struct SlabCounters {
     /// Slab lookups issued by plan building (hits + misses).
     resolutions: AtomicU64,
-    /// Slab pack+upload events (cache misses).
+    /// Host slab pack+upload events (cache misses on the host-pack route).
     uploads: AtomicU64,
+    /// Device gather dispatches (cache misses on the gather route).
+    gathers: AtomicU64,
+    /// Bytes the gather route kept off the host→device upload path.
+    bytes_avoided: AtomicU64,
     /// Distinct slab keys ever resolved.
     distinct: Mutex<HashSet<(usize, Vec<u16>)>>,
     /// Device dispatches (lane groups × batches on the lane path).
@@ -363,6 +367,11 @@ struct SlabCounters {
 /// `batches` calibration batches.  Candidate scores are reconstructed from
 /// the **slab contents**, so a stale or miskeyed cache entry corrupts the
 /// archive — cache transparency is load-bearing, not asserted on the side.
+///
+/// `gather` mirrors `DeviceProxy::plan_lane_chunk`'s miss routing: a cache
+/// miss becomes a device gather over resident bank pieces (no host upload,
+/// bytes accounted as avoided) instead of a host pack+upload.  Both routes
+/// build the identical slab payload, as production does bitwise.
 fn slab_pooled(
     workers: usize,
     score_batch: usize,
@@ -370,10 +379,13 @@ fn slab_pooled(
     slab_budget: usize,
     batches: usize,
     n_layers: usize,
+    gather: bool,
 ) -> (PooledEvaluator, Arc<SlabCounters>) {
     let counters = Arc::new(SlabCounters {
         resolutions: AtomicU64::new(0),
         uploads: AtomicU64::new(0),
+        gathers: AtomicU64::new(0),
+        bytes_avoided: AtomicU64::new(0),
         distinct: Mutex::new(HashSet::new()),
         dispatches: AtomicU64::new(0),
     });
@@ -393,7 +405,14 @@ fn slab_pooled(
                         let key = (li, sig.clone());
                         counters.resolutions.fetch_add(1, Ordering::Relaxed);
                         let slab = cache.get_or_build(key.clone(), || {
-                            counters.uploads.fetch_add(1, Ordering::Relaxed);
+                            if gather {
+                                counters.gathers.fetch_add(1, Ordering::Relaxed);
+                                counters
+                                    .bytes_avoided
+                                    .fetch_add(SLAB_BYTES as u64, Ordering::Relaxed);
+                            } else {
+                                counters.uploads.fetch_add(1, Ordering::Relaxed);
+                            }
                             counters.distinct.lock().unwrap().insert(key.clone());
                             Ok((sig.clone(), SLAB_BYTES))
                         })?;
@@ -466,7 +485,7 @@ fn archive_identical_across_slab_cache_budgets() {
     for lanes in [1usize, 8] {
         for budget_mb in [0usize, 64] {
             let (mut ev, counters) =
-                slab_pooled(2, 8, lanes, slab_budget_bytes(budget_mb), 1, n_layers);
+                slab_pooled(2, 8, lanes, slab_budget_bytes(budget_mb), 1, n_layers, false);
             let res = run_search(&space, &mut ev, &params).unwrap();
             assert_eq!(
                 archive_hash(&res.archive),
@@ -504,7 +523,8 @@ fn multi_batch_uploads_count_distinct_slabs_not_batches() {
         .collect();
     let mut counts = Vec::new();
     for batches in [1usize, 3] {
-        let (mut ev, counters) = slab_pooled(1, 8, 8, slab_budget_bytes(64), batches, n_layers);
+        let (mut ev, counters) =
+            slab_pooled(1, 8, 8, slab_budget_bytes(64), batches, n_layers, false);
         // two identical generations: the second is pure cache traffic at
         // the evaluator level, so no new slab work at all
         let first = ev.eval_jsd_batch(&configs).unwrap();
@@ -543,7 +563,7 @@ fn eviction_under_tiny_budget_still_scores_correctly() {
     let want: Vec<f32> = configs.iter().map(synth_jsd).collect();
     let mut uploads_by_batches = Vec::new();
     for batches in [1usize, 3] {
-        let (mut ev, counters) = slab_pooled(1, 8, 8, SLAB_BYTES, batches, n_layers);
+        let (mut ev, counters) = slab_pooled(1, 8, 8, SLAB_BYTES, batches, n_layers, false);
         let got = ev.eval_jsd_batch(&configs).unwrap();
         assert_eq!(got, want, "eviction changed scores at {batches} batches");
         uploads_by_batches.push(counters.uploads.load(Ordering::Relaxed));
@@ -557,6 +577,155 @@ fn eviction_under_tiny_budget_still_scores_correctly() {
         uploads_by_batches[0], uploads_by_batches[1],
         "pinned plans must keep uploads batch-invariant even while evicting"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Device-side slab gather: upload accounting, archive transparency, fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gather_route_does_zero_host_uploads() {
+    // the acceptance pin: a cold multi-batch search with the gather
+    // artifact does zero host slab uploads — every miss is a device gather
+    // over resident bank pieces, and the bytes avoided are exactly what
+    // the host-pack route would have uploaded (one slab per distinct key)
+    let n_layers = 12;
+    let space = toy_space(n_layers);
+    let mut params = SearchParams::smoke();
+    params.seed = 67;
+
+    let (mut host, host_c) =
+        slab_pooled(2, 8, 8, slab_budget_bytes(64), 3, n_layers, false);
+    let host_res = run_search(&space, &mut host, &params).unwrap();
+    let expect = archive_hash(&host_res.archive);
+    assert!(host_c.uploads.load(Ordering::Relaxed) > 0);
+    assert_eq!(host_c.gathers.load(Ordering::Relaxed), 0);
+
+    for workers in [1usize, 4] {
+        let (mut ev, c) = slab_pooled(workers, 8, 8, slab_budget_bytes(64), 3, n_layers, true);
+        let res = run_search(&space, &mut ev, &params).unwrap();
+        assert_eq!(
+            archive_hash(&res.archive),
+            expect,
+            "gather route changed the archive at workers={workers}"
+        );
+        assert_eq!(
+            c.uploads.load(Ordering::Relaxed),
+            0,
+            "gather run must not host-upload slabs"
+        );
+        let distinct = c.distinct.lock().unwrap().len() as u64;
+        assert!(distinct > 0);
+        assert_eq!(
+            c.gathers.load(Ordering::Relaxed),
+            distinct,
+            "one device gather per distinct slab"
+        );
+        assert_eq!(
+            c.bytes_avoided.load(Ordering::Relaxed),
+            distinct * SLAB_BYTES as u64,
+            "bytes avoided must equal the sum of the slab sizes"
+        );
+    }
+}
+
+#[test]
+fn archive_identical_across_slab_gather_modes() {
+    // {gather off, auto-with-artifact} x {lanes 1, 8} x {workers 1, 4}:
+    // the miss route may only change upload/gather counters, never the
+    // archive — scores flow through the slab contents on both routes
+    let n_layers = 12;
+    let space = toy_space(n_layers);
+    let mut params = SearchParams::smoke();
+    params.seed = 71;
+
+    struct Seq(usize);
+    impl ConfigEvaluator for Seq {
+        fn eval_jsd(&mut self, config: &Config) -> amq::Result<f32> {
+            self.0 += 1;
+            Ok(synth_jsd(config))
+        }
+        fn count(&self) -> usize {
+            self.0
+        }
+    }
+    let baseline = run_search(&space, &mut Seq(0), &params).unwrap();
+    let expect = archive_hash(&baseline.archive);
+
+    for gather in [false, true] {
+        for lanes in [1usize, 8] {
+            for workers in [1usize, 4] {
+                let (mut ev, c) = slab_pooled(
+                    workers,
+                    8,
+                    lanes,
+                    slab_budget_bytes(64),
+                    1,
+                    n_layers,
+                    gather,
+                );
+                let res = run_search(&space, &mut ev, &params).unwrap();
+                assert_eq!(
+                    archive_hash(&res.archive),
+                    expect,
+                    "archive diverged at gather={gather} lanes={lanes} workers={workers}"
+                );
+                assert_eq!(res.true_evals, baseline.true_evals);
+                if lanes == 1 {
+                    // per-candidate path: no slabs, so nothing to gather
+                    assert_eq!(c.gathers.load(Ordering::Relaxed), 0);
+                    assert_eq!(c.uploads.load(Ordering::Relaxed), 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn manifest_without_gather_artifact_falls_back_to_host_pack() {
+    let base = r#"{
+        "model": {"vocab_size": 512, "d_model": 128, "n_layers": 1,
+                  "n_heads": 4, "d_ff": 256, "seq_len": 128,
+                  "rope_theta": 10000.0, "rms_eps": 1e-5},
+        "group_size": 128, "bit_choices": [2,3,4], "eval_batch": 16,
+        "layers": [{"name": "blk0.q", "out_features": 128, "in_features": 128}],
+        "fp_side_names": ["embed"],
+        "executables": {EXECS}, "files": {}
+    }"#;
+    // lane scorer but no gather executables (legacy artifact): auto and
+    // off fall back to host packing with no behavior change; require is a
+    // hard error pointing at the rebuild knob
+    let scorer_only = r#"{
+        "scores_quant_lanes": {"file": "scores_quant_lanes2.hlo.txt",
+                               "args": ["tokens"], "outputs": ["jsd", "ce"],
+                               "lanes": 2}}"#;
+    let legacy = Manifest::from_json(&base.replace("{EXECS}", scorer_only)).unwrap();
+    assert_eq!(legacy.gather_lanes(), None);
+    assert!(!planned_slab_gather(&legacy, 0, SlabGatherMode::Auto).unwrap());
+    assert!(!planned_slab_gather(&legacy, 0, SlabGatherMode::Off).unwrap());
+    let err = planned_slab_gather(&legacy, 0, SlabGatherMode::Require)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("AMQ_SLAB_GATHER=1"), "got: {err}");
+
+    // gather executables present: auto (and require) route misses through
+    // the device gather; off and --lanes 1 keep the host path
+    let with_gather = r#"{
+        "scores_quant_lanes": {"file": "scores_quant_lanes2.hlo.txt",
+                               "args": ["tokens"], "outputs": ["jsd", "ce"],
+                               "lanes": 2},
+        "gather_lanes_128x128": {"file": "gather_lanes2_128x128.hlo.txt",
+                                 "args": ["lane0.codes", "lane0.scale",
+                                          "lane0.zero", "lane1.codes",
+                                          "lane1.scale", "lane1.zero"],
+                                 "outputs": ["codes", "scale", "zero"],
+                                 "lanes": 2}}"#;
+    let m = Manifest::from_json(&base.replace("{EXECS}", with_gather)).unwrap();
+    assert_eq!(m.gather_lanes(), Some(2));
+    assert!(planned_slab_gather(&m, 0, SlabGatherMode::Auto).unwrap());
+    assert!(planned_slab_gather(&m, 2, SlabGatherMode::Require).unwrap());
+    assert!(!planned_slab_gather(&m, 0, SlabGatherMode::Off).unwrap());
+    assert!(!planned_slab_gather(&m, 1, SlabGatherMode::Auto).unwrap());
 }
 
 #[test]

@@ -10,7 +10,10 @@ use amq::data::{load_tokens, Manifest};
 use amq::eval::{self, ModelHandle};
 use amq::model::ModelAssets;
 use amq::quant::{Hqq, MethodId, MethodRegistry, Quantizer, Rtn};
-use amq::runtime::{planned_scorer_variant, Runtime, ScorerVariant};
+use amq::runtime::{
+    pack_lane_slab, planned_scorer_variant, planned_slab_gather, Runtime, ScorerVariant,
+    SlabGatherMode,
+};
 
 macro_rules! require_artifacts {
     () => {
@@ -113,6 +116,41 @@ fn lane_scorer_artifact_wired_through_manifest() {
         ScorerVariant::PerCandidate
     );
     assert!(planned_scorer_variant(&m, lanes + 1).is_err());
+}
+
+#[test]
+fn gather_artifact_wired_through_manifest() {
+    // Host-side only: the AOT build ships one gather executable per quant
+    // shape family, each stacking the same lane count as the scorer, and
+    // the runtime's gather planner routes slab-cache misses through them.
+    require_artifacts!();
+    let dir = amq::artifacts_dir();
+    let m = Manifest::load(&dir).unwrap();
+    let Some(lanes) = m.scorer_lanes() else {
+        eprintln!("[skip] artifacts built without a lane-stacked scorer (AMQ_SCORE_LANES=1)");
+        return;
+    };
+    let Some(gather_lanes) = m.gather_lanes() else {
+        eprintln!("[skip] artifacts built without gather executables (AMQ_SLAB_GATHER=0)");
+        return;
+    };
+    assert_eq!(gather_lanes, lanes, "gather lanes must match the scorer");
+    let families = m.shape_families();
+    assert!(!families.is_empty());
+    for &(n, k) in &families {
+        let key = Manifest::gather_key(n, k);
+        let exe = m.executable(&key).unwrap();
+        assert_eq!(exe.lanes, Some(lanes));
+        assert_eq!(exe.outputs, ["codes", "scale", "zero"]);
+        assert_eq!(exe.args.len(), 3 * lanes, "lane-major (codes, scale, zero) triples");
+        assert!(m.hlo_path(&key).unwrap().exists());
+    }
+    // gather planning: auto and require route misses through the device
+    // gather, off and the per-candidate scorer (--lanes 1) keep host packing
+    assert!(planned_slab_gather(&m, 0, SlabGatherMode::Auto).unwrap());
+    assert!(planned_slab_gather(&m, lanes, SlabGatherMode::Require).unwrap());
+    assert!(!planned_slab_gather(&m, 0, SlabGatherMode::Off).unwrap());
+    assert!(!planned_slab_gather(&m, 1, SlabGatherMode::Auto).unwrap());
 }
 
 #[test]
@@ -269,6 +307,60 @@ fn runtime_end_to_end() {
             2 * (lanes - 3) as u64
         );
         assert_eq!(after.scores_calls, before.scores_calls, "no per-candidate calls");
+
+        // -- device-side gather is bitwise the host packer ---------------
+        // A *partial* group (2 real lanes of L) gathered on device from
+        // the resident quant buffers must read back exactly the bytes
+        // pack_lane_slab builds on the host — including the repeated
+        // lane-0 padding region — with zero host→device upload traffic.
+        if rt.slab_gather_enabled() {
+            let host = [&p2[0], &p4[0]];
+            let code_rows: Vec<&[u8]> = host.iter().map(|p| p.codes.as_slice()).collect();
+            let want_codes: Vec<i8> = pack_lane_slab(&code_rows, lanes)
+                .unwrap()
+                .iter()
+                .map(|&c| c as i8)
+                .collect();
+            let scale_rows: Vec<&[f32]> = host.iter().map(|p| p.scale.as_slice()).collect();
+            let want_scale = pack_lane_slab(&scale_rows, lanes).unwrap();
+            let zero_rows: Vec<&[f32]> = host.iter().map(|p| p.zero.as_slice()).collect();
+            let want_zero = pack_lane_slab(&zero_rows, lanes).unwrap();
+
+            let mark = rt.stats();
+            let slab = rt.gather_lane_slab(&[&q2[0], &q4[0]]).unwrap();
+            let gstats = rt.stats();
+            assert_eq!(
+                gstats.upload_bytes, mark.upload_bytes,
+                "device gather must not touch the host upload path"
+            );
+            assert_eq!(gstats.gather_dispatches, mark.gather_dispatches + 1);
+            assert_eq!(
+                gstats.slab_upload_bytes_avoided - mark.slab_upload_bytes_avoided,
+                slab.bytes as u64,
+                "bytes avoided must be what upload_lane_slab would have pushed"
+            );
+            // the host route reports identical slab bytes for this group
+            let uploaded = rt.upload_lane_slab(&[&p2[0], &p4[0]]).unwrap();
+            assert_eq!(slab.bytes, uploaded.bytes);
+
+            let got_codes =
+                slab.codes.to_literal_sync().unwrap().to_vec::<i8>().unwrap();
+            assert_eq!(got_codes, want_codes, "gathered codes drifted from host pack");
+            let got_scale =
+                slab.scale.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+            assert_eq!(got_scale.len(), want_scale.len());
+            for (i, (a, b)) in got_scale.iter().zip(&want_scale).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "gathered scale[{i}] drifted");
+            }
+            let got_zero =
+                slab.zero.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+            assert_eq!(got_zero.len(), want_zero.len());
+            for (i, (a, b)) in got_zero.iter().zip(&want_zero).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "gathered zero[{i}] drifted");
+            }
+        } else {
+            eprintln!("[skip] gather executables absent — host-pack route only");
+        }
     }
     assert!(
         jsd2 > jsd_fused && jsd_fused > jsd4,
