@@ -1,0 +1,86 @@
+//! Serve-path micro-benchmarks: continuous-batcher throughput at 1 vs N
+//! lanes under a simulated device dispatch cost, and the fixed-bucket
+//! latency histogram's record/percentile cost.  (Hand-rolled harness; see
+//! util::bench.)
+
+use amq::coordinator::synth::synth_jsd;
+use amq::coordinator::Config;
+use amq::runtime::serve::LatencyHistogram;
+use amq::runtime::{ContinuousBatcher, SchedulerOptions};
+use amq::util::bench::{bench, header};
+use std::time::Duration;
+
+fn main() {
+    // The evaluator stands in for a lane-stacked PJRT scorer round trip:
+    // a fixed per-dispatch submission cost plus a marginal cost per lane
+    // (padding included), mirroring the coordinator bench's device model.
+    const DISPATCH_US: u64 = 200;
+    const LANE_US: u64 = 30;
+    header("continuous batcher (8 closed-loop clients, 200us simulated dispatch)");
+    for lanes in [1usize, 8] {
+        let batcher = ContinuousBatcher::spawn(
+            SchedulerOptions {
+                lanes,
+                max_wait: Duration::from_micros(500),
+                queue_cap: 1024,
+            },
+            move || {
+                move |chunk: &[Config]| -> amq::Result<Vec<f32>> {
+                    std::thread::sleep(Duration::from_micros(
+                        DISPATCH_US + lanes as u64 * LANE_US,
+                    ));
+                    Ok(chunk.iter().map(|c| synth_jsd(c)).collect())
+                }
+            },
+        );
+        let res = bench(
+            &format!("32-request wave, lanes {lanes}"),
+            Duration::from_secs(2),
+            || {
+                std::thread::scope(|scope| {
+                    for t in 0..8usize {
+                        let batcher = &batcher;
+                        scope.spawn(move || {
+                            for i in 0..4usize {
+                                let genes = vec![2 + ((t + i) % 3) as u16; 12];
+                                std::hint::black_box(
+                                    batcher.score(genes).expect("score failed"),
+                                );
+                            }
+                        });
+                    }
+                });
+            },
+        );
+        res.print();
+        let stats = batcher.stats();
+        println!(
+            "  lanes {lanes}: {} requests / {} dispatches, {:.0}% lane fill, \
+             mean queue wait {:.0}us",
+            stats.requests,
+            stats.dispatches,
+            stats.lane_fill_fraction() * 100.0,
+            stats.mean_wait_us()
+        );
+    }
+
+    header("latency histogram (64 log2 buckets)");
+    let mut hist = LatencyHistogram::new();
+    let mut x = 0x2545F4914F6CDD1Du64;
+    bench("record", Duration::from_millis(400), || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        hist.record(x >> 44);
+    })
+    .print();
+    bench("percentile (p99)", Duration::from_millis(400), || {
+        std::hint::black_box(hist.percentile(0.99));
+    })
+    .print();
+    println!(
+        "  {} samples, p50 {}us / p99 {}us / max {}us",
+        hist.count(),
+        hist.percentile(0.50),
+        hist.percentile(0.99),
+        hist.max_us()
+    );
+}

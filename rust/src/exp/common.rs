@@ -248,6 +248,35 @@ pub fn rebits(archive: Archive, space: &SearchSpace) -> Archive {
     out
 }
 
+/// Load the config a `repro serve` process should serve as its default:
+/// an archive JSON written by a search (`results/cache/*.json` — the
+/// "searched archive entry"), narrowed to `budget` average bits when given
+/// (same ±[`TOL`] rule as the paper tables), otherwise the archive's
+/// lowest-JSD sample.  Returns the chosen sample so the server can log its
+/// provenance (bits + proxy JSD) next to the listen address.
+pub fn load_served_config(
+    path: &std::path::Path,
+    budget: Option<f64>,
+) -> Result<crate::coordinator::Sample> {
+    let archive = cache::load_archive(path)?;
+    eyre::ensure!(!archive.is_empty(), "archive {} holds no samples", path.display());
+    let sample = match budget {
+        Some(b) => archive.best_under(b, TOL).ok_or_else(|| {
+            eyre::anyhow!(
+                "no sample under {b} bits (±{TOL}) in {} ({} samples)",
+                path.display(),
+                archive.len()
+            )
+        })?,
+        None => archive
+            .samples
+            .iter()
+            .min_by(|a, b| a.jsd.partial_cmp(&b.jsd).unwrap_or(std::cmp::Ordering::Equal))
+            .expect("non-empty archive"),
+    };
+    Ok(sample.clone())
+}
+
 /// Pick the frontier config for a budget (panics with context if none).
 pub fn pick(archive: &Archive, space: &SearchSpace, budget: f64) -> Result<Config> {
     archive

@@ -17,6 +17,18 @@
 //!                                   remote / mixed), asserting identical
 //!                                   archive hashes; writes
 //!                                   BENCH_pool_smoke.json
+//!   repro serve --listen ADDR       continuous-batching score server: admit
+//!                                   concurrent score_req frames, coalesce
+//!                                   them into lane dispatches (--max-wait-us
+//!                                   deadline), serve a searched config as
+//!                                   the default (--config ARCHIVE.json
+//!                                   [--budget B]); --synthetic needs no
+//!                                   artifacts
+//!   repro serve-bench --addr ADDR   closed-/open-loop load generator against
+//!                                   a serve process (--clients N --rps R
+//!                                   --duration S); writes BENCH_serve.json
+//!                                   (p50/p95/p99 latency, throughput, lane
+//!                                   fill, queue stats)
 //!
 //! Flags:
 //!   --preset smoke|repro|paper      search budget preset (default: repro)
@@ -59,9 +71,30 @@
 //!                                   address becomes one pool shard on the
 //!                                   same FIFO as the local workers;
 //!                                   archives identical for any topology)
-//!   --listen ADDR                   (shard-serve) bind address
-//!   --synthetic                     (shard-serve) serve the deterministic
-//!                                   synthetic workload, no artifacts needed
+//!   --listen ADDR                   (shard-serve, serve) bind address
+//!   --synthetic                     (shard-serve, serve) serve the
+//!                                   deterministic synthetic workload, no
+//!                                   artifacts needed
+//!   --config PATH                   (serve) archive JSON whose best entry
+//!                                   becomes the served default config
+//!   --budget B                      (serve) narrow --config to the best
+//!                                   entry under B average bits (±0.005)
+//!   --max-wait-us N                 (serve) batch-forming deadline: a
+//!                                   partial lane batch dispatches once its
+//!                                   oldest request has waited N µs
+//!                                   (default: 1000)
+//!   --queue-cap N                   (serve) admission-queue bound; requests
+//!                                   beyond it are rejected (default: 1024)
+//!   --conn-cap N                    (serve) simultaneous-connection cap
+//!                                   (default: 64)
+//!   --addr ADDR                     (serve-bench) server to load
+//!   --clients N                     (serve-bench) concurrent connections
+//!                                   (default: 4)
+//!   --rps R                         (serve-bench) open-loop arrival rate,
+//!                                   requests/sec across all clients
+//!                                   (default: 0 = closed loop)
+//!   --duration S                    (serve-bench) seconds of load
+//!                                   (default: 5)
 //! ```
 
 use amq::coordinator::predictor::PredictorKind;
@@ -88,6 +121,15 @@ struct Args {
     shards: Vec<String>,
     listen: Option<String>,
     synthetic: bool,
+    config: Option<String>,
+    budget: Option<f64>,
+    max_wait_us: u64,
+    queue_cap: usize,
+    conn_cap: usize,
+    addr: Option<String>,
+    clients: usize,
+    rps: f64,
+    duration: f64,
 }
 
 fn parse_args() -> Args {
@@ -108,6 +150,15 @@ fn parse_args() -> Args {
         shards: Vec::new(),
         listen: None,
         synthetic: false,
+        config: None,
+        budget: None,
+        max_wait_us: 1000,
+        queue_cap: 1024,
+        conn_cap: 64,
+        addr: None,
+        clients: 4,
+        rps: 0.0,
+        duration: 5.0,
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut i = 0;
@@ -178,6 +229,42 @@ fn parse_args() -> Args {
                 args.listen = Some(argv[i].clone());
             }
             "--synthetic" => args.synthetic = true,
+            "--config" => {
+                i += 1;
+                args.config = Some(argv[i].clone());
+            }
+            "--budget" => {
+                i += 1;
+                args.budget = Some(argv[i].parse().expect("--budget B"));
+            }
+            "--max-wait-us" => {
+                i += 1;
+                args.max_wait_us = argv[i].parse().expect("--max-wait-us N");
+            }
+            "--queue-cap" => {
+                i += 1;
+                args.queue_cap = argv[i].parse().expect("--queue-cap N");
+            }
+            "--conn-cap" => {
+                i += 1;
+                args.conn_cap = argv[i].parse().expect("--conn-cap N");
+            }
+            "--addr" => {
+                i += 1;
+                args.addr = Some(argv[i].clone());
+            }
+            "--clients" => {
+                i += 1;
+                args.clients = argv[i].parse().expect("--clients N");
+            }
+            "--rps" => {
+                i += 1;
+                args.rps = argv[i].parse().expect("--rps R");
+            }
+            "--duration" => {
+                i += 1;
+                args.duration = argv[i].parse().expect("--duration S");
+            }
             flag if flag.starts_with("--") => {
                 eprintln!("unknown flag {flag}");
                 std::process::exit(2);
@@ -291,6 +378,310 @@ fn run_shard_serve(args: &Args) -> Result<()> {
     amq::runtime::remote::serve_shard(listener, n_layers, None, move |genes| {
         amq::coordinator::proxy::mean_jsd_batch(&proxy, &batches, genes)
     })
+}
+
+/// The fixed default config a `--synthetic` serve process answers
+/// empty-genes requests with when no `--config` archive is given: 12 layers
+/// at 3 bits, inside [`amq::coordinator::synth::synth_space`]'s choices.
+fn synth_default_config() -> Vec<u16> {
+    vec![3u16; 12]
+}
+
+/// `repro serve --listen ADDR [--synthetic | --config ARCHIVE.json
+/// [--budget B]] [--lanes N] [--max-wait-us N] [--queue-cap N]
+/// [--conn-cap N]`: the continuous-batching score server.  Concurrent
+/// connections feed one admission queue; a lane batcher coalesces up to
+/// `lanes` requests per evaluator dispatch, flushing partial batches when
+/// the oldest request has waited `--max-wait-us`.  With artifacts, the
+/// evaluator is the lane-stacked scorer over the shared device bank —
+/// steady-state serving of the default config hits the slab cache and does
+/// zero host uploads.
+fn run_serve(args: &Args) -> Result<()> {
+    use amq::runtime::serve::{serve_scores, SchedulerOptions, ServeOptions};
+
+    let listen = args
+        .listen
+        .as_deref()
+        .ok_or_else(|| eyre::anyhow!("serve requires --listen ADDR"))?;
+    let listener = std::net::TcpListener::bind(listen)?;
+    eprintln!("[serve] listening on {}", listener.local_addr()?);
+
+    let served = match args.config.as_deref() {
+        Some(path) => {
+            let sample =
+                exp::common::load_served_config(std::path::Path::new(path), args.budget)?;
+            eprintln!(
+                "[serve] serving searched config from {path}: {:.3} avg bits, proxy JSD {} ({})",
+                sample.avg_bits,
+                sample.jsd,
+                match args.budget {
+                    Some(b) => format!("budget {b}"),
+                    None => "lowest JSD".into(),
+                }
+            );
+            Some(sample.config)
+        }
+        None => None,
+    };
+
+    let scheduler = SchedulerOptions {
+        // --lanes 0 = auto: resolved below once the scorer variant is known
+        // (synthetic serving defaults to 8-wide batching).
+        lanes: args.lanes,
+        max_wait: std::time::Duration::from_micros(args.max_wait_us),
+        queue_cap: args.queue_cap,
+    };
+
+    if args.synthetic {
+        let opts = ServeOptions {
+            scheduler: SchedulerOptions {
+                lanes: if args.lanes == 0 { 8 } else { args.lanes },
+                ..scheduler
+            },
+            max_conns: None,
+            live_cap: args.conn_cap,
+            default_genes: Some(served.unwrap_or_else(synth_default_config)),
+        };
+        eprintln!(
+            "[serve] synthetic workload, lanes {}, max-wait {} us, queue cap {}",
+            opts.scheduler.lanes, args.max_wait_us, args.queue_cap
+        );
+        let stats = serve_scores(listener, 0, opts, || amq::coordinator::synth::synth_chunk)?;
+        println!("[serve] {}", stats.summary());
+        return Ok(());
+    }
+
+    let artifacts = args
+        .artifacts
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(amq::artifacts_dir);
+    eyre::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts not found at {} — run `make artifacts` (or use --synthetic)",
+        artifacts.display()
+    );
+    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let registry = match args.methods.as_deref() {
+        Some(list) => Some(MethodRegistry::parse(list)?),
+        None => None,
+    };
+    let ctx = Ctx::load_with_opts(
+        &artifacts,
+        std::path::Path::new(&args.out),
+        params,
+        1,
+        registry,
+        args.score_batch,
+        args.lanes,
+        args.slab_cache_mb,
+        args.slab_gather,
+    )?;
+    let dev = ctx.device_bank()?;
+    let rt = ctx.rt.clone();
+    let batches = ctx.search_batches.clone();
+    let n_layers = ctx.assets.manifest.layers.len() as u64;
+    // Lane width follows the scorer the artifacts actually carry, so a full
+    // admission batch fills the lane slab exactly.
+    let lanes = if args.lanes == 0 {
+        ctx.rt.scorer_variant().lanes().max(1)
+    } else {
+        args.lanes
+    };
+    let opts = ServeOptions {
+        scheduler: SchedulerOptions { lanes, ..scheduler },
+        max_conns: None,
+        live_cap: args.conn_cap,
+        default_genes: served,
+    };
+    eprintln!(
+        "[serve] runtime + device bank ready ({n_layers}-layer genome, scorer {}, lanes {}, max-wait {} us)",
+        ctx.rt.scorer_variant().name(),
+        lanes,
+        args.max_wait_us
+    );
+    let stats = serve_scores(listener, n_layers, opts, move || {
+        // Built on the batcher thread: the proxy wraps the shared
+        // already-uploaded bank, so construction is zero device work.
+        move |genes: &[Vec<u16>]| {
+            let proxy = amq::coordinator::DeviceProxy::from_device_bank(&rt, dev.clone());
+            amq::coordinator::proxy::mean_jsd_batch(&proxy, &batches, genes)
+        }
+    })?;
+    println!("[serve] {}", stats.summary());
+    Ok(())
+}
+
+/// `repro serve-bench --addr ADDR [--clients N] [--rps R] [--duration S]
+/// [--out DIR]`: load a serve process and write `BENCH_serve.json`.
+///
+/// `--rps 0` (default) runs **closed-loop**: every client fires its next
+/// request the moment the previous reply lands, and latency is measured
+/// send→reply.  `--rps R > 0` runs **open-loop**: request `k` is scheduled
+/// at `k/R` seconds (round-robined across clients) and latency is measured
+/// from the *scheduled* arrival — a backlogged server accrues queueing
+/// delay instead of silently slowing the arrival process (no coordinated
+/// omission).  All requests score the server's default config (empty
+/// genes), which is the steady-state serving shape: one resident lane slab,
+/// zero host uploads after warmup.
+fn run_serve_bench(args: &Args) -> Result<()> {
+    use amq::runtime::serve::{fetch_serve_stats, LatencyHistogram, ScoreClient};
+    use std::fmt::Write as _;
+    use std::time::{Duration, Instant};
+
+    let addr = args
+        .addr
+        .as_deref()
+        .ok_or_else(|| eyre::anyhow!("serve-bench requires --addr ADDR"))?;
+    let clients = args.clients.max(1);
+    eyre::ensure!(args.duration > 0.0, "--duration must be positive");
+    let duration = Duration::from_secs_f64(args.duration);
+    let timeout = Duration::from_secs(30);
+    eprintln!(
+        "[bench] {} client(s) against {addr} for {:.1}s ({})",
+        clients,
+        args.duration,
+        if args.rps > 0.0 {
+            format!("open loop, {} rps", args.rps)
+        } else {
+            "closed loop".into()
+        }
+    );
+
+    struct ClientResult {
+        hist: LatencyHistogram,
+        requests: u64,
+        errors: u64,
+    }
+    let start = Instant::now() + Duration::from_millis(50); // common epoch
+    let results: Vec<ClientResult> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                scope.spawn(move || -> Result<ClientResult> {
+                    let mut client = ScoreClient::connect(addr, timeout)?;
+                    let mut res = ClientResult {
+                        hist: LatencyHistogram::new(),
+                        requests: 0,
+                        errors: 0,
+                    };
+                    // Wait for the common epoch so every client (and the
+                    // wall-clock denominator) starts together.
+                    let now = Instant::now();
+                    if start > now {
+                        std::thread::sleep(start - now);
+                    }
+                    let mut k = ci as u64; // global request index (open loop)
+                    loop {
+                        let now = Instant::now();
+                        let sched = if args.rps > 0.0 {
+                            let at = start + Duration::from_secs_f64(k as f64 / args.rps);
+                            if at >= start + duration {
+                                break;
+                            }
+                            if at > now {
+                                std::thread::sleep(at - now);
+                            }
+                            at
+                        } else {
+                            if now >= start + duration {
+                                break;
+                            }
+                            now.max(start)
+                        };
+                        let reply = client.score(&[])?;
+                        res.hist
+                            .record(sched.elapsed().as_micros().min(u64::MAX as u128) as u64);
+                        res.requests += 1;
+                        if reply.is_err() {
+                            res.errors += 1;
+                        }
+                        k += clients as u64;
+                    }
+                    Ok(res)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench client panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+
+    let mut hist = LatencyHistogram::new();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    for r in &results {
+        hist.merge(&r.hist);
+        requests += r.requests;
+        errors += r.errors;
+    }
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    let throughput = requests as f64 / wall;
+    let (p50, p95, p99) =
+        (hist.percentile(0.50), hist.percentile(0.95), hist.percentile(0.99));
+    println!(
+        "[bench] {requests} requests ({errors} errors) in {wall:.2}s: {throughput:.1} req/s | \
+         p50 {p50} us, p95 {p95} us, p99 {p99} us, max {} us",
+        hist.max_us()
+    );
+
+    // Server-side truth over the wire: lane fill vs queue wait, separately.
+    let server = match fetch_serve_stats(addr, timeout) {
+        Ok(st) => {
+            println!("[serve] {}", st.summary());
+            Some(st)
+        }
+        Err(e) => {
+            eprintln!("[bench] server-side serve stats unavailable ({e})");
+            None
+        }
+    };
+
+    std::fs::create_dir_all(&args.out)?;
+    let mut s = String::from("{\n");
+    let _ = write!(s, "  \"bench\": \"serve\",\n");
+    let _ = write!(s, "  \"addr\": \"{addr}\",\n");
+    let _ = write!(s, "  \"clients\": {clients},\n");
+    let _ = write!(s, "  \"rps\": {},\n", args.rps);
+    let _ = write!(s, "  \"open_loop\": {},\n", args.rps > 0.0);
+    let _ = write!(s, "  \"duration_seconds\": {:.3},\n", args.duration);
+    let _ = write!(s, "  \"wall_seconds\": {wall:.3},\n");
+    let _ = write!(s, "  \"requests\": {requests},\n");
+    let _ = write!(s, "  \"errors\": {errors},\n");
+    let _ = write!(s, "  \"throughput_rps\": {throughput:.2},\n");
+    let _ = write!(
+        s,
+        "  \"latency_us\": {{\"p50\": {p50}, \"p95\": {p95}, \"p99\": {p99}, \
+         \"mean\": {:.1}, \"max\": {}}}",
+        hist.mean_us(),
+        hist.max_us()
+    );
+    if let Some(st) = server {
+        let _ = write!(
+            s,
+            ",\n  \"server\": {{\"requests\": {}, \"rejected\": {}, \"dispatches\": {}, \
+             \"full_dispatches\": {}, \"deadline_dispatches\": {}, \
+             \"drain_dispatches\": {}, \"lanes\": {}, \"lane_fill_fraction\": {:.4}, \
+             \"queue\": {{\"mean_wait_us\": {:.1}, \"mean_depth\": {:.2}, \
+             \"max_depth\": {}}}}}",
+            st.requests,
+            st.rejected,
+            st.dispatches,
+            st.full_dispatches,
+            st.deadline_dispatches,
+            st.drain_dispatches(),
+            st.lanes,
+            st.lane_fill_fraction(),
+            st.mean_wait_us(),
+            st.mean_depth(),
+            st.depth_max,
+        );
+    }
+    s.push_str("\n}\n");
+    let path = std::path::Path::new(&args.out).join("BENCH_serve.json");
+    std::fs::write(&path, s)?;
+    eprintln!("[report] wrote {}", path.display());
+    Ok(())
 }
 
 /// `repro pool-smoke --shards a:p,b:p [--seed N] [--out DIR]`: the
@@ -747,7 +1138,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require]");
+        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|serve|serve-bench|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require] [--config ARCHIVE.json] [--budget B] [--max-wait-us N] [--queue-cap N] [--conn-cap N] [--addr ADDR] [--clients N] [--rps R] [--duration S]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -768,6 +1159,15 @@ fn main() -> Result<()> {
     }
     if args.cmd == "pool-smoke" {
         return run_pool_smoke(&args);
+    }
+    // The serving pair also runs before the artifacts gate: serve handles
+    // its own artifacts (or none, with --synthetic) and serve-bench only
+    // ever talks to a server over TCP.
+    if args.cmd == "serve" {
+        return run_serve(&args);
+    }
+    if args.cmd == "serve-bench" {
+        return run_serve_bench(&args);
     }
 
     let artifacts = args

@@ -27,9 +27,11 @@
 //!  * python never runs here.
 
 pub mod remote;
+pub mod serve;
 mod service;
 pub mod wire;
 
+pub use serve::{ContinuousBatcher, SchedulerOptions, SchedulerStats};
 pub use service::{EvalService, ServiceStats, ShardFlow, ShardStats};
 
 use crate::data::Manifest;

@@ -16,11 +16,26 @@
 
 use std::io::{self, Read};
 use std::net::{TcpListener, TcpStream};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::wire::{read_frame, write_frame, WireMsg};
 use super::ShardFlow;
 use crate::coordinator::Config;
+
+/// Default per-chunk read timeout for a [`RemoteShard`] (the *reply* axis —
+/// distinct from the connect-time [`RetryPolicy`]).  A hung server that
+/// accepted the chunk but never answers must not stall a feeder forever:
+/// after this long without a reply byte, the call fails as a transport
+/// error, the feeder retires, and the pool requeues the chunk onto its
+/// surviving shards.  Generous by design — a real artifact-backed chunk is
+/// seconds, not minutes.
+pub const DEFAULT_CHUNK_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Default cap on simultaneously-open connections in [`serve_shard`]'s
+/// concurrent accept loop.  Accepts beyond the cap wait for a slot instead
+/// of spawning unboundedly.
+pub const DEFAULT_LIVE_CONNS: usize = 64;
 
 /// Bounded-backoff reconnect policy for a remote shard.
 #[derive(Clone, Copy, Debug)]
@@ -61,13 +76,30 @@ impl RetryPolicy {
 pub struct RemoteShard {
     addr: String,
     policy: RetryPolicy,
+    /// Per-chunk reply deadline (`None` = wait forever).  Distinct from the
+    /// connect-time `policy`: this bounds how long an *accepted* chunk may
+    /// go unanswered before the call fails as a transport error.
+    chunk_timeout: Option<Duration>,
     stream: Option<TcpStream>,
     next_id: u64,
 }
 
 impl RemoteShard {
     pub fn new(addr: impl Into<String>, policy: RetryPolicy) -> Self {
-        RemoteShard { addr: addr.into(), policy, stream: None, next_id: 0 }
+        RemoteShard {
+            addr: addr.into(),
+            policy,
+            chunk_timeout: Some(DEFAULT_CHUNK_TIMEOUT),
+            stream: None,
+            next_id: 0,
+        }
+    }
+
+    /// Override the per-chunk reply deadline (`None` = wait forever).
+    /// Applies from the next (re)connect — call before the first `call`.
+    pub fn with_chunk_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.chunk_timeout = timeout;
+        self
     }
 
     pub fn addr(&self) -> &str {
@@ -89,6 +121,11 @@ impl RemoteShard {
             match TcpStream::connect(&self.addr) {
                 Ok(stream) => {
                     let _ = stream.set_nodelay(true);
+                    // The reply deadline covers the hello too: a server that
+                    // accepts but never greets is as hung as one that never
+                    // scores.  (On timeout the read surfaces WouldBlock /
+                    // TimedOut — both are transport errors here.)
+                    let _ = stream.set_read_timeout(self.chunk_timeout);
                     let mut stream = stream;
                     match read_hello(&mut stream) {
                         Ok(_n_layers) => {
@@ -226,10 +263,10 @@ pub struct ShardServerStats {
 /// Probe `addr` for server-side stats on a dedicated, freshly opened
 /// connection, then drop it.
 ///
-/// Probe only when the shard is expected to be idle — after the search's
-/// feeder connections have closed.  The server answers connections
-/// sequentially, so a probe racing an open search stream just waits until
-/// `timeout` and reports the shard as unavailable rather than hanging.
+/// The server's accept loop is concurrent and its stats path never takes
+/// the eval lock, so the probe answers even *mid-search* — while feeder
+/// connections are open and a chunk is mid-eval.  `timeout` still bounds
+/// the wait (a wedged server reports as unavailable rather than hanging).
 /// Pre-stats servers reject the probe frame and drop the connection, which
 /// also surfaces here as an error — callers should degrade to "server-side
 /// stats unavailable", not treat it as a shard failure.
@@ -264,7 +301,7 @@ pub fn fetch_shard_stats(addr: &str, timeout: Duration) -> io::Result<ShardServe
     }
 }
 
-fn read_hello<R: Read>(r: &mut R) -> io::Result<u64> {
+pub(crate) fn read_hello<R: Read>(r: &mut R) -> io::Result<u64> {
     let msg = read_frame(r)
         .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
         .ok_or_else(|| {
@@ -290,7 +327,19 @@ pub fn remote_eval_flow(
     addr: String,
     policy: RetryPolicy,
 ) -> Box<dyn FnMut(Vec<Config>) -> ShardFlow<crate::Result<Vec<f32>>>> {
-    let mut shard = RemoteShard::new(addr, policy);
+    remote_eval_flow_with_timeout(addr, policy, Some(DEFAULT_CHUNK_TIMEOUT))
+}
+
+/// [`remote_eval_flow`] with an explicit per-chunk reply deadline (`None` =
+/// wait forever — the pre-timeout behaviour).  A chunk that times out is a
+/// transport failure: the feeder retires and the pool requeues the chunk,
+/// so one hung server costs throughput, never results.
+pub fn remote_eval_flow_with_timeout(
+    addr: String,
+    policy: RetryPolicy,
+    chunk_timeout: Option<Duration>,
+) -> Box<dyn FnMut(Vec<Config>) -> ShardFlow<crate::Result<Vec<f32>>>> {
+    let mut shard = RemoteShard::new(addr, policy).with_chunk_timeout(chunk_timeout);
     Box::new(move |chunk: Vec<Config>| match shard.call(&chunk) {
         Ok(Ok(scores)) => ShardFlow::Reply(Ok(scores)),
         Ok(Err(message)) => ShardFlow::Reply(Err(eyre::anyhow!(
@@ -303,58 +352,102 @@ pub fn remote_eval_flow(
     })
 }
 
-/// Serve chunk frames on `listener`, one connection at a time, until
-/// `max_conns` connections have come and gone (`None` = forever).  `eval`
-/// scores a chunk of gene vectors; its error text is sent back verbatim as
-/// an `Error` frame.  This is the loop behind `repro shard-serve`.
+/// Serve chunk frames on `listener` until `max_conns` connections have been
+/// accepted (`None` = forever).  `eval` scores a chunk of gene vectors; its
+/// error text is sent back verbatim as an `Error` frame.  This is the loop
+/// behind `repro shard-serve`.
+///
+/// The accept loop is *concurrent*: each connection gets its own handler
+/// thread (capped at [`DEFAULT_LIVE_CONNS`] simultaneous connections —
+/// accepts beyond the cap wait for a slot).  Evaluation itself stays
+/// serialized behind a mutex — one shard process backs one device — but the
+/// stats path never touches the eval lock, so a `fetch_shard_stats` probe
+/// answers *while a feeder's chunk is mid-eval*: live mid-search stats
+/// polling, not just post-run.  With `max_conns = Some(n)` the loop stops
+/// accepting after `n` connections and joins every handler before
+/// returning.
 pub fn serve_shard<F>(
     listener: TcpListener,
     n_layers: u64,
     max_conns: Option<usize>,
-    mut eval: F,
+    eval: F,
 ) -> crate::Result<()>
 where
-    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
 {
-    let mut served = 0usize;
-    let mut stats = ServeStats::default();
-    for conn in listener.incoming() {
-        let stream = match conn {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("[shard] accept failed: {e}");
-                continue;
+    serve_shard_capped(listener, n_layers, max_conns, DEFAULT_LIVE_CONNS, eval)
+}
+
+/// [`serve_shard`] with an explicit cap on simultaneously-open connections.
+pub fn serve_shard_capped<F>(
+    listener: TcpListener,
+    n_layers: u64,
+    max_conns: Option<usize>,
+    live_cap: usize,
+    eval: F,
+) -> crate::Result<()>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
+{
+    let live_cap = live_cap.max(1);
+    let eval = Mutex::new(eval);
+    let stats = Mutex::new(ServeStats::default());
+    // (live handler count, slot-freed signal) — the accept loop waits on
+    // this pair instead of spawning past the cap.
+    let live = (Mutex::new(0usize), Condvar::new());
+    std::thread::scope(|scope| {
+        let mut accepted = 0usize;
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[shard] accept failed: {e}");
+                    continue;
+                }
+            };
+            {
+                let mut n = live.0.lock().unwrap();
+                while *n >= live_cap {
+                    n = live.1.wait(n).unwrap();
+                }
+                *n += 1;
             }
-        };
-        let peer = stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "<unknown>".into());
-        eprintln!("[shard] connection from {peer}");
-        stats.conns += 1;
-        if let Err(e) = serve_conn(stream, n_layers, &mut eval, &mut stats) {
-            eprintln!("[shard] connection {peer} ended with error: {e}");
-        } else {
-            eprintln!("[shard] connection {peer} closed");
-        }
-        served += 1;
-        if let Some(max) = max_conns {
-            if served >= max {
-                break;
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".into());
+            eprintln!("[shard] connection from {peer}");
+            stats.lock().unwrap().conns += 1;
+            let (eval, stats, live) = (&eval, &stats, &live);
+            scope.spawn(move || {
+                if let Err(e) = serve_conn(stream, n_layers, eval, stats) {
+                    eprintln!("[shard] connection {peer} ended with error: {e}");
+                } else {
+                    eprintln!("[shard] connection {peer} closed");
+                }
+                *live.0.lock().unwrap() -= 1;
+                live.1.notify_one();
+            });
+            accepted += 1;
+            if let Some(max) = max_conns {
+                if accepted >= max {
+                    break;
+                }
             }
         }
-    }
+        // scope exit joins every in-flight handler
+    });
     Ok(())
 }
 
 fn serve_conn<F>(
     stream: TcpStream,
     n_layers: u64,
-    eval: &mut F,
-    stats: &mut ServeStats,
+    eval: &Mutex<F>,
+    stats: &Mutex<ServeStats>,
 ) -> crate::Result<()>
 where
-    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>>,
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
 {
     let _ = stream.set_nodelay(true);
     let mut stream = stream;
@@ -366,9 +459,17 @@ where
         };
         let reply = match msg {
             WireMsg::Chunk { id, genes } => {
-                let t0 = Instant::now();
-                let res = eval(&genes);
-                stats.busy += t0.elapsed();
+                // Serialize evals across connections (one device behind the
+                // shard); busy time is measured inside the lock so it stays
+                // pure eval wall-clock, not lock contention.
+                let (res, elapsed) = {
+                    let mut eval = eval.lock().unwrap();
+                    let t0 = Instant::now();
+                    let res = eval(&genes);
+                    (res, t0.elapsed())
+                };
+                let mut stats = stats.lock().unwrap();
+                stats.busy += elapsed;
                 match res {
                     Ok(scores) => {
                         if scores.len() != genes.len() {
@@ -388,12 +489,17 @@ where
                     Err(e) => WireMsg::Error { id, message: e.to_string() },
                 }
             }
-            WireMsg::StatsReq { id } => WireMsg::Stats {
-                id,
-                completed: stats.completed,
-                busy_us: stats.busy.as_micros() as u64,
-                conns: stats.conns,
-            },
+            // Stats never wait on the eval lock: a probe answers while
+            // another connection's chunk is mid-eval.
+            WireMsg::StatsReq { id } => {
+                let stats = stats.lock().unwrap();
+                WireMsg::Stats {
+                    id,
+                    completed: stats.completed,
+                    busy_us: stats.busy.as_micros() as u64,
+                    conns: stats.conns,
+                }
+            }
             other => {
                 eyre::bail!("unexpected client frame {other:?}");
             }
@@ -513,6 +619,85 @@ mod tests {
             stats.busy_us >= 4_000,
             "two >=2ms evals should report >=4000us busy, got {}",
             stats.busy_us
+        );
+    }
+
+    #[test]
+    fn stats_probe_interleaves_with_live_eval() {
+        // Satellite of the concurrent accept loop: a stats probe must be
+        // answered while another connection's chunk is *mid-eval* — the
+        // live mid-search polling the sequential server could never do.
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let chans = Mutex::new((entered_tx, gate_rx));
+        let addr = spawn_test_server(0, Some(2), move |genes: &[Vec<u16>]| {
+            // Announce we're inside the eval, then block until the main
+            // thread releases us — the probe below runs while we are parked
+            // here, inside the eval closure.
+            let chans = chans.lock().unwrap();
+            chans.0.send(()).ok();
+            chans.1.recv().ok();
+            double(genes)
+        })
+        .unwrap();
+
+        let addr2 = addr.clone();
+        let feeder = std::thread::spawn(move || {
+            let mut shard = RemoteShard::new(addr2, RetryPolicy::default());
+            shard.call(&[vec![3u16]])
+        });
+        // Wait until the feeder's chunk is provably mid-eval, then probe on
+        // a second connection.  With a sequential accept loop this probe
+        // would hang until the feeder finished; concurrently it answers
+        // while the eval is still blocked.
+        entered_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let stats = fetch_shard_stats(&addr, Duration::from_secs(5))
+            .expect("stats probe must interleave with a live eval");
+        assert_eq!(stats.completed, 0, "probed mid-eval, before any Scores reply");
+        assert_eq!(stats.conns, 2, "feeder + probe both accepted");
+
+        gate_tx.send(()).unwrap();
+        let scores = feeder.join().unwrap().unwrap().unwrap();
+        assert_eq!(scores, vec![6.0]);
+    }
+
+    #[test]
+    fn hung_server_chunk_times_out_and_flow_retires() {
+        // A server that accepts, greets, reads the chunk and then never
+        // replies: without a chunk timeout this stalls a feeder forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                let _ = write_frame(&mut stream, &WireMsg::Hello { n_layers: 0 });
+                let _ = read_frame(&mut stream); // swallow the chunk...
+                std::thread::sleep(Duration::from_secs(600)); // ...and hang
+            }
+        });
+        let fast = RetryPolicy {
+            attempts: 1,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(1),
+        };
+        let t0 = Instant::now();
+        let mut flow = remote_eval_flow_with_timeout(
+            addr,
+            fast,
+            Some(Duration::from_millis(50)),
+        );
+        match flow(vec![vec![1u16]]) {
+            ShardFlow::Retire { reason } => {
+                assert!(reason.contains("transport"), "got: {reason}");
+            }
+            ShardFlow::Reply(_) => panic!("expected retire on hung server"),
+        }
+        // Bounded by ~2 timeout windows (one reconnect-and-resend cycle),
+        // not the server's 600s nap.
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out in {:?}, should be ~100ms",
+            t0.elapsed()
         );
     }
 

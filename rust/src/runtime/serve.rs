@@ -1,0 +1,860 @@
+//! Continuous microbatching for the serving path: admit single-candidate
+//! scoring requests from many concurrent clients, coalesce them into
+//! lane-sized dispatches, and complete per-request reply channels.
+//!
+//! The scheduler is the serving-side mirror of the search pool's microbatch
+//! scheduler, tuned for *latency under load* instead of search throughput:
+//!
+//!  * requests enter an **admission queue** (bounded — beyond
+//!    [`SchedulerOptions::queue_cap`] a request is rejected immediately
+//!    rather than growing the tail latency without bound);
+//!  * a **lane batcher** thread coalesces up to `lanes` queued requests
+//!    into one evaluator dispatch.  It dispatches *early* when the oldest
+//!    queued request has waited [`SchedulerOptions::max_wait`] — a partial
+//!    slab at the deadline beats a full slab too late — and *immediately*
+//!    when the slab fills before the deadline;
+//!  * each request carries its own **reply channel**; the dispatch fans the
+//!    per-candidate scores (bit-exact — evaluation is a pure per-candidate
+//!    function, so lane grouping can never change a score) back out to the
+//!    callers that submitted them.
+//!
+//! The evaluator closure is the same shape the shard server uses
+//! (`FnMut(&[Config]) -> Result<Vec<f32>>`), so a `repro serve` process
+//! drives the existing lane-stacked scorer / `SlabCache` / device-gather
+//! path: a steady-state serving workload over a fixed set of configs does
+//! **zero host slab uploads** after warmup.
+//!
+//! On top of the scheduler this module carries the TCP server behind
+//! `repro serve` (`score_req`/`score` frames — see [`crate::runtime::wire`]),
+//! the matching [`ScoreClient`], the `serve_stats` probe, and the
+//! fixed-bucket [`LatencyHistogram`] the `repro serve-bench` load generator
+//! records into (no external histogram dependency; power-of-two buckets).
+//!
+//! Shutdown drains: queued requests are dispatched (without waiting out the
+//! deadline) before the batcher thread exits, so no accepted request is
+//! ever dropped with its reply channel dangling.
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::remote::read_hello;
+use super::wire::{read_frame, write_frame, WireMsg};
+use crate::coordinator::Config;
+
+/// A scoring reply: the candidate's score, or the evaluator's (or
+/// scheduler's) error text.  `String` rather than `eyre::Report` so one
+/// batch-level failure can fan out to every request in the batch.
+pub type ScoreResult = std::result::Result<f32, String>;
+
+/// Tuning knobs for the [`ContinuousBatcher`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerOptions {
+    /// Dispatch width: how many queued requests one evaluator call may
+    /// carry.  Match the scorer's lane count so a full batch fills the lane
+    /// slab exactly (minimum 1 — per-candidate serving).
+    pub lanes: usize,
+    /// Deadline measured from the *oldest* queued request's admission: when
+    /// it expires, whatever is queued dispatches as a partial batch.
+    pub max_wait: Duration,
+    /// Admission-queue bound; requests beyond it are rejected immediately
+    /// (the reply channel completes with an error, the wire layer answers
+    /// an `Error` frame).  Minimum 1.
+    pub queue_cap: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions {
+            lanes: 8,
+            max_wait: Duration::from_micros(1000),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Lifetime counters for one [`ContinuousBatcher`].
+///
+/// Lane fill and queue wait are deliberately *separate* measurements: a low
+/// [`lane_fill_fraction`](Self::lane_fill_fraction) with a low mean wait
+/// means the deadline is doing its job under light load (under-filled
+/// dispatches are latency-driven), while a high wait with high fill points
+/// at the evaluator itself (e.g. cold slab-cache misses) — conflating the
+/// two hides which knob to turn.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedulerStats {
+    /// Requests admitted into the queue.
+    pub requests: u64,
+    /// Requests rejected at admission (queue at `queue_cap`, or submitted
+    /// after shutdown).  Not counted in `requests`.
+    pub rejected: u64,
+    /// Evaluator dispatches.
+    pub dispatches: u64,
+    /// Dispatches that left with a full `lanes`-wide batch.
+    pub full_dispatches: u64,
+    /// Partial dispatches flushed because the oldest request hit
+    /// `max_wait`.
+    pub deadline_dispatches: u64,
+    /// Dispatch width the scheduler was configured with.
+    pub lanes: u64,
+    /// Requests dispatched (slots actually used across all dispatches).
+    pub batched: u64,
+    /// Cumulative admission-queue wait across dispatched requests, µs.
+    pub wait_us: u64,
+    /// Queue depth sampled at each dispatch, summed (mean =
+    /// `depth_sum / dispatches`).
+    pub depth_sum: u64,
+    /// High-water queue depth at dispatch time.
+    pub depth_max: u64,
+}
+
+impl SchedulerStats {
+    /// Shutdown-drain dispatches (neither full nor deadline-flushed).
+    pub fn drain_dispatches(&self) -> u64 {
+        self.dispatches - self.full_dispatches - self.deadline_dispatches
+    }
+
+    /// Fraction of dispatched lane slots that carried a real request
+    /// (1.0 = every dispatch was full).
+    pub fn lane_fill_fraction(&self) -> f64 {
+        if self.dispatches == 0 || self.lanes == 0 {
+            return 0.0;
+        }
+        self.batched as f64 / (self.dispatches * self.lanes) as f64
+    }
+
+    /// Mean admission-queue wait per dispatched request, µs.
+    pub fn mean_wait_us(&self) -> f64 {
+        if self.batched == 0 {
+            return 0.0;
+        }
+        self.wait_us as f64 / self.batched as f64
+    }
+
+    /// Mean queue depth observed at dispatch time.
+    pub fn mean_depth(&self) -> f64 {
+        if self.dispatches == 0 {
+            return 0.0;
+        }
+        self.depth_sum as f64 / self.dispatches as f64
+    }
+
+    /// One-line human summary (the `[serve]` stdout line): dispatch mix and
+    /// lane fill on one side, queue wait and depth on the other.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests ({} rejected) | {} dispatches ({} full, {} deadline, {} drain) | lane fill {:.3} | mean queue wait {:.1} us (mean depth {:.1}, max {})",
+            self.requests,
+            self.rejected,
+            self.dispatches,
+            self.full_dispatches,
+            self.deadline_dispatches,
+            self.drain_dispatches(),
+            self.lane_fill_fraction(),
+            self.mean_wait_us(),
+            self.mean_depth(),
+            self.depth_max,
+        )
+    }
+}
+
+/// One queued request.
+struct Job {
+    genes: Config,
+    enqueued: Instant,
+    reply: mpsc::Sender<ScoreResult>,
+}
+
+/// Queue state behind the admission mutex.
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    /// Signalled on admission and on shutdown; the batcher waits on it with
+    /// the batch-forming deadline as the timeout.
+    cond: Condvar,
+    stats: Mutex<SchedulerStats>,
+}
+
+/// Why a batch left the queue.
+enum DispatchKind {
+    Full,
+    Deadline,
+    Drain,
+}
+
+/// The continuous microbatching scheduler.  Construct with
+/// [`ContinuousBatcher::spawn`]; submit from any thread; drop (or call
+/// [`shutdown`](Self::shutdown)) to drain and join the batcher thread.
+pub struct ContinuousBatcher {
+    shared: Arc<Shared>,
+    opts: SchedulerOptions,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ContinuousBatcher {
+    /// Spawn the batcher thread.  `builder` runs *on that thread* and
+    /// constructs the evaluator — the same pattern as the search pool's
+    /// shards, so non-`Send` evaluator state (a `DeviceProxy` borrowing the
+    /// runtime through captured `Arc`s) lives where it is used.
+    pub fn spawn<B, F>(opts: SchedulerOptions, builder: B) -> ContinuousBatcher
+    where
+        B: FnOnce() -> F + Send + 'static,
+        F: FnMut(&[Config]) -> crate::Result<Vec<f32>>,
+    {
+        let opts = SchedulerOptions {
+            lanes: opts.lanes.max(1),
+            max_wait: opts.max_wait,
+            queue_cap: opts.queue_cap.max(1),
+        };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            cond: Condvar::new(),
+            stats: Mutex::new(SchedulerStats {
+                lanes: opts.lanes as u64,
+                ..SchedulerStats::default()
+            }),
+        });
+        let worker_shared = shared.clone();
+        let worker = std::thread::spawn(move || {
+            let mut eval = builder();
+            batcher_loop(&worker_shared, opts, &mut eval);
+        });
+        ContinuousBatcher { shared, opts, worker: Some(worker) }
+    }
+
+    /// The options the scheduler is running with (normalized: `lanes` and
+    /// `queue_cap` floored at 1).
+    pub fn options(&self) -> SchedulerOptions {
+        self.opts
+    }
+
+    /// Submit one candidate; returns the reply channel immediately.  A
+    /// rejected request (queue full / shutdown) still gets a channel — it
+    /// completes with `Err` right away, so callers have one wait path.
+    pub fn submit(&self, genes: Config) -> mpsc::Receiver<ScoreResult> {
+        let (tx, rx) = mpsc::channel();
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.shutdown {
+            drop(q);
+            self.shared.stats.lock().unwrap().rejected += 1;
+            let _ = tx.send(Err("scheduler is shut down".into()));
+            return rx;
+        }
+        if q.jobs.len() >= self.opts.queue_cap {
+            drop(q);
+            self.shared.stats.lock().unwrap().rejected += 1;
+            let _ = tx.send(Err(format!(
+                "admission queue full ({} queued)",
+                self.opts.queue_cap
+            )));
+            return rx;
+        }
+        // Count the admission while still holding the queue lock (lock
+        // order is always queue → stats): a concurrent stats probe can
+        // never observe `batched > requests`.
+        self.shared.stats.lock().unwrap().requests += 1;
+        q.jobs.push_back(Job { genes, enqueued: Instant::now(), reply: tx });
+        drop(q);
+        self.shared.cond.notify_all();
+        rx
+    }
+
+    /// Submit and block for the reply.
+    pub fn score(&self, genes: Config) -> ScoreResult {
+        match self.submit(genes).recv() {
+            Ok(res) => res,
+            Err(_) => Err("scheduler worker died before replying".into()),
+        }
+    }
+
+    /// Snapshot the lifetime counters.
+    pub fn stats(&self) -> SchedulerStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Stop admitting, drain every queued request (dispatched immediately,
+    /// no deadline wait), and join the batcher thread.  Idempotent; also
+    /// runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for ContinuousBatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batcher_loop<F>(shared: &Shared, opts: SchedulerOptions, eval: &mut F)
+where
+    F: FnMut(&[Config]) -> crate::Result<Vec<f32>>,
+{
+    loop {
+        let mut q = shared.queue.lock().unwrap();
+        // Sleep until there is something to batch (or we're done).
+        loop {
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.shutdown {
+                return;
+            }
+            q = shared.cond.wait(q).unwrap();
+        }
+        // Batch-forming window: the oldest request's admission anchors the
+        // deadline, so the worst-case queue wait is max_wait + one eval.
+        let deadline = q.jobs.front().expect("non-empty queue").enqueued + opts.max_wait;
+        let kind = loop {
+            if q.jobs.len() >= opts.lanes {
+                break DispatchKind::Full;
+            }
+            if q.shutdown {
+                break DispatchKind::Drain;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break DispatchKind::Deadline;
+            }
+            let (qq, _timeout) = shared.cond.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+        };
+        let depth = q.jobs.len();
+        let take = depth.min(opts.lanes);
+        let batch: Vec<Job> = q.jobs.drain(..take).collect();
+        drop(q);
+
+        let now = Instant::now();
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.dispatches += 1;
+            match kind {
+                DispatchKind::Full => stats.full_dispatches += 1,
+                DispatchKind::Deadline => stats.deadline_dispatches += 1,
+                DispatchKind::Drain => {}
+            }
+            stats.batched += batch.len() as u64;
+            stats.depth_sum += depth as u64;
+            stats.depth_max = stats.depth_max.max(depth as u64);
+            for job in &batch {
+                stats.wait_us +=
+                    now.saturating_duration_since(job.enqueued).as_micros() as u64;
+            }
+        }
+
+        let genes: Vec<Config> = batch.iter().map(|j| j.genes.clone()).collect();
+        match eval(&genes) {
+            Ok(scores) if scores.len() == batch.len() => {
+                for (job, score) in batch.into_iter().zip(scores) {
+                    let _ = job.reply.send(Ok(score));
+                }
+            }
+            Ok(scores) => {
+                let msg = format!(
+                    "evaluator returned {} scores for {} candidates",
+                    scores.len(),
+                    batch.len()
+                );
+                for job in batch {
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for job in batch {
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Options for [`serve_scores`], the TCP loop behind `repro serve`.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Scheduler knobs (`--lanes`, `--max-wait-us`, queue cap).
+    pub scheduler: SchedulerOptions,
+    /// Total connections to accept before returning (`None` = forever).
+    pub max_conns: Option<usize>,
+    /// Cap on simultaneously-open connections.
+    pub live_cap: usize,
+    /// The default candidate, served when a `score_req` carries empty
+    /// genes — the searched archive entry a `repro serve` process was
+    /// launched with.  `None` makes empty-genes requests an error.
+    pub default_genes: Option<Config>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            scheduler: SchedulerOptions::default(),
+            max_conns: None,
+            live_cap: super::remote::DEFAULT_LIVE_CONNS,
+            default_genes: None,
+        }
+    }
+}
+
+/// Serve `score_req` frames on `listener` through a [`ContinuousBatcher`]
+/// until `opts.max_conns` connections have been accepted (`None` =
+/// forever).  Thread-per-connection (capped at `opts.live_cap`), all
+/// connections feeding the one shared admission queue — which is the whole
+/// point: concurrent clients are what fills lanes.  `builder` constructs
+/// the evaluator on the batcher thread (see [`ContinuousBatcher::spawn`]).
+///
+/// Protocol per connection: `Hello { n_layers }` greeting, then any number
+/// of `ScoreReq { id, genes }` → `Score { id, score }` / `Error { id,
+/// message }` exchanges; `ServeStatsReq` answers the scheduler's counters
+/// without touching the admission queue.  On return, every accepted
+/// request has been answered and the batcher has drained.
+pub fn serve_scores<B, F>(
+    listener: TcpListener,
+    n_layers: u64,
+    opts: ServeOptions,
+    builder: B,
+) -> crate::Result<SchedulerStats>
+where
+    B: FnOnce() -> F + Send + 'static,
+    F: FnMut(&[Config]) -> crate::Result<Vec<f32>>,
+{
+    let live_cap = opts.live_cap.max(1);
+    let batcher = ContinuousBatcher::spawn(opts.scheduler, builder);
+    let default_genes = opts.default_genes.clone();
+    let live = (Mutex::new(0usize), Condvar::new());
+    std::thread::scope(|scope| {
+        let mut accepted = 0usize;
+        for conn in listener.incoming() {
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[serve] accept failed: {e}");
+                    continue;
+                }
+            };
+            {
+                let mut n = live.0.lock().unwrap();
+                while *n >= live_cap {
+                    n = live.1.wait(n).unwrap();
+                }
+                *n += 1;
+            }
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".into());
+            let (batcher, live, default_genes) = (&batcher, &live, &default_genes);
+            scope.spawn(move || {
+                if let Err(e) =
+                    serve_score_conn(stream, n_layers, batcher, default_genes.as_ref())
+                {
+                    eprintln!("[serve] connection {peer} ended with error: {e}");
+                }
+                eprintln!("[serve] {}", batcher.stats().summary());
+                *live.0.lock().unwrap() -= 1;
+                live.1.notify_one();
+            });
+            accepted += 1;
+            if let Some(max) = opts.max_conns {
+                if accepted >= max {
+                    break;
+                }
+            }
+        }
+        // scope exit joins every connection handler; the batcher then
+        // drains and joins on drop below
+    });
+    let mut batcher = batcher;
+    batcher.shutdown();
+    Ok(batcher.stats())
+}
+
+fn serve_score_conn(
+    stream: TcpStream,
+    n_layers: u64,
+    batcher: &ContinuousBatcher,
+    default_genes: Option<&Config>,
+) -> crate::Result<()> {
+    let _ = stream.set_nodelay(true);
+    let mut stream = stream;
+    write_frame(&mut stream, &WireMsg::Hello { n_layers })?;
+    loop {
+        let msg = match read_frame(&mut stream)? {
+            None => return Ok(()), // clean EOF: client hung up
+            Some(m) => m,
+        };
+        let reply = match msg {
+            WireMsg::ScoreReq { id, genes } => {
+                let genes = if genes.is_empty() {
+                    match default_genes {
+                        Some(d) => d.clone(),
+                        None => {
+                            write_frame(
+                                &mut stream,
+                                &WireMsg::Error {
+                                    id,
+                                    message: "empty genes and no default config served \
+                                              (launch with --config)"
+                                        .into(),
+                                },
+                            )?;
+                            continue;
+                        }
+                    }
+                } else {
+                    genes
+                };
+                match batcher.score(genes) {
+                    Ok(score) => WireMsg::Score { id, score },
+                    Err(message) => WireMsg::Error { id, message },
+                }
+            }
+            WireMsg::ServeStatsReq { id } => {
+                let s = batcher.stats();
+                WireMsg::ServeStats {
+                    id,
+                    requests: s.requests,
+                    rejected: s.rejected,
+                    dispatches: s.dispatches,
+                    full: s.full_dispatches,
+                    deadline: s.deadline_dispatches,
+                    lanes: s.lanes,
+                    batched: s.batched,
+                    wait_us: s.wait_us,
+                    depth_sum: s.depth_sum,
+                    depth_max: s.depth_max,
+                }
+            }
+            other => {
+                eyre::bail!("unexpected client frame {other:?}");
+            }
+        };
+        write_frame(&mut stream, &reply)?;
+    }
+}
+
+/// Client half of one serve connection: submit single-candidate scoring
+/// requests and read bit-exact score replies.  One outstanding request per
+/// connection — concurrency comes from opening more connections (which is
+/// what `repro serve-bench --clients N` does).
+pub struct ScoreClient {
+    stream: TcpStream,
+    next_id: u64,
+    n_layers: u64,
+}
+
+impl ScoreClient {
+    /// Connect, consume the server's `Hello`, apply `timeout` to reads and
+    /// writes.
+    pub fn connect(addr: &str, timeout: Duration) -> io::Result<ScoreClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        let mut stream = stream;
+        let n_layers = read_hello(&mut stream)?;
+        Ok(ScoreClient { stream, next_id: 0, n_layers })
+    }
+
+    /// Genome length announced by the server (0 = any).
+    pub fn n_layers(&self) -> u64 {
+        self.n_layers
+    }
+
+    /// Score one candidate (empty `genes` = the server's default config).
+    /// Outer error = transport; inner = the server's eval/admission error.
+    pub fn score(&mut self, genes: &[u16]) -> io::Result<ScoreResult> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(&mut self.stream, &WireMsg::ScoreReq { id, genes: genes.to_vec() })?;
+        let reply = read_frame(&mut self.stream)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "server closed the connection mid-call",
+                )
+            })?;
+        match reply {
+            WireMsg::Score { id: rid, score } if rid == id => Ok(Ok(score)),
+            WireMsg::Error { id: rid, message } if rid == id => Ok(Err(message)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected reply {other:?} to score request {id}"),
+            )),
+        }
+    }
+}
+
+/// Probe `addr` for the serve scheduler's counters on a dedicated
+/// connection (the serving mirror of
+/// [`fetch_shard_stats`](super::remote::fetch_shard_stats)).
+pub fn fetch_serve_stats(addr: &str, timeout: Duration) -> io::Result<SchedulerStats> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut stream = stream;
+    read_hello(&mut stream)?;
+    write_frame(&mut stream, &WireMsg::ServeStatsReq { id: 0 })?;
+    let reply = read_frame(&mut stream)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection on serve-stats probe",
+            )
+        })?;
+    match reply {
+        WireMsg::ServeStats {
+            id: 0,
+            requests,
+            rejected,
+            dispatches,
+            full,
+            deadline,
+            lanes,
+            batched,
+            wait_us,
+            depth_sum,
+            depth_max,
+        } => Ok(SchedulerStats {
+            requests,
+            rejected,
+            dispatches,
+            full_dispatches: full,
+            deadline_dispatches: deadline,
+            lanes,
+            batched,
+            wait_us,
+            depth_sum,
+            depth_max,
+        }),
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unexpected serve-stats reply {other:?}"),
+        )),
+    }
+}
+
+/// Number of buckets in a [`LatencyHistogram`]: bucket `i` holds samples in
+/// `[2^(i-1), 2^i)` µs (bucket 0 holds `0..1` µs), so 64 buckets cover any
+/// `u64` latency with a fixed-size array and no allocation on record.
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// Fixed-bucket (power-of-two) latency histogram — exact count/sum/max,
+/// percentiles interpolated within a bucket (≤ 2× relative error by
+/// construction, plenty for p50/p95/p99 trend lines).  No dependencies;
+/// merging two histograms is element-wise, so per-client histograms fold
+/// into one report.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; HISTOGRAM_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    fn bucket(us: u64) -> usize {
+        (64 - us.leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Record one latency sample, in microseconds.
+    pub fn record(&mut self, us: u64) {
+        self.buckets[Self::bucket(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// The `p`-th percentile (0.0 ..= 1.0), µs, linearly interpolated
+    /// within the covering bucket and clamped to the observed maximum.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+                let hi = 1u64 << i.min(62);
+                let frac = (rank - seen) as f64 / n as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).min(self.max_us).max(lo);
+            }
+            seen += n;
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_eval(genes: &[Config]) -> crate::Result<Vec<f32>> {
+        Ok(genes.iter().map(|g| g.iter().map(|&x| x as f32).sum()).collect())
+    }
+
+    #[test]
+    fn single_request_scores_through_the_batcher() {
+        let opts = SchedulerOptions {
+            lanes: 4,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 16,
+        };
+        let b = ContinuousBatcher::spawn(opts, || sum_eval);
+        assert_eq!(b.score(vec![1, 2, 3]), Ok(6.0));
+        let stats = b.stats();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.dispatches, 1);
+        assert_eq!(stats.batched, 1);
+        assert_eq!(stats.deadline_dispatches, 1, "partial slab flushed at deadline");
+        assert!(stats.lane_fill_fraction() > 0.0 && stats.lane_fill_fraction() < 1.0);
+    }
+
+    #[test]
+    fn eval_error_fans_out_to_every_request_in_the_batch() {
+        let opts = SchedulerOptions {
+            lanes: 2,
+            max_wait: Duration::from_millis(50),
+            queue_cap: 16,
+        };
+        let b = ContinuousBatcher::spawn(opts, || {
+            |_genes: &[Config]| -> crate::Result<Vec<f32>> {
+                eyre::bail!("device on fire")
+            }
+        });
+        let rx1 = b.submit(vec![1]);
+        let rx2 = b.submit(vec![2]);
+        assert!(rx1.recv().unwrap().unwrap_err().contains("device on fire"));
+        assert!(rx2.recv().unwrap().unwrap_err().contains("device on fire"));
+    }
+
+    #[test]
+    fn admission_queue_cap_rejects_fast() {
+        // An evaluator parked on a gate keeps the queue from draining, so
+        // the cap is what rejects — deterministically, not timing-luck.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let opts = SchedulerOptions {
+            lanes: 1,
+            max_wait: Duration::ZERO,
+            queue_cap: 2,
+        };
+        let b = ContinuousBatcher::spawn(opts, move || {
+            move |genes: &[Config]| {
+                gate_rx.recv().ok();
+                sum_eval(genes)
+            }
+        });
+        // First dispatch grabs one job and parks in eval; then fill the
+        // queue to its cap and overflow it.
+        let first = b.submit(vec![1]);
+        // Wait until the batcher has drained the first job into its dispatch
+        // (the queue is empty while it's parked in eval).
+        let t0 = Instant::now();
+        while b.stats().dispatches == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(b.stats().dispatches, 1);
+        let queued: Vec<_> = (0..2).map(|i| b.submit(vec![i as u16 + 2])).collect();
+        let rejected = b.submit(vec![9]);
+        let err = rejected.recv().unwrap().unwrap_err();
+        assert!(err.contains("queue full"), "got: {err}");
+        assert_eq!(b.stats().rejected, 1);
+        // Release the evaluator; everything admitted completes.
+        for _ in 0..4 {
+            gate_tx.send(()).ok();
+        }
+        assert_eq!(first.recv().unwrap(), Ok(1.0));
+        for (i, rx) in queued.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), Ok(i as f32 + 2.0));
+        }
+        drop(gate_tx);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_samples() {
+        let mut h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.max_us(), 1000);
+        assert!((h.mean_us() - 145.0).abs() < 1e-9);
+        let p50 = h.percentile(0.50);
+        assert!((16..=64).contains(&p50), "p50 {p50} outside its bucket range");
+        let p99 = h.percentile(0.99);
+        assert!((512..=1000).contains(&p99), "p99 {p99} outside its bucket range");
+        assert_eq!(h.percentile(1.0), 1000);
+        assert_eq!(LatencyHistogram::new().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_merge_is_elementwise() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for us in [5u64, 100] {
+            a.record(us);
+        }
+        for us in [7u64, 3000] {
+            b.record(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max_us(), 3000);
+    }
+}

@@ -77,6 +77,42 @@ pub enum WireMsg {
     /// server's own measurements — unlike the client-side `ShardStats`
     /// estimates, they exclude transport and queueing time.
     Stats { id: u64, completed: u64, busy_us: u64, conns: u64 },
+    /// One serving request: score a single candidate configuration through
+    /// the continuous batcher (`runtime/serve.rs`).  Empty `genes` means
+    /// "score the server's configured default" — the searched archive entry
+    /// a `repro serve` process was launched with.  Answered with a
+    /// [`WireMsg::Score`] (or [`WireMsg::Error`]) echoing `id`.  Additive in
+    /// WIRE_VERSION 1: servers predating it reject the op, never misparse.
+    ScoreReq { id: u64, genes: Vec<u16> },
+    /// The score for request `id`, bit-exact (`f32::to_bits()` transport,
+    /// same rule as [`WireMsg::Scores`]).
+    Score { id: u64, score: f32 },
+    /// Client request for the serve scheduler's lifetime counters.
+    /// Answered with a [`WireMsg::ServeStats`] echoing `id`.  Additive in
+    /// WIRE_VERSION 1, same compatibility story as [`WireMsg::StatsReq`].
+    ServeStatsReq { id: u64 },
+    /// The continuous batcher's lifetime counters.  `dispatches` splits
+    /// into `full` (lane slab filled before the deadline) + `deadline`
+    /// (partial slab flushed at `--max-wait-us`) + shutdown drains (the
+    /// remainder).  `batched / (dispatches * lanes)` is the lane fill
+    /// fraction; `wait_us / requests` is the mean admission-queue wait —
+    /// reported separately so under-filled (latency-driven) dispatches are
+    /// distinguishable from cache-miss stalls.  `depth_sum` accumulates the
+    /// queue depth sampled at each dispatch (mean = `depth_sum /
+    /// dispatches`), `depth_max` is its high-water mark.
+    ServeStats {
+        id: u64,
+        requests: u64,
+        rejected: u64,
+        dispatches: u64,
+        full: u64,
+        deadline: u64,
+        lanes: u64,
+        batched: u64,
+        wait_us: u64,
+        depth_sum: u64,
+        depth_max: u64,
+    },
 }
 
 fn obj(entries: Vec<(&str, Value)>) -> Value {
@@ -141,6 +177,49 @@ impl WireMsg {
                 ("id", Value::Num(*id as f64)),
                 ("op", Value::Str("stats".into())),
             ]),
+            WireMsg::ScoreReq { id, genes } => obj(vec![
+                (
+                    "genes",
+                    Value::Arr(genes.iter().map(|&g| Value::Num(g as f64)).collect()),
+                ),
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("score_req".into())),
+            ]),
+            WireMsg::Score { id, score } => obj(vec![
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("score".into())),
+                ("score", Value::Num(score.to_bits() as f64)),
+            ]),
+            WireMsg::ServeStatsReq { id } => obj(vec![
+                ("id", Value::Num(*id as f64)),
+                ("op", Value::Str("serve_stats_req".into())),
+            ]),
+            WireMsg::ServeStats {
+                id,
+                requests,
+                rejected,
+                dispatches,
+                full,
+                deadline,
+                lanes,
+                batched,
+                wait_us,
+                depth_sum,
+                depth_max,
+            } => obj(vec![
+                ("batched", Value::Num(*batched as f64)),
+                ("deadline", Value::Num(*deadline as f64)),
+                ("depth_max", Value::Num(*depth_max as f64)),
+                ("depth_sum", Value::Num(*depth_sum as f64)),
+                ("dispatches", Value::Num(*dispatches as f64)),
+                ("full", Value::Num(*full as f64)),
+                ("id", Value::Num(*id as f64)),
+                ("lanes", Value::Num(*lanes as f64)),
+                ("op", Value::Str("serve_stats".into())),
+                ("rejected", Value::Num(*rejected as f64)),
+                ("requests", Value::Num(*requests as f64)),
+                ("wait_us", Value::Num(*wait_us as f64)),
+            ]),
         }
     }
 
@@ -183,6 +262,36 @@ impl WireMsg {
                 completed: v.get("completed")?.as_u64()?,
                 busy_us: v.get("busy_us")?.as_u64()?,
                 conns: v.get("conns")?.as_u64()?,
+            }),
+            "score_req" => {
+                let id = v.get("id")?.as_u64()?;
+                let mut genes = Vec::new();
+                for g in v.get("genes")?.as_arr()? {
+                    let g = g.as_u64()?;
+                    eyre::ensure!(g <= u16::MAX as u64, "gene {g} exceeds u16");
+                    genes.push(g as u16);
+                }
+                Ok(WireMsg::ScoreReq { id, genes })
+            }
+            "score" => {
+                let id = v.get("id")?.as_u64()?;
+                let bits = v.get("score")?.as_u64()?;
+                eyre::ensure!(bits <= u32::MAX as u64, "score bits {bits} exceed u32");
+                Ok(WireMsg::Score { id, score: f32::from_bits(bits as u32) })
+            }
+            "serve_stats_req" => Ok(WireMsg::ServeStatsReq { id: v.get("id")?.as_u64()? }),
+            "serve_stats" => Ok(WireMsg::ServeStats {
+                id: v.get("id")?.as_u64()?,
+                requests: v.get("requests")?.as_u64()?,
+                rejected: v.get("rejected")?.as_u64()?,
+                dispatches: v.get("dispatches")?.as_u64()?,
+                full: v.get("full")?.as_u64()?,
+                deadline: v.get("deadline")?.as_u64()?,
+                lanes: v.get("lanes")?.as_u64()?,
+                batched: v.get("batched")?.as_u64()?,
+                wait_us: v.get("wait_us")?.as_u64()?,
+                depth_sum: v.get("depth_sum")?.as_u64()?,
+                depth_max: v.get("depth_max")?.as_u64()?,
             }),
             other => eyre::bail!("unknown wire op `{other}`"),
         }
@@ -272,6 +381,23 @@ mod tests {
             WireMsg::Error { id: 9, message: "bank has 28 layers, got 3".into() },
             WireMsg::StatsReq { id: 11 },
             WireMsg::Stats { id: 11, completed: 420, busy_us: 1_234_567, conns: 3 },
+            WireMsg::ScoreReq { id: 13, genes: vec![2, 3, 0x0104] },
+            WireMsg::ScoreReq { id: 14, genes: vec![] },
+            WireMsg::Score { id: 13, score: -1.25e-3 },
+            WireMsg::ServeStatsReq { id: 15 },
+            WireMsg::ServeStats {
+                id: 15,
+                requests: 100,
+                rejected: 2,
+                dispatches: 17,
+                full: 11,
+                deadline: 5,
+                lanes: 8,
+                batched: 97,
+                wait_us: 84_211,
+                depth_sum: 120,
+                depth_max: 19,
+            },
         ];
         for m in msgs {
             let bytes = encode_frame(&m);
@@ -395,6 +521,52 @@ mod tests {
         });
         let payload =
             br#"{"busy_us":1500000,"completed":42,"conns":2,"id":3,"op":"stats"}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        // serve ops: additive in the same version, same compatibility rule.
+        let frame = encode_frame(&WireMsg::ScoreReq { id: 5, genes: vec![2, 3, 4] });
+        let payload = br#"{"genes":[2,3,4],"id":5,"op":"score_req"}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        let frame = encode_frame(&WireMsg::Score { id: 5, score: 1.0 });
+        // 1.0f32 = 0x3F800000 = 1065353216
+        let payload = br#"{"id":5,"op":"score","score":1065353216}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        let frame = encode_frame(&WireMsg::ServeStatsReq { id: 9 });
+        let payload = br#"{"id":9,"op":"serve_stats_req"}"#;
+        let mut expect = Vec::new();
+        expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
+        expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        expect.extend_from_slice(payload);
+        assert_eq!(frame, expect);
+
+        let frame = encode_frame(&WireMsg::ServeStats {
+            id: 9,
+            requests: 100,
+            rejected: 2,
+            dispatches: 17,
+            full: 11,
+            deadline: 5,
+            lanes: 8,
+            batched: 97,
+            wait_us: 84211,
+            depth_sum: 120,
+            depth_max: 19,
+        });
+        let payload = br#"{"batched":97,"deadline":5,"depth_max":19,"depth_sum":120,"dispatches":17,"full":11,"id":9,"lanes":8,"op":"serve_stats","rejected":2,"requests":100,"wait_us":84211}"#;
         let mut expect = Vec::new();
         expect.extend_from_slice(&[0x41, 0x4D, 0x51, 0x57, 0x01]);
         expect.extend_from_slice(&(payload.len() as u32).to_le_bytes());

@@ -1,0 +1,306 @@
+//! Continuous-batching serve-path tests.
+//!
+//! The load-bearing property: the [`ContinuousBatcher`] must return scores
+//! bitwise identical to the sequential single-candidate path for *any*
+//! arrival interleaving — batching is a throughput optimization, never an
+//! accuracy knob.  The synthetic evaluator (`synth_chunk`, a pure
+//! per-candidate map of `synth_jsd`) makes that checkable without a device:
+//! whatever slabs the scheduler forms, each candidate's score only depends
+//! on its own genes.
+//!
+//! Alongside the property test: the deadline-policy contracts (partial slab
+//! flushes at the deadline, a full slab never waits for it, queued work
+//! drains on shutdown), the batching acceptance pin (`dispatches <
+//! requests` under a lane-filling workload), and an end-to-end TCP
+//! round-trip through `serve_scores` / `ScoreClient` / `fetch_serve_stats`.
+
+use std::net::TcpListener;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use amq::coordinator::synth::{synth_chunk, synth_jsd};
+use amq::runtime::serve::{
+    fetch_serve_stats, serve_scores, ScoreClient, ScoreResult, ServeOptions,
+};
+use amq::runtime::{ContinuousBatcher, SchedulerOptions, SchedulerStats};
+use amq::util::Rng;
+
+const TRIALS: usize = 60;
+
+fn spawn_synth(opts: SchedulerOptions) -> ContinuousBatcher {
+    ContinuousBatcher::spawn(opts, || synth_chunk)
+}
+
+fn random_genes(rng: &mut Rng) -> Vec<u16> {
+    let n = rng.range(1, 24);
+    (0..n).map(|_| rng.range(2, 5) as u16).collect()
+}
+
+fn expect_score(rx: &Receiver<ScoreResult>) -> f32 {
+    rx.recv_timeout(Duration::from_secs(30))
+        .expect("batcher dropped the reply channel")
+        .expect("batcher returned an error")
+}
+
+/// Property: for random lanes / deadlines / request counts and a random
+/// multi-threaded arrival interleaving, every score the batcher returns is
+/// bitwise identical to the sequential scorer (`synth_jsd` on that
+/// candidate alone).  Slab composition must not leak into the numbers.
+#[test]
+fn any_arrival_interleaving_matches_the_sequential_scorer_bitwise() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(0x5E27E + seed);
+        let opts = SchedulerOptions {
+            lanes: rng.range(1, 9),
+            max_wait: Duration::from_micros(rng.range(0, 800) as u64),
+            queue_cap: 1024,
+        };
+        let batcher = spawn_synth(opts);
+        let n_threads = rng.range(1, 5);
+        let per_thread = rng.range(1, 12);
+        let mut expected: Vec<Vec<(Vec<u16>, u32)>> = Vec::new();
+        for t in 0..n_threads {
+            let mut lane = Vec::new();
+            let mut trng = Rng::new(seed * 131 + t as u64);
+            for _ in 0..per_thread {
+                let genes = random_genes(&mut trng);
+                let bits = synth_jsd(&genes).to_bits();
+                lane.push((genes, bits));
+            }
+            expected.push(lane);
+        }
+        let results: Vec<Vec<(u32, u32)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = expected
+                .iter()
+                .enumerate()
+                .map(|(t, lane)| {
+                    let batcher = &batcher;
+                    scope.spawn(move || {
+                        let mut srng = Rng::new(seed * 977 + t as u64);
+                        let mut out = Vec::new();
+                        for (genes, bits) in lane {
+                            // Random inter-arrival jitter: this is the
+                            // "any interleaving" part of the property.
+                            std::thread::sleep(Duration::from_micros(
+                                srng.range(0, 300) as u64,
+                            ));
+                            let got = batcher
+                                .score(genes.clone())
+                                .expect("score failed")
+                                .to_bits();
+                            out.push((got, *bits));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for lane in &results {
+            for &(got, want) in lane {
+                assert_eq!(
+                    got, want,
+                    "seed {seed}: batched score {got:#010x} != sequential {want:#010x}"
+                );
+            }
+        }
+        let stats = batcher.stats();
+        assert_eq!(stats.requests, (n_threads * per_thread) as u64, "seed {seed}");
+        assert_eq!(stats.batched, stats.requests, "seed {seed}: every request dispatched");
+        assert_eq!(stats.rejected, 0, "seed {seed}");
+    }
+}
+
+/// A partial slab (fewer queued requests than lanes) must flush when the
+/// oldest request's deadline expires — not wait for the slab to fill.
+#[test]
+fn partial_slab_dispatches_at_the_deadline() {
+    let batcher = spawn_synth(SchedulerOptions {
+        lanes: 4,
+        max_wait: Duration::from_millis(20),
+        queue_cap: 64,
+    });
+    let a = batcher.submit(vec![2, 3, 4]);
+    let b = batcher.submit(vec![4, 3, 2]);
+    let start = Instant::now();
+    let sa = expect_score(&a);
+    let sb = expect_score(&b);
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "deadline flush took {:?}",
+        start.elapsed()
+    );
+    assert_eq!(sa.to_bits(), synth_jsd(&[2, 3, 4]).to_bits());
+    assert_eq!(sb.to_bits(), synth_jsd(&[4, 3, 2]).to_bits());
+    let stats = batcher.stats();
+    assert_eq!(stats.full_dispatches, 0, "2 requests can't fill 4 lanes");
+    assert!(stats.deadline_dispatches >= 1, "stats: {stats:?}");
+    assert_eq!(stats.batched, 2);
+}
+
+/// A full slab dispatches immediately: with a deadline far beyond the test
+/// timeout, `lanes` queued requests must still complete promptly.
+#[test]
+fn full_slab_dispatches_without_waiting_for_the_deadline() {
+    let lanes = 3;
+    let batcher = spawn_synth(SchedulerOptions {
+        lanes,
+        max_wait: Duration::from_secs(3600),
+        queue_cap: 64,
+    });
+    let rxs: Vec<_> = (0..lanes)
+        .map(|i| batcher.submit(vec![2 + i as u16; 6]))
+        .collect();
+    let start = Instant::now();
+    for (i, rx) in rxs.iter().enumerate() {
+        let got = expect_score(rx);
+        assert_eq!(got.to_bits(), synth_jsd(&vec![2 + i as u16; 6]).to_bits());
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "full slab waited on a 1h deadline"
+    );
+    let stats = batcher.stats();
+    assert_eq!(stats.full_dispatches, 1, "stats: {stats:?}");
+    assert_eq!(stats.deadline_dispatches, 0, "stats: {stats:?}");
+    assert_eq!(stats.batched, lanes as u64);
+}
+
+/// Shutdown drains: requests queued behind an hour-long deadline still get
+/// answers when the batcher shuts down, via drain dispatches.
+#[test]
+fn queued_requests_drain_on_shutdown() {
+    let mut batcher = spawn_synth(SchedulerOptions {
+        lanes: 8,
+        max_wait: Duration::from_secs(3600),
+        queue_cap: 64,
+    });
+    let genes: Vec<Vec<u16>> = (0..3).map(|i| vec![2 + (i % 3) as u16; 5]).collect();
+    let rxs: Vec<_> = genes.iter().map(|g| batcher.submit(g.clone())).collect();
+    batcher.shutdown();
+    for (g, rx) in genes.iter().zip(&rxs) {
+        let got = rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("drained request lost its reply channel")
+            .expect("drained request errored");
+        assert_eq!(got.to_bits(), synth_jsd(g).to_bits());
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.batched, 3, "stats: {stats:?}");
+    assert!(stats.drain_dispatches() >= 1, "stats: {stats:?}");
+    // Post-shutdown submissions reject, and the reply path still works.
+    let late = batcher.score(vec![2, 2, 2]);
+    assert!(late.unwrap_err().contains("shut down"));
+}
+
+/// Acceptance pin: a lane-filling concurrent workload must coalesce — the
+/// whole point of the scheduler is fewer device dispatches than requests.
+#[test]
+fn full_lane_workload_takes_fewer_dispatches_than_requests() {
+    let batcher = spawn_synth(SchedulerOptions {
+        lanes: 8,
+        max_wait: Duration::from_millis(5),
+        queue_cap: 1024,
+    });
+    let threads = 8;
+    let per_thread = 8;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let batcher = &batcher;
+            scope.spawn(move || {
+                for i in 0..per_thread {
+                    let genes = vec![2 + ((t + i) % 3) as u16; 6];
+                    let got = batcher.score(genes.clone()).expect("score failed");
+                    assert_eq!(got.to_bits(), synth_jsd(&genes).to_bits());
+                }
+            });
+        }
+    });
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, (threads * per_thread) as u64);
+    assert_eq!(stats.batched, stats.requests);
+    assert!(
+        stats.dispatches < stats.requests,
+        "no coalescing happened: {stats:?}"
+    );
+    assert!(stats.lane_fill_fraction() > 0.0 && stats.lane_fill_fraction() <= 1.0);
+}
+
+fn recv_stats(rx: Receiver<SchedulerStats>) -> SchedulerStats {
+    rx.recv_timeout(Duration::from_secs(60)).expect("serve thread died")
+}
+
+/// End-to-end over TCP: two concurrent `ScoreClient`s (one sending explicit
+/// genes, one leaning on the server's default config), then a stats probe,
+/// all against one `serve_scores` loop.  Scores must match the sequential
+/// scorer bitwise and the probe must see every request.
+#[test]
+fn serve_scores_round_trips_clients_and_stats_over_tcp() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let default_genes = vec![3u16; 12];
+    let opts = ServeOptions {
+        scheduler: SchedulerOptions {
+            lanes: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+        },
+        max_conns: Some(3), // two score clients + one stats probe
+        live_cap: 8,
+        default_genes: Some(default_genes.clone()),
+    };
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let stats = serve_scores(listener, 12, opts, || synth_chunk).unwrap();
+        let _ = done_tx.send(stats);
+    });
+
+    let timeout = Duration::from_secs(10);
+    let explicit = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut client = ScoreClient::connect(&addr, timeout).unwrap();
+            assert_eq!(client.n_layers(), 12);
+            let mut out = Vec::new();
+            for i in 0..5u16 {
+                let genes = vec![2 + i % 3; 9];
+                let got = client.score(&genes).unwrap().unwrap();
+                out.push((got.to_bits(), synth_jsd(&genes).to_bits()));
+            }
+            out
+        })
+    };
+    let defaulted = {
+        let addr = addr.clone();
+        let default_genes = default_genes.clone();
+        std::thread::spawn(move || {
+            let mut client = ScoreClient::connect(&addr, timeout).unwrap();
+            let want = synth_jsd(&default_genes).to_bits();
+            (0..5)
+                .map(|_| {
+                    // Empty genes = "score the config this server serves".
+                    let got = client.score(&[]).unwrap().unwrap();
+                    (got.to_bits(), want)
+                })
+                .collect::<Vec<_>>()
+        })
+    };
+    for (got, want) in explicit
+        .join()
+        .unwrap()
+        .into_iter()
+        .chain(defaulted.join().unwrap())
+    {
+        assert_eq!(got, want, "TCP score {got:#010x} != sequential {want:#010x}");
+    }
+
+    let probed = fetch_serve_stats(&addr, timeout).unwrap();
+    assert_eq!(probed.requests, 10, "probe: {probed:?}");
+    assert_eq!(probed.batched, 10);
+    assert_eq!(probed.lanes, 4);
+    assert_eq!(probed.rejected, 0);
+
+    let final_stats = recv_stats(done_rx);
+    assert_eq!(final_stats.requests, 10, "final: {final_stats:?}");
+    assert!(final_stats.dispatches >= probed.dispatches);
+}
