@@ -9,7 +9,10 @@ use amq::coordinator::{
     PooledEvaluator, ProxyBank, SearchParams,
 };
 use amq::quant::{MethodId, Quantizer};
-use amq::runtime::{lane_routed, lane_slab_sig, EvalService, SlabCache};
+use amq::runtime::{
+    lane_routed, lane_slab_sig, EvalService, FaultKind, FaultPlan, FaultSpec, HedgePolicy,
+    ShardFlow, SlabCache,
+};
 use amq::tensor::Mat;
 use amq::util::bench::{bench, header};
 use amq::util::Rng;
@@ -375,6 +378,7 @@ fn main() {
         let res = run_search(&search_space, &mut ev, &params).unwrap();
         let wall = t0.elapsed();
         let stats = ev.batch_stats().unwrap();
+        let pool = ev.pool_stats();
         hashes.push(archive_hash(&res.archive));
         let cps = res.true_evals as f64 / wall.as_secs_f64().max(1e-9);
         let devd = device_dispatches.load(Ordering::Relaxed);
@@ -417,6 +421,8 @@ fn main() {
             "    {{\"workers\": {workers}, \"score_batch\": {score_batch}, \
              \"lanes\": {lanes}, \"slab_cache_mb\": {slab_mb}, \"scorer_variant\": \"{}\", \
              \"topology\": \"in-process\", \"remote_shards\": 0, \"requeued_chunks\": {}, \
+             \"hedged_dispatched\": {}, \"hedged_won\": {}, \"hedged_wasted\": {}, \
+             \"latency_p50_ms\": {:.3}, \
              \"wall_seconds\": {:.4}, \"true_evals\": {}, \"candidates_per_sec\": {:.2}, \
              \"scorer_dispatches\": {}, \"device_dispatches\": {}, \
              \"lane_fill_fraction\": {:.4}, \"slab_lookups\": {lookups}, \
@@ -427,7 +433,11 @@ fn main() {
              \"slab_resident_bytes\": {}, \"requested_configs\": {}, \"dedup_hits\": {}, \
              \"dedup_fraction\": {:.4}, \"dispatch_reduction\": {:.3}}}",
             if lanes > 1 { "lane-stacked" } else { "per-candidate" },
-            ev.pool_stats().requeued,
+            pool.requeued,
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.latency_p50.as_secs_f64() * 1e3,
             wall.as_secs_f64(),
             res.true_evals,
             cps,
@@ -450,6 +460,81 @@ fn main() {
         "archives identical across all (workers, score-batch, lanes, slab-cache, gather) \
          combos: {identical}"
     );
+
+    // -- hedged straggler re-dispatch: a deterministically wedged shard ----
+    // Shard 0 wedges on its first chunk (seeded fault plan, rate 1.0, capped
+    // at one injection) and holds it until the gate opens; the hedging
+    // policy re-dispatches the stalled chunk to an idle shard, so the search
+    // completes at healthy speed without waiting out any timeout, and the
+    // archive still hashes identically to the fault-free corners above
+    // (evals are pure, the first reply wins, the wedged copy is discarded
+    // by chunk id on delivery).
+    header("hedged straggler re-dispatch (wedged shard, fault-injected)");
+    {
+        let spec = FaultSpec { seed: 7, kind: FaultKind::Wedge, rate: 1.0 };
+        let plan = Arc::new(FaultPlan::new(spec).with_max_faults(1));
+        let labels: Vec<String> = (0..4).map(|i| format!("local#{i}")).collect();
+        let plan_for_builder = plan.clone();
+        let builder = move |shard: usize| {
+            let inner: Box<dyn FnMut(Vec<Config>) -> ShardFlow<amq::Result<Vec<f32>>>> =
+                Box::new(move |chunk: Vec<Config>| {
+                    ShardFlow::Reply(Ok(chunk.iter().map(synth_score).collect()))
+                });
+            if shard == 0 {
+                plan_for_builder.wrap_flow(inner)
+            } else {
+                inner
+            }
+        };
+        let policy = HedgePolicy::from_factor(4.0);
+        let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_flow_with(labels, builder, policy));
+        let mut ev = PooledEvaluator::from_service(svc).with_score_batch(8);
+        let t0 = Instant::now();
+        let res = run_search(&search_space, &mut ev, &params).unwrap();
+        let wall = t0.elapsed();
+        let pool = ev.pool_stats();
+        assert_eq!(
+            archive_hash(&res.archive),
+            hashes[0],
+            "hedged archive diverged from the fault-free baseline"
+        );
+        assert!(
+            pool.hedged_won >= 1,
+            "the wedged chunk should have been won by a hedged duplicate"
+        );
+        println!(
+            "wedged shard + hedging (factor 4): {:>8} wall, hedged {} (won {}, wasted {}), \
+             p50 {:.2}ms, requeued {}, archive identical to baseline",
+            format!("{:.0?}", wall),
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.latency_p50.as_secs_f64() * 1e3,
+            pool.requeued,
+        );
+        rows.push_str(",\n");
+        let _ = write!(
+            rows,
+            "    {{\"workers\": 4, \"score_batch\": 8, \"lanes\": 1, \"slab_cache_mb\": 0, \
+             \"scorer_variant\": \"per-candidate\", \"topology\": \"in-process\", \
+             \"remote_shards\": 0, \"fault_spec\": \"{}\", \"hedge_factor\": 4, \
+             \"requeued_chunks\": {}, \"hedged_dispatched\": {}, \"hedged_won\": {}, \
+             \"hedged_wasted\": {}, \"latency_p50_ms\": {:.3}, \"wall_seconds\": {:.4}, \
+             \"true_evals\": {}}}",
+            spec.to_spec_string(),
+            pool.requeued,
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.latency_p50.as_secs_f64() * 1e3,
+            wall.as_secs_f64(),
+            res.true_evals,
+        );
+        // The wedged worker is still parked inside its flow holding the
+        // (already-hedged) chunk; open the gate so the service can drain
+        // and join cleanly.
+        plan.release_wedges();
+    }
 
     // shared-bank residency: 4 shards referencing one Arc'd bank count 1x
     let shard_refs: Vec<Arc<ProxyBank>> = {

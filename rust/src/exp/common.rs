@@ -10,7 +10,7 @@ use crate::coordinator::{
 use crate::eval::{self, ModelHandle, TaskResults};
 use crate::model::ModelAssets;
 use crate::quant::{AwqClip, BitStack, MethodId, MethodRegistry, PbLlm, Quantizer};
-use crate::runtime::{EvalService, QuantLayerBufs};
+use crate::runtime::{EvalService, HedgePolicy, QuantLayerBufs};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -109,6 +109,12 @@ impl<'rt> Pipeline<'rt> {
 ///
 /// The wire unit is a *microbatch* of candidates: one request = one scorer
 /// dispatch of up to `--score-batch` configs on whichever shard is idle.
+///
+/// Straggler hedging (`--hedge-factor`): the pool tracks each chunk's
+/// in-flight age against a rolling p50 of completed chunks; when a chunk
+/// overstays `factor × p50` and a shard is idle, that shard evaluates a
+/// speculative duplicate and the first reply wins (evals are pure, so the
+/// copies are bitwise-identical — archives never depend on who won).
 pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
     let rt = ctx.rt.clone();
     let batches = ctx.search_batches.clone();
@@ -123,7 +129,8 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
         .map(|i| format!("local#{i}"))
         .chain(remotes.iter().cloned())
         .collect();
-    EvalService::spawn_flow(labels, move |shard| {
+    let policy = HedgePolicy::from_factor(ctx.hedge_factor);
+    let builder = move |shard: usize| {
         if shard >= local {
             // Remote feeder: forward chunks over TCP, retire on transport
             // death (the pool requeues the in-flight chunk).
@@ -162,7 +169,8 @@ pub(super) fn spawn_search_pool(ctx: &Ctx) -> EvalPool {
             crate::coordinator::proxy::mean_jsd_batch(&proxy, &batches, &chunk)
         };
         Box::new(move |chunk: Vec<Config>| crate::runtime::ShardFlow::Reply(eval(chunk)))
-    })
+    };
+    EvalService::spawn_flow_with(labels, builder, policy)
 }
 
 /// The evaluator a search should drive: pool-backed when `--workers > 1`,

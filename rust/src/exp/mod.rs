@@ -99,6 +99,12 @@ pub struct Ctx {
     pub shards: Vec<String>,
     /// Scoring microbatch size (`--score-batch K`).
     pub score_batch: usize,
+    /// Hedged-dispatch aggressiveness (`--hedge-factor F`): a chunk
+    /// in-flight longer than `F × rolling p50` is speculatively duplicated
+    /// onto an idle shard (first reply wins).  `0` disables hedging.
+    /// Archives are identical either way — evals are pure, so a hedge can
+    /// change wall-clock, never results.
+    pub hedge_factor: f64,
     /// Lane-slab cache budget in MB (`--slab-cache-mb`; 0 = off).
     pub slab_cache_mb: usize,
     /// Requested slab-gather mode (`--slab-gather`); whether misses
@@ -205,6 +211,7 @@ impl Ctx {
             workers: workers.max(1),
             shards: Vec::new(),
             score_batch: score_batch.max(1),
+            hedge_factor: crate::runtime::DEFAULT_HEDGE_FACTOR,
             slab_cache_mb,
             slab_gather,
             registry,
@@ -251,6 +258,13 @@ impl Ctx {
     pub fn set_shards(&mut self, shards: Vec<String>) {
         debug_assert!(self.pool.get().is_none(), "set_shards after pool spawn");
         self.shards = shards;
+    }
+
+    /// Set the hedged-dispatch factor (`--hedge-factor`; 0 disables).
+    /// Must be called before the pool first spawns.
+    pub fn set_hedge_factor(&mut self, factor: f64) {
+        debug_assert!(self.pool.get().is_none(), "set_hedge_factor after pool spawn");
+        self.hedge_factor = factor.max(0.0);
     }
 
     /// Local (in-process) shard count for the pool topology: with no remote

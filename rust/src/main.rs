@@ -71,6 +71,23 @@
 //!                                   address becomes one pool shard on the
 //!                                   same FIFO as the local workers;
 //!                                   archives identical for any topology)
+//!   --hedge-factor F                straggler hedging (default: 4): a chunk
+//!                                   in-flight longer than F x the rolling
+//!                                   p50 is speculatively duplicated onto an
+//!                                   idle shard, first reply wins (0
+//!                                   disables; archives identical either
+//!                                   way — evals are pure)
+//!   --chunk-timeout-ms N            (pool-smoke) per-chunk reply deadline
+//!                                   for remote feeders (default: 300000);
+//!                                   a shard silent that long retires and
+//!                                   its chunk requeues
+//!   --fault-spec SEED:KIND:RATE     (shard-serve) deterministic fault
+//!                                   injection: each chunk draws a seeded
+//!                                   decision, triggered faults
+//!                                   delay|wedge|drop|disconnect the
+//!                                   chunk's handling (results, when sent,
+//!                                   are unchanged) — the chaos-test /
+//!                                   straggler-CI knob
 //!   --listen ADDR                   (shard-serve, serve) bind address
 //!   --synthetic                     (shard-serve, serve) serve the
 //!                                   deterministic synthetic workload, no
@@ -119,6 +136,9 @@ struct Args {
     methods: Option<String>,
     predictor: Option<String>,
     shards: Vec<String>,
+    hedge_factor: f64,
+    chunk_timeout_ms: u64,
+    fault_spec: Option<String>,
     listen: Option<String>,
     synthetic: bool,
     config: Option<String>,
@@ -148,6 +168,9 @@ fn parse_args() -> Args {
         methods: None,
         predictor: None,
         shards: Vec::new(),
+        hedge_factor: amq::runtime::DEFAULT_HEDGE_FACTOR,
+        chunk_timeout_ms: 300_000,
+        fault_spec: None,
         listen: None,
         synthetic: false,
         config: None,
@@ -223,6 +246,18 @@ fn parse_args() -> Args {
                     .filter(|s| !s.is_empty())
                     .map(String::from)
                     .collect();
+            }
+            "--hedge-factor" => {
+                i += 1;
+                args.hedge_factor = argv[i].parse().expect("--hedge-factor F");
+            }
+            "--chunk-timeout-ms" => {
+                i += 1;
+                args.chunk_timeout_ms = argv[i].parse().expect("--chunk-timeout-ms N");
+            }
+            "--fault-spec" => {
+                i += 1;
+                args.fault_spec = Some(argv[i].clone());
             }
             "--listen" => {
                 i += 1;
@@ -326,18 +361,41 @@ fn topology_of(ctx: &Ctx) -> &'static str {
 /// topology job uses this); otherwise it loads artifacts and builds its own
 /// runtime + device bank, exactly like a local `--workers` shard would.
 fn run_shard_serve(args: &Args) -> Result<()> {
+    use amq::runtime::remote::DEFAULT_LIVE_CONNS;
+    use amq::runtime::FaultSpec;
+    use std::sync::Arc;
+
     let listen = args
         .listen
         .as_deref()
         .ok_or_else(|| eyre::anyhow!("shard-serve requires --listen ADDR"))?;
     let listener = std::net::TcpListener::bind(listen)?;
     eprintln!("[shard] listening on {}", listener.local_addr()?);
+    // Deterministic fault injection (--fault-spec SEED:KIND:RATE): which
+    // chunks fault is a pure function of the spec, so a failing CI run
+    // replays exactly from its command line.
+    let fault_plan = match args.fault_spec.as_deref() {
+        Some(spec) => {
+            let spec = FaultSpec::parse(spec)?;
+            eprintln!(
+                "[shard] fault injection armed: {} (kind {}, rate {}, seed {})",
+                spec.to_spec_string(),
+                spec.kind.name(),
+                spec.rate,
+                spec.seed
+            );
+            Some(Arc::new(spec.plan()))
+        }
+        None => None,
+    };
     if args.synthetic {
         eprintln!("[shard] serving the synthetic workload (no artifacts)");
-        return amq::runtime::remote::serve_shard(
+        return amq::runtime::remote::serve_shard_with_faults(
             listener,
             0,
             None,
+            DEFAULT_LIVE_CONNS,
+            fault_plan,
             amq::coordinator::synth::synth_chunk,
         );
     }
@@ -375,9 +433,14 @@ fn run_shard_serve(args: &Args) -> Result<()> {
         "[shard] runtime + device bank ready ({n_layers}-layer genome, scorer {})",
         ctx.rt.scorer_variant().name()
     );
-    amq::runtime::remote::serve_shard(listener, n_layers, None, move |genes| {
-        amq::coordinator::proxy::mean_jsd_batch(&proxy, &batches, genes)
-    })
+    amq::runtime::remote::serve_shard_with_faults(
+        listener,
+        n_layers,
+        None,
+        DEFAULT_LIVE_CONNS,
+        fault_plan,
+        move |genes| amq::coordinator::proxy::mean_jsd_batch(&proxy, &batches, genes),
+    )
 }
 
 /// The fixed default config a `--synthetic` serve process answers
@@ -693,8 +756,10 @@ fn run_serve_bench(args: &Args) -> Result<()> {
 fn run_pool_smoke(args: &Args) -> Result<()> {
     use amq::coordinator::synth::{synth_chunk, synth_space};
     use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator};
-    use amq::runtime::remote::{fetch_shard_stats, remote_eval_flow, RetryPolicy};
-    use amq::runtime::{EvalService, ShardFlow};
+    use amq::runtime::remote::{
+        fetch_shard_stats, remote_eval_flow_with_timeout, RetryPolicy,
+    };
+    use amq::runtime::{EvalService, HedgePolicy, ShardFlow};
     use std::fmt::Write as _;
     use std::sync::Arc;
 
@@ -706,11 +771,20 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
     let mut params = SearchParams::smoke();
     params.seed = args.seed.unwrap_or(17);
     let remotes = args.shards.clone();
+    // --hedge-factor: stragglers (e.g. a --fault-spec-wedged shard server)
+    // are speculatively duplicated onto idle shards instead of stalling the
+    // generation barrier; --chunk-timeout-ms bounds how long a silent
+    // server can pin its feeder before it retires.  Both change wall-clock
+    // only — the identical-hash assertion below is the proof.
+    let policy = HedgePolicy::from_factor(args.hedge_factor);
+    let chunk_timeout = std::time::Duration::from_millis(args.chunk_timeout_ms.max(1));
 
     let local_pool = |workers: usize| -> Arc<EvalPool> {
-        Arc::new(EvalService::spawn_sharded(workers, |_shard| {
-            |chunk: Vec<Config>| -> Result<Vec<f32>> { synth_chunk(&chunk) }
-        }))
+        Arc::new(EvalService::spawn_sharded_with(
+            workers,
+            |_shard| |chunk: Vec<Config>| -> Result<Vec<f32>> { synth_chunk(&chunk) },
+            policy,
+        ))
     };
     let remote_pool = |local: usize| -> Arc<EvalPool> {
         let remotes = remotes.clone();
@@ -718,13 +792,18 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
             .map(|i| format!("local#{i}"))
             .chain(remotes.iter().cloned())
             .collect();
-        Arc::new(EvalService::spawn_flow(labels, move |shard| {
+        let builder = move |shard: usize| {
             if shard < local {
                 Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)))
             } else {
-                remote_eval_flow(remotes[shard - local].clone(), RetryPolicy::default())
+                remote_eval_flow_with_timeout(
+                    remotes[shard - local].clone(),
+                    RetryPolicy::default(),
+                    Some(chunk_timeout),
+                )
             }
-        }))
+        };
+        Arc::new(EvalService::spawn_flow_with(labels, builder, policy))
     };
 
     struct Run {
@@ -764,13 +843,16 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
         hashes.push(hash);
         println!(
             "[smoke] {:<10} workers {} (remote {}): archive {:016x}, {} samples, \
-             {} requeued, {:.2}s",
+             {} requeued, hedged {} (won {}, wasted {}), {:.2}s",
             run.topology,
             run.workers,
             run.remote_shards,
             hash,
             res.archive.len(),
             pool.requeued,
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
             wall
         );
         if !rows.is_empty() {
@@ -780,12 +862,18 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
         let _ = write!(
             rows,
             "    {{\"topology\": \"{}\", \"workers\": {}, \"remote_shards\": {}, \
-             \"requeued_chunks\": {}, \"archive_hash\": \"{hash:016x}\", \
+             \"requeued_chunks\": {}, \"hedged_dispatched\": {}, \"hedged_won\": {}, \
+             \"hedged_wasted\": {}, \"latency_p50_ms\": {:.3}, \
+             \"archive_hash\": \"{hash:016x}\", \
              \"archive_len\": {}, \"true_evals\": {}, \"wall_seconds\": {wall:.4}}}",
             run.topology,
             run.workers,
             run.remote_shards,
             pool.requeued,
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.latency_p50.as_secs_f64() * 1e3,
             res.archive.len(),
             res.true_evals,
         );
@@ -840,18 +928,21 @@ fn run_pool_smoke(args: &Args) -> Result<()> {
     }
     let identical = hashes.iter().all(|&h| h == hashes[0]);
     let bench = format!(
-        "{{\n  \"bench\": \"pool_smoke\",\n  \"seed\": {},\n  \"identical_archives\": \
+        "{{\n  \"bench\": \"pool_smoke\",\n  \"seed\": {},\n  \"hedge_factor\": {},\n  \
+         \"identical_archives\": \
          {identical},\n  \"runs\": [\n{rows}\n  ]\n}}\n",
-        params.seed
+        params.seed, args.hedge_factor
     );
     let bench_path = std::path::Path::new(&args.out).join("BENCH_pool_smoke.json");
     std::fs::write(&bench_path, bench)?;
     eprintln!("[report] wrote {}", bench_path.display());
     let report_json = format!(
         "{{\n  \"report\": \"pool_smoke_topologies\",\n  \"seed\": {},\n  \
+         \"hedge_factor\": {},\n  \
          \"identical_archives\": {identical},\n  \"shard_servers\": [\n{}\n  ],\n  \
          \"topologies\": [\n{report}\n  ]\n}}\n",
         params.seed,
+        args.hedge_factor,
         server_rows.join(",\n")
     );
     let report_path = std::path::Path::new(&args.out).join("search_report.json");
@@ -908,6 +999,20 @@ fn write_search_report(
     let _ = write!(s, "  \"topology\": \"{}\",\n", topology_of(ctx));
     let _ = write!(s, "  \"remote_shards\": {},\n", ctx.shards.len());
     let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
+    let _ = write!(s, "  \"hedge_factor\": {},\n", ctx.hedge_factor);
+    if let Some(pool) = ctx.pool_stats() {
+        let _ = write!(
+            s,
+            "  \"hedging\": {{\"hedged_dispatched\": {}, \"hedged_won\": {}, \
+             \"hedged_wasted\": {}, \"requeued_duplicates\": {}, \
+             \"latency_p50_ms\": {:.3}}},\n",
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.requeued_duplicates,
+            pool.latency_p50.as_secs_f64() * 1e3,
+        );
+    }
     let variant = ctx.rt.scorer_variant();
     let rstats = ctx.rt.stats();
     let _ = write!(
@@ -1034,6 +1139,22 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         ctx.pool_stats().map(|p| p.requeued).unwrap_or(0)
     );
     let _ = write!(s, "  \"score_batch\": {},\n", ctx.score_batch);
+    let _ = write!(s, "  \"hedge_factor\": {},\n", ctx.hedge_factor);
+    let _ = write!(
+        s,
+        "  \"hedged_dispatched\": {},\n",
+        ctx.pool_stats().map(|p| p.hedged_dispatched).unwrap_or(0)
+    );
+    let _ = write!(
+        s,
+        "  \"hedged_won\": {},\n",
+        ctx.pool_stats().map(|p| p.hedged_won).unwrap_or(0)
+    );
+    let _ = write!(
+        s,
+        "  \"hedged_wasted\": {},\n",
+        ctx.pool_stats().map(|p| p.hedged_wasted).unwrap_or(0)
+    );
     let _ = write!(s, "  \"methods\": \"{}\",\n", ctx.registry.names().join(","));
     let _ = write!(s, "  \"cached\": {},\n", ctx.last_search_stats().is_none());
     if let Some(run) = ctx.last_search_stats() {
@@ -1100,10 +1221,17 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         let _ = write!(
             s,
             "  \"pool\": {{\"dispatches\": {}, \"requeued\": {}, \"retired_shards\": {}, \
+             \"hedged_dispatched\": {}, \"hedged_won\": {}, \"hedged_wasted\": {}, \
+             \"requeued_duplicates\": {}, \"latency_p50_ms\": {:.3}, \
              \"mean_wait_ms\": {:.3}, \"mean_service_ms\": {:.3}}},\n",
             pool.completed,
             pool.requeued,
             pool.retired_shards(),
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.requeued_duplicates,
+            pool.latency_p50.as_secs_f64() * 1e3,
             pool.mean_wait().as_secs_f64() * 1e3,
             pool.mean_service().as_secs_f64() * 1e3,
         );
@@ -1138,7 +1266,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|serve|serve-bench|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require] [--config ARCHIVE.json] [--budget B] [--max-wait-us N] [--queue-cap N] [--conn-cap N] [--addr ADDR] [--clients N] [--rps R] [--duration S]");
+        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|serve|serve-bench|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--hedge-factor F] [--chunk-timeout-ms N] [--fault-spec SEED:KIND:RATE] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require] [--config ARCHIVE.json] [--budget B] [--max-wait-us N] [--queue-cap N] [--conn-cap N] [--addr ADDR] [--clients N] [--rps R] [--duration S]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -1199,6 +1327,7 @@ fn main() -> Result<()> {
         args.slab_gather,
     )?;
     ctx.set_shards(args.shards.clone());
+    ctx.set_hedge_factor(args.hedge_factor);
     let variant = ctx.rt.scorer_variant();
     eprintln!(
         "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, {} remote shard{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, slab-gather {} ({}), methods: {}, predictor: {})",
@@ -1388,9 +1517,13 @@ fn main() -> Result<()> {
             })
             .collect();
         eprintln!(
-            "[pool] {} dispatches ({} requeued) | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
+            "[pool] {} dispatches ({} requeued) | hedged {} (won {}, wasted {}) | p50 {:.1}ms | mean wait {:.1}ms | mean service {:.1}ms | shards {}",
             pool.completed,
             pool.requeued,
+            pool.hedged_dispatched,
+            pool.hedged_won,
+            pool.hedged_wasted,
+            pool.latency_p50.as_secs_f64() * 1e3,
             pool.mean_wait().as_secs_f64() * 1e3,
             pool.mean_service().as_secs_f64() * 1e3,
             per_shard.join(" "),

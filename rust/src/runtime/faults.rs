@@ -1,0 +1,403 @@
+//! Deterministic fault injection for the eval pool — the seeded,
+//! replayable layer every straggler/crash scenario in the chaos tests and
+//! CI is built on.  No timing-dependent failure simulation anywhere: which
+//! chunk faults is a pure function of `(seed, decision index)`, so a
+//! failing run replays exactly from its spec string.
+//!
+//! A [`FaultSpec`] is parsed from `SEED:KIND:RATE` (the `repro shard-serve
+//! --fault-spec` syntax) and compiled into a [`FaultPlan`], which is
+//! injectable at three levels:
+//!
+//!  * **local shard flows** — [`FaultPlan::wrap_flow`] wraps the closure an
+//!    [`crate::runtime::EvalService`] shard runs;
+//!  * **remote feeders** — `RemoteShard::with_fault_plan` perturbs the
+//!    client side of a TCP shard connection;
+//!  * **shard servers** — `serve_shard_with_faults` perturbs the server's
+//!    chunk handling (`repro shard-serve --fault-spec`), which is how CI
+//!    wedges a *real process* deterministically.
+//!
+//! Fault kinds ([`FaultKind`]):
+//!
+//!  * `delay` — sleep [`FaultPlan::with_delay`] before evaluating (a slow
+//!    shard / straggler);
+//!  * `wedge` — block on an internal gate until [`FaultPlan::release_wedges`]
+//!    (a hung shard: the canonical hedging scenario.  In-process tests MUST
+//!    release before dropping the service, whose `Drop` joins workers);
+//!  * `drop` — the chunk's reply is lost (local flows retire; servers
+//!    swallow the reply so the client's read times out);
+//!  * `disconnect` — the transport dies (local flows retire; servers close
+//!    the connection after the eval).
+//!
+//! Faults are injected *around* evaluations, never inside them: evaluation
+//! results stay pure functions of the payload, which is what lets the chaos
+//! tests pin archive `content_hash` equality under every fault mix.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::ShardFlow;
+use crate::util::Rng;
+
+/// Default sleep for [`FaultKind::Delay`] faults — long enough to register
+/// as a straggler against micro-eval p50s, short enough for tight tests.
+pub const DEFAULT_FAULT_DELAY: Duration = Duration::from_millis(30);
+
+/// What a triggered fault does to the chunk it hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Sleep before evaluating (straggler).
+    Delay,
+    /// Block on the plan's gate until [`FaultPlan::release_wedges`] (hang).
+    Wedge,
+    /// Lose the reply: local flows retire, servers never answer the chunk.
+    Drop,
+    /// Kill the transport: local flows retire, servers close the connection.
+    Disconnect,
+}
+
+impl FaultKind {
+    /// Parse the `KIND` field of a `--fault-spec` (case-insensitive).
+    pub fn parse(s: &str) -> crate::Result<FaultKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "delay" => Ok(FaultKind::Delay),
+            "wedge" => Ok(FaultKind::Wedge),
+            "drop" => Ok(FaultKind::Drop),
+            "disconnect" => Ok(FaultKind::Disconnect),
+            other => Err(eyre::anyhow!(
+                "unknown fault kind `{other}` (expected delay|wedge|drop|disconnect)"
+            )),
+        }
+    }
+
+    /// The spec-string name of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Delay => "delay",
+            FaultKind::Wedge => "wedge",
+            FaultKind::Drop => "drop",
+            FaultKind::Disconnect => "disconnect",
+        }
+    }
+}
+
+/// Parsed `SEED:KIND:RATE` fault spec (e.g. `7:wedge:1.0`): which kind of
+/// fault to inject, how often, and the seed that makes every decision
+/// replayable.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Seed for the per-decision RNG — same seed, same fault sequence.
+    pub seed: u64,
+    /// What a triggered fault does.
+    pub kind: FaultKind,
+    /// Probability in `[0, 1]` that any given decision triggers.
+    pub rate: f64,
+}
+
+impl FaultSpec {
+    /// Parse `SEED:KIND:RATE`, validating each field.
+    pub fn parse(s: &str) -> crate::Result<FaultSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() != 3 {
+            eyre::bail!("fault spec `{s}` is not SEED:KIND:RATE (e.g. 7:wedge:1.0)");
+        }
+        let seed: u64 = parts[0]
+            .parse()
+            .map_err(|_| eyre::anyhow!("fault spec seed `{}` is not a u64", parts[0]))?;
+        let kind = FaultKind::parse(parts[1])?;
+        let rate: f64 = parts[2]
+            .parse()
+            .map_err(|_| eyre::anyhow!("fault spec rate `{}` is not a float", parts[2]))?;
+        if !(0.0..=1.0).contains(&rate) {
+            eyre::bail!("fault spec rate {rate} must be within [0, 1]");
+        }
+        Ok(FaultSpec { seed, kind, rate })
+    }
+
+    /// Compile into an injectable plan.
+    pub fn plan(&self) -> FaultPlan {
+        FaultPlan::new(*self)
+    }
+
+    /// Render back to the `SEED:KIND:RATE` string (replay instructions).
+    pub fn to_spec_string(&self) -> String {
+        format!("{}:{}:{}", self.seed, self.kind.name(), self.rate)
+    }
+}
+
+/// Decision counters behind the plan's lock.
+#[derive(Default)]
+struct PlanState {
+    /// Decisions made so far — the index into the seeded sequence.
+    decisions: u64,
+    /// Decisions that triggered a fault.
+    injected: u64,
+}
+
+/// A compiled, seeded fault sequence.  Every call site that *could* fault
+/// asks [`FaultPlan::decide`]; decision `k` triggers iff
+/// `Rng::new(seed ^ mix(k)).f64() < rate`, so the fault pattern is a pure
+/// function of the spec and the decision order — independent of wall-clock,
+/// scheduling, or machine.
+///
+/// Wedge gate: all `Wedge` faults block on one internal gate until
+/// [`FaultPlan::release_wedges`] opens it (idempotent, and permanent — once
+/// released, later wedge decisions pass straight through).  In-process
+/// tests must release before dropping the `EvalService`, whose `Drop` joins
+/// worker threads.
+pub struct FaultPlan {
+    spec: FaultSpec,
+    delay: Duration,
+    /// Stop injecting after this many faults (`None` = unbounded).  The
+    /// deterministic-single-crash knob for tests.
+    max_faults: Option<u64>,
+    state: Mutex<PlanState>,
+    wedge_open: Mutex<bool>,
+    wedge_cv: Condvar,
+}
+
+impl FaultPlan {
+    /// Plan from a spec, with the default delay and no fault cap.
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            spec,
+            delay: DEFAULT_FAULT_DELAY,
+            max_faults: None,
+            state: Mutex::new(PlanState::default()),
+            wedge_open: Mutex::new(false),
+            wedge_cv: Condvar::new(),
+        }
+    }
+
+    /// Override the sleep applied by [`FaultKind::Delay`] faults.
+    pub fn with_delay(mut self, delay: Duration) -> Self {
+        self.delay = delay;
+        self
+    }
+
+    /// Cap the number of injected faults (e.g. 1 = exactly one
+    /// deterministic crash, every later decision passes clean).
+    pub fn with_max_faults(mut self, n: u64) -> Self {
+        self.max_faults = Some(n);
+        self
+    }
+
+    /// The spec this plan was compiled from.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// The sleep applied by delay faults.
+    pub fn delay(&self) -> Duration {
+        self.delay
+    }
+
+    /// Decisions made so far.
+    pub fn decisions(&self) -> u64 {
+        self.state.lock().unwrap().decisions
+    }
+
+    /// Faults actually injected so far.
+    pub fn injected(&self) -> u64 {
+        self.state.lock().unwrap().injected
+    }
+
+    /// One seeded decision: `Some(kind)` if this call site should fault.
+    /// Decision `k` of a plan is the same everywhere, every run.
+    pub fn decide(&self) -> Option<FaultKind> {
+        let mut st = self.state.lock().unwrap();
+        let k = st.decisions;
+        st.decisions += 1;
+        if let Some(max) = self.max_faults {
+            if st.injected >= max {
+                return None;
+            }
+        }
+        // Fresh RNG per decision index: the sequence is random-access, so
+        // concurrent deciders (several shard flows sharing one plan) still
+        // see a deterministic *set* of triggered indices.
+        let mix = k.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        let hit = Rng::new(self.spec.seed ^ mix).f64() < self.spec.rate;
+        if hit {
+            st.injected += 1;
+            Some(self.spec.kind)
+        } else {
+            None
+        }
+    }
+
+    /// Block until [`FaultPlan::release_wedges`] — what a `Wedge` fault does.
+    pub fn hold_wedge(&self) {
+        let mut open = self.wedge_open.lock().unwrap();
+        while !*open {
+            open = self.wedge_cv.wait(open).unwrap();
+        }
+    }
+
+    /// Open the wedge gate (idempotent, permanent): every currently-wedged
+    /// evaluation resumes and later wedge decisions pass straight through.
+    pub fn release_wedges(&self) {
+        *self.wedge_open.lock().unwrap() = true;
+        self.wedge_cv.notify_all();
+    }
+
+    /// Wrap a shard flow closure with this plan.  Triggered faults act
+    /// *around* the inner evaluation:
+    ///
+    ///  * `Delay` — sleep, then evaluate normally;
+    ///  * `Wedge` — block on the gate, then evaluate (by the time the gate
+    ///    opens the chunk has usually been hedged or requeued elsewhere, and
+    ///    the late reply is discarded by chunk id);
+    ///  * `Drop` / `Disconnect` — retire the shard without answering (the
+    ///    local analogue of a lost reply / dead transport), requeueing the
+    ///    in-flight chunk onto the surviving shards.
+    pub fn wrap_flow<Q, A>(
+        self: &std::sync::Arc<Self>,
+        mut inner: Box<dyn FnMut(Q) -> ShardFlow<A>>,
+    ) -> Box<dyn FnMut(Q) -> ShardFlow<A>> {
+        let plan = self.clone();
+        Box::new(move |q: Q| match plan.decide() {
+            None => inner(q),
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(plan.delay);
+                inner(q)
+            }
+            Some(FaultKind::Wedge) => {
+                plan.hold_wedge();
+                inner(q)
+            }
+            Some(FaultKind::Drop) => ShardFlow::Retire {
+                reason: "fault injection: reply dropped".into(),
+            },
+            Some(FaultKind::Disconnect) => ShardFlow::Retire {
+                reason: "fault injection: transport disconnected".into(),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let spec = FaultSpec::parse("7:wedge:1.0").unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.kind, FaultKind::Wedge);
+        assert!((spec.rate - 1.0).abs() < 1e-12);
+        assert_eq!(spec.to_spec_string(), "7:wedge:1");
+        let spec = FaultSpec::parse(&spec.to_spec_string()).unwrap();
+        assert_eq!(spec.kind, FaultKind::Wedge);
+
+        for kind in ["delay", "drop", "disconnect", "WEDGE"] {
+            assert!(FaultSpec::parse(&format!("0:{kind}:0.5")).is_ok(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_cleanly() {
+        for bad in [
+            "", "7:wedge", "7:wedge:1.0:extra", "x:wedge:1.0", "7:fizzle:1.0",
+            "7:wedge:nan", "7:wedge:1.5", "7:wedge:-0.1",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed() {
+        let seq = |seed: u64| -> Vec<bool> {
+            let plan = FaultSpec { seed, kind: FaultKind::Drop, rate: 0.4 }.plan();
+            (0..64).map(|_| plan.decide().is_some()).collect()
+        };
+        assert_eq!(seq(17), seq(17), "same seed must replay identically");
+        assert_ne!(seq(17), seq(18), "different seeds must differ somewhere");
+        let hits = seq(17).iter().filter(|&&h| h).count();
+        assert!(
+            (8..=44).contains(&hits),
+            "rate 0.4 over 64 draws should land near 26, got {hits}"
+        );
+    }
+
+    #[test]
+    fn rate_bounds_are_exact() {
+        let never = FaultSpec { seed: 3, kind: FaultKind::Delay, rate: 0.0 }.plan();
+        assert!((0..128).all(|_| never.decide().is_none()));
+        let always = FaultSpec { seed: 3, kind: FaultKind::Delay, rate: 1.0 }.plan();
+        assert!((0..128).all(|_| always.decide() == Some(FaultKind::Delay)));
+        assert_eq!(always.decisions(), 128);
+        assert_eq!(always.injected(), 128);
+    }
+
+    #[test]
+    fn max_faults_caps_the_injection() {
+        let plan = FaultSpec { seed: 9, kind: FaultKind::Disconnect, rate: 1.0 }
+            .plan()
+            .with_max_faults(1);
+        let hits: Vec<bool> = (0..16).map(|_| plan.decide().is_some()).collect();
+        assert_eq!(hits.iter().filter(|&&h| h).count(), 1);
+        assert!(hits[0], "rate 1.0 must fire on the first decision");
+        assert_eq!(plan.injected(), 1);
+        assert_eq!(plan.decisions(), 16);
+    }
+
+    #[test]
+    fn wedge_gate_blocks_until_released_then_stays_open() {
+        let plan = Arc::new(
+            FaultSpec { seed: 1, kind: FaultKind::Wedge, rate: 1.0 }.plan(),
+        );
+        let p = plan.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || {
+            p.hold_wedge();
+            tx.send(()).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(20)).is_err(),
+            "gate must hold before release"
+        );
+        plan.release_wedges();
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("release must unblock the wedged thread");
+        h.join().unwrap();
+        // permanent: a post-release hold returns immediately
+        plan.hold_wedge();
+    }
+
+    #[test]
+    fn wrapped_flow_injects_retires_and_passes_clean_decisions_through() {
+        let plan = Arc::new(
+            FaultSpec { seed: 5, kind: FaultKind::Drop, rate: 1.0 }
+                .plan()
+                .with_max_faults(1),
+        );
+        let mut flow = plan.wrap_flow(Box::new(|x: u32| ShardFlow::Reply(x * 2)));
+        match flow(7) {
+            ShardFlow::Retire { reason } => {
+                assert!(reason.contains("fault injection"), "got: {reason}")
+            }
+            ShardFlow::Reply(_) => panic!("first decision at rate 1.0 must fault"),
+        }
+        // the cap is exhausted: subsequent chunks evaluate normally
+        match flow(7) {
+            ShardFlow::Reply(v) => assert_eq!(v, 14),
+            ShardFlow::Retire { reason } => panic!("unexpected retire: {reason}"),
+        }
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn delay_fault_still_returns_the_pure_answer() {
+        let plan = Arc::new(
+            FaultSpec { seed: 2, kind: FaultKind::Delay, rate: 1.0 }
+                .plan()
+                .with_delay(Duration::from_millis(1)),
+        );
+        let mut flow = plan.wrap_flow(Box::new(|x: u32| ShardFlow::Reply(x + 1)));
+        match flow(41) {
+            ShardFlow::Reply(v) => assert_eq!(v, 42, "delay must not change results"),
+            ShardFlow::Retire { reason } => panic!("unexpected retire: {reason}"),
+        }
+    }
+}

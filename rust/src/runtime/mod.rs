@@ -26,13 +26,17 @@
 //!    and the scoring hot loop takes that lock once per chunk;
 //!  * python never runs here.
 
+pub mod faults;
 pub mod remote;
 pub mod serve;
 mod service;
 pub mod wire;
 
+pub use faults::{FaultKind, FaultPlan, FaultSpec};
 pub use serve::{ContinuousBatcher, SchedulerOptions, SchedulerStats};
-pub use service::{EvalService, ServiceStats, ShardFlow, ShardStats};
+pub use service::{
+    EvalService, HedgePolicy, ServiceStats, ShardFlow, ShardStats, DEFAULT_HEDGE_FACTOR,
+};
 
 use crate::data::Manifest;
 use crate::model::WeightStore;

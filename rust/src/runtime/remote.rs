@@ -16,9 +16,10 @@
 
 use std::io::{self, Read};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::faults::{FaultKind, FaultPlan};
 use super::wire::{read_frame, write_frame, WireMsg};
 use super::ShardFlow;
 use crate::coordinator::Config;
@@ -80,6 +81,9 @@ pub struct RemoteShard {
     /// connect-time `policy`: this bounds how long an *accepted* chunk may
     /// go unanswered before the call fails as a transport error.
     chunk_timeout: Option<Duration>,
+    /// Deterministic client-side fault injection (tests/chaos only): one
+    /// seeded decision per `call`, perturbing this feeder's transport.
+    fault_plan: Option<Arc<FaultPlan>>,
     stream: Option<TcpStream>,
     next_id: u64,
 }
@@ -90,6 +94,7 @@ impl RemoteShard {
             addr: addr.into(),
             policy,
             chunk_timeout: Some(DEFAULT_CHUNK_TIMEOUT),
+            fault_plan: None,
             stream: None,
             next_id: 0,
         }
@@ -99,6 +104,16 @@ impl RemoteShard {
     /// Applies from the next (re)connect — call before the first `call`.
     pub fn with_chunk_timeout(mut self, timeout: Option<Duration>) -> Self {
         self.chunk_timeout = timeout;
+        self
+    }
+
+    /// Attach a seeded [`FaultPlan`] to this client.  Each `call` draws one
+    /// decision; a triggered fault perturbs the *transport*, never the
+    /// payload: `Delay` sleeps before sending, `Wedge` blocks on the plan's
+    /// gate, `Drop` fails the call as a timeout without touching the wire,
+    /// `Disconnect` kills the stream and fails as a connection reset.
+    pub fn with_fault_plan(mut self, plan: Option<Arc<FaultPlan>>) -> Self {
+        self.fault_plan = plan;
         self
     }
 
@@ -154,6 +169,26 @@ impl RemoteShard {
         &mut self,
         genes: &[Vec<u16>],
     ) -> io::Result<std::result::Result<Vec<f32>, String>> {
+        if let Some(plan) = &self.fault_plan {
+            match plan.decide() {
+                None => {}
+                Some(FaultKind::Delay) => std::thread::sleep(plan.delay()),
+                Some(FaultKind::Wedge) => plan.hold_wedge(),
+                Some(FaultKind::Drop) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "fault injection: reply dropped",
+                    ));
+                }
+                Some(FaultKind::Disconnect) => {
+                    self.stream = None;
+                    return Err(io::Error::new(
+                        io::ErrorKind::ConnectionReset,
+                        "fault injection: transport disconnected",
+                    ));
+                }
+            }
+        }
         // One reconnect-and-resend cycle beyond the current connection:
         // either the existing stream works, or we rebuild it once (with the
         // policy's full backoff schedule) and resend the identical chunk.
@@ -389,6 +424,35 @@ pub fn serve_shard_capped<F>(
 where
     F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
 {
+    serve_shard_with_faults(listener, n_layers, max_conns, live_cap, None, eval)
+}
+
+/// [`serve_shard_capped`] with deterministic server-side fault injection —
+/// the loop behind `repro shard-serve --fault-spec SEED:KIND:RATE`.  One
+/// seeded decision is drawn per *chunk* (stats probes are never faulted);
+/// a triggered fault perturbs the server's handling of that chunk:
+///
+///  * `Delay` — sleep before taking the eval lock (slow shard);
+///  * `Wedge` — block on the plan's gate *before* the eval lock, so stats
+///    probes keep answering and other connections keep evaluating while
+///    this chunk hangs — exactly a wedged device, not a poisoned server;
+///  * `Drop` — evaluate, then swallow the reply (the client's read times
+///    out; connection stays open);
+///  * `Disconnect` — evaluate, then close the connection without replying.
+///
+/// Faults never change evaluation results — the reply, when one is sent,
+/// is bit-identical to the fault-free one.
+pub fn serve_shard_with_faults<F>(
+    listener: TcpListener,
+    n_layers: u64,
+    max_conns: Option<usize>,
+    live_cap: usize,
+    fault_plan: Option<Arc<FaultPlan>>,
+    eval: F,
+) -> crate::Result<()>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
+{
     let live_cap = live_cap.max(1);
     let eval = Mutex::new(eval);
     let stats = Mutex::new(ServeStats::default());
@@ -419,8 +483,9 @@ where
             eprintln!("[shard] connection from {peer}");
             stats.lock().unwrap().conns += 1;
             let (eval, stats, live) = (&eval, &stats, &live);
+            let plan = fault_plan.clone();
             scope.spawn(move || {
-                if let Err(e) = serve_conn(stream, n_layers, eval, stats) {
+                if let Err(e) = serve_conn(stream, n_layers, eval, stats, plan) {
                     eprintln!("[shard] connection {peer} ended with error: {e}");
                 } else {
                     eprintln!("[shard] connection {peer} closed");
@@ -445,6 +510,7 @@ fn serve_conn<F>(
     n_layers: u64,
     eval: &Mutex<F>,
     stats: &Mutex<ServeStats>,
+    fault_plan: Option<Arc<FaultPlan>>,
 ) -> crate::Result<()>
 where
     F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send,
@@ -457,8 +523,23 @@ where
             None => return Ok(()), // clean EOF: coordinator hung up
             Some(m) => m,
         };
+        // One fault decision per chunk; pre-eval kinds act here, post-eval
+        // kinds (Drop/Disconnect) are deferred until the reply is built so
+        // the eval itself (and its stats) stay identical to the clean path.
+        let mut post_fault = None;
         let reply = match msg {
             WireMsg::Chunk { id, genes } => {
+                if let Some(plan) = fault_plan.as_ref() {
+                    match plan.decide() {
+                        None => {}
+                        Some(FaultKind::Delay) => std::thread::sleep(plan.delay()),
+                        // Hold BEFORE the eval lock: a wedged chunk must
+                        // look like a hung device, while stats probes and
+                        // other connections keep working.
+                        Some(FaultKind::Wedge) => plan.hold_wedge(),
+                        Some(kind) => post_fault = Some(kind),
+                    }
+                }
                 // Serialize evals across connections (one device behind the
                 // shard); busy time is measured inside the lock so it stays
                 // pure eval wall-clock, not lock contention.
@@ -504,6 +585,14 @@ where
                 eyre::bail!("unexpected client frame {other:?}");
             }
         };
+        match post_fault {
+            // Swallow the reply: the client's chunk read times out, but the
+            // connection stays open for its reconnect-and-resend.
+            Some(FaultKind::Drop) => continue,
+            // Kill the connection without replying.
+            Some(FaultKind::Disconnect) => return Ok(()),
+            _ => {}
+        }
         write_frame(&mut stream, &reply)?;
     }
 }
@@ -521,10 +610,31 @@ pub fn spawn_test_server<F>(
 where
     F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send + 'static,
 {
+    spawn_test_server_with_faults(n_layers, max_conns, None, eval)
+}
+
+/// [`spawn_test_server`] with a server-side [`FaultPlan`] — the in-process
+/// analogue of `repro shard-serve --fault-spec` for chaos tests.
+pub fn spawn_test_server_with_faults<F>(
+    n_layers: u64,
+    max_conns: Option<usize>,
+    fault_plan: Option<Arc<FaultPlan>>,
+    eval: F,
+) -> crate::Result<String>
+where
+    F: FnMut(&[Vec<u16>]) -> crate::Result<Vec<f32>> + Send + 'static,
+{
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     std::thread::spawn(move || {
-        if let Err(e) = serve_shard(listener, n_layers, max_conns, eval) {
+        if let Err(e) = serve_shard_with_faults(
+            listener,
+            n_layers,
+            max_conns,
+            DEFAULT_LIVE_CONNS,
+            fault_plan,
+            eval,
+        ) {
             eprintln!("[shard] server loop failed: {e}");
         }
     });
@@ -699,6 +809,70 @@ mod tests {
             "timed out in {:?}, should be ~100ms",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn server_drop_fault_times_out_client_and_resend_succeeds() {
+        use super::super::faults::FaultSpec;
+        // Exactly one Drop fault: the first chunk's reply is swallowed, the
+        // client's read times out, it reconnects and the resend scores
+        // normally — all seeded, no timing dependence beyond the timeout.
+        let plan = Arc::new(
+            FaultSpec { seed: 11, kind: FaultKind::Drop, rate: 1.0 }
+                .plan()
+                .with_max_faults(1),
+        );
+        let addr =
+            spawn_test_server_with_faults(0, Some(2), Some(plan.clone()), double).unwrap();
+        let mut shard = RemoteShard::new(addr, RetryPolicy::default())
+            .with_chunk_timeout(Some(Duration::from_millis(50)));
+        let t0 = Instant::now();
+        let scores = shard.call(&[vec![3u16]]).unwrap().unwrap();
+        assert_eq!(scores, vec![6.0], "resend must score bit-identically");
+        assert_eq!(plan.injected(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "one timeout window + resend, got {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn server_disconnect_fault_closes_conn_and_resend_succeeds() {
+        use super::super::faults::FaultSpec;
+        let plan = Arc::new(
+            FaultSpec { seed: 4, kind: FaultKind::Disconnect, rate: 1.0 }
+                .plan()
+                .with_max_faults(1),
+        );
+        let addr =
+            spawn_test_server_with_faults(0, Some(2), Some(plan.clone()), double).unwrap();
+        let mut shard = RemoteShard::new(addr, RetryPolicy::default());
+        // First chunk: server evaluates, then closes without replying; the
+        // client sees EOF, reconnects, resends, and the clean retry scores.
+        let scores = shard.call(&[vec![5u16]]).unwrap().unwrap();
+        assert_eq!(scores, vec![10.0]);
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn client_fault_plan_perturbs_transport_not_payload() {
+        use super::super::faults::FaultSpec;
+        let addr = spawn_test_server(0, Some(1), double).unwrap();
+        // Drop: the call fails as a timeout without touching the wire...
+        let plan = Arc::new(
+            FaultSpec { seed: 2, kind: FaultKind::Drop, rate: 1.0 }
+                .plan()
+                .with_max_faults(1),
+        );
+        let mut shard = RemoteShard::new(addr, RetryPolicy::default())
+            .with_fault_plan(Some(plan.clone()));
+        let err = shard.call(&[vec![1u16]]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        // ...and once the cap is exhausted the same client scores normally.
+        let scores = shard.call(&[vec![1u16, 2]]).unwrap().unwrap();
+        assert_eq!(scores, vec![6.0]);
+        assert_eq!(plan.injected(), 1);
     }
 
     #[test]

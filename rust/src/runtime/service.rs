@@ -13,28 +13,109 @@
 //!    process-wide shared state, or (via [`EvalService::spawn_flow`]) a TCP
 //!    connection to a remote shard server speaking the
 //!    [`crate::runtime::wire`] protocol;
-//!  * every request carries its own reply channel, and `call_batch` collects
-//!    replies in submission order — results are therefore deterministically
-//!    ordered and bit-identical regardless of worker count, **provided** the
-//!    evaluation closure is a pure function of the payload (seed any
-//!    randomness per-candidate from the payload, never from shard state).
+//!  * every request carries a **chunk id** minted at submission.  The id
+//!    keys an in-flight registry (payload snapshot + reply sender + age),
+//!    which makes reply delivery idempotent: however many copies of a chunk
+//!    end up evaluated — requeues after a shard retirement, speculative
+//!    hedge duplicates — exactly one reply reaches the caller, and
+//!    `call_batch` reassembles in submission order.  Results are therefore
+//!    deterministically ordered and bit-identical regardless of worker
+//!    count, **provided** the evaluation closure is a pure function of the
+//!    payload (seed any randomness per-candidate from the payload, never
+//!    from shard state).
+//!
+//! Hedged dispatch ([`HedgePolicy`]): an idle shard watches the in-flight
+//! registry.  When a chunk has been running longer than
+//! `hedge_factor × p50` of recently completed chunks (floored by
+//! [`HedgePolicy::floor`] so micro-evals don't hedge-storm), the idle shard
+//! claims a **speculative duplicate** and evaluates it itself — first reply
+//! wins, the loser is discarded by chunk id.  Evaluations are pure, so
+//! either copy is bitwise-identical and archives never depend on who won.
+//! A chunk may be re-hedged if its previous hedge also stalls (each hedge
+//! re-arms the age clock), so one wedged shard can never absorb the only
+//! duplicate.  Counters: `hedged_dispatched` / `hedged_won` /
+//! `hedged_wasted` on [`ServiceStats`], plus the rolling `latency_p50`
+//! estimate the trigger uses.
 //!
 //! Failure model: a shard whose closure panics, or that asks to retire
 //! ([`ShardFlow::Retire`] — remote transports do this when a connection
 //! dies beyond retry), leaves the pool **without poisoning it**.  Its
-//! in-flight request is requeued onto the shared FIFO (evaluations are pure
-//! functions of the payload, so a re-run on another shard returns the
-//! identical answer) and the pool degrades to fewer workers.  Only when the
-//! *last* shard retires do pending requests fail — surfaced as `Err` from
-//! [`EvalService::call`] / [`EvalService::call_batch`], never a panic.
+//! in-flight request is requeued onto the shared FIFO *unless the chunk was
+//! already delivered by another copy* (the requeue-after-delivery
+//! double-count this registry exists to prevent; suppressed requeues count
+//! as `requeued_duplicates`).  Only when the *last* shard retires do
+//! pending requests fail — surfaced as `Err` from [`EvalService::call`] /
+//! [`EvalService::call_batch`], never a panic.
+//!
+//! Deterministic fault scenarios (wedged / delayed / crashed shards) are
+//! exercised through [`crate::runtime::faults`] rather than timing hacks.
 //!
 //! Generic over request/response so tests can exercise the queueing logic
 //! without PJRT.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Completed-chunk service times kept for the rolling p50 estimate.
+const LATENCY_WINDOW: usize = 64;
+
+/// Default `--hedge-factor`: hedge a chunk once it has been in flight for
+/// 4× the rolling p50 service time (0 disables hedging).
+pub const DEFAULT_HEDGE_FACTOR: f64 = 4.0;
+
+/// Default floor under the hedge threshold: never hedge a chunk younger
+/// than this, whatever the p50 says (micro-evals would otherwise duplicate
+/// constantly for no win).
+pub const DEFAULT_HEDGE_FLOOR: Duration = Duration::from_millis(25);
+
+/// When an idle shard speculatively re-dispatches a straggling chunk.
+///
+/// The trigger is `age > max(floor, factor × p50)` where `p50` is the
+/// rolling median service time of recently completed chunks and `age` is
+/// measured from the chunk's (re-)dispatch.  `factor == 0` disables
+/// hedging entirely (the worker loop then blocks in plain `recv`, zero
+/// overhead).
+#[derive(Clone, Copy, Debug)]
+pub struct HedgePolicy {
+    /// Multiple of the rolling p50 a chunk must exceed before an idle
+    /// shard duplicates it (`--hedge-factor`; 0 = off).
+    pub factor: f64,
+    /// Minimum in-flight age before hedging, independent of the p50.
+    pub floor: Duration,
+}
+
+impl Default for HedgePolicy {
+    fn default() -> Self {
+        HedgePolicy { factor: DEFAULT_HEDGE_FACTOR, floor: DEFAULT_HEDGE_FLOOR }
+    }
+}
+
+impl HedgePolicy {
+    /// Hedging off: the worker loop degenerates to the plain blocking
+    /// FIFO (the pre-hedging behavior, bit for bit).
+    pub fn disabled() -> Self {
+        HedgePolicy { factor: 0.0, floor: DEFAULT_HEDGE_FLOOR }
+    }
+
+    /// Policy from a `--hedge-factor` value (0 disables).
+    pub fn from_factor(factor: f64) -> Self {
+        HedgePolicy { factor, ..HedgePolicy::default() }
+    }
+
+    /// Whether hedging is active.
+    pub fn enabled(&self) -> bool {
+        self.factor > 0.0
+    }
+
+    /// In-flight age beyond which a chunk becomes a hedge candidate.
+    fn threshold(&self, p50: Duration) -> Duration {
+        let scaled = Duration::from_secs_f64(p50.as_secs_f64() * self.factor);
+        scaled.max(self.floor)
+    }
+}
 
 /// Per-shard accounting: how many requests the shard served and how long it
 /// spent serving them (busy time / wall time = utilization).
@@ -42,7 +123,9 @@ use std::time::{Duration, Instant};
 pub struct ShardStats {
     /// Human-readable shard label (`local#N`, or the remote address).
     pub label: String,
-    /// Requests this shard served.
+    /// Requests this shard served (winning replies only; discarded
+    /// duplicate replies count toward `busy` but not here, so the
+    /// per-shard sum always equals [`ServiceStats::completed`]).
     pub completed: u64,
     /// Wall-clock this shard spent inside its evaluation closure.
     pub busy: Duration,
@@ -51,14 +134,34 @@ pub struct ShardStats {
 }
 
 /// Queue/latency accounting, aggregated across shards.
+///
+/// Copy conservation: every chunk copy that resolves — delivered to the
+/// caller, or discarded as a duplicate — increments `dispatched` and
+/// exactly one of `completed` / `hedged_wasted` / `requeued_duplicates`,
+/// so `completed == dispatched - hedged_wasted - requeued_duplicates`
+/// holds at every quiescent point (property-tested).
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
-    /// Requests submitted to the shared queue.
+    /// Requests submitted to the shared queue (unique chunks).
     pub submitted: u64,
-    /// Requests served (across all shards).
+    /// Chunk copies that resolved (delivered or discarded; see above).
+    pub dispatched: u64,
+    /// Requests served — unique replies delivered to callers.
     pub completed: u64,
     /// Requests put back on the queue after their shard retired mid-flight.
     pub requeued: u64,
+    /// Speculative duplicates claimed by idle shards ([`HedgePolicy`]).
+    pub hedged_dispatched: u64,
+    /// Chunks whose winning reply came from a speculative copy.
+    pub hedged_won: u64,
+    /// Duplicate replies discarded on hedged chunks (the losing copy).
+    pub hedged_wasted: u64,
+    /// Requeue-path duplicates suppressed because the chunk had already
+    /// been delivered (the double-count bug this registry prevents).
+    pub requeued_duplicates: u64,
+    /// Rolling median service time of recently completed chunks — the
+    /// latency estimate the hedge trigger compares in-flight age against.
+    pub latency_p50: Duration,
     /// Summed queue wait (enqueue → a shard picked the request up).
     pub total_queue_wait: Duration,
     /// Summed service time (inside the evaluation closures).
@@ -113,23 +216,98 @@ pub enum ShardFlow<A> {
     Retire { reason: String },
 }
 
-struct Request<Q, A> {
+/// What rides the FIFO: just the chunk id.  Payload and reply sender live
+/// in the in-flight registry, looked up at pickup — which is what makes
+/// delivery idempotent across requeued and speculative copies.
+struct Request {
+    id: u64,
+}
+
+/// What a worker picked up: a queued copy off the FIFO, or a speculative
+/// hedge copy claimed straight from the in-flight registry (hedge copies
+/// never ride the FIFO — the claiming shard evaluates them itself, payload
+/// snapshot cloned under the registry lock at claim time).
+enum Work<Q> {
+    Queued(u64),
+    Hedge(u64, Q),
+}
+
+/// Registry entry for one submitted chunk: the payload snapshot every
+/// copy evaluates, the caller's reply sender, and the age/copy state the
+/// hedge trigger and the idempotent delivery path read.
+struct Track<Q, A> {
     payload: Q,
-    enqueued: Instant,
     reply: mpsc::Sender<A>,
+    /// (Re-)enqueue time of the queued copy — queue-wait accounting.
+    enqueued: Instant,
+    /// When a shard last started evaluating a copy (None while queued).
+    started: Option<Instant>,
+    /// When the chunk was last hedged (re-arms the age clock so a stalled
+    /// hedge can itself be re-hedged).
+    last_hedge: Option<Instant>,
+    /// Speculative copies claimed so far.
+    hedges: u32,
+    /// Copies currently queued or evaluating.  The entry is dropped once
+    /// the chunk is delivered and the last copy resolves.
+    active: u32,
+    delivered: bool,
+}
+
+/// Stats + in-flight registry + latency window behind one lock.  Lock
+/// order: the FIFO receiver mutex (if held) is always taken *before* this
+/// one; nothing acquires the receiver while holding this.
+struct Shared<Q, A> {
+    stats: ServiceStats,
+    tracks: HashMap<u64, Track<Q, A>>,
+    lat: VecDeque<Duration>,
+}
+
+impl<Q, A> Shared<Q, A> {
+    /// Record a completed service time and refresh the rolling p50.
+    fn push_latency(&mut self, service: Duration) {
+        if self.lat.len() == LATENCY_WINDOW {
+            self.lat.pop_front();
+        }
+        self.lat.push_back(service);
+        let mut sorted: Vec<Duration> = self.lat.iter().copied().collect();
+        sorted.sort_unstable();
+        self.stats.latency_p50 = sorted[sorted.len() / 2];
+    }
+
+    /// Drop one copy of `id`, removing the entry once the chunk is
+    /// delivered and no copies remain in flight.
+    fn release_copy(&mut self, id: u64) {
+        if let Some(t) = self.tracks.get_mut(&id) {
+            t.active = t.active.saturating_sub(1);
+            if t.delivered && t.active == 0 {
+                self.tracks.remove(&id);
+            }
+        }
+    }
+}
+
+/// What an idle shard found when it polled the in-flight registry.
+enum HedgePoll<Q> {
+    /// A straggler was claimed: evaluate this speculative copy now.
+    Claim(u64, Q),
+    /// Nothing due yet; the earliest candidate matures in this long.
+    Wait(Duration),
+    /// Nothing in flight to watch; block on the queue.
+    Idle,
 }
 
 /// Sender half shared with the workers so a retiring shard can requeue its
 /// in-flight request.  `Drop` clears it (alongside the caller-side sender)
 /// so the channel actually closes at shutdown.
-type SharedTx<Q, A> = Arc<Mutex<Option<mpsc::Sender<Request<Q, A>>>>>;
+type SharedTx = Arc<Mutex<Option<mpsc::Sender<Request>>>>;
 
 /// Handle to the worker pool.  Dropping it shuts every worker down (after
 /// the queue drains).
 pub struct EvalService<Q: Send + 'static, A: Send + 'static> {
-    tx: mpsc::Sender<Request<Q, A>>,
-    shared_tx: SharedTx<Q, A>,
-    stats: Arc<Mutex<ServiceStats>>,
+    tx: mpsc::Sender<Request>,
+    shared_tx: SharedTx,
+    shared: Arc<Mutex<Shared<Q, A>>>,
+    next_id: AtomicU64,
     alive: Arc<AtomicUsize>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
@@ -157,8 +335,19 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
 
     /// Spawn `workers` shards.  `builder(shard_index)` runs once *on each
     /// worker thread* and constructs that shard's evaluation closure there
-    /// (confining non-`Send` runtime state to its shard).
+    /// (confining non-`Send` runtime state to its shard).  Hedging is off;
+    /// see [`EvalService::spawn_sharded_with`].
     pub fn spawn_sharded<B, F>(workers: usize, builder: B) -> Self
+    where
+        Q: Clone,
+        B: Fn(usize) -> F + Send + Sync + 'static,
+        F: FnMut(Q) -> A + 'static,
+    {
+        Self::spawn_sharded_with(workers, builder, HedgePolicy::disabled())
+    }
+
+    /// [`EvalService::spawn_sharded`] with an explicit [`HedgePolicy`].
+    pub fn spawn_sharded_with<B, F>(workers: usize, builder: B, policy: HedgePolicy) -> Self
     where
         Q: Clone,
         B: Fn(usize) -> F + Send + Sync + 'static,
@@ -166,21 +355,35 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
     {
         let n = workers.max(1);
         let labels = (0..n).map(|i| format!("local#{i}")).collect();
-        Self::spawn_flow(labels, move |shard| {
-            let mut eval = builder(shard);
-            Box::new(move |q: Q| ShardFlow::Reply(eval(q)))
-        })
+        Self::spawn_flow_with(
+            labels,
+            move |shard| {
+                let mut eval = builder(shard);
+                Box::new(move |q: Q| ShardFlow::Reply(eval(q)))
+            },
+            policy,
+        )
     }
 
     /// Spawn one shard per label.  The most general constructor: each
     /// shard's closure decides per request whether to [`ShardFlow::Reply`]
     /// or to [`ShardFlow::Retire`] from the pool, which lets heterogeneous
     /// shards (local device closures and remote TCP feeders) share one
-    /// FIFO.  A closure that panics is treated as retiring.
+    /// FIFO.  A closure that panics is treated as retiring.  Hedging is
+    /// off; see [`EvalService::spawn_flow_with`].
     ///
-    /// `Q: Clone` because the worker snapshots each payload before
-    /// evaluating it, so a retiring shard can requeue the request intact.
+    /// `Q: Clone` because the registry snapshots each payload, so requeues
+    /// and speculative duplicates re-evaluate the request intact.
     pub fn spawn_flow<B>(labels: Vec<String>, builder: B) -> Self
+    where
+        Q: Clone,
+        B: Fn(usize) -> Box<dyn FnMut(Q) -> ShardFlow<A>> + Send + Sync + 'static,
+    {
+        Self::spawn_flow_with(labels, builder, HedgePolicy::disabled())
+    }
+
+    /// [`EvalService::spawn_flow`] with an explicit [`HedgePolicy`].
+    pub fn spawn_flow_with<B>(labels: Vec<String>, builder: B, policy: HedgePolicy) -> Self
     where
         Q: Clone,
         B: Fn(usize) -> Box<dyn FnMut(Q) -> ShardFlow<A>> + Send + Sync + 'static,
@@ -191,61 +394,155 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
         } else {
             labels
         };
-        let (tx, rx) = mpsc::channel::<Request<Q, A>>();
+        let (tx, rx) = mpsc::channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
-        let shared_tx: SharedTx<Q, A> = Arc::new(Mutex::new(Some(tx.clone())));
-        let stats = Arc::new(Mutex::new(ServiceStats {
-            per_shard: labels
-                .iter()
-                .map(|l| ShardStats { label: l.clone(), ..ShardStats::default() })
-                .collect(),
-            ..ServiceStats::default()
+        let shared_tx: SharedTx = Arc::new(Mutex::new(Some(tx.clone())));
+        let shared = Arc::new(Mutex::new(Shared {
+            stats: ServiceStats {
+                per_shard: labels
+                    .iter()
+                    .map(|l| ShardStats { label: l.clone(), ..ShardStats::default() })
+                    .collect(),
+                ..ServiceStats::default()
+            },
+            tracks: HashMap::new(),
+            lat: VecDeque::with_capacity(LATENCY_WINDOW),
         }));
         let alive = Arc::new(AtomicUsize::new(n));
         let builder = Arc::new(builder);
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
             let rx = rx.clone();
-            let stats = stats.clone();
+            let shared = shared.clone();
             let builder = builder.clone();
             let shared_tx = shared_tx.clone();
             let alive = alive.clone();
             handles.push(std::thread::spawn(move || {
                 let mut eval = (*builder)(shard);
-                loop {
+                'serve: loop {
                     // Holding the lock while blocked in recv() is the queue
                     // discipline: exactly one idle shard waits on the channel,
                     // the rest wait on the mutex.  The lock is released before
                     // evaluation so other shards can pick up the next request.
-                    let req = {
+                    // With hedging enabled, the lock holder periodically polls
+                    // the in-flight registry for stragglers instead of
+                    // blocking indefinitely.
+                    let work = {
                         let guard = match rx.lock() {
                             Ok(g) => g,
                             Err(_) => break,
                         };
-                        guard.recv()
+                        if !policy.enabled() {
+                            match guard.recv() {
+                                Ok(req) => Work::Queued(req.id),
+                                Err(_) => break,
+                            }
+                        } else {
+                            loop {
+                                // Queued work first: hedging only spends
+                                // genuinely surplus idle time.
+                                match guard.try_recv() {
+                                    Ok(req) => break Work::Queued(req.id),
+                                    Err(mpsc::TryRecvError::Disconnected) => break 'serve,
+                                    Err(mpsc::TryRecvError::Empty) => {}
+                                }
+                                match poll_hedge(&shared, &policy) {
+                                    HedgePoll::Claim(id, payload) => {
+                                        break Work::Hedge(id, payload)
+                                    }
+                                    HedgePoll::Wait(d) => {
+                                        let d = d.max(Duration::from_millis(1));
+                                        match guard.recv_timeout(d) {
+                                            Ok(req) => break Work::Queued(req.id),
+                                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                                break 'serve
+                                            }
+                                        }
+                                    }
+                                    HedgePoll::Idle => match guard.recv() {
+                                        Ok(req) => break Work::Queued(req.id),
+                                        Err(_) => break 'serve,
+                                    },
+                                }
+                            }
+                        }
                     };
-                    let Ok(req) = req else { break };
+                    let (id, speculative, payload, wait) = match work {
+                        // Hedge copies carry their payload from claim time
+                        // and pay no queue wait.
+                        Work::Hedge(id, payload) => (id, true, payload, Duration::ZERO),
+                        Work::Queued(id) => {
+                            // Look the queued copy up; a copy of an already-
+                            // delivered chunk (a requeue that lost the race)
+                            // resolves here without re-evaluating.
+                            let mut guard = shared.lock().unwrap();
+                            let sh = &mut *guard;
+                            let now = Instant::now();
+                            let picked = match sh.tracks.get_mut(&id) {
+                                Some(t) if !t.delivered => {
+                                    let wait = now.duration_since(t.enqueued);
+                                    if t.started.is_none() {
+                                        t.started = Some(now);
+                                    }
+                                    Some((t.payload.clone(), wait))
+                                }
+                                _ => None,
+                            };
+                            match picked {
+                                Some((payload, wait)) => (id, false, payload, wait),
+                                None => {
+                                    sh.stats.dispatched += 1;
+                                    sh.stats.requeued_duplicates += 1;
+                                    sh.release_copy(id);
+                                    continue;
+                                }
+                            }
+                        }
+                    };
                     let started = Instant::now();
-                    let wait = started - req.enqueued;
-                    // Snapshot the payload so a retiring shard can requeue
-                    // the request intact (evaluations are pure, so a re-run
-                    // on another shard gives the identical answer).
-                    let backup = req.payload.clone();
                     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || eval(req.payload),
+                        || eval(payload),
                     ));
                     let service = started.elapsed();
                     match outcome {
                         Ok(ShardFlow::Reply(answer)) => {
-                            {
-                                let mut s = stats.lock().unwrap();
-                                s.completed += 1;
-                                s.total_queue_wait += wait;
-                                s.total_service_time += service;
-                                s.per_shard[shard].completed += 1;
-                                s.per_shard[shard].busy += service;
+                            // First reply wins; late copies of an already-
+                            // delivered chunk are discarded by chunk id
+                            // (idempotent delivery).
+                            enum Won {
+                                Delivered,
+                                LostHedged,
+                                LostRequeued,
                             }
-                            let _ = req.reply.send(answer);
+                            let mut guard = shared.lock().unwrap();
+                            let sh = &mut *guard;
+                            sh.stats.dispatched += 1;
+                            sh.stats.per_shard[shard].busy += service;
+                            let won = match sh.tracks.get_mut(&id) {
+                                Some(t) if !t.delivered => {
+                                    t.delivered = true;
+                                    let _ = t.reply.send(answer);
+                                    Won::Delivered
+                                }
+                                Some(t) if t.hedges > 0 => Won::LostHedged,
+                                _ => Won::LostRequeued,
+                            };
+                            match won {
+                                Won::Delivered => {
+                                    if speculative {
+                                        sh.stats.hedged_won += 1;
+                                    }
+                                    sh.stats.completed += 1;
+                                    sh.stats.total_queue_wait += wait;
+                                    sh.stats.total_service_time += service;
+                                    sh.stats.per_shard[shard].completed += 1;
+                                    sh.push_latency(service);
+                                }
+                                Won::LostHedged => sh.stats.hedged_wasted += 1,
+                                Won::LostRequeued => sh.stats.requeued_duplicates += 1,
+                            }
+                            sh.release_copy(id);
                         }
                         other => {
                             // Retire path: explicit ShardFlow::Retire or a
@@ -267,43 +564,59 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
                             };
                             let remaining = alive.fetch_sub(1, Ordering::SeqCst) - 1;
                             let label = {
-                                let mut s = stats.lock().unwrap();
-                                s.per_shard[shard].retired = true;
-                                s.per_shard[shard].busy += service;
-                                if remaining > 0 {
-                                    s.requeued += 1;
+                                let mut sh = shared.lock().unwrap();
+                                sh.stats.per_shard[shard].retired = true;
+                                sh.stats.per_shard[shard].busy += service;
+                                let delivered = sh
+                                    .tracks
+                                    .get(&id)
+                                    .map(|t| t.delivered)
+                                    .unwrap_or(true);
+                                if delivered {
+                                    // The chunk already reached the caller via
+                                    // another copy: requeueing it again is the
+                                    // double-count bug — suppress it.
+                                    sh.stats.dispatched += 1;
+                                    sh.stats.requeued_duplicates += 1;
+                                    sh.release_copy(id);
+                                } else if remaining > 0 {
+                                    // Put the in-flight request back on the
+                                    // FIFO (fresh enqueue time; the registry
+                                    // entry rides along, so the caller never
+                                    // notices beyond added latency).  Sent
+                                    // under the registry lock so delivery of a
+                                    // racing copy can't interleave.
+                                    sh.stats.requeued += 1;
+                                    if let Some(t) = sh.tracks.get_mut(&id) {
+                                        t.enqueued = Instant::now();
+                                        t.started = None;
+                                    }
+                                    if let Some(tx) = shared_tx.lock().unwrap().as_ref() {
+                                        let _ = tx.send(Request { id });
+                                    }
+                                    // (If the service is mid-shutdown the cell
+                                    // is empty and the copy resolves when the
+                                    // registry drops with the service.)
+                                } else {
+                                    // Last shard out: drop the registry entry
+                                    // (its reply sender drops with it, so the
+                                    // caller gets an immediate error instead
+                                    // of a hang) and drain the queue until
+                                    // shutdown closes the channel, failing
+                                    // queued requests the same way.
+                                    sh.tracks.remove(&id);
                                 }
-                                s.per_shard[shard].label.clone()
+                                sh.stats.per_shard[shard].label.clone()
                             };
                             eprintln!(
                                 "[pool] shard {label} retired ({reason}); \
                                  {remaining} shard(s) remain"
                             );
-                            if remaining > 0 {
-                                // Put the in-flight request back on the FIFO
-                                // (fresh enqueue time; the original reply
-                                // channel rides along, so the caller never
-                                // notices beyond added latency).
-                                let requeue = Request {
-                                    payload: backup,
-                                    enqueued: Instant::now(),
-                                    reply: req.reply,
-                                };
-                                if let Some(tx) = shared_tx.lock().unwrap().as_ref() {
-                                    let _ = tx.send(requeue);
-                                }
-                                // (If the service is mid-shutdown the cell is
-                                // empty and the request drops: the caller gets
-                                // a recv error, same as any shutdown.)
-                            } else {
-                                // Last shard out: drop the request (its reply
-                                // sender drops with it, so the caller gets an
-                                // immediate error instead of a hang) and drain
-                                // the queue until shutdown closes the channel,
-                                // failing queued requests the same way.
-                                drop(req.reply);
+                            if remaining == 0 {
                                 if let Ok(guard) = rx.lock() {
-                                    while guard.recv().is_ok() {}
+                                    while let Ok(req) = guard.recv() {
+                                        shared.lock().unwrap().tracks.remove(&req.id);
+                                    }
                                 }
                             }
                             break;
@@ -312,7 +625,14 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
                 }
             }));
         }
-        EvalService { tx, shared_tx, stats, alive, workers: handles }
+        EvalService {
+            tx,
+            shared_tx,
+            shared,
+            next_id: AtomicU64::new(0),
+            alive,
+            workers: handles,
+        }
     }
 
     /// Number of worker shards spawned (including retired ones).
@@ -325,12 +645,40 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
         self.alive.load(Ordering::SeqCst)
     }
 
+    /// Chunks in the in-flight registry (queued, evaluating, or awaiting
+    /// the resolution of a straggling duplicate copy).  Reaches 0 when the
+    /// pool is quiescent — the accounting invariants hold exactly there.
+    pub fn in_flight(&self) -> usize {
+        self.shared.lock().unwrap().tracks.len()
+    }
+
     /// Submit a request; returns a receiver for the answer.  If every shard
     /// has retired, the receiver's `recv()` fails instead of hanging.
     pub fn submit(&self, payload: Q) -> mpsc::Receiver<A> {
         let (rtx, rrx) = mpsc::channel();
-        self.stats.lock().unwrap().submitted += 1;
-        let _ = self.tx.send(Request { payload, enqueued: Instant::now(), reply: rtx });
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut sh = self.shared.lock().unwrap();
+            sh.stats.submitted += 1;
+            sh.tracks.insert(
+                id,
+                Track {
+                    payload,
+                    reply: rtx,
+                    enqueued: Instant::now(),
+                    started: None,
+                    last_hedge: None,
+                    hedges: 0,
+                    active: 1,
+                    delivered: false,
+                },
+            );
+        }
+        if self.tx.send(Request { id }).is_err() {
+            // Every worker exited (fully retired pool): drop the entry so
+            // the caller sees a recv error instead of hanging.
+            self.shared.lock().unwrap().tracks.remove(&id);
+        }
         rrx
     }
 
@@ -352,7 +700,7 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
     }
 
     fn dead_pool_error(&self) -> eyre::Report {
-        let retired = self.stats.lock().unwrap().retired_shards();
+        let retired = self.shared.lock().unwrap().stats.retired_shards();
         eyre::anyhow!(
             "evaluation pool request dropped: {retired} of {} shard(s) retired, \
              no live shard remains to serve it",
@@ -362,7 +710,57 @@ impl<Q: Send + 'static, A: Send + 'static> EvalService<Q, A> {
 
     /// Snapshot of the queue/latency counters.
     pub fn stats(&self) -> ServiceStats {
-        self.stats.lock().unwrap().clone()
+        self.shared.lock().unwrap().stats.clone()
+    }
+}
+
+/// One idle-shard poll of the in-flight registry: claim the oldest due
+/// straggler, or report how long until the earliest candidate matures.
+fn poll_hedge<Q: Clone, A>(
+    shared: &Arc<Mutex<Shared<Q, A>>>,
+    policy: &HedgePolicy,
+) -> HedgePoll<Q> {
+    let mut sh = shared.lock().unwrap();
+    let threshold = policy.threshold(sh.stats.latency_p50);
+    let now = Instant::now();
+    let mut due: Option<(u64, Instant)> = None;
+    let mut next: Option<Duration> = None;
+    for (&id, t) in &sh.tracks {
+        if t.delivered {
+            continue;
+        }
+        // Only chunks actually running on a shard: a queued chunk has no
+        // straggler to race (an idle shard would just receive it).
+        let Some(started) = t.started else { continue };
+        // Each hedge re-arms the clock so a stalled duplicate can itself
+        // be re-hedged — one wedged shard never absorbs the only copy.
+        let basis = t.last_hedge.map_or(started, |h| h.max(started));
+        let age = now.duration_since(basis);
+        if age >= threshold {
+            match due {
+                Some((_, b)) if b <= basis => {}
+                _ => due = Some((id, basis)),
+            }
+        } else {
+            let remain = threshold - age;
+            match next {
+                Some(n) if n <= remain => {}
+                _ => next = Some(remain),
+            }
+        }
+    }
+    if let Some((id, _)) = due {
+        let t = sh.tracks.get_mut(&id).expect("candidate selected above");
+        t.hedges += 1;
+        t.last_hedge = Some(now);
+        t.active += 1;
+        let payload = t.payload.clone();
+        sh.stats.hedged_dispatched += 1;
+        return HedgePoll::Claim(id, payload);
+    }
+    match next {
+        Some(d) => HedgePoll::Wait(d),
+        None => HedgePoll::Idle,
     }
 }
 
@@ -384,6 +782,7 @@ impl<Q: Send + 'static, A: Send + 'static> Drop for EvalService<Q, A> {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicBool;
+    use std::sync::Condvar;
 
     #[test]
     fn roundtrip_single() {
@@ -396,6 +795,7 @@ mod tests {
         assert_eq!(s.per_shard.len(), 1);
         assert_eq!(s.per_shard[0].label, "local#0");
         assert!(!s.per_shard[0].retired);
+        assert_eq!(svc.in_flight(), 0);
     }
 
     #[test]
@@ -459,6 +859,7 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.submitted, 30);
         assert_eq!(s.completed, 30);
+        assert_eq!(s.dispatched, 30, "no faults: every copy resolves delivered");
         assert_eq!(s.per_shard.len(), 3);
         assert_eq!(s.per_shard.iter().map(|p| p.completed).sum::<u64>(), 30);
         assert_eq!(s.shard_utilization(Duration::from_secs(1)).len(), 3);
@@ -522,6 +923,7 @@ mod tests {
         }
         let s = svc.stats();
         assert_eq!(s.requeued, 1, "the poisoned chunk must be requeued once");
+        assert_eq!(s.requeued_duplicates, 0);
         assert_eq!(s.retired_shards(), 1);
         assert_eq!(svc.live_workers(), 1);
         assert_eq!(svc.n_workers(), 2);
@@ -571,5 +973,168 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.requeued, 1);
         assert_eq!(s.retired_shards(), 1);
+    }
+
+    /// A one-shot gate: evaluations of the poison payload block until the
+    /// test releases them — a deterministic stand-in for a wedged shard.
+    struct Gate {
+        state: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    impl Gate {
+        fn new() -> Arc<Gate> {
+            Arc::new(Gate { state: Mutex::new(false), cv: Condvar::new() })
+        }
+
+        fn wait(&self) {
+            let mut open = self.state.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+        }
+
+        fn open(&self) {
+            *self.state.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wait for the in-flight registry to drain so the conservation
+    /// invariants can be asserted at a quiescent point.
+    fn drain(svc: &EvalService<u32, u32>) {
+        while svc.in_flight() != 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    fn assert_balanced(s: &ServiceStats) {
+        assert_eq!(
+            s.completed,
+            s.dispatched - s.hedged_wasted - s.requeued_duplicates,
+            "copy conservation violated: {s:?}"
+        );
+    }
+
+    #[test]
+    fn hedge_wins_against_wedged_shard_and_duplicate_is_discarded() {
+        // The first shard to evaluate the poison payload wedges on the gate;
+        // the other shard drains the queue, goes idle, hedges the straggler
+        // and wins.  call_batch completes without waiting on the wedge; the
+        // wedged copy's late reply is discarded by chunk id once released.
+        let gate = Gate::new();
+        let tripped = Arc::new(AtomicBool::new(false));
+        let flow_gate = gate.clone();
+        let svc: EvalService<u32, u32> = EvalService::spawn_flow_with(
+            vec!["a".into(), "b".into()],
+            move |_shard| {
+                let gate = flow_gate.clone();
+                let tripped = tripped.clone();
+                Box::new(move |x: u32| {
+                    if x == 777 && !tripped.swap(true, Ordering::SeqCst) {
+                        gate.wait();
+                    }
+                    ShardFlow::Reply(x * 2)
+                })
+            },
+            HedgePolicy { factor: 1.0, floor: Duration::from_millis(5) },
+        );
+        let payloads: Vec<u32> = (0..16).map(|i| if i == 3 { 777 } else { i }).collect();
+        let out = svc.call_batch(payloads.clone()).unwrap();
+        for (p, o) in payloads.iter().zip(&out) {
+            assert_eq!(*o, p * 2);
+        }
+        let s = svc.stats();
+        assert!(s.hedged_dispatched >= 1, "straggler must have been hedged: {s:?}");
+        assert!(s.hedged_won >= 1, "the speculative copy must have won: {s:?}");
+        assert_eq!(s.completed, 16);
+        assert_eq!(s.requeued, 0);
+        // Release the wedged copy; its reply must be discarded, not
+        // double-delivered or double-counted.
+        gate.open();
+        drain(&svc);
+        let s = svc.stats();
+        assert!(s.hedged_wasted >= 1, "the losing copy must be discarded: {s:?}");
+        assert_eq!(s.completed, 16, "idempotent delivery: still one reply per chunk");
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn retiring_shard_does_not_requeue_a_delivered_chunk() {
+        // Regression for the double-count bug: a shard holds a chunk until
+        // another copy (the hedge) has delivered it, then retires.  The
+        // requeue must be suppressed — the chunk already reached the caller.
+        let gate = Gate::new();
+        let tripped = Arc::new(AtomicBool::new(false));
+        let flow_gate = gate.clone();
+        let svc: EvalService<u32, u32> = EvalService::spawn_flow_with(
+            vec!["dying".into(), "healthy".into()],
+            move |_shard| {
+                let gate = flow_gate.clone();
+                let tripped = tripped.clone();
+                Box::new(move |x: u32| {
+                    if x == 555 && !tripped.swap(true, Ordering::SeqCst) {
+                        gate.wait();
+                        return ShardFlow::Retire { reason: "injected".into() };
+                    }
+                    ShardFlow::Reply(x * 2)
+                })
+            },
+            HedgePolicy { factor: 1.0, floor: Duration::from_millis(5) },
+        );
+        let payloads: Vec<u32> = (0..12).map(|i| if i == 2 { 555 } else { i }).collect();
+        let out = svc.call_batch(payloads.clone()).unwrap();
+        for (p, o) in payloads.iter().zip(&out) {
+            assert_eq!(*o, p * 2);
+        }
+        // The batch completed via the hedge while the first copy is still
+        // gated — now let that shard retire with its stale in-flight chunk.
+        gate.open();
+        drain(&svc);
+        while svc.live_workers() == 2 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let s = svc.stats();
+        assert_eq!(s.retired_shards(), 1);
+        assert_eq!(
+            s.requeued, 0,
+            "a delivered chunk must never be requeued: {s:?}"
+        );
+        assert!(s.requeued_duplicates >= 1, "the suppression must be counted: {s:?}");
+        assert_eq!(s.completed, 12, "no double-delivery, no drop");
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn hedging_disabled_never_duplicates() {
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded(4, |_s| {
+            |x: u32| {
+                std::thread::sleep(Duration::from_millis(2));
+                x + 1
+            }
+        });
+        let out = svc.call_batch((0..32).collect()).unwrap();
+        assert_eq!(out, (1..33).collect::<Vec<_>>());
+        let s = svc.stats();
+        assert_eq!(s.hedged_dispatched, 0);
+        assert_eq!(s.dispatched, s.completed);
+        assert_balanced(&s);
+    }
+
+    #[test]
+    fn hedging_with_no_straggler_changes_nothing() {
+        // Uniformly fast evals under an enabled policy: the floor keeps the
+        // trigger quiet, results and counters match the unhedged pool.
+        let svc: EvalService<u32, u32> = EvalService::spawn_sharded_with(
+            4,
+            |_s| |x: u32| x.wrapping_mul(31),
+            HedgePolicy { factor: 50.0, floor: Duration::from_secs(3600) },
+        );
+        let out = svc.call_batch((0..64).collect()).unwrap();
+        assert_eq!(out, (0..64).map(|x| x * 31).collect::<Vec<_>>());
+        let s = svc.stats();
+        assert_eq!(s.hedged_dispatched, 0);
+        assert_eq!(s.completed, 64);
+        assert_balanced(&s);
     }
 }

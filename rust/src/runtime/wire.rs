@@ -575,6 +575,93 @@ mod tests {
     }
 
     #[test]
+    fn mutated_golden_frames_never_panic_and_reject_cleanly() {
+        // Seeded byte-mutation fuzz over one golden frame per op: every
+        // exhaustive single-bit flip plus a seeded stream of overwrites,
+        // truncations, insertions and multi-bit flips must either surface
+        // a clean `Err` or decode to a message that is semantically valid
+        // — meaning it re-encodes to a stable frame that decodes back to
+        // itself.  Decoding must never panic and never misparse.
+        use crate::util::Rng;
+        let golden: Vec<Vec<u8>> = vec![
+            encode_frame(&WireMsg::Hello { n_layers: 28 }),
+            encode_frame(&WireMsg::Chunk { id: 7, genes: vec![vec![2, 3, 4], vec![0x0104, 2]] }),
+            encode_frame(&WireMsg::Scores { id: 7, scores: vec![0.5, -1.25e-3, 1.0] }),
+            encode_frame(&WireMsg::Error { id: 9, message: "bank has 28 layers, got 3".into() }),
+            encode_frame(&WireMsg::StatsReq { id: 11 }),
+            encode_frame(&WireMsg::Stats { id: 11, completed: 420, busy_us: 1_234_567, conns: 3 }),
+            encode_frame(&WireMsg::ScoreReq { id: 13, genes: vec![2, 3, 0x0104] }),
+            encode_frame(&WireMsg::Score { id: 13, score: -1.25e-3 }),
+            encode_frame(&WireMsg::ServeStatsReq { id: 15 }),
+            encode_frame(&WireMsg::ServeStats {
+                id: 15,
+                requests: 100,
+                rejected: 2,
+                dispatches: 17,
+                full: 11,
+                deadline: 5,
+                lanes: 8,
+                batched: 97,
+                wait_us: 84_211,
+                depth_sum: 120,
+                depth_max: 19,
+            }),
+        ];
+        let check = |bytes: &[u8]| {
+            if let Ok(msg) = decode_frame(bytes) {
+                // A mutation that still decodes must be a *valid* frame
+                // (e.g. a flipped digit inside an id): re-encoding it must
+                // produce a stable, self-consistent byte layout.
+                let re = encode_frame(&msg);
+                match decode_frame(&re) {
+                    Ok(back) => assert_eq!(
+                        encode_frame(&back),
+                        re,
+                        "re-encode of a mutated-but-accepted frame is unstable"
+                    ),
+                    Err(e) => panic!("accepted mutation failed to round trip: {e}"),
+                }
+            }
+        };
+        let mut rng = Rng::new(0xF0_553D);
+        for frame in &golden {
+            // exhaustive single-bit flips over the whole frame
+            for pos in 0..frame.len() {
+                for bit in 0..8 {
+                    let mut m = frame.clone();
+                    m[pos] ^= 1 << bit;
+                    check(&m);
+                }
+            }
+            // seeded stream of heavier mutations
+            for _ in 0..200 {
+                let mut m = frame.clone();
+                match rng.below(4) {
+                    0 => {
+                        let i = rng.below(m.len());
+                        m[i] = rng.below(256) as u8;
+                    }
+                    1 => {
+                        let cut = rng.below(m.len() + 1);
+                        m.truncate(cut);
+                    }
+                    2 => {
+                        let i = rng.below(m.len());
+                        m.insert(i, rng.below(256) as u8);
+                    }
+                    _ => {
+                        for _ in 0..1 + rng.below(4) {
+                            let i = rng.below(m.len());
+                            m[i] ^= 1 << rng.below(8);
+                        }
+                    }
+                }
+                check(&m);
+            }
+        }
+    }
+
+    #[test]
     fn scores_cross_bit_exactly() {
         let patterns: Vec<f32> = [
             0x0000_0000u32, // +0.0

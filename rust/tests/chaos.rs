@@ -1,0 +1,309 @@
+//! Deterministic chaos matrix for the eval pool: seeded fault plans
+//! ({delayed, wedged, crashed} shards) crossed with topologies
+//! ({in-process, loopback TCP, mixed}) and hedging ({on, off}) must always
+//! converge to the archive the fault-free sequential baseline produces —
+//! faults and hedges perturb the transport and the schedule, never the
+//! results.
+//!
+//! Every scenario is seeded and replayable: wedges block on a
+//! [`FaultPlan`] gate until the test opens it, and delays / drops /
+//! disconnects come from the plan's seeded decision stream — no
+//! sleep-and-hope timing assertions.
+//!
+//! CI runs this suite single-threaded (`--test-threads=1`) so loopback
+//! servers never contend for ports or CPU with sibling tests.
+
+use amq::coordinator::synth::{synth_chunk, synth_space};
+use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator, SearchParams};
+use amq::runtime::remote::{
+    remote_eval_flow_with_timeout, spawn_test_server, spawn_test_server_with_faults, RetryPolicy,
+};
+use amq::runtime::{
+    EvalService, FaultKind, FaultPlan, FaultSpec, HedgePolicy, ServiceStats, ShardFlow,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn seeded_params() -> SearchParams {
+    let mut p = SearchParams::smoke();
+    p.seed = 17;
+    p
+}
+
+/// Reconnect quickly so fault-recovery lanes converge in milliseconds
+/// instead of the production backoff schedule.
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy {
+        attempts: 2,
+        base_delay: Duration::from_millis(1),
+        max_delay: Duration::from_millis(5),
+    }
+}
+
+/// Run the seeded synthetic search against `svc` and report the archive
+/// content hash plus the pool's view of how the work went.
+fn search_hash(svc: &Arc<EvalPool>) -> (u64, ServiceStats) {
+    let space = synth_space(12);
+    let mut ev = PooledEvaluator::from_service(svc.clone()).with_score_batch(8);
+    let res = run_search(&space, &mut ev, &seeded_params()).unwrap();
+    (res.archive.content_hash(), ev.pool_stats())
+}
+
+/// The fault-free single-worker reference every chaos lane must reproduce.
+fn baseline_hash() -> u64 {
+    let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_sharded(1, |_shard| {
+        |chunk: Vec<Config>| -> amq::Result<Vec<f32>> { synth_chunk(&chunk) }
+    }));
+    search_hash(&svc).0
+}
+
+/// Four in-process shards; shard 0's flow is wrapped in `plan`, the rest
+/// stay clean so the pool always has healthy capacity to converge on.
+fn faulted_local_pool(plan: Arc<FaultPlan>, policy: HedgePolicy) -> Arc<EvalPool> {
+    let labels: Vec<String> = (0..4).map(|i| format!("local#{i}")).collect();
+    let builder = move |shard: usize| {
+        let inner: Box<dyn FnMut(Vec<Config>) -> ShardFlow<amq::Result<Vec<f32>>>> =
+            Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)));
+        if shard == 0 {
+            plan.wrap_flow(inner)
+        } else {
+            inner
+        }
+    };
+    Arc::new(EvalService::spawn_flow_with(labels, builder, policy))
+}
+
+/// `local` in-process shards plus one timeout-bounded feeder per remote
+/// address — the wiring `repro search --shards --chunk-timeout-ms` builds.
+fn mixed_pool(
+    local: usize,
+    remotes: Vec<String>,
+    retry: RetryPolicy,
+    chunk_timeout: Duration,
+    policy: HedgePolicy,
+) -> Arc<EvalPool> {
+    let labels: Vec<String> = (0..local)
+        .map(|i| format!("local#{i}"))
+        .chain(remotes.iter().cloned())
+        .collect();
+    let builder = move |shard: usize| {
+        if shard < local {
+            Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)))
+        } else {
+            remote_eval_flow_with_timeout(
+                remotes[shard - local].clone(),
+                retry,
+                Some(chunk_timeout),
+            )
+        }
+    };
+    Arc::new(EvalService::spawn_flow_with(labels, builder, policy))
+}
+
+/// Copy conservation: every *resolved* chunk copy is exactly one of
+/// {winning reply, discarded hedge duplicate, suppressed requeue
+/// duplicate}.  This identity holds at every instant — copies still in
+/// flight have not incremented `dispatched` yet.
+fn assert_balanced(s: &ServiceStats) {
+    assert_eq!(
+        s.completed,
+        s.dispatched - s.hedged_wasted - s.requeued_duplicates,
+        "copy conservation violated: {s:?}"
+    );
+}
+
+/// Wait (bounded) for every in-flight chunk copy to resolve — used after
+/// opening a wedge gate, so post-release accounting is quiescent before
+/// the service is dropped (its `Drop` joins the workers).
+fn drain(svc: &Arc<EvalPool>) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while svc.in_flight() > 0 {
+        assert!(
+            Instant::now() < deadline,
+            "pool failed to drain after wedge release"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn delayed_shard_in_process_converges_with_and_without_hedging() {
+    let baseline = baseline_hash();
+    for factor in [0.0, 4.0] {
+        let spec = FaultSpec { seed: 23, kind: FaultKind::Delay, rate: 1.0 };
+        let plan = Arc::new(FaultPlan::new(spec).with_delay(Duration::from_millis(2)));
+        let svc = faulted_local_pool(plan.clone(), HedgePolicy::from_factor(factor));
+        let (hash, stats) = search_hash(&svc);
+        assert_eq!(
+            baseline, hash,
+            "delayed shard diverged the archive (hedge factor {factor})"
+        );
+        assert_eq!(stats.requeued, 0, "a slow shard must never cause requeues");
+        assert_eq!(stats.retired_shards(), 0);
+        assert!(plan.injected() >= 1, "the seeded delay plan never fired");
+        assert_balanced(&stats);
+    }
+}
+
+#[test]
+fn wedged_shard_in_process_is_won_by_a_hedge() {
+    let baseline = baseline_hash();
+    // Shard 0 wedges on its first chunk (rate 1.0, capped at one injection)
+    // and holds it on the gate; hedging is the only recovery mechanism here
+    // — in-process shards have no chunk timeout — so `hedged_won >= 1` is a
+    // hard requirement, not a statistic.
+    let spec = FaultSpec { seed: 7, kind: FaultKind::Wedge, rate: 1.0 };
+    let plan = Arc::new(FaultPlan::new(spec).with_max_faults(1));
+    let svc = faulted_local_pool(plan.clone(), HedgePolicy::from_factor(4.0));
+    let (hash, stats) = search_hash(&svc);
+    assert_eq!(baseline, hash, "hedged archive diverged from baseline");
+    assert!(
+        stats.hedged_won >= 1,
+        "the wedged chunk must be won by a hedged duplicate: {stats:?}"
+    );
+    assert_eq!(stats.requeued, 0, "hedging must not masquerade as requeues");
+    assert_eq!(stats.retired_shards(), 0);
+    assert_balanced(&stats);
+
+    // Open the gate: the wedged worker finishes its (already-delivered)
+    // chunk, the duplicate reply is discarded by chunk id, and the service
+    // drains to quiescence where the wasted copy is on the books.
+    plan.release_wedges();
+    drain(&svc);
+    let stats = svc.stats();
+    assert!(
+        stats.hedged_wasted >= 1,
+        "the released wedged copy must resolve as a discarded duplicate: {stats:?}"
+    );
+    assert_balanced(&stats);
+}
+
+#[test]
+fn crashed_shard_in_process_requeues_and_converges() {
+    let baseline = baseline_hash();
+    // A Drop fault in an in-process flow is a shard crash: the flow retires
+    // on its first chunk, the pool requeues that chunk onto the survivors.
+    let spec = FaultSpec { seed: 11, kind: FaultKind::Drop, rate: 1.0 };
+    let plan = Arc::new(FaultPlan::new(spec));
+    let svc = faulted_local_pool(plan, HedgePolicy::disabled());
+    let (hash, stats) = search_hash(&svc);
+    assert_eq!(baseline, hash, "archive diverged after an in-process crash");
+    assert_eq!(stats.retired_shards(), 1, "exactly the faulted shard retires");
+    assert_eq!(stats.requeued, 1, "the crashed shard's chunk must requeue once");
+    assert_balanced(&stats);
+}
+
+#[test]
+fn delayed_server_over_loopback_converges_with_and_without_hedging() {
+    let baseline = baseline_hash();
+    let spec = FaultSpec { seed: 5, kind: FaultKind::Delay, rate: 1.0 };
+    let plan = Arc::new(FaultPlan::new(spec).with_delay(Duration::from_millis(2)));
+    let slow = spawn_test_server_with_faults(0, None, Some(plan.clone()), synth_chunk).unwrap();
+    let healthy = spawn_test_server(0, None, synth_chunk).unwrap();
+    for factor in [0.0, 4.0] {
+        let svc = mixed_pool(
+            0,
+            vec![healthy.clone(), slow.clone()],
+            RetryPolicy::default(),
+            Duration::from_secs(30),
+            HedgePolicy::from_factor(factor),
+        );
+        let (hash, stats) = search_hash(&svc);
+        assert_eq!(
+            baseline, hash,
+            "slow server diverged the archive (hedge factor {factor})"
+        );
+        assert_eq!(stats.requeued, 0, "a slow server must never cause requeues");
+        assert_eq!(stats.retired_shards(), 0);
+        assert_balanced(&stats);
+    }
+    assert!(plan.injected() >= 1, "the seeded delay plan never fired");
+}
+
+#[test]
+fn wedged_server_over_loopback_is_won_by_a_hedge_before_the_timeout() {
+    let baseline = baseline_hash();
+    // The server wedges one chunk on its gate (rate 1.0, one injection).
+    // The hedge wins the chunk within milliseconds; the stalled feeder only
+    // notices at its 250ms chunk timeout, reconnects, resends (the plan is
+    // spent, so the resend evaluates cleanly), and the late duplicate is
+    // discarded by chunk id — never requeued, never double-counted.
+    let spec = FaultSpec { seed: 7, kind: FaultKind::Wedge, rate: 1.0 };
+    let plan = Arc::new(FaultPlan::new(spec).with_max_faults(1));
+    let wedged = spawn_test_server_with_faults(0, None, Some(plan.clone()), synth_chunk).unwrap();
+    let healthy = spawn_test_server(0, None, synth_chunk).unwrap();
+    let svc = mixed_pool(
+        2,
+        vec![healthy, wedged],
+        fast_retry(),
+        Duration::from_millis(250),
+        HedgePolicy::from_factor(4.0),
+    );
+    let t0 = Instant::now();
+    let (hash, stats) = search_hash(&svc);
+    let wall = t0.elapsed();
+    assert_eq!(baseline, hash, "wedged-server archive diverged from baseline");
+    assert!(
+        stats.hedged_won >= 1,
+        "the wedged chunk must be won by a hedged duplicate: {stats:?}"
+    );
+    assert_eq!(stats.requeued, 0, "hedged recovery must not requeue");
+    assert_balanced(&stats);
+    assert!(
+        wall < Duration::from_secs(60),
+        "wedged-server search must converge promptly, took {wall:?}"
+    );
+    plan.release_wedges();
+    drain(&svc);
+    assert_balanced(&svc.stats());
+}
+
+#[test]
+fn wedged_server_with_hedging_off_recovers_via_timeout_resend() {
+    let baseline = baseline_hash();
+    // Without hedging the only recovery is the chunk timeout: the feeder
+    // stalls 250ms, reconnects, resends, and the capped plan lets the
+    // resend through.  Slower than the hedged lane, but identical results.
+    let spec = FaultSpec { seed: 7, kind: FaultKind::Wedge, rate: 1.0 };
+    let plan = Arc::new(FaultPlan::new(spec).with_max_faults(1));
+    let wedged = spawn_test_server_with_faults(0, None, Some(plan.clone()), synth_chunk).unwrap();
+    let healthy = spawn_test_server(0, None, synth_chunk).unwrap();
+    let svc = mixed_pool(
+        2,
+        vec![healthy, wedged],
+        fast_retry(),
+        Duration::from_millis(250),
+        HedgePolicy::disabled(),
+    );
+    let (hash, stats) = search_hash(&svc);
+    assert_eq!(baseline, hash, "timeout-resend archive diverged from baseline");
+    assert_eq!(stats.hedged_dispatched, 0, "hedging was disabled");
+    assert_balanced(&stats);
+    plan.release_wedges();
+    drain(&svc);
+}
+
+#[test]
+fn disconnecting_server_over_mixed_topology_converges() {
+    let baseline = baseline_hash();
+    // The server sporadically closes connections after evaluating (seeded,
+    // rate 0.2): each close costs the client a reconnect-resend cycle; if
+    // the retry budget ever runs out the feeder retires and the pool
+    // requeues onto the two local shards and the healthy server.  Either
+    // way the archive must not move.
+    let spec = FaultSpec { seed: 3, kind: FaultKind::Disconnect, rate: 0.2 };
+    let plan = Arc::new(FaultPlan::new(spec));
+    let flaky = spawn_test_server_with_faults(0, None, Some(plan.clone()), synth_chunk).unwrap();
+    let healthy = spawn_test_server(0, None, synth_chunk).unwrap();
+    let svc = mixed_pool(
+        2,
+        vec![healthy, flaky],
+        fast_retry(),
+        Duration::from_secs(30),
+        HedgePolicy::from_factor(4.0),
+    );
+    let (hash, stats) = search_hash(&svc);
+    assert_eq!(baseline, hash, "flaky-server archive diverged from baseline");
+    assert!(plan.decisions() >= 1, "the flaky server saw no chunks");
+    assert_balanced(&stats);
+}

@@ -7,12 +7,17 @@
 use amq::coordinator::archive::pareto_front_of;
 use amq::coordinator::nsga2::{self, dominates, Individual};
 use amq::coordinator::space::SearchSpace;
-use amq::coordinator::{gene, gene_bits, Archive, Config, Gene, ProxyBank};
+use amq::coordinator::synth::synth_chunk;
+use amq::coordinator::{gene, gene_bits, Archive, Config, EvalPool, Gene, ProxyBank};
 use amq::quant::{frob_error, pack, Hqq, MethodId, Quantizer, Rtn};
-use amq::runtime::{lane_routed, lane_slab_sig, pack_lane_slab, SlabCache};
+use amq::runtime::{
+    lane_routed, lane_slab_sig, pack_lane_slab, EvalService, FaultKind, FaultPlan, FaultSpec,
+    HedgePolicy, ShardFlow, SlabCache,
+};
 use amq::tensor::Mat;
 use amq::util::Rng;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 const TRIALS: usize = 60;
 
@@ -556,5 +561,102 @@ fn prop_slab_cache_never_changes_scores() {
         let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
         assert_eq!(bits(&off), bits(&tiny), "seed {seed}: tiny budget changed scores");
         assert_eq!(bits(&off), bits(&ample), "seed {seed}: ample budget changed scores");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eval-pool fault / hedging invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_faulted_pool_delivers_exactly_once_in_order() {
+    // Random fault plans crossed with random chunk schedules and hedging
+    // on/off: every reply is delivered exactly once, `call_batch` never
+    // reorders or drops a chunk, and the copy-conservation identity holds
+    // at quiescence — hedged and requeued duplicates are discarded by
+    // chunk id, never double-delivered.
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Rng::new(16_000 + seed);
+        let shards = rng.range(2, 5);
+        let hedge = if rng.below(2) == 0 {
+            HedgePolicy::disabled()
+        } else {
+            HedgePolicy::from_factor(4.0)
+        };
+        // Every shard except the last may carry a seeded fault plan; the
+        // last stays clean so the pool always has a path to progress.
+        let mut plans: Vec<Option<Arc<FaultPlan>>> = Vec::new();
+        for s in 0..shards - 1 {
+            if rng.below(2) == 0 {
+                plans.push(None);
+                continue;
+            }
+            let kind = if hedge.enabled() {
+                [FaultKind::Delay, FaultKind::Drop, FaultKind::Wedge][rng.below(3)]
+            } else {
+                // A wedge with hedging off would hang forever: in-process
+                // shards have no chunk-timeout machinery by design.
+                [FaultKind::Delay, FaultKind::Drop][rng.below(2)]
+            };
+            let rate = [0.3, 1.0][rng.below(2)];
+            let spec = FaultSpec { seed: 40_000 + seed * 8 + s as u64, kind, rate };
+            let mut plan = FaultPlan::new(spec).with_delay(Duration::from_millis(1));
+            if rng.below(2) == 0 {
+                plan = plan.with_max_faults(1 + rng.below(2) as u64);
+            }
+            plans.push(Some(Arc::new(plan)));
+        }
+        plans.push(None);
+        let labels: Vec<String> = (0..shards).map(|i| format!("local#{i}")).collect();
+        let builder_plans = plans.clone();
+        let builder = move |shard: usize| {
+            let inner: Box<dyn FnMut(Vec<Config>) -> ShardFlow<amq::Result<Vec<f32>>>> =
+                Box::new(move |chunk: Vec<Config>| ShardFlow::Reply(synth_chunk(&chunk)));
+            match &builder_plans[shard] {
+                Some(plan) => plan.wrap_flow(inner),
+                None => inner,
+            }
+        };
+        let svc: Arc<EvalPool> = Arc::new(EvalService::spawn_flow_with(labels, builder, hedge));
+        let mut total_chunks = 0u64;
+        for _ in 0..rng.range(1, 4) {
+            let batch: Vec<Vec<Config>> = (0..rng.range(2, 7))
+                .map(|_| {
+                    (0..rng.range(1, 4))
+                        .map(|_| (0..12).map(|_| [2u16, 3, 4][rng.below(3)]).collect())
+                        .collect()
+                })
+                .collect();
+            total_chunks += batch.len() as u64;
+            let got = svc.call_batch(batch.clone()).unwrap();
+            assert_eq!(got.len(), batch.len(), "seed {seed}: replies dropped");
+            for (i, (reply, chunk)) in got.into_iter().zip(batch.iter()).enumerate() {
+                let want = synth_chunk(chunk).unwrap();
+                let scores = reply
+                    .unwrap_or_else(|e| panic!("seed {seed}: chunk {i} errored: {e}"));
+                assert_eq!(scores, want, "seed {seed}: chunk {i} reordered or corrupted");
+            }
+        }
+        // Open any wedge gates and wait for every in-flight copy to
+        // resolve, so the final accounting is quiescent.
+        for plan in plans.iter().flatten() {
+            plan.release_wedges();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while svc.in_flight() > 0 {
+            assert!(Instant::now() < deadline, "seed {seed}: pool failed to drain");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, total_chunks, "seed {seed}");
+        assert_eq!(
+            stats.completed, total_chunks,
+            "seed {seed}: exactly-once delivery broken: {stats:?}"
+        );
+        assert_eq!(
+            stats.completed,
+            stats.dispatched - stats.hedged_wasted - stats.requeued_duplicates,
+            "seed {seed}: copy conservation violated: {stats:?}"
+        );
     }
 }
