@@ -115,7 +115,7 @@ fn main() -> amq::Result<()> {
                    (ppl {:.2} vs fp {:.2})", amq_q.wiki_ppl, fp_q.wiki_ppl));
 
     // 5. consistency audit: fused scorer vs rust mirror
-    let layers = pipe.proxy.assemble(&amq_cfg);
+    let layers = pipe.proxy.assemble(&amq_cfg)?;
     let (jsd_fused, _) = ctx.rt.scores(&ctx.search_batches[0], &layers)?;
     let qlogits = ctx.rt.quant_logits(&ctx.search_batches[0].host_tokens, &layers)?;
     let jsd_mirror = eval::jsd_mean(

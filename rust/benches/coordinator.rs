@@ -5,8 +5,8 @@ use amq::coordinator::nsga2::{self, Nsga2Params};
 use amq::coordinator::predictor::{self, PredictorKind, QualityPredictor};
 use amq::coordinator::space::{gene, SearchSpace};
 use amq::coordinator::{
-    run_search, slab_budget_bytes, Archive, BankShareStats, Config, ConfigEvaluator, EvalPool,
-    PooledEvaluator, ProxyBank, SearchParams,
+    run_search, run_search_seeded, slab_budget_bytes, warmstart, Archive, BankShareStats, Config,
+    ConfigEvaluator, EvalPool, PooledEvaluator, ProxyBank, SearchParams, WarmKey, WarmLoad,
 };
 use amq::quant::{MethodId, Quantizer};
 use amq::runtime::{
@@ -62,6 +62,19 @@ fn main() {
     bench("mlp fit (200 samples, 300 epochs)", Duration::from_secs(2), || {
         let mut p = predictor::make(PredictorKind::Mlp, 0);
         p.fit(&xs, &ys);
+    })
+    .print();
+
+    bench("gp fit (200 samples, 28 dims, cholesky)", Duration::from_secs(2), || {
+        let mut p = predictor::make(PredictorKind::Gp, 0);
+        p.fit(&xs, &ys);
+    })
+    .print();
+
+    let mut gp = predictor::make(PredictorKind::Gp, 0);
+    gp.fit(&xs, &ys);
+    bench("gp predict (posterior mean + std)", budget, || {
+        std::hint::black_box(gp.predict_with_std(&probe));
     })
     .print();
 
@@ -161,7 +174,7 @@ fn main() {
     let methods4 = four_methods;
     bench("bank assemble (1 method, 28 layers)", budget, || {
         let cfg: Config = (0..28).map(|_| [2u16, 3, 4][rng_asm.below(3)]).collect();
-        std::hint::black_box(bank1.assemble(&cfg).len());
+        std::hint::black_box(bank1.assemble(&cfg).unwrap().len());
     })
     .print();
     let mut rng_asm4 = Rng::new(4);
@@ -169,7 +182,7 @@ fn main() {
         let cfg: Config = (0..28)
             .map(|_| gene(methods4[rng_asm4.below(4)], [2u8, 3, 4][rng_asm4.below(3)]))
             .collect();
-        std::hint::black_box(bank4.assemble(&cfg).len());
+        std::hint::black_box(bank4.assemble(&cfg).unwrap().len());
     })
     .print();
 
@@ -534,6 +547,88 @@ fn main() {
         // (already-hedged) chunk; open the gate so the service can drain
         // and join cleanly.
         plan.release_wedges();
+    }
+
+    // -- GP surrogate + warm-start: cold search vs persisted restart ------
+    // A smoke search under the exact-GP predictor with the UCB screen on
+    // (κ = 0.5), then both warm tiers against the persisted archive: an
+    // exact-key hit adopts the cold archive verbatim (bit-exact, zero
+    // evaluations), and a seed-tier restart reuses every persisted sample
+    // so only the new trajectory pays for true evaluations.
+    header("gp predictor + warm-start (cold vs exact adopt vs seeded restart)");
+    {
+        let mut gp_params = SearchParams::smoke();
+        gp_params.seed = 7;
+        gp_params.predictor = PredictorKind::Gp;
+        gp_params.ucb_kappa = 0.5;
+        let make_pool = || -> Arc<EvalPool> {
+            Arc::new(EvalService::spawn_sharded(1, move |_shard| {
+                move |chunk: Vec<Config>| -> amq::Result<Vec<f32>> {
+                    Ok(chunk.iter().map(synth_score).collect())
+                }
+            }))
+        };
+        let mut ev = PooledEvaluator::from_service(make_pool()).with_score_batch(8);
+        let t0 = Instant::now();
+        let cold = run_search(&search_space, &mut ev, &gp_params).unwrap();
+        let cold_wall = t0.elapsed();
+
+        let warm_dir = std::env::temp_dir().join("amq_bench_warm");
+        let _ = std::fs::remove_dir_all(&warm_dir);
+        let key = WarmKey::from_params("bench-synth", "hqq", &gp_params);
+        warmstart::save(&warm_dir, &key, &cold.archive, &search_space).unwrap();
+
+        // Exact tier: the persisted archive must reload bit-exactly.
+        let WarmLoad::Exact(entry) = warmstart::load(&warm_dir, &key, &search_space) else {
+            panic!("expected an exact warm-start hit for the matching key");
+        };
+        assert_eq!(
+            archive_hash(&entry.archive),
+            archive_hash(&cold.archive),
+            "warm-start reload must reproduce the cold archive bit-exactly"
+        );
+
+        // Seed tier: restart seeded with every persisted sample; none of
+        // them is re-evaluated, so the restart strictly saves evaluations.
+        let mut ev = PooledEvaluator::from_service(make_pool()).with_score_batch(8);
+        let t1 = Instant::now();
+        let warm =
+            run_search_seeded(&search_space, &mut ev, &gp_params, &entry.archive.samples).unwrap();
+        let warm_wall = t1.elapsed();
+        assert!(
+            warm.true_evals < cold.true_evals,
+            "seeded restart must skip evaluations the cold run already paid for"
+        );
+        let _ = std::fs::remove_dir_all(&warm_dir);
+        println!(
+            "gp cold: {:>8} wall, {} true evals; exact adopt: 0 evals (bit-exact); \
+             seeded restart: {:>8} wall, {} true evals ({} seeds reused)",
+            format!("{:.0?}", cold_wall),
+            cold.true_evals,
+            format!("{:.0?}", warm_wall),
+            warm.true_evals,
+            entry.archive.len(),
+        );
+        rows.push_str(",\n");
+        let _ = write!(
+            rows,
+            "    {{\"predictor\": \"gp\", \"ucb_kappa\": 0.5, \"warm_start\": \"cold\", \
+             \"wall_seconds\": {:.4}, \"true_evals\": {}, \"archive_len\": {}}}",
+            cold_wall.as_secs_f64(),
+            cold.true_evals,
+            cold.archive.len(),
+        );
+        rows.push_str(",\n");
+        let _ = write!(
+            rows,
+            "    {{\"predictor\": \"gp\", \"ucb_kappa\": 0.5, \"warm_start\": \"seed\", \
+             \"wall_seconds\": {:.4}, \"true_evals\": {}, \"archive_len\": {}, \
+             \"seed_samples\": {}, \"exact_adopt_bit_exact\": true}}",
+            warm_wall.as_secs_f64(),
+            warm.true_evals,
+            warm.archive.len(),
+            entry.archive.len(),
+        );
     }
 
     // shared-bank residency: 4 shards referencing one Arc'd bank count 1x

@@ -35,12 +35,12 @@ fn main() -> amq::Result<()> {
 
     bench("proxy assemble (28 layers)", Duration::from_millis(300), || {
         let cfg = space.random(&mut rng);
-        std::hint::black_box(proxy.assemble(&cfg).len());
+        std::hint::black_box(proxy.assemble(&cfg).unwrap().len());
     })
     .print();
 
     let cfg3 = space.uniform(3);
-    let layers = proxy.assemble(&cfg3);
+    let layers = proxy.assemble(&cfg3).unwrap();
     bench("fused scorer call (jsd+ce)", Duration::from_secs(6), || {
         std::hint::black_box(rt.scores(&batch, &layers).unwrap());
     })

@@ -8,9 +8,12 @@
 //! * [`proxy`] — the precomputed `(method, layer, bits)` piece bank +
 //!   zero-copy candidate assembly (§3.3) and the
 //!   [`proxy::ConfigEvaluator`] true-evaluation interface;
-//! * [`predictor`] — RBF (default) / MLP quality predictors (§3.4);
+//! * [`predictor`] — RBF (default) / MLP / exact-GP quality predictors
+//!   (§3.4; the GP also prices uncertainty for the UCB candidate screen);
 //! * [`nsga2`] — the multi-objective genetic engine;
 //! * [`search`] — the iterative search-and-update loop (§3.5);
+//! * [`warmstart`] — archive + predictor-training-set persistence keyed by
+//!   `(model, methods, budget)` for `repro search --warm-start DIR`;
 //! * [`oneshot`], [`greedy`] — the Appendix G discrete-search baselines;
 //! * [`archive`] — evaluated samples, Pareto front, budget selection;
 //! * [`synth`] — the deterministic synthetic workload the topology-matrix
@@ -27,6 +30,7 @@ pub mod search;
 pub mod sensitivity;
 pub mod space;
 pub mod synth;
+pub mod warmstart;
 
 pub use archive::{Archive, Sample};
 pub use proxy::{
@@ -34,5 +38,6 @@ pub use proxy::{
     EvalBatchStats, EvalPool, MethodBuildStats, PooledEvaluator, ProxyBank, ProxyEvaluator,
     DEFAULT_SLAB_CACHE_MB,
 };
-pub use search::{run_search, SearchParams, SearchResult};
-pub use space::{gene, gene_bits, gene_method, Config, Gene, SearchSpace};
+pub use search::{run_search, run_search_seeded, SearchParams, SearchResult};
+pub use space::{gene, gene_bits, gene_method, try_gene_method, Config, Gene, SearchSpace};
+pub use warmstart::{WarmEntry, WarmKey, WarmLoad};

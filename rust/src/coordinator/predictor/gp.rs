@@ -1,0 +1,220 @@
+//! Exact Gaussian-process regressor with an RBF kernel (§3.4 surrogate,
+//! uncertainty-aware variant):
+//!
+//!   mean(x) = b + k(x)^T (K + λI)^{-1} (y - b)
+//!   var(x)  = k(x,x) + λ - ||L^{-1} k(x)||²,   K + λI = L L^T
+//!
+//! The kernel and bandwidth heuristic are identical to [`RbfPredictor`],
+//! so point predictions match the RBF surrogate; what the GP adds is the
+//! retained Cholesky factor, which prices every query's *uncertainty* —
+//! zero at training points, growing with distance from the archive.  The
+//! search's UCB screen (`SearchParams::ucb_kappa`) consumes that via
+//! [`QualityPredictor::predict_with_std`].
+//!
+//! Duplicate training points make `K` singular; the fit escalates the
+//! diagonal jitter until the factorization succeeds, so repeated archive
+//! entries degrade the conditioning, never the process.
+//!
+//! [`RbfPredictor`]: super::RbfPredictor
+
+use super::rbf::dist2;
+use super::QualityPredictor;
+use crate::tensor::cholesky_f64;
+
+pub struct GpPredictor {
+    /// Base diagonal jitter λ (matches the RBF ridge so the two
+    /// surrogates' point predictions agree).
+    pub ridge: f32,
+    centers: Vec<Vec<f32>>,
+    alpha: Vec<f64>,
+    /// Lower Cholesky factor of `K + λI` (row-major n×n); empty until fit.
+    chol: Vec<f64>,
+    /// The jitter actually factorized (escalated on duplicate points).
+    jitter: f64,
+    bias: f32,
+    gamma2: f32, // 2 γ²
+}
+
+impl Default for GpPredictor {
+    fn default() -> Self {
+        GpPredictor {
+            ridge: 1e-4,
+            centers: Vec::new(),
+            alpha: Vec::new(),
+            chol: Vec::new(),
+            jitter: 0.0,
+            bias: 0.0,
+            gamma2: 1.0,
+        }
+    }
+}
+
+impl GpPredictor {
+    /// Kernel vector k(x, centers) in f64.
+    fn kvec(&self, x: &[f32]) -> Vec<f64> {
+        self.centers
+            .iter()
+            .map(|c| (-(dist2(c, x) as f64) / self.gamma2 as f64).exp())
+            .collect()
+    }
+}
+
+impl QualityPredictor for GpPredictor {
+    fn name(&self) -> &'static str {
+        "gp"
+    }
+
+    fn fit(&mut self, x: &[Vec<f32>], y: &[f32]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        // bandwidth: median pairwise squared distance (same heuristic as
+        // the RBF surrogate, subsampled for big archives)
+        let mut d2s = Vec::new();
+        let step = (n / 64).max(1);
+        for i in (0..n).step_by(step) {
+            for j in (i + 1..n).step_by(step) {
+                let d = dist2(&x[i], &x[j]);
+                if d > 0.0 {
+                    d2s.push(d);
+                }
+            }
+        }
+        self.gamma2 = crate::tensor::median(&d2s).max(1e-6);
+
+        self.bias = y.iter().sum::<f32>() / n as f32;
+        let yc: Vec<f64> = y.iter().map(|&v| (v - self.bias) as f64).collect();
+        self.centers = x.to_vec();
+
+        // kernel matrix in f64; factorize with escalating jitter so
+        // duplicate rows never NaN the fit
+        let mut k = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = (-(dist2(&x[i], &x[j]) as f64) / self.gamma2 as f64).exp();
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+        }
+        let mut jitter = self.ridge as f64;
+        let mut chol = None;
+        for _ in 0..8 {
+            let mut kj = k.clone();
+            for i in 0..n {
+                kj[i * n + i] += jitter;
+            }
+            if let Some(l) = cholesky_f64(&kj, n) {
+                chol = Some(l);
+                break;
+            }
+            jitter *= 10.0;
+        }
+        let Some(l) = chol else {
+            // pathological inputs: degrade to the constant mean predictor
+            self.alpha = vec![0.0; n];
+            self.chol = Vec::new();
+            self.jitter = jitter;
+            return;
+        };
+        // alpha = (K + λI)^{-1} yc via the two triangular solves
+        let mut v = vec![0.0f64; n];
+        for i in 0..n {
+            let mut s = yc[i];
+            for t in 0..i {
+                s -= l[i * n + t] * v[t];
+            }
+            v[i] = s / l[i * n + i];
+        }
+        let mut alpha = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut s = v[i];
+            for t in i + 1..n {
+                s -= l[t * n + i] * alpha[t];
+            }
+            alpha[i] = s / l[i * n + i];
+        }
+        self.alpha = alpha;
+        self.chol = l;
+        self.jitter = jitter;
+    }
+
+    fn predict(&self, x: &[f32]) -> f32 {
+        let k = self.kvec(x);
+        let s: f64 = k.iter().zip(&self.alpha).map(|(kv, a)| kv * a).sum();
+        self.bias + s as f32
+    }
+
+    fn predict_with_std(&self, x: &[f32]) -> (f32, f32) {
+        let mean = self.predict(x);
+        let n = self.centers.len();
+        if self.chol.is_empty() {
+            return (mean, 0.0);
+        }
+        // forward solve L v = k(x); var = k(x,x) + λ - v^T v
+        let k = self.kvec(x);
+        let l = &self.chol;
+        let mut v = vec![0.0f64; n];
+        for i in 0..n {
+            let mut s = k[i];
+            for t in 0..i {
+                s -= l[i * n + t] * v[t];
+            }
+            v[i] = s / l[i * n + i];
+        }
+        let vtv: f64 = v.iter().map(|&x| x * x).sum();
+        let var = (1.0 + self.jitter - vtv).max(0.0);
+        (mean, var.sqrt() as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_on_single_point() {
+        let mut p = GpPredictor::default();
+        p.fit(&[vec![0.5, 0.5]], &[3.0]);
+        assert!((p.predict(&[0.5, 0.5]) - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn std_near_zero_at_training_points_grows_with_distance() {
+        let mut p = GpPredictor::default();
+        let xs: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32 * 0.2, 0.5]).collect();
+        let ys: Vec<f32> = xs.iter().map(|x| x[0] * 2.0 + 1.0).collect();
+        p.fit(&xs, &ys);
+        let (_, s_train) = p.predict_with_std(&xs[2]);
+        assert!(s_train < 0.05, "std at a training point: {s_train}");
+        let (_, s_near) = p.predict_with_std(&[0.5, 0.6]);
+        let (_, s_far) = p.predict_with_std(&[5.0, -4.0]);
+        assert!(
+            s_train < s_near && s_near < s_far,
+            "std must grow with distance: {s_train} / {s_near} / {s_far}"
+        );
+        // far from every center the prior variance k(x,x)+λ ≈ 1 dominates
+        assert!(s_far > 0.9, "{s_far}");
+    }
+
+    #[test]
+    fn duplicate_points_do_not_nan() {
+        let mut p = GpPredictor::default();
+        let xs = vec![vec![0.0, 0.0], vec![0.0, 0.0], vec![0.0, 0.0], vec![1.0, 1.0]];
+        let ys = vec![1.0, 1.0, 1.0, 2.0];
+        p.fit(&xs, &ys);
+        let (m, s) = p.predict_with_std(&[0.0, 0.0]);
+        assert!(m.is_finite() && s.is_finite(), "mean {m}, std {s}");
+        assert!((m - 1.0).abs() < 0.2, "{m}");
+        let (m, s) = p.predict_with_std(&[0.7, 0.3]);
+        assert!(m.is_finite() && s.is_finite());
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn smooth_between_points() {
+        let mut p = GpPredictor::default();
+        p.fit(&[vec![0.0], vec![1.0]], &[0.0, 1.0]);
+        let mid = p.predict(&[0.5]);
+        assert!(mid > 0.2 && mid < 0.8, "{mid}");
+    }
+}

@@ -1,10 +1,15 @@
 //! Quality predictors (§3.4): estimate a configuration's JSD from its
 //! bit-vector without touching the model.  RBF is the paper's default;
-//! a small MLP is kept for the Table 9 ablation.
+//! a small MLP is kept for the Table 9 ablation; the exact GP shares the
+//! RBF kernel but additionally prices each query's *uncertainty*
+//! ([`QualityPredictor::predict_with_std`]), which the search's UCB
+//! candidate screen consumes.
 
+mod gp;
 mod mlp;
 mod rbf;
 
+pub use gp::GpPredictor;
 pub use mlp::MlpPredictor;
 pub use rbf::RbfPredictor;
 
@@ -16,6 +21,14 @@ pub trait QualityPredictor {
     /// Predict the quality of one feature vector.
     fn predict(&self, x: &[f32]) -> f32;
 
+    /// Predict with a one-sigma uncertainty estimate.  Point predictors
+    /// report zero uncertainty (the UCB screen then reduces to the plain
+    /// point-estimate screen); the GP overrides this with its posterior
+    /// standard deviation.
+    fn predict_with_std(&self, x: &[f32]) -> (f32, f32) {
+        (self.predict(x), 0.0)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -24,23 +37,38 @@ pub trait QualityPredictor {
 pub enum PredictorKind {
     Rbf,
     Mlp,
+    Gp,
 }
 
 impl PredictorKind {
+    /// Every selectable predictor, CLI order — the single source of truth
+    /// the `parse` error text and the ablation harnesses derive from, so
+    /// adding a variant can never leave the help text stale.
+    pub const ALL: [PredictorKind; 3] =
+        [PredictorKind::Rbf, PredictorKind::Mlp, PredictorKind::Gp];
+
     pub fn name(self) -> &'static str {
         match self {
             PredictorKind::Rbf => "rbf",
             PredictorKind::Mlp => "mlp",
+            PredictorKind::Gp => "gp",
         }
+    }
+
+    /// Comma-joined list of every selectable predictor name.
+    pub fn available() -> String {
+        PredictorKind::ALL.map(|k| k.name()).join(", ")
     }
 
     /// Parse a CLI predictor name.
     pub fn parse(s: &str) -> crate::Result<PredictorKind> {
-        match s.trim() {
-            "rbf" => Ok(PredictorKind::Rbf),
-            "mlp" => Ok(PredictorKind::Mlp),
-            other => eyre::bail!("unknown predictor `{other}` (available: rbf, mlp)"),
-        }
+        let t = s.trim();
+        PredictorKind::ALL
+            .into_iter()
+            .find(|k| k.name() == t)
+            .ok_or_else(|| {
+                eyre::anyhow!("unknown predictor `{t}` (available: {})", Self::available())
+            })
     }
 }
 
@@ -48,6 +76,7 @@ pub fn make(kind: PredictorKind, seed: u64) -> Box<dyn QualityPredictor> {
     match kind {
         PredictorKind::Rbf => Box::new(RbfPredictor::default()),
         PredictorKind::Mlp => Box::new(MlpPredictor::new(seed)),
+        PredictorKind::Gp => Box::new(GpPredictor::default()),
     }
 }
 
@@ -105,11 +134,20 @@ mod tests {
 
     #[test]
     fn kind_parse_roundtrip() {
-        for k in [PredictorKind::Rbf, PredictorKind::Mlp] {
+        for k in PredictorKind::ALL {
             assert_eq!(PredictorKind::parse(k.name()).unwrap(), k);
             assert_eq!(make(k, 0).name(), k.name());
         }
         assert!(PredictorKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn parse_error_lists_every_kind() {
+        // the available-list is derived from ALL, so it can never drift
+        let msg = format!("{}", PredictorKind::parse("nope").unwrap_err());
+        for k in PredictorKind::ALL {
+            assert!(msg.contains(k.name()), "error text misses `{}`: {msg}", k.name());
+        }
     }
 
     #[test]
@@ -120,6 +158,38 @@ mod tests {
     #[test]
     fn mlp_generalizes() {
         check_generalizes(make(PredictorKind::Mlp, 0));
+    }
+
+    #[test]
+    fn gp_generalizes() {
+        check_generalizes(make(PredictorKind::Gp, 0));
+    }
+
+    #[test]
+    fn gp_matches_rbf_tau() {
+        // same kernel, same bandwidth heuristic, f64 solve: the GP's
+        // held-out rank correlation must not fall below the RBF's
+        let (xs, ys) = dataset(160, 12, 1);
+        let (xt, yt) = dataset(60, 12, 2);
+        let tau = |kind| {
+            let mut p = make(kind, 0);
+            p.fit(&xs, &ys);
+            let pred: Vec<f32> = xt.iter().map(|x| p.predict(x)).collect();
+            kendall_tau(&pred, &yt)
+        };
+        let (t_rbf, t_gp) = (tau(PredictorKind::Rbf), tau(PredictorKind::Gp));
+        assert!(t_gp >= t_rbf - 0.01, "gp tau {t_gp} below rbf tau {t_rbf}");
+        assert!(t_gp > 0.6, "{t_gp}");
+    }
+
+    #[test]
+    fn default_predict_with_std_is_zero_uncertainty() {
+        let (xs, ys) = dataset(30, 6, 4);
+        let mut p = make(PredictorKind::Rbf, 0);
+        p.fit(&xs, &ys);
+        let (m, s) = p.predict_with_std(&xs[0]);
+        assert_eq!(s, 0.0, "point predictors report zero std");
+        assert_eq!(m, p.predict(&xs[0]));
     }
 
     #[test]

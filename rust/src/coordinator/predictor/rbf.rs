@@ -29,7 +29,7 @@ impl Default for RbfPredictor {
     }
 }
 
-fn dist2(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dist2(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 

@@ -9,7 +9,7 @@
 //! paper's activation-independent proxy; enabling more methods widens the
 //! genome without changing the assembly contract.
 
-use super::space::{gene_bits, gene_method, Config, Gene};
+use super::space::{gene_bits, try_gene_method, Config, Gene};
 use crate::data::Manifest;
 use crate::model::{HessianStore, WeightStore};
 use crate::quant::{MethodId, MethodRegistry, QuantizedLinear, Quantizer};
@@ -167,27 +167,39 @@ impl ProxyBank {
         self.stats.iter().map(|s| s.memory_bytes).sum()
     }
 
-    fn slot(&self, method: MethodId) -> usize {
-        self.methods
+    /// Decode and look up a gene's `(slot, bit index)` coordinates.  Genes
+    /// arrive from wire `Chunk` frames and persisted archives as well as
+    /// from the in-process search, so every miss — an invalid method byte,
+    /// a method the bank never precomputed, a bit-width outside the
+    /// manifest — is a clean `Err` that fails the one request, never a
+    /// panic that takes down the process.
+    fn locate(&self, g: Gene) -> Result<(usize, usize)> {
+        let method = try_gene_method(g)
+            .ok_or_else(|| eyre::anyhow!("invalid method byte in gene {g:#06x}"))?;
+        let slot = self
+            .methods
             .iter()
             .position(|&m| m == method)
-            .unwrap_or_else(|| panic!("method {} not precomputed in bank", method.name()))
-    }
-
-    fn bit_index(&self, bits: u8) -> usize {
-        self.bit_choices
+            .ok_or_else(|| {
+                eyre::anyhow!("method {} not precomputed in bank", method.name())
+            })?;
+        let bits = gene_bits(g);
+        let bi = self
+            .bit_choices
             .iter()
             .position(|&b| b == bits)
-            .unwrap_or_else(|| panic!("bit width {bits} not precomputed"))
+            .ok_or_else(|| eyre::anyhow!("bit width {bits} not precomputed"))?;
+        Ok((slot, bi))
     }
 
     /// The precomputed piece for one layer's gene.
-    pub fn piece(&self, li: usize, g: Gene) -> &QuantizedLinear {
-        &self.pieces[self.slot(gene_method(g))][li][self.bit_index(gene_bits(g))]
+    pub fn piece(&self, li: usize, g: Gene) -> Result<&QuantizedLinear> {
+        let (slot, bi) = self.locate(g)?;
+        Ok(&self.pieces[slot][li][bi])
     }
 
     /// Host-side assembly (for tests / CPU paths).
-    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantizedLinear> {
+    pub fn assemble(&self, config: &[Gene]) -> Result<Vec<&QuantizedLinear>> {
         config.iter().enumerate().map(|(li, &g)| self.piece(li, g)).collect()
     }
 }
@@ -294,12 +306,13 @@ impl DeviceBank {
     }
 
     /// The uploaded buffers of one layer's gene.
-    pub fn piece(&self, li: usize, g: Gene) -> &QuantLayerBufs {
-        &self.bufs[self.bank.slot(gene_method(g))][li][self.bank.bit_index(gene_bits(g))]
+    pub fn piece(&self, li: usize, g: Gene) -> Result<&QuantLayerBufs> {
+        let (slot, bi) = self.bank.locate(g)?;
+        Ok(&self.bufs[slot][li][bi])
     }
 
     /// Zero-copy assembly of a configuration into buffer references.
-    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
+    pub fn assemble(&self, config: &[Gene]) -> Result<Vec<&QuantLayerBufs>> {
         config.iter().enumerate().map(|(li, &g)| self.piece(li, g)).collect()
     }
 }
@@ -389,7 +402,7 @@ impl<'rt> DeviceProxy<'rt> {
     }
 
     /// Zero-copy assembly of a configuration into buffer references.
-    pub fn assemble(&self, config: &[Gene]) -> Vec<&QuantLayerBufs> {
+    pub fn assemble(&self, config: &[Gene]) -> Result<Vec<&QuantLayerBufs>> {
         self.dev.assemble(config)
     }
 
@@ -433,14 +446,18 @@ impl<'rt> DeviceProxy<'rt> {
                 let sig = crate::runtime::lane_slab_sig(group, li, lanes);
                 let slab = self.dev.slab_cache.get_or_build((li, sig), || {
                     if gather {
-                        let pieces: Vec<&QuantLayerBufs> =
-                            group.iter().map(|c| self.dev.piece(li, c[li])).collect();
+                        let pieces: Vec<&QuantLayerBufs> = group
+                            .iter()
+                            .map(|c| self.dev.piece(li, c[li]))
+                            .collect::<Result<_>>()?;
                         let bufs = self.rt.gather_lane_slab(&pieces)?;
                         let bytes = bufs.bytes;
                         Ok((bufs, bytes))
                     } else {
-                        let pieces: Vec<&QuantizedLinear> =
-                            group.iter().map(|c| self.bank.piece(li, c[li])).collect();
+                        let pieces: Vec<&QuantizedLinear> = group
+                            .iter()
+                            .map(|c| self.bank.piece(li, c[li]))
+                            .collect::<Result<_>>()?;
                         let bufs = self.rt.upload_lane_slab(&pieces)?;
                         let bytes = bufs.bytes;
                         Ok((bufs, bytes))
@@ -595,7 +612,7 @@ pub fn mean_jsd_batch(
         }
     } else {
         let assembled: Vec<Vec<&QuantLayerBufs>> =
-            configs.iter().map(|c| proxy.assemble(c)).collect();
+            configs.iter().map(|c| proxy.assemble(c)).collect::<Result<_>>()?;
         let candidates: Vec<&[&QuantLayerBufs]> =
             assembled.iter().map(|v| v.as_slice()).collect();
         for b in batches {
@@ -872,10 +889,10 @@ mod tests {
     #[test]
     fn assemble_picks_right_bits() {
         let bank = toy_bank(&[MethodId::Rtn]);
-        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 4)]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 4)]).unwrap();
         assert_eq!(asm[0].bits, 2);
         assert_eq!(asm[1].bits, 4);
-        let asm = bank.assemble(&[gene(MethodId::Rtn, 3), gene(MethodId::Rtn, 3)]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 3), gene(MethodId::Rtn, 3)]).unwrap();
         assert_eq!(asm[0].bits, 3);
         assert_eq!(asm[1].bits, 3);
     }
@@ -884,29 +901,42 @@ mod tests {
     fn assemble_picks_right_method() {
         let bank = toy_bank(&[MethodId::Hqq, MethodId::Rtn]);
         let cfg = vec![gene(MethodId::Rtn, 3), gene(MethodId::Hqq, 2)];
-        let asm = bank.assemble(&cfg);
-        assert_eq!(asm[0].codes, bank.piece(0, gene(MethodId::Rtn, 3)).codes);
-        assert_eq!(asm[1].codes, bank.piece(1, gene(MethodId::Hqq, 2)).codes);
+        let asm = bank.assemble(&cfg).unwrap();
+        assert_eq!(asm[0].codes, bank.piece(0, gene(MethodId::Rtn, 3)).unwrap().codes);
+        assert_eq!(asm[1].codes, bank.piece(1, gene(MethodId::Hqq, 2)).unwrap().codes);
         // HQQ refines the RTN start, so 2-bit pieces of the two methods
         // genuinely differ on random weights
-        let h = bank.piece(0, gene(MethodId::Hqq, 2));
-        let r = bank.piece(0, gene(MethodId::Rtn, 2));
+        let h = bank.piece(0, gene(MethodId::Hqq, 2)).unwrap();
+        let r = bank.piece(0, gene(MethodId::Rtn, 2)).unwrap();
         assert_eq!((h.bits, r.bits), (2, 2));
         assert_ne!(h.codes, r.codes, "methods must produce distinct pieces");
     }
 
     #[test]
-    #[should_panic]
     fn assemble_rejects_unknown_bits() {
         let bank = toy_bank(&[MethodId::Rtn]);
-        bank.assemble(&[gene(MethodId::Rtn, 5), gene(MethodId::Rtn, 3)]);
+        let err = bank
+            .assemble(&[gene(MethodId::Rtn, 5), gene(MethodId::Rtn, 3)])
+            .unwrap_err();
+        assert!(format!("{err}").contains("bit width 5"), "{err}");
     }
 
     #[test]
-    #[should_panic]
     fn assemble_rejects_unknown_method() {
         let bank = toy_bank(&[MethodId::Rtn]);
-        bank.assemble(&[gene(MethodId::Hqq, 3), gene(MethodId::Rtn, 3)]);
+        let err = bank
+            .assemble(&[gene(MethodId::Hqq, 3), gene(MethodId::Rtn, 3)])
+            .unwrap_err();
+        assert!(format!("{err}").contains("not precomputed"), "{err}");
+    }
+
+    #[test]
+    fn assemble_rejects_invalid_method_byte() {
+        // a garbage method byte (0x0F) — the corrupt-archive / malicious
+        // wire-chunk case — must fail the request, not panic the process
+        let bank = toy_bank(&[MethodId::Rtn]);
+        let err = bank.assemble(&[0x0F03, gene(MethodId::Rtn, 3)]).unwrap_err();
+        assert!(format!("{err}").contains("invalid method byte"), "{err}");
     }
 
     #[test]
@@ -914,7 +944,7 @@ mod tests {
         // the proxy invariant: assembling precomputed pieces is *identical*
         // to quantizing the model at that configuration directly
         let bank = toy_bank(&[MethodId::Rtn]);
-        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 3)]);
+        let asm = bank.assemble(&[gene(MethodId::Rtn, 2), gene(MethodId::Rtn, 3)]).unwrap();
         let w0 = toy_weight(1);
         let w1 = toy_weight(2);
         assert_eq!(asm[0].codes, Rtn.quantize(&w0, 2, 128, None).codes);
@@ -930,7 +960,8 @@ mod tests {
             // 2 layers x 3 bit choices of 8x128 weights each
             let expect: usize = (0..2)
                 .flat_map(|li| {
-                    [2u8, 3, 4].map(|b| bank.piece(li, gene(s.method, b)).memory_bytes())
+                    [2u8, 3, 4]
+                        .map(|b| bank.piece(li, gene(s.method, b)).unwrap().memory_bytes())
                 })
                 .sum();
             assert_eq!(s.memory_bytes, expect);

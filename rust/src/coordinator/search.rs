@@ -2,7 +2,7 @@
 //! predictor -> NSGA-II on (predicted JSD, avg bits) -> true-evaluate the
 //! most promising unseen candidates -> update archive -> repeat.
 
-use super::archive::Archive;
+use super::archive::{Archive, Sample};
 use super::nsga2::{self, Nsga2Params};
 use super::predictor::{self, PredictorKind};
 use super::proxy::ConfigEvaluator;
@@ -22,6 +22,13 @@ pub struct SearchParams {
     pub nsga: Nsga2Params,
     pub predictor: PredictorKind,
     pub seed: u64,
+    /// UCB exploration weight κ for the candidate screen.  0.0 (the
+    /// default) keeps the classic point-estimate screen — and with it every
+    /// existing archive hash; κ > 0 admits unseen individuals whose
+    /// optimistic bound `mean − κ·std` beats the generation floor, so
+    /// high-variance explorers survive when the predictor reports
+    /// uncertainty (`--predictor gp`).
+    pub ucb_kappa: f64,
 }
 
 impl Default for SearchParams {
@@ -41,6 +48,7 @@ impl Default for SearchParams {
             },
             predictor: PredictorKind::Rbf,
             seed: 0,
+            ucb_kappa: 0.0,
         }
     }
 }
@@ -55,6 +63,7 @@ impl SearchParams {
             nsga: Nsga2Params::default(),
             predictor: PredictorKind::Rbf,
             seed: 0,
+            ucb_kappa: 0.0,
         }
     }
 
@@ -72,6 +81,7 @@ impl SearchParams {
             },
             predictor: PredictorKind::Rbf,
             seed: 0,
+            ucb_kappa: 0.0,
         }
     }
 }
@@ -122,11 +132,33 @@ pub fn run_search(
     evaluator: &mut dyn ConfigEvaluator,
     params: &SearchParams,
 ) -> Result<SearchResult> {
+    run_search_seeded(space, evaluator, params, &[])
+}
+
+/// [`run_search`] warm-started from already-evaluated samples (a persisted
+/// archive from a related run — see `coordinator::warmstart`).  Valid seeds
+/// are inserted before the random init, so they count toward `n_init`, seed
+/// the predictor's training set, and are never re-evaluated; seeds outside
+/// `space` (stale or corrupt entries) are skipped, not fatal.  With an
+/// empty seed slice this is exactly `run_search`.
+pub fn run_search_seeded(
+    space: &SearchSpace,
+    evaluator: &mut dyn ConfigEvaluator,
+    params: &SearchParams,
+    seed_samples: &[Sample],
+) -> Result<SearchResult> {
     let t_start = Instant::now();
     let mut rng = Rng::new(params.seed);
     let mut archive = Archive::new();
     let active = space.active_layers();
     let mut predictor_queries = 0usize;
+
+    for s in seed_samples {
+        if !space.contains(&s.config) {
+            continue;
+        }
+        archive.insert(s.config.clone(), s.jsd, space.avg_bits(&s.config));
+    }
 
     // -- initial sampling, spread across the bits range ------------------
     // Candidates are drawn in chunks and true-evaluated through
@@ -200,10 +232,33 @@ pub fn run_search(
         });
         predictor_queries += queries;
 
-        // candidate subset: unseen rank-0 individuals, spread over bits
+        // candidate subset: unseen rank-0 individuals, spread over bits.
+        // With κ > 0 the screen is uncertainty-aware: a dominated
+        // individual survives if its optimistic bound mean − κ·std still
+        // beats the worst predicted JSD on rank 0 (the generation floor),
+        // so high-variance explorers are not killed by a pessimistic
+        // point estimate.  κ = 0 short-circuits before any extra
+        // predictor query, leaving the classic screen — and every
+        // existing archive hash — untouched.
+        let floor = pop
+            .iter()
+            .filter(|i| i.rank == 0)
+            .map(|i| i.obj[0])
+            .fold(f64::NEG_INFINITY, f64::max);
         let mut cands: Vec<&nsga2::Individual> = pop
             .iter()
-            .filter(|i| i.rank == 0 && !archive.contains(&i.config))
+            .filter(|i| !archive.contains(&i.config))
+            .filter(|i| {
+                if i.rank == 0 {
+                    return true;
+                }
+                if params.ucb_kappa <= 0.0 {
+                    return false;
+                }
+                predictor_queries += 1;
+                let (m, s) = pred.predict_with_std(&space.features(&i.config, &active));
+                (m as f64) - params.ucb_kappa * (s as f64) <= floor
+            })
             .collect();
         cands.sort_by(|a, b| a.obj[1].partial_cmp(&b.obj[1]).unwrap());
         let picked: Vec<Config> = if cands.len() <= params.candidates_per_iter {
@@ -339,6 +394,7 @@ mod tests {
             },
             predictor: PredictorKind::Rbf,
             seed: 3,
+            ucb_kappa: 0.0,
         };
         let mut ev = SynthEval { weights: weights.clone(), evals: 0 };
         let res = run_search(&space, &mut ev, &params).unwrap();
@@ -354,14 +410,17 @@ mod tests {
                 best_random = best_random.min(j);
             }
         }
-        let best_search = res.archive.best_under(3.25, 0.005).unwrap().jsd;
+        let best = res
+            .archive
+            .best_under(3.25, 0.005)
+            .expect("init sampling spans the bits range, so 3.25 is populated");
+        let best_search = best.jsd;
         assert!(
             best_search <= best_random,
             "search {best_search} vs random {best_random}"
         );
         // the search must discover the structure: at the 3.25 budget the
         // heavy layers should be kept high
-        let best = res.archive.best_under(3.25, 0.005).unwrap();
         let heavy_bits: f32 = (0..16)
             .filter(|i| i % 4 == 0)
             .map(|i| best.config[i] as f32)
@@ -402,5 +461,73 @@ mod tests {
         for (x, y) in a.archive.samples.iter().zip(&b.archive.samples) {
             assert_eq!(x.config, y.config);
         }
+    }
+
+    #[test]
+    fn empty_under_budget_is_none_not_panic() {
+        let space = toy_space(8);
+        let mut ev = SynthEval { weights: vec![0.3; 8], evals: 0 };
+        let res = run_search(&space, &mut ev, &SearchParams::smoke()).unwrap();
+        // the toy space floors at 2 bits/layer, so nothing sits under 1.5
+        assert!(res.archive.best_under(1.5, 0.005).is_none());
+        assert!(res.archive.best_under(4.0, 0.005).is_some());
+    }
+
+    #[test]
+    fn seeded_search_reuses_samples_without_reeval() {
+        let space = toy_space(6);
+        let mk = || SynthEval { weights: vec![0.1, 0.5, 0.2, 0.9, 0.05, 0.3], evals: 0 };
+        let mut p = SearchParams::smoke();
+        p.seed = 11;
+        let cold = run_search(&space, &mut mk(), &p).unwrap();
+        let seeds = cold.archive.samples.clone();
+        let warm = run_search_seeded(&space, &mut mk(), &p, &seeds).unwrap();
+        // every seed is adopted verbatim, in order, and never re-evaluated
+        assert!(warm.archive.len() >= seeds.len());
+        for (s, w) in seeds.iter().zip(&warm.archive.samples) {
+            assert_eq!(s.config, w.config);
+            assert_eq!(s.jsd.to_bits(), w.jsd.to_bits());
+        }
+        assert_eq!(warm.true_evals, warm.archive.len() - seeds.len());
+        // warm-started runs are deterministic too
+        let warm2 = run_search_seeded(&space, &mut mk(), &p, &seeds).unwrap();
+        assert_eq!(warm.archive.content_hash(), warm2.archive.content_hash());
+    }
+
+    #[test]
+    fn invalid_seed_samples_are_skipped() {
+        let space = toy_space(4);
+        let mk = || SynthEval { weights: vec![0.2; 4], evals: 0 };
+        let mut p = SearchParams::smoke();
+        p.seed = 5;
+        let bad = vec![
+            // corrupt method byte (no MethodId has index 0x0F)
+            Sample { config: vec![0x0F03, 2, 3, 4], jsd: 0.1, avg_bits: 3.0 },
+            // wrong layer count
+            Sample { config: vec![2, 3], jsd: 0.1, avg_bits: 2.5 },
+            // bit width outside the space's choices
+            Sample { config: vec![9, 9, 9, 9], jsd: 0.1, avg_bits: 9.0 },
+        ];
+        let warm = run_search_seeded(&space, &mut mk(), &p, &bad).unwrap();
+        let cold = run_search(&space, &mut mk(), &p).unwrap();
+        // all seeds rejected -> byte-identical to a cold start
+        assert_eq!(warm.archive.content_hash(), cold.archive.content_hash());
+    }
+
+    #[test]
+    fn ucb_screen_with_gp_is_deterministic() {
+        let space = toy_space(6);
+        let mk = || SynthEval { weights: vec![0.1, 0.5, 0.2, 0.9, 0.05, 0.3], evals: 0 };
+        let mut p = SearchParams::smoke();
+        p.predictor = PredictorKind::Gp;
+        p.ucb_kappa = 1.0;
+        p.seed = 11;
+        let a = run_search(&space, &mut mk(), &p).unwrap();
+        let b = run_search(&space, &mut mk(), &p).unwrap();
+        assert_eq!(a.archive.content_hash(), b.archive.content_hash());
+        assert!(a.true_evals > 0);
+        // the screen consults the predictor, never the RNG, so extra
+        // queries may accrue but determinism holds
+        assert_eq!(a.predictor_queries, b.predictor_queries);
     }
 }

@@ -28,11 +28,21 @@ pub fn gene_bits(g: Gene) -> u8 {
     (g & 0xFF) as u8
 }
 
-/// The method of a gene.
+/// The method of a gene, if the method byte is valid.  This is the entry
+/// point for *untrusted* genes — bytes carried by a wire `Chunk` frame or a
+/// persisted archive — where a corrupt method byte must fail the one
+/// request, not the process.
+#[inline]
+pub fn try_gene_method(g: Gene) -> Option<MethodId> {
+    MethodId::from_index((g >> 8) as usize)
+}
+
+/// The method of a gene.  Panics on an invalid method byte, so this form is
+/// reserved for genes that are valid by construction (drawn from a
+/// [`SearchSpace`]); untrusted bytes go through [`try_gene_method`].
 #[inline]
 pub fn gene_method(g: Gene) -> MethodId {
-    MethodId::from_index((g >> 8) as usize)
-        .unwrap_or_else(|| panic!("invalid method byte in gene {g:#06x}"))
+    try_gene_method(g).unwrap_or_else(|| panic!("invalid method byte in gene {g:#06x}"))
 }
 
 /// A configuration: one `(method, bits)` gene per searchable layer
@@ -366,6 +376,17 @@ mod tests {
         // legacy-genome compatibility contract
         assert_eq!(gene(MethodId::Hqq, 3), 3);
         assert_eq!(gene(MethodId::Rtn, 3), 0x0103);
+    }
+
+    #[test]
+    fn try_gene_method_rejects_garbage_bytes() {
+        for m in MethodId::ALL {
+            assert_eq!(try_gene_method(gene(m, 3)), Some(m));
+        }
+        // a method byte beyond the registry: the kind of byte a corrupt
+        // cached archive or a malicious wire chunk can carry
+        assert_eq!(try_gene_method(0x0F03), None);
+        assert_eq!(try_gene_method(0xFF02), None);
     }
 
     #[test]

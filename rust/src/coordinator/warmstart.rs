@@ -1,0 +1,431 @@
+//! Warm-start persistence for the search (`repro search --warm-start DIR`).
+//!
+//! A finished search's archive (plus the predictor training set derived
+//! from it) is serialized to `DIR/warm_<fnv64(model|methods)>.json`, keyed
+//! by the full budget tuple `(model manifest hash, methods, n_init,
+//! iterations, candidates_per_iter, pop_size, generations, seed,
+//! predictor, ucb_kappa)`.  On the next run the file is loaded back in one
+//! of three tiers:
+//!
+//! * [`WarmLoad::Exact`] — every key field matches: the archive is adopted
+//!   verbatim and reproduces the cold run's `content_hash` bit-exactly
+//!   (floats travel as their raw bit patterns, `avg_bits` is recomputed
+//!   from the genes through the same `SearchSpace::avg_bits` that produced
+//!   it, and object keys render in `BTreeMap` order, so save -> load is a
+//!   byte-exact round trip);
+//! * [`WarmLoad::Seed`] — same model + methods but a different budget
+//!   tuple: the samples seed [`super::search::run_search_seeded`] (initial
+//!   population and predictor training set) and the search continues;
+//! * [`WarmLoad::Cold`] — no file, a mismatched model/methods key, or any
+//!   corruption (bad JSON, genes outside the space, a content-hash
+//!   mismatch): a warning line is printed and the search starts cold.
+//!   Stale state degrades the warm start, never the result.
+
+use super::archive::Archive;
+use super::search::SearchParams;
+use super::space::SearchSpace;
+use crate::data::json::Value;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The identity of a persisted search: archive reuse is only valid for the
+/// same model + method axis, and only bit-exact for the same budget tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WarmKey {
+    /// Model identity (manifest content hash in production; any stable
+    /// label in tests/benches).
+    pub model: String,
+    /// Canonical method-axis string (e.g. `"hqq,rtn"`).
+    pub methods: String,
+    pub n_init: usize,
+    pub iterations: usize,
+    pub candidates_per_iter: usize,
+    pub pop_size: usize,
+    pub generations: usize,
+    pub seed: u64,
+    pub predictor: String,
+    pub ucb_kappa: f64,
+}
+
+impl WarmKey {
+    pub fn from_params(model: &str, methods: &str, p: &SearchParams) -> WarmKey {
+        WarmKey {
+            model: model.to_string(),
+            methods: methods.to_string(),
+            n_init: p.n_init,
+            iterations: p.iterations,
+            candidates_per_iter: p.candidates_per_iter,
+            pop_size: p.nsga.pop_size,
+            generations: p.nsga.generations,
+            seed: p.seed,
+            predictor: p.predictor.name().to_string(),
+            ucb_kappa: p.ucb_kappa,
+        }
+    }
+
+    /// File name inside the warm-start dir.  Only `(model, methods)` feed
+    /// the name: budget variants of the same subject share a slot, so a
+    /// re-run with a bigger budget overwrites (upgrades) the entry instead
+    /// of accumulating stale siblings.
+    pub fn file_name(&self) -> String {
+        let bytes = self.model.bytes().chain(std::iter::once(0)).chain(self.methods.bytes());
+        format!("warm_{:016x}.json", fnv64(bytes))
+    }
+
+    fn to_value(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Value::Str(self.model.clone()));
+        m.insert("methods".into(), Value::Str(self.methods.clone()));
+        m.insert("n_init".into(), Value::Num(self.n_init as f64));
+        m.insert("iterations".into(), Value::Num(self.iterations as f64));
+        m.insert("candidates_per_iter".into(), Value::Num(self.candidates_per_iter as f64));
+        m.insert("pop_size".into(), Value::Num(self.pop_size as f64));
+        m.insert("generations".into(), Value::Num(self.generations as f64));
+        let (sh, sl) = split_u64(self.seed);
+        m.insert("seed_hi".into(), Value::Num(sh as f64));
+        m.insert("seed_lo".into(), Value::Num(sl as f64));
+        m.insert("predictor".into(), Value::Str(self.predictor.clone()));
+        let (kh, kl) = split_u64(self.ucb_kappa.to_bits());
+        m.insert("ucb_kappa_bits_hi".into(), Value::Num(kh as f64));
+        m.insert("ucb_kappa_bits_lo".into(), Value::Num(kl as f64));
+        Value::Obj(m)
+    }
+}
+
+/// A loaded warm-start entry: the persisted archive plus the predictor
+/// training set ((feature vector, JSD) pairs) derived from it at save time.
+pub struct WarmEntry {
+    pub archive: Archive,
+    pub train_x: Vec<Vec<f32>>,
+    pub train_y: Vec<f32>,
+}
+
+/// The three warm-start tiers (see the module doc).
+pub enum WarmLoad {
+    /// Full key match: the archive is the cold run's archive, bit-exact.
+    Exact(WarmEntry),
+    /// Same model + methods, different budget: seed and continue.
+    Seed(WarmEntry),
+    /// Nothing usable on disk: start from scratch.
+    Cold,
+}
+
+/// Stable model-identity label for [`WarmKey::model`]: the FNV-1a digest
+/// of the raw manifest bytes, hex-rendered.  Any manifest edit (weights,
+/// layer list, calibration files) changes the label and invalidates stale
+/// warm-start entries.
+pub fn model_label(manifest_bytes: &[u8]) -> String {
+    format!("{:016x}", fnv64(manifest_bytes.iter().copied()))
+}
+
+/// FNV-1a over a byte stream (same constants as `Archive::content_hash`).
+fn fnv64(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01B3);
+    }
+    h
+}
+
+/// JSON numbers carry at most 53 exact bits, so u64s travel as two u32s.
+fn split_u64(x: u64) -> (u32, u32) {
+    ((x >> 32) as u32, x as u32)
+}
+
+fn join_u64(hi: u32, lo: u32) -> u64 {
+    ((hi as u64) << 32) | lo as u64
+}
+
+fn read_u32(v: &Value, key: &str) -> Result<u32> {
+    let n = v.get(key)?.as_u64()?;
+    eyre::ensure!(n <= u32::MAX as u64, "`{key}` out of u32 range: {n}");
+    Ok(n as u32)
+}
+
+fn read_u64_pair(v: &Value, hi_key: &str, lo_key: &str) -> Result<u64> {
+    Ok(join_u64(read_u32(v, hi_key)?, read_u32(v, lo_key)?))
+}
+
+/// Persist `archive` (and its derived predictor training set) under `key`.
+/// Returns the file path written.
+pub fn save(dir: &Path, key: &WarmKey, archive: &Archive, space: &SearchSpace) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let active = space.active_layers();
+
+    let samples: Vec<Value> = archive
+        .samples
+        .iter()
+        .map(|s| {
+            let mut m = BTreeMap::new();
+            m.insert(
+                "config".into(),
+                Value::Arr(s.config.iter().map(|&g| Value::Num(g as f64)).collect()),
+            );
+            m.insert("jsd_bits".into(), Value::Num(s.jsd.to_bits() as f64));
+            Value::Obj(m)
+        })
+        .collect();
+    let (hh, hl) = split_u64(archive.content_hash());
+    let mut arc = BTreeMap::new();
+    arc.insert("hash_hi".into(), Value::Num(hh as f64));
+    arc.insert("hash_lo".into(), Value::Num(hl as f64));
+    arc.insert("samples".into(), Value::Arr(samples));
+
+    let xs: Vec<Value> = archive
+        .samples
+        .iter()
+        .map(|s| {
+            Value::Arr(
+                space
+                    .features(&s.config, &active)
+                    .iter()
+                    .map(|f| Value::Num(f.to_bits() as f64))
+                    .collect(),
+            )
+        })
+        .collect();
+    let ys: Vec<Value> = archive
+        .samples
+        .iter()
+        .map(|s| Value::Num(s.jsd.to_bits() as f64))
+        .collect();
+    let mut train = BTreeMap::new();
+    train.insert("x_bits".into(), Value::Arr(xs));
+    train.insert("y_bits".into(), Value::Arr(ys));
+
+    let mut root = BTreeMap::new();
+    root.insert("format".into(), Value::Num(1.0));
+    root.insert("key".into(), key.to_value());
+    root.insert("archive".into(), Value::Obj(arc));
+    root.insert("train".into(), Value::Obj(train));
+
+    let path = dir.join(key.file_name());
+    std::fs::write(&path, Value::Obj(root).render())?;
+    Ok(path)
+}
+
+/// Load the entry for `key` from `dir`.  Never fails: a missing file is a
+/// silent [`WarmLoad::Cold`]; a mismatched or corrupt file warns on stderr
+/// and falls back to [`WarmLoad::Cold`].
+pub fn load(dir: &Path, key: &WarmKey, space: &SearchSpace) -> WarmLoad {
+    let path = dir.join(key.file_name());
+    if !path.exists() {
+        return WarmLoad::Cold;
+    }
+    match try_load(&path, key, space) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("warning: ignoring warm-start file {}: {e}", path.display());
+            WarmLoad::Cold
+        }
+    }
+}
+
+fn try_load(path: &Path, key: &WarmKey, space: &SearchSpace) -> Result<WarmLoad> {
+    let text = std::fs::read_to_string(path)?;
+    let v = Value::parse(&text)?;
+    let format = v.get("format")?.as_usize()?;
+    eyre::ensure!(format == 1, "unknown warm-start format {format}");
+
+    let k = v.get("key")?;
+    let model = k.get("model")?.as_str()?;
+    let methods = k.get("methods")?.as_str()?;
+    eyre::ensure!(
+        model == key.model && methods == key.methods,
+        "key mismatch: file is for model `{model}` methods `{methods}`, \
+         this run is model `{}` methods `{}`",
+        key.model,
+        key.methods
+    );
+    let exact = k.get("n_init")?.as_usize()? == key.n_init
+        && k.get("iterations")?.as_usize()? == key.iterations
+        && k.get("candidates_per_iter")?.as_usize()? == key.candidates_per_iter
+        && k.get("pop_size")?.as_usize()? == key.pop_size
+        && k.get("generations")?.as_usize()? == key.generations
+        && read_u64_pair(k, "seed_hi", "seed_lo")? == key.seed
+        && k.get("predictor")?.as_str()? == key.predictor
+        && read_u64_pair(k, "ucb_kappa_bits_hi", "ucb_kappa_bits_lo")? == key.ucb_kappa.to_bits();
+
+    let arc = v.get("archive")?;
+    let mut archive = Archive::new();
+    for s in arc.get("samples")?.as_arr()? {
+        let config: Vec<u16> = s
+            .get("config")?
+            .as_arr()?
+            .iter()
+            .map(|g| {
+                let g = g.as_u64()?;
+                eyre::ensure!(g <= u16::MAX as u64, "gene out of range: {g}");
+                Ok(g as u16)
+            })
+            .collect::<Result<_>>()?;
+        eyre::ensure!(
+            space.contains(&config),
+            "sample outside the search space: {config:?}"
+        );
+        let jsd = f32::from_bits(read_u32(s, "jsd_bits")?);
+        let bits = space.avg_bits(&config);
+        eyre::ensure!(archive.insert(config, jsd, bits), "duplicate sample");
+    }
+    let stored = read_u64_pair(arc, "hash_hi", "hash_lo")?;
+    let recomputed = archive.content_hash();
+    eyre::ensure!(
+        recomputed == stored,
+        "content hash mismatch: stored {stored:#018x}, recomputed {recomputed:#018x}"
+    );
+
+    let train = v.get("train")?;
+    let train_x: Vec<Vec<f32>> = train
+        .get("x_bits")?
+        .as_arr()?
+        .iter()
+        .map(|row| {
+            row.as_arr()?
+                .iter()
+                .map(|b| {
+                    let b = b.as_u64()?;
+                    eyre::ensure!(b <= u32::MAX as u64, "feature bits out of range");
+                    Ok(f32::from_bits(b as u32))
+                })
+                .collect::<Result<Vec<f32>>>()
+        })
+        .collect::<Result<_>>()?;
+    let train_y: Vec<f32> = train
+        .get("y_bits")?
+        .as_arr()?
+        .iter()
+        .map(|b| {
+            let b = b.as_u64()?;
+            eyre::ensure!(b <= u32::MAX as u64, "target bits out of range");
+            Ok(f32::from_bits(b as u32))
+        })
+        .collect::<Result<_>>()?;
+    eyre::ensure!(
+        train_x.len() == archive.len() && train_y.len() == archive.len(),
+        "training set size {} / {} disagrees with archive size {}",
+        train_x.len(),
+        train_y.len(),
+        archive.len()
+    );
+
+    let entry = WarmEntry { archive, train_x, train_y };
+    Ok(if exact {
+        WarmLoad::Exact(entry)
+    } else {
+        WarmLoad::Seed(entry)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::space::toy_space;
+
+    fn toy_archive(space: &SearchSpace, n: usize) -> Archive {
+        let mut rng = crate::util::Rng::new(42);
+        let mut a = Archive::new();
+        while a.len() < n {
+            let cfg = space.random_near(&mut rng, 3.0, 0.5);
+            let jsd = rng.f64() as f32;
+            let bits = space.avg_bits(&cfg);
+            a.insert(cfg, jsd, bits);
+        }
+        a
+    }
+
+    fn key(model: &str) -> WarmKey {
+        WarmKey::from_params(model, "hqq", &SearchParams::smoke())
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let dir = std::env::temp_dir().join("amq_warm_roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let space = toy_space(6);
+        let a = toy_archive(&space, 12);
+        let k = key("model-a");
+        save(&dir, &k, &a, &space).unwrap();
+        let WarmLoad::Exact(entry) = load(&dir, &k, &space) else {
+            panic!("expected an exact hit");
+        };
+        assert_eq!(entry.archive.content_hash(), a.content_hash());
+        // the persisted training set matches a fresh derivation, bitwise
+        let active = space.active_layers();
+        let pairs = entry.train_x.iter().zip(&entry.train_y);
+        for (s, (x, &y)) in a.samples.iter().zip(pairs) {
+            let fresh = space.features(&s.config, &active);
+            assert_eq!(x.len(), fresh.len());
+            for (got, want) in x.iter().zip(&fresh) {
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+            assert_eq!(y.to_bits(), s.jsd.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn different_budget_is_seed_tier() {
+        let dir = std::env::temp_dir().join("amq_warm_seedtier");
+        let _ = std::fs::remove_dir_all(&dir);
+        let space = toy_space(6);
+        let a = toy_archive(&space, 8);
+        save(&dir, &key("model-a"), &a, &space).unwrap();
+        let mut bigger = key("model-a");
+        bigger.iterations += 10;
+        match load(&dir, &bigger, &space) {
+            WarmLoad::Seed(e) => assert_eq!(e.archive.len(), 8),
+            _ => panic!("expected the seed tier"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_key_is_ignored() {
+        let dir = std::env::temp_dir().join("amq_warm_mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let space = toy_space(6);
+        let a = toy_archive(&space, 8);
+        let ka = key("model-a");
+        let kb = key("model-b");
+        let written = save(&dir, &ka, &a, &space).unwrap();
+        // missing file: silent cold start
+        assert!(matches!(load(&dir, &kb, &space), WarmLoad::Cold));
+        // a file parked under the wrong slot (copied/renamed by hand) is
+        // detected by the embedded key and ignored with a warning
+        std::fs::copy(&written, dir.join(kb.file_name())).unwrap();
+        assert!(matches!(load(&dir, &kb, &space), WarmLoad::Cold));
+        // the original slot still loads
+        assert!(matches!(load(&dir, &ka, &space), WarmLoad::Exact(_)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_gene_falls_back_to_cold() {
+        let dir = std::env::temp_dir().join("amq_warm_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let space = toy_space(4);
+        // an archive holding a gene the space does not contain (corrupt
+        // method byte 0x0F) — insert() takes anything, load must reject
+        let mut a = Archive::new();
+        a.insert(vec![0x0F03, 2, 3, 4], 0.1, 3.0);
+        let k = key("model-a");
+        save(&dir, &k, &a, &space).unwrap();
+        assert!(matches!(load(&dir, &k, &space), WarmLoad::Cold));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_file_falls_back_to_cold() {
+        let dir = std::env::temp_dir().join("amq_warm_trunc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let space = toy_space(4);
+        let k = key("model-a");
+        let written = save(&dir, &k, &toy_archive(&space, 4), &space).unwrap();
+        let text = std::fs::read_to_string(&written).unwrap();
+        std::fs::write(&written, &text[..text.len() / 2]).unwrap();
+        assert!(matches!(load(&dir, &k, &space), WarmLoad::Cold));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

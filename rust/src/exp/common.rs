@@ -3,9 +3,9 @@
 
 use super::{cache, Ctx, SearchRunStats};
 use crate::coordinator::{
-    gene_bits, gene_method, pruning, run_search, sensitivity, Archive, Config,
-    ConfigEvaluator, DeviceBank, DeviceProxy, EvalPool, PooledEvaluator, ProxyBank,
-    ProxyEvaluator, SearchParams, SearchSpace,
+    gene_bits, gene_method, pruning, run_search, run_search_seeded, sensitivity, warmstart,
+    Archive, Config, ConfigEvaluator, DeviceBank, DeviceProxy, EvalPool, PooledEvaluator,
+    ProxyBank, ProxyEvaluator, SearchParams, SearchSpace, WarmKey, WarmLoad,
 };
 use crate::eval::{self, ModelHandle, TaskResults};
 use crate::model::ModelAssets;
@@ -185,11 +185,29 @@ pub fn search_evaluator<'a>(ctx: &'a Ctx, pipe: &'a Pipeline) -> Box<dyn ConfigE
     }
 }
 
+/// The warm-start key of this context: the model identity is the FNV-1a
+/// digest of the manifest bytes (any artifact edit invalidates old
+/// entries), the method axis is the canonical comma-joined enable list,
+/// and the budget tuple comes from the preset.
+pub fn warm_key(ctx: &Ctx) -> Result<WarmKey> {
+    let manifest = std::fs::read(ctx.artifacts.join("manifest.json"))?;
+    let model = warmstart::model_label(&manifest);
+    let methods = ctx.registry.names().join(",");
+    Ok(WarmKey::from_params(&model, &methods, &ctx.preset))
+}
+
 /// The main AMQ search (ctx.preset), cached under `results/cache/`.
 /// Any non-default method list gets its own cache key — including a
 /// *single* non-hqq method — so `--methods rtn` can never collide with a
 /// default-genome archive; the default hqq tag is unchanged, so legacy
 /// caches keep hitting.
+///
+/// With `--warm-start DIR` (and a cold local cache), the search first
+/// consults the warm-start store: an exact key hit adopts the persisted
+/// archive verbatim (bit-identical `content_hash`, zero evaluations), a
+/// same-model/methods hit with a different budget seeds the search, and
+/// anything else (missing, mismatched, corrupt) runs cold.  The finished
+/// archive is persisted back for the next run.
 pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> {
     let mut tag = format!(
         "search_main_i{}_n{}_s{}",
@@ -200,8 +218,37 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
     }
     let path = ctx.out_dir.join("cache").join(format!("{tag}.json"));
     let archive = cache::archive_cached(&path, fresh, || {
+        let mut seeds = Vec::new();
+        if let Some(dir) = &ctx.warm_start {
+            let key = warm_key(ctx)?;
+            match warmstart::load(dir, &key, &pipe.space) {
+                WarmLoad::Exact(entry) => {
+                    eprintln!(
+                        "[warm-start] exact key hit: adopting {} persisted samples \
+                         (content hash {:#018x}), no evaluations",
+                        entry.archive.len(),
+                        entry.archive.content_hash(),
+                    );
+                    ctx.note_warm_tier("exact");
+                    return Ok(entry.archive);
+                }
+                WarmLoad::Seed(entry) => {
+                    eprintln!(
+                        "[warm-start] seeding from {} samples of a prior \
+                         same-model run (different budget)",
+                        entry.archive.len(),
+                    );
+                    ctx.note_warm_tier("seed");
+                    seeds = entry.archive.samples;
+                }
+                WarmLoad::Cold => {
+                    eprintln!("[warm-start] no usable entry, starting cold");
+                    ctx.note_warm_tier("cold");
+                }
+            }
+        }
         let mut evaluator = search_evaluator(ctx, pipe);
-        let res = run_search(&pipe.space, evaluator.as_mut(), &ctx.preset)?;
+        let res = run_search_seeded(&pipe.space, evaluator.as_mut(), &ctx.preset, &seeds)?;
         eprintln!(
             "[search] {} true evals, {} predictor queries, {:.1}s ({} worker{}, score-batch {})",
             res.true_evals,
@@ -237,6 +284,15 @@ pub fn main_archive(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<Archive> 
             predictor_queries: res.predictor_queries,
             wall_secs: res.total_time.as_secs_f64(),
         });
+        if let Some(dir) = &ctx.warm_start {
+            let key = warm_key(ctx)?;
+            let saved = warmstart::save(dir, &key, &res.archive, &pipe.space)?;
+            eprintln!(
+                "[warm-start] persisted {} samples to {}",
+                res.archive.len(),
+                saved.display()
+            );
+        }
         Ok(res.archive)
     })?;
     Ok(rebits(archive, &pipe.space))
@@ -463,7 +519,7 @@ pub fn override_jsd(
 /// full calibration split (final-quality numbers, not the search path).
 pub fn proxy_full_jsd(ctx: &Ctx, pipe: &Pipeline, config: &Config) -> Result<f32> {
     let batches = ctx.batches_for(&ctx.calib)?;
-    let layers = pipe.proxy.assemble(config);
+    let layers = pipe.proxy.assemble(config)?;
     let mut sum = 0.0f64;
     for b in &batches {
         let (jsd, _) = ctx.rt.scores(b, &layers)?;

@@ -23,12 +23,12 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
     for (li, l) in m.layers.iter().enumerate() {
         let mut cfg = max_cfg.clone();
         cfg[li] = pipe.full_space.min_gene(li);
-        let layers = pipe.proxy.assemble(&cfg);
+        let layers = pipe.proxy.assemble(&cfg)?;
         let ppl = eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?;
         rows.push((l.name.clone(), l.kind().to_string(), l.block(), scores[li], ppl));
     }
     let baseline_ppl = {
-        let layers = pipe.proxy.assemble(&max_cfg);
+        let layers = pipe.proxy.assemble(&max_cfg)?;
         eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?
     };
     for (name, kind, block, jsd, ppl) in &rows {

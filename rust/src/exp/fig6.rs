@@ -51,7 +51,7 @@ pub fn run(ctx: &Ctx, pipe: &Pipeline, fresh: bool) -> Result<()> {
     let mut gptq_v = Vec::new();
     for s in &picked {
         // proxy (HQQ pieces already uploaded)
-        let layers = pipe.proxy.assemble(&s.config);
+        let layers = pipe.proxy.assemble(&s.config)?;
         let hqq_ppl =
             eval::perplexity_on(&ctx.rt, &ModelHandle::Quant(&layers), &ctx.wiki)?;
         // deploy-time quantizers

@@ -113,6 +113,11 @@ pub struct Ctx {
     /// Enabled quantization methods (`--methods`, default: the manifest's
     /// list, which defaults to single-method HQQ — the legacy genome).
     pub registry: MethodRegistry,
+    /// Warm-start directory (`--warm-start DIR`): finished searches persist
+    /// their archive + predictor training set there, and later searches
+    /// with a matching `(model, methods)` key reload them (see
+    /// [`crate::coordinator::warmstart`]).  `None` = off.
+    pub warm_start: Option<PathBuf>,
     /// Lazily-spawned sharded evaluation pool, shared across searches.
     pool: OnceLock<Arc<EvalPool>>,
     /// The process-wide device bank: quantized once, uploaded once, shared
@@ -125,6 +130,9 @@ pub struct Ctx {
     last_eval_stats: Mutex<Option<EvalBatchStats>>,
     /// Headline numbers of the most recent (non-cached) search run.
     last_search: Mutex<Option<SearchRunStats>>,
+    /// Warm-start tier the most recent search resolved to ("off" until a
+    /// search runs with `--warm-start`).
+    last_warm: Mutex<&'static str>,
 }
 
 impl Ctx {
@@ -215,11 +223,13 @@ impl Ctx {
             slab_cache_mb,
             slab_gather,
             registry,
+            warm_start: None,
             pool: OnceLock::new(),
             device_bank: Arc::new(OnceLock::new()),
             shard_banks: Arc::new(Mutex::new(Vec::new())),
             last_eval_stats: Mutex::new(None),
             last_search: Mutex::new(None),
+            last_warm: Mutex::new("off"),
         })
     }
 
@@ -265,6 +275,21 @@ impl Ctx {
     pub fn set_hedge_factor(&mut self, factor: f64) {
         debug_assert!(self.pool.get().is_none(), "set_hedge_factor after pool spawn");
         self.hedge_factor = factor.max(0.0);
+    }
+
+    /// Point searches at a warm-start directory (`--warm-start DIR`).
+    pub fn set_warm_start(&mut self, dir: Option<String>) {
+        self.warm_start = dir.map(PathBuf::from);
+    }
+
+    /// Record which warm-start tier a search resolved to
+    /// ("exact"/"seed"/"cold"; stays "off" when `--warm-start` is unset).
+    pub fn note_warm_tier(&self, tier: &'static str) {
+        *self.last_warm.lock().unwrap() = tier;
+    }
+
+    pub fn warm_tier(&self) -> &'static str {
+        *self.last_warm.lock().unwrap()
     }
 
     /// Local (in-process) shard count for the pool topology: with no remote

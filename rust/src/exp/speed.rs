@@ -73,7 +73,7 @@ pub fn measured(ctx: &Ctx, pipe: &Pipeline) -> Result<()> {
     let t = ctx.rt.seq_len();
     let toks = ctx.calib.batch(0, b);
     let cfg3 = pipe.full_space.uniform(3);
-    let layers = pipe.proxy.assemble(&cfg3);
+    let layers = pipe.proxy.assemble(&cfg3)?;
 
     // warmup
     let _ = ctx.rt.fp_logits(toks)?;

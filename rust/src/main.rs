@@ -66,7 +66,23 @@
 //!                                   the genome may assign per layer
 //!                                   (hqq,rtn,gptq,awq_clip; default: the
 //!                                   manifest's list, normally just hqq)
-//!   --predictor rbf|mlp             quality predictor (default: rbf)
+//!   --predictor rbf|mlp|gp          quality predictor (default: rbf; gp
+//!                                   adds posterior uncertainty for the
+//!                                   UCB candidate screen)
+//!   --ucb-kappa F                   UCB exploration weight κ for the
+//!                                   candidate screen (default: 0 = the
+//!                                   classic point-estimate screen; κ > 0
+//!                                   keeps dominated candidates whose
+//!                                   mean − κ·std beats the generation
+//!                                   floor — meaningful with --predictor
+//!                                   gp, a no-op for point predictors)
+//!   --warm-start DIR                persist finished searches to DIR and
+//!                                   reload them: an exact (model, methods,
+//!                                   budget) key match reproduces the cold
+//!                                   archive bit-exactly with zero evals; a
+//!                                   same-model match with a different
+//!                                   budget seeds the new search; mismatch
+//!                                   or corruption warns and runs cold
 //!   --shards a:p,b:p                remote shard servers to feed (each
 //!                                   address becomes one pool shard on the
 //!                                   same FIFO as the local workers;
@@ -135,6 +151,8 @@ struct Args {
     slab_gather: SlabGatherMode,
     methods: Option<String>,
     predictor: Option<String>,
+    ucb_kappa: Option<f64>,
+    warm_start: Option<String>,
     shards: Vec<String>,
     hedge_factor: f64,
     chunk_timeout_ms: u64,
@@ -167,6 +185,8 @@ fn parse_args() -> Args {
         slab_gather: SlabGatherMode::Auto,
         methods: None,
         predictor: None,
+        ucb_kappa: None,
+        warm_start: None,
         shards: Vec::new(),
         hedge_factor: amq::runtime::DEFAULT_HEDGE_FACTOR,
         chunk_timeout_ms: 300_000,
@@ -237,6 +257,14 @@ fn parse_args() -> Args {
             "--predictor" => {
                 i += 1;
                 args.predictor = Some(argv[i].clone());
+            }
+            "--ucb-kappa" => {
+                i += 1;
+                args.ucb_kappa = Some(argv[i].parse().expect("--ucb-kappa F"));
+            }
+            "--warm-start" => {
+                i += 1;
+                args.warm_start = Some(argv[i].clone());
             }
             "--shards" => {
                 i += 1;
@@ -318,8 +346,8 @@ fn parse_args() -> Args {
     args
 }
 
-fn preset(name: &str, seed: Option<u64>, predictor: Option<&str>) -> SearchParams {
-    let mut p = match name {
+fn preset(args: &Args) -> SearchParams {
+    let mut p = match args.preset.as_str() {
         "smoke" => SearchParams::smoke(),
         "repro" => SearchParams::default(),
         "paper" => SearchParams::paper(),
@@ -328,10 +356,10 @@ fn preset(name: &str, seed: Option<u64>, predictor: Option<&str>) -> SearchParam
             std::process::exit(2);
         }
     };
-    if let Some(s) = seed {
+    if let Some(s) = args.seed {
         p.seed = s;
     }
-    if let Some(name) = predictor {
+    if let Some(name) = args.predictor.as_deref() {
         p.predictor = match PredictorKind::parse(name) {
             Ok(k) => k,
             Err(e) => {
@@ -339,6 +367,13 @@ fn preset(name: &str, seed: Option<u64>, predictor: Option<&str>) -> SearchParam
                 std::process::exit(2);
             }
         };
+    }
+    if let Some(k) = args.ucb_kappa {
+        if !k.is_finite() || k < 0.0 {
+            eprintln!("--ucb-kappa must be a finite value >= 0, got {k}");
+            std::process::exit(2);
+        }
+        p.ucb_kappa = k;
     }
     p
 }
@@ -409,7 +444,7 @@ fn run_shard_serve(args: &Args) -> Result<()> {
         "artifacts not found at {} — run `make artifacts` (or use --synthetic)",
         artifacts.display()
     );
-    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let params = preset(args);
     let registry = match args.methods.as_deref() {
         Some(list) => Some(MethodRegistry::parse(list)?),
         None => None,
@@ -524,7 +559,7 @@ fn run_serve(args: &Args) -> Result<()> {
         "artifacts not found at {} — run `make artifacts` (or use --synthetic)",
         artifacts.display()
     );
-    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let params = preset(args);
     let registry = match args.methods.as_deref() {
         Some(list) => Some(MethodRegistry::parse(list)?),
         None => None,
@@ -980,6 +1015,7 @@ fn write_search_report(
     path: &std::path::Path,
     ctx: &Ctx,
     pipe: &exp::common::Pipeline,
+    archive: &amq::coordinator::Archive,
     frontier: &[&amq::coordinator::Sample],
 ) -> Result<()> {
     use std::fmt::Write as _;
@@ -995,6 +1031,25 @@ fn write_search_report(
             .join(", ")
     );
     let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
+    let _ = write!(s, "  \"ucb_kappa\": {},\n", ctx.preset.ucb_kappa);
+    let _ = write!(s, "  \"warm_start\": \"{}\",\n", ctx.warm_tier());
+    // Per-budget probes: `null` marks a budget no archive sample satisfies
+    // (the old report code unwrapped here and panicked on thin archives).
+    s.push_str("  \"best_under\": {");
+    for (i, &b) in exp::common::BUDGETS.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        match archive.best_under(b, exp::common::TOL) {
+            Some(smp) => {
+                let _ = write!(s, "\"{b}\": {}", smp.jsd);
+            }
+            None => {
+                let _ = write!(s, "\"{b}\": null");
+            }
+        }
+    }
+    s.push_str("},\n");
     let _ = write!(s, "  \"workers\": {},\n", ctx.workers);
     let _ = write!(s, "  \"topology\": \"{}\",\n", topology_of(ctx));
     let _ = write!(s, "  \"remote_shards\": {},\n", ctx.shards.len());
@@ -1156,6 +1211,9 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
         ctx.pool_stats().map(|p| p.hedged_wasted).unwrap_or(0)
     );
     let _ = write!(s, "  \"methods\": \"{}\",\n", ctx.registry.names().join(","));
+    let _ = write!(s, "  \"predictor\": \"{}\",\n", ctx.preset.predictor.name());
+    let _ = write!(s, "  \"ucb_kappa\": {},\n", ctx.preset.ucb_kappa);
+    let _ = write!(s, "  \"warm_start\": \"{}\",\n", ctx.warm_tier());
     let _ = write!(s, "  \"cached\": {},\n", ctx.last_search_stats().is_none());
     if let Some(run) = ctx.last_search_stats() {
         let _ = write!(s, "  \"wall_seconds\": {:.3},\n", run.wall_secs);
@@ -1266,7 +1324,7 @@ fn write_bench_json(path: &std::path::Path, ctx: &Ctx, pipe: &exp::common::Pipel
 fn main() -> Result<()> {
     let args = parse_args();
     if args.cmd.is_empty() || args.cmd == "help" {
-        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|serve|serve-bench|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--hedge-factor F] [--chunk-timeout-ms N] [--fault-spec SEED:KIND:RATE] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require] [--config ARCHIVE.json] [--budget B] [--max-wait-us N] [--queue-cap N] [--conn-cap N] [--addr ADDR] [--clients N] [--rps R] [--duration S]");
+        println!("usage: repro <list|check|search|all|shard-serve|pool-smoke|serve|serve-bench|EXPERIMENT> [--preset smoke|repro|paper] [--fresh] [--seed N] [--out DIR] [--workers N] [--shards a:p,b:p] [--hedge-factor F] [--chunk-timeout-ms N] [--fault-spec SEED:KIND:RATE] [--listen ADDR] [--synthetic] [--score-batch K] [--lanes N] [--slab-cache-mb N] [--slab-gather auto|off|require] [--methods LIST] [--predictor rbf|mlp|gp] [--ucb-kappa F] [--warm-start DIR] [--config ARCHIVE.json] [--budget B] [--max-wait-us N] [--queue-cap N] [--conn-cap N] [--addr ADDR] [--clients N] [--rps R] [--duration S]");
         println!("experiments:");
         for (name, desc) in exp::EXPERIMENTS {
             println!("  {name:8} {desc}");
@@ -1309,7 +1367,7 @@ fn main() -> Result<()> {
         artifacts.display()
     );
 
-    let params = preset(&args.preset, args.seed, args.predictor.as_deref());
+    let params = preset(&args);
     let registry = match args.methods.as_deref() {
         Some(list) => Some(MethodRegistry::parse(list)?),
         None => None,
@@ -1328,6 +1386,7 @@ fn main() -> Result<()> {
     )?;
     ctx.set_shards(args.shards.clone());
     ctx.set_hedge_factor(args.hedge_factor);
+    ctx.set_warm_start(args.warm_start.clone());
     let variant = ctx.rt.scorer_variant();
     eprintln!(
         "[repro] runtime + artifacts loaded in {:.1}s ({} eval worker{}, {} remote shard{}, score-batch {}, scorer: {} x{}, slab-cache {} MB, slab-gather {} ({}), methods: {}, predictor: {})",
@@ -1440,8 +1499,14 @@ fn main() -> Result<()> {
                     println!("  bits {:.3}  jsd {:.5}", s.avg_bits, s.jsd);
                 }
             }
+            // Per-budget summary: "-" marks a budget with no feasible
+            // sample instead of panicking on an empty selection.
+            for &b in &exp::common::BUDGETS {
+                let best = archive.best_under(b, exp::common::TOL).map(|s| s.jsd);
+                println!("  best under {b} bits: jsd {}", amq::report::fmt_opt(best, 5));
+            }
             let report = ctx.out_dir.join("search_report.json");
-            write_search_report(&report, &ctx, &pipe, &rows)?;
+            write_search_report(&report, &ctx, &pipe, &archive, &rows)?;
             eprintln!("[report] wrote {}", report.display());
             let bench = ctx.out_dir.join("BENCH_search.json");
             write_bench_json(&bench, &ctx, &pipe)?;

@@ -89,6 +89,17 @@ pub fn fmt(v: f32, decimals: usize) -> String {
     }
 }
 
+/// Format helper for probes that may come up empty (e.g. `best_under` on
+/// a budget no archive sample satisfies): `None` renders as the same "-"
+/// placeholder [`fmt`] uses for NaN, so tables skip the cell instead of
+/// forcing callers to unwrap.
+pub fn fmt_opt(v: Option<f32>, decimals: usize) -> String {
+    match v {
+        Some(v) => fmt(v, decimals),
+        None => "-".to_string(),
+    }
+}
+
 /// Write a simple series CSV (figure data): (x, multiple named ys).
 pub fn series_csv(path: &Path, xname: &str, ynames: &[&str],
                   rows: &[(f32, Vec<f32>)]) -> std::io::Result<()> {
@@ -129,6 +140,13 @@ mod tests {
         assert_eq!(fmt(f32::NAN, 2), "-");
         assert_eq!(fmt(1.2345, 2), "1.23");
         assert!(fmt(2.2e5, 2).contains('e'));
+    }
+
+    #[test]
+    fn fmt_opt_matches_fmt_on_some() {
+        assert_eq!(fmt_opt(Some(1.2345), 2), fmt(1.2345, 2));
+        assert_eq!(fmt_opt(None, 2), "-");
+        assert_eq!(fmt_opt(Some(f32::NAN), 2), "-");
     }
 
     #[test]

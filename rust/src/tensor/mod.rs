@@ -6,7 +6,7 @@
 
 mod linalg;
 
-pub use linalg::{cholesky_solve, cholesky_inverse_upper, power_iteration_rank1};
+pub use linalg::{cholesky_f64, cholesky_solve, cholesky_inverse_upper, power_iteration_rank1};
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

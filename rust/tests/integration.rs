@@ -62,7 +62,7 @@ fn proxy_bank_builds_from_artifacts() {
         for &b in &assets.manifest.bit_choices {
             let cfg = vec![gene(m, b); assets.manifest.layers.len()];
             let bank_bytes: usize = (0..assets.manifest.layers.len())
-                .map(|li| bank.piece(li, cfg[li]).memory_bytes())
+                .map(|li| bank.piece(li, cfg[li]).unwrap().memory_bytes())
                 .sum();
             let space_bytes = space.memory_mb(&cfg) * 1e6;
             assert!(
@@ -82,8 +82,8 @@ fn proxy_bank_builds_from_artifacts() {
     .unwrap();
     let li = assets.manifest.layers.len() / 2;
     assert_eq!(
-        single.piece(li, gene(MethodId::Hqq, 3)).codes,
-        bank.piece(li, gene(MethodId::Hqq, 3)).codes
+        single.piece(li, gene(MethodId::Hqq, 3)).unwrap().codes,
+        bank.piece(li, gene(MethodId::Hqq, 3)).unwrap().codes
     );
 }
 

@@ -219,7 +219,7 @@ fn prop_space_accounting_matches_proxy_bank() {
             for &b in &bit_choices {
                 let cfg: Config = vec![gene(m, b); n_layers];
                 let bank_bytes: usize =
-                    (0..n_layers).map(|li| bank.piece(li, cfg[li]).memory_bytes()).sum();
+                    (0..n_layers).map(|li| bank.piece(li, cfg[li]).unwrap().memory_bytes()).sum();
                 let space_bytes = space.memory_mb(&cfg) * 1e6;
                 assert!(
                     (space_bytes - bank_bytes as f64).abs() < 1e-6 * space_bytes.max(1.0),

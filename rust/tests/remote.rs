@@ -7,8 +7,8 @@
 //! servers never contend for ports or CPU with sibling tests.
 
 use amq::coordinator::synth::{synth_chunk, synth_space};
-use amq::coordinator::{run_search, Config, EvalPool, PooledEvaluator, SearchParams};
-use amq::runtime::remote::{remote_eval_flow, spawn_test_server, RetryPolicy};
+use amq::coordinator::{run_search, try_gene_method, Config, EvalPool, PooledEvaluator, SearchParams};
+use amq::runtime::remote::{remote_eval_flow, spawn_test_server, RemoteShard, RetryPolicy};
 use amq::runtime::{EvalService, ServiceStats, ShardFlow};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -129,6 +129,41 @@ fn killed_shard_mid_search_converges_to_identical_archive() {
     );
     let victim_stats = stats.per_shard.iter().find(|s| s.retired).unwrap();
     assert!(victim_stats.completed >= 1, "victim served before dying");
+}
+
+#[test]
+fn corrupt_gene_gets_wire_error_and_server_keeps_serving() {
+    // A client feeding garbage genes (method nibble outside MethodId::ALL)
+    // must get a clean wire Error frame naming the bad byte — not a server
+    // panic — and the same connection must keep answering valid chunks.
+    let addr = spawn_test_server(0, None, |genes: &[Vec<u16>]| {
+        for g in genes.iter().flatten() {
+            if try_gene_method(*g).is_none() {
+                eyre::bail!("invalid method byte in gene {g:#06x}");
+            }
+        }
+        synth_chunk(genes)
+    })
+    .unwrap();
+
+    let mut shard = RemoteShard::new(addr, fast_retry());
+
+    let bad = vec![vec![0x0F03u16; 12]];
+    let msg = shard.call(&bad).unwrap().unwrap_err();
+    assert!(
+        msg.contains("invalid method byte"),
+        "wire error should name the corrupt gene, got: {msg}"
+    );
+
+    // The connection survived the error frame: valid work still flows and
+    // matches the in-process oracle exactly.
+    let good = vec![vec![3u16; 12], vec![2u16; 12]];
+    let scores = shard.call(&good).unwrap().unwrap();
+    assert_eq!(scores, synth_chunk(&good).unwrap());
+
+    // And a second corrupt chunk is still answered cleanly, not fatally.
+    let msg2 = shard.call(&bad).unwrap().unwrap_err();
+    assert!(msg2.contains("invalid method byte"));
 }
 
 #[test]
